@@ -1,0 +1,38 @@
+"""Shared helpers for the benchmark harnesses."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join(REPO, "results")
+
+
+def save_json(name: str, payload: Dict[str, Any]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def load_json(name: str) -> Dict[str, Any]:
+    with open(os.path.join(RESULTS_DIR, name)) as f:
+        return json.load(f)
+
+
+def fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB", "GB"):
+        if n < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}TB"
+
+
+def fmt_s(t: float) -> str:
+    if t < 1e-3:
+        return f"{t*1e6:.0f}us"
+    if t < 1.0:
+        return f"{t*1e3:.2f}ms"
+    return f"{t:.3f}s"

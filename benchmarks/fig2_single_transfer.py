@@ -1,0 +1,67 @@
+"""Paper Fig. 2: single 1-1 transfer latency + effective bandwidth vs size,
+for inline / S3 / ElastiCache on the Lambda testbed constants.
+
+Paper anchors: at 100 KB, inline beats S3 by 8.1x and EC by 1.3x; inline is
+capped at 6 MB.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import measure_pattern
+from repro.core.cluster import LAMBDA_NET
+from repro.core.errors import InlineTooLarge
+
+from .common import fmt_s, save_json
+
+SIZES = [1 << 10, 10 << 10, 100 << 10, 1 << 20, 6 << 20, 10 << 20, 100 << 20]
+BACKENDS = ["inline", "s3", "elasticache", "xdt"]
+
+
+def run(n_seeds: int = 10):
+    rows = []
+    for nbytes in SIZES:
+        row = {"bytes": nbytes}
+        for b in BACKENDS:
+            try:
+                ts = [
+                    measure_pattern("1-1", b, nbytes, net=LAMBDA_NET, seed=s)[0]
+                    for s in range(n_seeds)
+                ]
+                lat = float(np.mean(ts))
+                row[b] = {"latency_s": lat, "bw_Bps": nbytes / lat}
+            except InlineTooLarge:
+                row[b] = {"latency_s": None, "bw_Bps": None, "capped": True}
+        rows.append(row)
+
+    anchors = {}
+    at100k = next(r for r in rows if r["bytes"] == 100 << 10)
+    anchors["inline_vs_s3_100KB"] = at100k["s3"]["latency_s"] / at100k["inline"]["latency_s"]
+    anchors["inline_vs_ec_100KB"] = (
+        at100k["elasticache"]["latency_s"] / at100k["inline"]["latency_s"]
+    )
+    return {"rows": rows, "anchors": anchors}
+
+
+def main():
+    out = run()
+    print("# Fig 2 — single transfer: latency / effective BW vs size (Lambda)")
+    print(f"{'size':>8} | " + " | ".join(f"{b:>22}" for b in BACKENDS))
+    for r in out["rows"]:
+        cells = []
+        for b in BACKENDS:
+            d = r[b]
+            if d.get("capped"):
+                cells.append(f"{'> 6MB cap':>22}")
+            else:
+                cells.append(f"{fmt_s(d['latency_s']):>9} {d['bw_Bps']*8/1e9:6.2f}Gb/s")
+        print(f"{r['bytes']:>8} | " + " | ".join(cells))
+    a = out["anchors"]
+    print(f"\nanchors: inline vs S3 @100KB = {a['inline_vs_s3_100KB']:.1f}x "
+          f"(paper 8.1x); inline vs EC = {a['inline_vs_ec_100KB']:.2f}x (paper 1.3x)")
+    save_json("fig2_single_transfer.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

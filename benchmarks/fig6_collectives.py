@@ -1,0 +1,57 @@
+"""Paper Fig. 6: collective patterns (scatter/gather/broadcast) at fan 4/16
+for 10KB and 10MB objects, plus the fan-32 effective-bandwidth anchor.
+
+Paper anchors: EC 7.8-11x lower latency than S3 (small), XDT matches or
+beats EC; at fan 32 / 10MB gather, XDT 16.4 Gb/s (82% of NIC), EC 14.0,
+S3 5.5.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import effective_bandwidth_Bps, measure_pattern
+
+from .common import fmt_s, save_json
+
+BACKENDS = ["s3", "elasticache", "xdt"]
+PATTERNS = ["scatter", "gather", "broadcast"]
+FANS = [4, 16]
+SIZES = {"10KB": 10 << 10, "10MB": 10 << 20}
+
+
+def run(n_seeds: int = 10):
+    grid = {}
+    for label, nbytes in SIZES.items():
+        for pattern in PATTERNS:
+            for fan in FANS:
+                cell = {}
+                for b in BACKENDS:
+                    ts = [
+                        measure_pattern(pattern, b, nbytes, fan=fan, seed=s)[0]
+                        for s in range(n_seeds)
+                    ]
+                    cell[b] = float(np.mean(ts))
+                grid[f"{label}|{pattern}|fan{fan}"] = cell
+
+    bw32 = {
+        b: effective_bandwidth_Bps("gather", b, 10 << 20, fan=32) for b in BACKENDS
+    }
+    return {"grid": grid, "fan32_gather_10MB_bw_Bps": bw32}
+
+
+def main():
+    out = run()
+    print("# Fig 6 — collective patterns (mean latency)")
+    print(f"{'cell':>24} | {'s3':>10} | {'ec':>10} | {'xdt':>10} | xdt/ec")
+    for key, cell in out["grid"].items():
+        print(f"{key:>24} | {fmt_s(cell['s3']):>10} | {fmt_s(cell['elasticache']):>10}"
+              f" | {fmt_s(cell['xdt']):>10} | {cell['xdt']/cell['elasticache']:.2f}")
+    print("\nfan-32 gather 10MB effective BW (paper: XDT 16.4 / EC 14.0 / S3 5.5 Gb/s):")
+    for b, bw in out["fan32_gather_10MB_bw_Bps"].items():
+        print(f"  {b:12s} {bw*8/1e9:5.2f} Gb/s ({bw*8/20e9*100:.0f}% of 20Gb/s NIC)")
+    save_json("fig6_collectives.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

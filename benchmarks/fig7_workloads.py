@@ -1,0 +1,59 @@
+"""Paper Fig. 7: end-to-end latency + breakdown for VID / SET / MR under
+S3 / ElastiCache / XDT.
+
+Paper anchors: speedups vs S3 — VID 1.36x, SET 3.4x, MR 1.26x; vs EC —
+1.02-1.05x across workloads.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.workloads import BACKENDS, WORKLOADS
+
+from .common import fmt_s, save_json
+
+PAPER_SPEEDUPS = {"vid": (1.36, 1.02), "set": (3.4, 1.05), "mr": (1.26, 1.05)}
+
+
+def run(n_seeds: int = 10):
+    out = {}
+    for name, fn in WORKLOADS.items():
+        agg = {}
+        for b in BACKENDS:
+            rs = [fn(b, seed=s) for s in range(n_seeds)]
+            agg[b] = {
+                "latency_s": float(np.mean([r.latency_s for r in rs])),
+                "breakdown": {
+                    k: float(np.mean([r.breakdown[k] for r in rs]))
+                    for k in rs[0].breakdown
+                },
+            }
+        out[name] = agg
+    return out
+
+
+def main():
+    out = run()
+    print("# Fig 7 — real-world workloads: latency breakdown")
+    for name, agg in out.items():
+        xdt = agg["xdt"]["latency_s"]
+        p_s3, p_ec = PAPER_SPEEDUPS[name]
+        print(f"\n  {name.upper()}:")
+        for b in BACKENDS:
+            d = agg[b]
+            su = d["latency_s"] / xdt
+            note = ""
+            if b == "s3":
+                note = f"  -> XDT speedup {su:.2f}x (paper {p_s3}x)"
+            elif b == "elasticache":
+                note = f"  -> XDT speedup {su:.2f}x (paper {p_ec}x)"
+            print(f"    {b:12s} total={fmt_s(d['latency_s'])}{note}")
+            for phase, t in d["breakdown"].items():
+                frac = t / d["latency_s"] * 100
+                print(f"        {phase:22s} {fmt_s(t):>9}  ({frac:4.1f}%)")
+    save_json("fig7_workloads.json", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Roofline analysis per (arch x shape x mesh) from the dry-run artifacts.
+
+Three terms per cell, derived from the compiled 512/256-device programs
+(results/dryrun.json, produced by repro.launch.dryrun):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs            (197 TF bf16)
+    memory     = HLO_bytes_per_device / HBM_bw                (819 GB/s)
+    collective = collective_bytes_per_device / ICI_link_bw    (~50 GB/s)
+
+The max of the three lower-bounds the step time; whichever dominates is the
+cell's bottleneck.  The QUALITY score is the model-roofline fraction:
+
+    ideal time      = useful work / hardware peak
+      train/prefill : 6 (resp. 2) * N_active * tokens / (chips * peak_FLOPs)
+      decode        : (param + cache bytes)/chip / HBM_bw   (stream once)
+    fraction        = ideal time / max(compute, memory, collective)
+
+A fraction of 1.0 means the compiled program is exactly the useful work,
+placed on its natural roofline.  Fractions < 1 decompose into "wasted"
+compute/bytes (remat, padding, recompute) and collective exposure.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Any, Dict, Optional
+
+from repro.configs import get_config
+from repro.launch.input_specs import SHAPE_CELLS
+
+from .common import load_json, save_json
+
+PEAK_FLOPS = 197e12        # bf16 per chip (TPU v5e)
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+def _tokens_global(shape: str) -> int:
+    cell = SHAPE_CELLS[shape]
+    if cell["kind"] == "train" or cell["kind"] == "prefill":
+        return cell["batch"] * cell["seq"]
+    return cell["batch"]              # decode: one token per sequence
+
+
+def _cache_bytes(cfg, shape: str) -> int:
+    from repro.models import cache_shapes
+    import numpy as np
+
+    cell = SHAPE_CELLS[shape]
+    total = 0
+    for _k, (shp, _axes, dtype) in cache_shapes(cfg, cell["batch"], cell["seq"]).items():
+        n = 1
+        for d in shp:
+            n *= d
+        total += n * np.dtype(dtype).itemsize
+    return total
+
+
+def ideal_time_s(arch: str, shape: str, n_chips: int) -> float:
+    cfg = get_config(arch)
+    kind = SHAPE_CELLS[shape]["kind"]
+    n_active = cfg.n_active_params()
+    toks = _tokens_global(shape)
+    if kind == "train":
+        return 6.0 * n_active * toks / (n_chips * PEAK_FLOPS)
+    if kind == "prefill":
+        return 2.0 * n_active * toks / (n_chips * PEAK_FLOPS)
+    # decode: stream params once (bf16) + the full cache once per step
+    param_bytes = 2 * cfg.n_params()
+    return (param_bytes + _cache_bytes(cfg, shape)) / n_chips / HBM_BW
+
+
+def analyse_cell(key: str, rec: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape, mesh = key.split("|")
+    n = rec["n_devices"]
+    t_compute = rec["flops_per_device"] / PEAK_FLOPS
+    t_memory = rec["bytes_per_device"] / HBM_BW
+    coll = rec.get("collective_bytes_per_device", {})
+    t_coll = sum(coll.values()) / ICI_BW
+    bound = max(t_compute, t_memory, t_coll)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    cfg = get_config(arch)
+    model_flops = (
+        (6.0 if SHAPE_CELLS[shape]["kind"] == "train" else 2.0)
+        * cfg.n_active_params() * _tokens_global(shape)
+    )
+    t_ideal = ideal_time_s(arch, shape, n)
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "kind": rec["kind"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bottleneck": bottleneck,
+        "step_lower_bound_s": bound,
+        "model_flops": model_flops,
+        "flops_utilization": model_flops / (rec["flops_per_device"] * n)
+        if rec["flops_per_device"] else 0.0,
+        "roofline_fraction": t_ideal / bound if bound > 0 else 0.0,
+        "peak_mem_GiB": rec["memory"]["peak_estimate_bytes"] / 2**30,
+        "collective_bytes": coll,
+    }
+
+
+def run(dryrun_file: str = "dryrun.json", mesh: str = "single"):
+    data = load_json(dryrun_file)
+    rows = []
+    for key, rec in sorted(data.items()):
+        if not key.endswith(f"|{mesh}"):
+            continue
+        row = analyse_cell(key, rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def print_table(rows, title):
+    print(f"\n# Roofline — {title}")
+    print(f"{'arch':>24} {'shape':>12} | {'compute':>9} {'memory':>9} "
+          f"{'collect':>9} | {'bound':>10} | {'frac':>5}")
+    for r in rows:
+        mark = {"compute": "C", "memory": "M", "collective": "X"}[r["bottleneck"]]
+        print(f"{r['arch']:>24} {r['shape']:>12} | "
+              f"{r['t_compute_s']*1e3:8.1f}m {r['t_memory_s']*1e3:8.1f}m "
+              f"{r['t_collective_s']*1e3:8.1f}m | {mark}:{r['step_lower_bound_s']*1e3:8.1f}m"
+              f" | {r['roofline_fraction']:5.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="dryrun.json")
+    args = ap.parse_args([]) if __name__ != "__main__" else ap.parse_args()
+    rows = run(args.dryrun, "single")
+    print_table(rows, "single pod (16x16), per-device terms")
+    save_json("roofline.json", {"single": rows})
+    worst = sorted(rows, key=lambda r: r["roofline_fraction"])[:3]
+    most_coll = sorted(rows, key=lambda r: r["t_collective_s"] /
+                       max(1e-12, r["step_lower_bound_s"]))[-3:]
+    print("\nworst roofline fractions:",
+          [(r["arch"], r["shape"], round(r["roofline_fraction"], 3)) for r in worst])
+    print("most collective-bound:",
+          [(r["arch"], r["shape"]) for r in most_coll])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Benchmark driver: one harness per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig5,...]
+
+Writes JSON artifacts under results/ and prints each harness's table.
+The roofline section reads results/dryrun.json (produced by
+``python -m repro.launch.dryrun``); it is skipped with a notice if the
+sweep has not been recorded yet.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+from . import (
+    fig2_single_transfer,
+    fig5_latency_cdf,
+    fig6_collectives,
+    fig7_workloads,
+    table2_cost,
+)
+from .common import RESULTS_DIR
+
+HARNESSES = {
+    "fig2": fig2_single_transfer.main,
+    "fig5": fig5_latency_cdf.main,
+    "fig6": fig6_collectives.main,
+    "fig7": fig7_workloads.main,
+    "table2": table2_cost.main,
+}
+
+
+def run_roofline():
+    dryrun_path = os.path.join(RESULTS_DIR, "dryrun.json")
+    if not os.path.exists(dryrun_path):
+        print("\n# Roofline — SKIPPED (run `python -m repro.launch.dryrun` "
+              "to record the 512-device sweep first)")
+        return
+    from . import roofline
+    from .common import save_json
+
+    rows = roofline.run("dryrun.json", "single")
+    roofline.print_table(rows, "single pod (16x16), per-device terms")
+    save_json("roofline.json", {"single": rows})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list from: " + ",".join(HARNESSES) + ",roofline")
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else list(HARNESSES) + ["roofline"]
+
+    failures = []
+    for name in wanted:
+        t0 = time.time()
+        print(f"\n{'='*72}\n[benchmarks.run] {name}\n{'='*72}")
+        try:
+            if name == "roofline":
+                run_roofline()
+            else:
+                HARNESSES[name]()
+            print(f"[benchmarks.run] {name} done in {time.time()-t0:.1f}s")
+        except Exception as e:
+            failures.append(name)
+            print(f"[benchmarks.run] {name} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+
+    print(f"\n{'='*72}")
+    if failures:
+        print(f"benchmark summary: FAILURES in {failures}")
+        return 1
+    print("benchmark summary: all harnesses passed; artifacts in results/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

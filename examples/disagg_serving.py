@@ -1,0 +1,70 @@
+"""Disaggregated prefill/decode serving with the XDT cache handoff —
+the paper's architecture applied to LLM serving, end to end.
+
+A prefill pod computes each request's KV cache (the ephemeral object),
+``put``s it, and the control plane steers the request to a decode pod that
+``get``s (pulls) the cache directly.  The same run is repeated with the
+through-storage ("staged") handoff; generations must be identical, and the
+report shows the modeled latency/cost gap.
+
+Run:  PYTHONPATH=src python examples/disagg_serving.py [--arch smollm_360m]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.cost import elasticache_storage_cost, s3_storage_cost
+from repro.models import init_params
+from repro.serving import DisaggregatedServer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--decode-pods", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab, size=rng.integers(4, 10))
+               for _ in range(args.requests)]
+
+    runs = {}
+    for backend in ("xdt", "staged"):
+        srv = DisaggregatedServer(cfg, params, n_decode_pods=args.decode_pods,
+                                  max_batch=4, max_len=48, backend=backend)
+        t0 = time.time()
+        rids = [srv.submit(p, max_new_tokens=args.new_tokens) for p in prompts]
+        done = srv.run_until_drained()
+        wall = time.time() - t0
+        runs[backend] = {"gen": {r: done[r].generated for r in rids},
+                         "report": srv.handoff_report(), "wall": wall}
+        print(f"[{backend:6s}] served {len(done)} requests in {wall:.1f}s "
+              f"across {args.decode_pods} decode pods")
+
+    assert runs["xdt"]["gen"] == runs["staged"]["gen"], "generations diverged!"
+    print("\ngenerations identical across backends (API-preserving) ✓")
+
+    rep = runs["xdt"]["report"]
+    cache_b = rep["avg_cache_bytes"]
+    print(f"\nper-handoff ephemeral object (KV/state cache): {cache_b/1024:.1f} KB")
+    print(f"modeled handoff latency:  xdt={rep['modeled_latency_s_if_xdt']*1e3:7.2f}ms"
+          f"  ec={rep['modeled_latency_s_if_elasticache']*1e3:7.2f}ms"
+          f"  s3={rep['modeled_latency_s_if_s3']*1e3:7.2f}ms")
+    n = rep["handoffs"]
+    s3_fee = s3_storage_cost(int(n), int(n)) * 1e6
+    ec_fee = elasticache_storage_cost(cache_b * n / 1e9) * 1e6
+    print(f"storage bill for {n:.0f} handoffs: xdt=0.0u$  s3={s3_fee:.2f}u$  "
+          f"ec={ec_fee:.2f}u$ (provisioned GB-hour)")
+    print("\nAt production KV sizes (10s of MB-GBs per request) these gaps "
+          "are the paper's 1.3-3.4x / 2-772x headline numbers.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""End-to-end training driver: a ~100M-parameter smollm-family model with
+the full production stack — sharded deterministic loader, XDT-mediated
+prefetch, fused AdamW step, async atomic checkpoints, crash-resume.
+
+Quick CPU demo (a ~7M reduced model, 60 steps, <2 min):
+
+    PYTHONPATH=src python examples/train_100m.py
+
+The real thing (~100M params, 300 steps — sized for a single accelerator
+host; on CPU budget about an hour):
+
+    PYTHONPATH=src python examples/train_100m.py --full --steps 300
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.data import ShardedLoader
+from repro.data.prefetch import PrefetchingFeed
+from repro.models import init_params
+from repro.optim import OptConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def model_config(full: bool):
+    if full:
+        # ~100M-parameter member of the smollm family (paper-exact shapes
+        # scaled in depth/width; vocab kept small so params go to the body)
+        cfg = dataclasses.replace(
+            get_config("smollm_360m"),
+            n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            d_ff=2048, vocab=8192, head_dim=64, attn_chunk=128,
+            loss_chunk=128,
+        )
+    else:
+        cfg = dataclasses.replace(
+            smoke_config("smollm_360m"),
+            n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, d_ff=384,
+            vocab=512, head_dim=32,
+        )
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--workdir", default="/tmp/repro_train_100m")
+    args = ap.parse_args()
+
+    cfg = model_config(args.full)
+    steps = args.steps or (300 if args.full else 60)
+    batch = args.batch or (8 if args.full else 8)
+    seq = args.seq or (512 if args.full else 64)
+
+    n_params = cfg.n_params()
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params), "
+          f"{steps} steps x {batch}x{seq} tokens")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    loader = ShardedLoader(cfg, global_batch=batch, seq_len=seq)
+    feed = PrefetchingFeed(loader.batch_at, depth=2)   # XDT-mediated prefetch
+
+    lr = 1e-3 if args.full else 3e-3
+    trainer = Trainer(
+        cfg, params, mesh=None,
+        opt_cfg=OptConfig(peak_lr=lr, warmup_steps=max(5, steps // 20),
+                          total_steps=steps),
+        tcfg=TrainerConfig(steps=steps, checkpoint_every=max(10, steps // 6),
+                           log_every=max(1, steps // 12), remat="none"),
+        workdir=args.workdir,
+        batch_at=feed.get_batch,
+    )
+    t0 = time.time()
+    try:
+        out = trainer.run()
+    finally:
+        feed.close()
+    dt = time.time() - t0
+    tok_s = steps * batch * seq / dt
+    print(f"\ndone: step {out['final_step']}  final loss {out['final_loss']:.4f}  "
+          f"({dt:.0f}s, {tok_s:.0f} tok/s)")
+    first = out["log"][0]["loss"]
+    print(f"loss {first:.3f} -> {out['final_loss']:.3f} "
+          f"({'improved' if out['final_loss'] < first else 'NOT improved'})")
+    print(f"checkpoints in {args.workdir} (resume by re-running)")
+
+
+if __name__ == "__main__":
+    main()

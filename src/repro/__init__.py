@@ -1,0 +1,2 @@
+"""repro: XDT (Expedited Data Transfers) rebuilt as a JAX/TPU framework."""
+__version__ = "1.0.0"

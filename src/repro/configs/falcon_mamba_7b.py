@@ -1,0 +1,21 @@
+"""falcon-mamba-7b [ssm] — mamba1 arch, attention-free.  [arXiv:2410.05355]
+
+64L d_model=4096 d_ff=0 vocab=65024, ssm_state=16, expand=2 (d_inner 8192).
+Runs all four shape cells including long_500k (state is O(1) in context).
+XDT note: the decode-time ephemeral object is the (conv, ssm) state — MBs,
+not GBs — so the transfer win is proportionally small (DESIGN.md §5).
+"""
+import dataclasses
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0, d_ff=0,
+    vocab=65024, head_dim=64, causal=True, subquadratic=True,
+    ssm=SSMConfig(d_state=16, version=1, expand=2, conv_width=4, dt_rank=256),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=48, vocab=128,
+    ssm=SSMConfig(d_state=4, version=1, expand=2, conv_width=4, dt_rank=8, chunk=8),
+)

@@ -1,0 +1,20 @@
+"""granite-8b [dense] — llama-arch, code.  [arXiv:2405.04324; hf]
+
+36L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=49152.
+Head-TP plan with KV replication 8->16 on the 16-way model axis.
+long_500k skipped: pure full attention.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab=49152, head_dim=128, rope_theta=1e4,
+    skip_note="long_500k skipped: full quadratic attention",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160,
+    vocab=128, head_dim=16, attn_chunk=8,
+)

@@ -1,0 +1,23 @@
+"""hubert-xlarge [audio] — encoder-only, w2v2-family backbone.
+[arXiv:2106.07447; unverified]
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (masked-unit targets).
+The modality frontend (conv feature encoder) is a STUB: input_specs()
+provides precomputed frame embeddings (B, S, d_model).
+decode_32k / long_500k skipped: encoder-only, no decode step.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="encoder",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, d_ff=5120,
+    vocab=504, head_dim=80, causal=False, has_decode=False,
+    frontend="audio",
+    skip_note="decode_32k/long_500k skipped: encoder-only (no decode step)",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=160,
+    vocab=32, head_dim=16, attn_chunk=8,
+)

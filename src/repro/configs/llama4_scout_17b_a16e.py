@@ -1,0 +1,24 @@
+"""llama4-scout-17b-a16e [moe] — MoE 16e top-1, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192(expert) vocab=202048, 16 experts
+top-1.  40 heads do not divide the 16-way model axis -> context-parallel
+attention; experts shard 1-per-rank (EP==TP width).
+long_500k skipped: full attention.
+"""
+import dataclasses
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=8192,
+    vocab=202048, head_dim=128, rope_theta=5e5,
+    moe=MoEConfig(n_experts=16, top_k=1, d_ff_expert=8192),
+    skip_note="long_500k skipped: full quadratic attention",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=5, n_kv_heads=1, d_ff=128,
+    vocab=128, head_dim=16, attn_chunk=8,
+    moe=MoEConfig(n_experts=4, top_k=1, d_ff_expert=96, capacity_factor=2.0),
+)

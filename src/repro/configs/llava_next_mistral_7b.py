@@ -1,0 +1,26 @@
+"""llava-next-mistral-7b [vlm] — anyres tiling, mistral-7b backbone.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+Anyres vision frontend is a STUB: input_specs() provides pre-projected patch
+embeddings (B, S_img, d_model) occupying the first S_img positions of the
+sequence; the LM loss covers text positions.
+long_500k skipped: full attention.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+# 1 base tile + 4 anyres tiles at 24x24 patches = 2880 -> round to 1152 image
+# positions for the 4k training cell (tiles are pooled 2x2 per llava-next).
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=14336,
+    vocab=32000, head_dim=128, rope_theta=1e6,
+    frontend="vlm", frontend_seq=1152,
+    skip_note="long_500k skipped: full quadratic attention",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160,
+    vocab=128, head_dim=16, attn_chunk=8, frontend_seq=8,
+)

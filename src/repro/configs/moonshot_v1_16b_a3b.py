@@ -1,0 +1,23 @@
+"""moonshot-v1-16b-a3b [moe] — kimi/moonlight arch, 64e top-6.
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+
+48L d_model=2048 16H (GQA kv=16) d_ff=1408(expert) vocab=163840, MoE 64
+experts top-6.  Experts shard 4-per-rank.
+long_500k skipped: full attention.
+"""
+import dataclasses
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=16, n_kv_heads=16, d_ff=1408,
+    vocab=163840, head_dim=128, rope_theta=5e4,
+    moe=MoEConfig(n_experts=64, top_k=6, d_ff_expert=1408),
+    skip_note="long_500k skipped: full quadratic attention",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=96,
+    vocab=128, head_dim=16, attn_chunk=8,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=96, capacity_factor=2.0),
+)

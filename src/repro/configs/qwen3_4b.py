@@ -1,0 +1,19 @@
+"""qwen3-4b [dense] — qk_norm, GQA.  [hf:Qwen/Qwen3-4B; hf]
+
+36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936, per-head RMS qk-norm.
+long_500k skipped: pure full attention.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b", family="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, d_ff=9728,
+    vocab=151936, head_dim=128, qk_norm=True, rope_theta=1e6,
+    skip_note="long_500k skipped: full quadratic attention",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=160,
+    vocab=128, head_dim=16, attn_chunk=8,
+)

@@ -1,0 +1,22 @@
+"""smollm-360m [dense] — llama-arch small.  [hf:HuggingFaceTB/SmolLM-360M; hf]
+
+32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152.
+15 heads do not divide the 16-way model axis -> attention runs in the
+context-parallel (seq) plan; MLP/vocab stay tensor-parallel.
+long_500k skipped: pure full attention (see DESIGN.md §Arch-applicability).
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m", family="dense",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5, d_ff=2560,
+    vocab=49152, head_dim=64, rope_theta=1e4, tie_embeddings=True,
+    subquadratic=False,
+    skip_note="long_500k skipped: full quadratic attention",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=48, n_heads=3, n_kv_heads=1, d_ff=128,
+    vocab=128, head_dim=16, attn_chunk=8,
+)

@@ -1,0 +1,20 @@
+"""starcoder2-15b [dense] — GQA, RoPE.  [arXiv:2402.19173; hf]
+
+40L d_model=6144 48H (GQA kv=4) d_ff=24576 vocab=49152.
+Head-TP plan with KV replication 4->16.
+long_500k skipped: pure full attention.
+"""
+import dataclasses
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b", family="dense",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=4, d_ff=24576,
+    vocab=49152, head_dim=128, rope_theta=1e5,
+    skip_note="long_500k skipped: full quadratic attention",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, d_ff=160,
+    vocab=128, head_dim=16, attn_chunk=8,
+)

@@ -1,0 +1,28 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242; hf]
+
+38L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000, ssm_state=64.
+Structure: 38 Mamba2 layers; one *shared* attention+MLP block (single weight
+set) applied every 6 layers (6 applications).  Runs all four cells; at
+long_500k the shared-block KV is sequence-sharded over the model axis and
+decode attention is O(L) per step (sub-quadratic).
+"""
+import dataclasses
+from repro.models.config import ModelConfig, SSMConfig, HybridConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32, d_ff=8192,
+    vocab=32000, head_dim=64, causal=True, subquadratic=True,
+    ssm=SSMConfig(d_state=64, version=2, expand=2, conv_width=4, head_dim=64, chunk=128),
+    hybrid=HybridConfig(attn_every=6, shared_d_ff=8192, shared_n_heads=32,
+                        shared_n_kv_heads=32),
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=5, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+    vocab=128, head_dim=16, attn_chunk=8,
+    ssm=SSMConfig(d_state=8, version=2, expand=2, conv_width=4, head_dim=16, chunk=8),
+    hybrid=HybridConfig(attn_every=2, shared_d_ff=128, shared_n_heads=4,
+                        shared_n_kv_heads=2),
+)

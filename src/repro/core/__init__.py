@@ -1,0 +1,61 @@
+"""XDT core: the paper's contribution as a composable JAX substrate.
+
+Layers
+------
+* :mod:`refs`      — unforgeable capability tokens for ephemeral objects.
+* :mod:`buffers`   — producer-side refcounted buffer registry + flow control.
+* :mod:`transfer`  — the XDT API (invoke/put/get) over jax.Arrays, with
+                     inline / S3 / ElastiCache baselines.
+* :mod:`patterns`  — 1-1 / scatter / gather / broadcast as mesh collectives.
+* :mod:`scheduler` — activator/autoscaler control plane (placement first,
+                     data second — the XDT separation).
+* :mod:`workflow`  — function-DAG engine with at-most-once semantics.
+* :mod:`cluster`   — calibrated discrete-event simulator for the paper's
+                     latency/bandwidth/cost evaluation.
+* :mod:`cost`      — AWS cost model (Table 2).
+"""
+from .buffers import BufferRegistry, RegistryStats
+from .cluster import (
+    DEFAULT_NET,
+    NetConstants,
+    ServerlessCluster,
+    Simulator,
+    TransferAccounting,
+    effective_bandwidth_Bps,
+    measure_pattern,
+)
+from .cost import (
+    CostBreakdown,
+    WorkflowCostInputs,
+    elasticache_storage_cost,
+    lambda_compute_cost,
+    s3_storage_cost,
+    workflow_cost,
+)
+from .errors import (
+    InlineTooLarge,
+    InvocationReplayed,
+    XDTError,
+    XDTObjectExhausted,
+    XDTProducerGone,
+    XDTRefInvalid,
+    XDTTimeout,
+    XDTWouldBlock,
+)
+from .patterns import (
+    all_to_all_shard,
+    broadcast_shard,
+    build_pattern_fn,
+    gather_all_shard,
+    gather_shard,
+    p2p_shard,
+    pattern_wire_bytes,
+    scatter_shard,
+)
+from .refs import ObjectDescriptor, RefMinter, RefPayload, XDTRef
+from .workloads import WORKLOADS, WorkloadResult, run_all, run_mr, run_set, run_vid
+from .scheduler import ControlPlane, Deployment, Instance, ScalingPolicy
+from .transfer import TransferEngine, TransferStats, modeled_transfer_seconds
+from .workflow import Context, WorkflowEngine
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,216 @@
+"""Producer-side ephemeral buffer registry with refcounted retrievals.
+
+Paper §4: the producer's SDK/queue-proxy "buffers the payload in its memory";
+each reference carries "a user-specified number of retrievals N of that object,
+which complete before the object can be de-allocated"; buffer lifetime is tied
+to the producer *instance* lifetime (keep-alive), and instance shutdown
+immediately de-allocates all objects (consumers observe ``XDT.ProducerGone``).
+
+Flow control (paper §5.3): the design relies on pre-allocated buffer slots;
+when none are free "the subsequent transfers are paused, resulting in the user
+code blocking in the corresponding XDT API call."  We model slots as a bounded
+byte/slot budget; ``put(block=True)`` waits on a condition variable that is
+notified by completing retrievals, ``put(block=False)`` raises
+:class:`XDTWouldBlock` (TCP-backpressure analogue without a TCP stack).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from .errors import (
+    XDTObjectExhausted,
+    XDTProducerGone,
+    XDTTimeout,
+    XDTWouldBlock,
+)
+
+
+def _default_nbytes(obj: Any) -> int:
+    nb = getattr(obj, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    if isinstance(obj, (bytes, bytearray)):
+        return len(obj)
+    return 64  # opaque python object: accounting floor
+
+
+@dataclasses.dataclass
+class _Entry:
+    obj: Any
+    nbytes: int
+    remaining: int
+    epoch: int
+    created_at: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RegistryStats:
+    puts: int
+    gets: int
+    evictions: int
+    bytes_in_use: int
+    slots_in_use: int
+    high_water_bytes: int
+    blocked_puts: int
+
+
+class BufferRegistry:
+    """Bounded, refcounted, epoch-guarded ephemeral object store.
+
+    Thread-safe: the serving engine and the data pipeline pull from worker
+    threads while producers keep running.
+    """
+
+    def __init__(
+        self,
+        max_slots: int = 256,
+        max_bytes: int = 1 << 34,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self._lock = threading.Lock()
+        self._space = threading.Condition(self._lock)
+        self._entries: Dict[int, _Entry] = {}
+        self._next_id = 0
+        self._epoch = 0
+        self._max_slots = max_slots
+        self._max_bytes = max_bytes
+        self._bytes = 0
+        self._clock = clock
+        self._puts = 0
+        self._gets = 0
+        self._evictions = 0
+        self._high_water = 0
+        self._blocked_puts = 0
+
+    # ------------------------------------------------------------------ put
+    def put(
+        self,
+        obj: Any,
+        n_retrievals: int = 1,
+        nbytes: Optional[int] = None,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> Tuple[int, int]:
+        """Buffer ``obj`` for ``n_retrievals`` pulls.  Returns (buffer_id, epoch)."""
+        if n_retrievals < 1:
+            raise ValueError("n_retrievals must be >= 1")
+        nb = _default_nbytes(obj) if nbytes is None else int(nbytes)
+        deadline = None if timeout is None else self._clock() + timeout
+        with self._space:
+            while not self._has_room(nb):
+                if not block:
+                    raise XDTWouldBlock(
+                        f"no buffer slot for {nb}B "
+                        f"({len(self._entries)}/{self._max_slots} slots, "
+                        f"{self._bytes}/{self._max_bytes}B)"
+                    )
+                self._blocked_puts += 1
+                remaining = None if deadline is None else deadline - self._clock()
+                if remaining is not None and remaining <= 0:
+                    raise XDTTimeout("put() flow-control wait exceeded timeout")
+                if not self._space.wait(timeout=remaining):
+                    raise XDTTimeout("put() flow-control wait exceeded timeout")
+            buffer_id = self._next_id
+            self._next_id += 1
+            self._entries[buffer_id] = _Entry(
+                obj=obj,
+                nbytes=nb,
+                remaining=n_retrievals,
+                epoch=self._epoch,
+                created_at=self._clock(),
+            )
+            self._bytes += nb
+            self._high_water = max(self._high_water, self._bytes)
+            self._puts += 1
+            return buffer_id, self._epoch
+
+    def _has_room(self, nb: int) -> bool:
+        if len(self._entries) >= self._max_slots:
+            return False
+        # A single object larger than the budget is still admitted when the
+        # registry is otherwise empty (mirrors streaming a >buffer object
+        # chunk-by-chunk through TCP: it is slow, not impossible).
+        if self._bytes + nb > self._max_bytes and self._entries:
+            return False
+        return True
+
+    # ------------------------------------------------------------------ get
+    def get(self, buffer_id: int, epoch: int) -> Any:
+        """One retrieval.  Decrements the refcount; frees on the Nth pull."""
+        with self._space:
+            if epoch != self._epoch:
+                raise XDTProducerGone(
+                    f"producer epoch {epoch} superseded by {self._epoch}"
+                )
+            entry = self._entries.get(buffer_id)
+            if entry is None:
+                raise XDTObjectExhausted(f"buffer {buffer_id} not resident")
+            obj = entry.obj
+            entry.remaining -= 1
+            self._gets += 1
+            if entry.remaining == 0:
+                self._release(buffer_id)
+            return obj
+
+    def peek_remaining(self, buffer_id: int) -> int:
+        with self._lock:
+            e = self._entries.get(buffer_id)
+            return 0 if e is None else e.remaining
+
+    def _release(self, buffer_id: int) -> None:
+        entry = self._entries.pop(buffer_id)
+        self._bytes -= entry.nbytes
+        self._space.notify_all()
+
+    # ----------------------------------------------------- instance lifetime
+    def kill_instance(self) -> int:
+        """Simulate producer instance shutdown (keep-alive expiry / failure).
+
+        All resident objects are dropped and the epoch advances, so any
+        outstanding reference observes :class:`XDTProducerGone` on ``get``.
+        Returns the number of evicted objects.
+        """
+        with self._space:
+            n = len(self._entries)
+            self._entries.clear()
+            self._bytes = 0
+            self._epoch += 1
+            self._evictions += n
+            self._space.notify_all()
+            return n
+
+    def expire_older_than(self, age_s: float) -> int:
+        """Garbage-collect objects past a TTL (defensive sweep; the paper's
+        design frees on the Nth retrieval, this guards leaked refs)."""
+        with self._space:
+            now = self._clock()
+            stale = [
+                bid
+                for bid, e in self._entries.items()
+                if now - e.created_at > age_s
+            ]
+            for bid in stale:
+                self._release(bid)
+            self._evictions += len(stale)
+            return len(stale)
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def epoch(self) -> int:
+        with self._lock:
+            return self._epoch
+
+    def stats(self) -> RegistryStats:
+        with self._lock:
+            return RegistryStats(
+                puts=self._puts,
+                gets=self._gets,
+                evictions=self._evictions,
+                bytes_in_use=self._bytes,
+                slots_in_use=len(self._entries),
+                high_water_bytes=self._high_water,
+                blocked_puts=self._blocked_puts,
+            )

@@ -1,0 +1,133 @@
+"""AWS cost model for serverless workflows (paper §6.5.1, Table 2).
+
+Pricing as of 1/1/2023 (the paper's stated snapshot):
+
+* AWS Lambda [13]: $0.20 per 1M invocations + $0.0000166667 per GB-second,
+  billed on the configured memory footprint (the paper fixes 512 MB for all
+  functions) times the *billed duration* — which includes time the function
+  spends stalled on transfers, a key reason slow storage also inflates the
+  "compute" column.
+* AWS S3 [12]: ~$0.023/GB-month storage (negligible for seconds-lived
+  ephemeral objects) — the dominant S3 ephemeral cost is the request fee:
+  $0.005 per 1k PUT, $0.0004 per 1k GET.
+* AWS ElastiCache [11]: ~$0.02 per GB-hour of cache capacity with instance-
+  hour granularity: capacity must be provisioned for the peak resident
+  ephemeral set and is billed per hour even if the data lives seconds.  No
+  per-request fee.
+* XDT: no storage service at all — only compute (the producer's keep-alive
+  memory already exists; buffering adds no billable resource).
+
+The model reproduces the paper's Table 2 structure: per-invocation cost split
+into compute and storage for S3 / ElastiCache / XDT configurations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+# --- pricing constants (USD, AWS us-west-1-ish, 1/1/2023 snapshot) ----------
+LAMBDA_INVOCATION_USD = 0.20 / 1e6          # per request
+LAMBDA_GBS_USD = 0.0000166667               # per GB-second
+S3_PUT_USD = 0.005 / 1e3                    # per PUT/COPY/POST/LIST
+S3_GET_USD = 0.0004 / 1e3                   # per GET
+S3_GB_MONTH_USD = 0.023                     # per GB-month (prorated)
+EC_GB_HOUR_USD = 0.02                       # per GB-hour, hour granularity
+SECONDS_PER_MONTH = 30 * 24 * 3600.0
+
+DEFAULT_FUNCTION_MEM_GB = 0.5               # paper: 512 MB for all functions
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    """Per-invocation cost, USD."""
+
+    compute: float
+    storage: float
+
+    @property
+    def total(self) -> float:
+        return self.compute + self.storage
+
+    def scaled(self, k: float) -> "CostBreakdown":
+        return CostBreakdown(self.compute * k, self.storage * k)
+
+    def as_micro_usd(self) -> Dict[str, float]:
+        return {
+            "compute_uUSD": self.compute * 1e6,
+            "storage_uUSD": self.storage * 1e6,
+            "total_uUSD": self.total * 1e6,
+        }
+
+
+def lambda_compute_cost(
+    billed_duration_s: float,
+    n_invocations: int,
+    mem_gb: float = DEFAULT_FUNCTION_MEM_GB,
+) -> float:
+    """Compute cost: invocation fee + GB-seconds over *billed* duration."""
+    return (
+        n_invocations * LAMBDA_INVOCATION_USD
+        + billed_duration_s * mem_gb * LAMBDA_GBS_USD
+    )
+
+
+def s3_storage_cost(
+    n_puts: int,
+    n_gets: int,
+    gb_seconds: float = 0.0,
+) -> float:
+    """S3 ephemeral cost = request fees + (tiny) prorated residency."""
+    return (
+        n_puts * S3_PUT_USD
+        + n_gets * S3_GET_USD
+        + (gb_seconds / SECONDS_PER_MONTH) * S3_GB_MONTH_USD
+    )
+
+
+def elasticache_storage_cost(peak_resident_gb: float, hours: float = 1.0) -> float:
+    """ElastiCache cost: provisioned capacity for the peak ephemeral set.
+
+    The paper's "minimal possible price" assumption still cannot escape the
+    hour-granularity of cache provisioning: capacity for the peak resident
+    set is billed for at least one hour, which is what makes EC 17-772x more
+    expensive than XDT for bursty ephemeral data.
+    """
+    import math
+
+    return peak_resident_gb * EC_GB_HOUR_USD * max(1.0, math.ceil(hours))
+
+
+def xdt_storage_cost() -> float:
+    """XDT uses no intermediate service: zero storage cost by construction."""
+    return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkflowCostInputs:
+    """Aggregate accounting for a single end-to-end workflow invocation."""
+
+    n_function_invocations: int
+    billed_duration_s: float            # sum across all function instances
+    n_storage_puts: int = 0
+    n_storage_gets: int = 0
+    storage_gb_seconds: float = 0.0     # integral of resident ephemeral GB
+    peak_resident_gb: float = 0.0
+
+
+def workflow_cost(inputs: WorkflowCostInputs, backend: str) -> CostBreakdown:
+    """Cost of one workflow invocation under a given transfer backend."""
+    compute = lambda_compute_cost(
+        inputs.billed_duration_s, inputs.n_function_invocations
+    )
+    if backend == "s3":
+        storage = s3_storage_cost(
+            inputs.n_storage_puts, inputs.n_storage_gets, inputs.storage_gb_seconds
+        )
+    elif backend == "elasticache":
+        storage = elasticache_storage_cost(inputs.peak_resident_gb)
+    elif backend in ("xdt", "inline"):
+        storage = xdt_storage_cost()
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return CostBreakdown(compute=compute, storage=storage)

@@ -1,0 +1,70 @@
+"""Error taxonomy for the XDT substrate.
+
+The paper (§4.2.2) requires that XDT failures surface to user logic as ordinary
+serverless runtime errors so that existing orchestrator-level error handling
+(retry / fallback functions) composes with XDT.  Every error below therefore
+carries a stable ``code`` string, mirroring how AWS Step Functions matches
+errors by name.
+"""
+from __future__ import annotations
+
+
+class XDTError(Exception):
+    """Base class for all XDT runtime errors."""
+
+    code = "XDT.Error"
+
+    def __init__(self, msg: str = ""):
+        super().__init__(msg or self.code)
+
+
+class XDTRefInvalid(XDTError):
+    """Reference failed authentication (forged / tampered / truncated)."""
+
+    code = "XDT.RefInvalid"
+
+
+class XDTProducerGone(XDTError):
+    """Producer instance was shut down before the object was retrieved.
+
+    Paper §4.2.2: "a shutdown of a producer instance leads to immediate
+    de-allocation of all the objects, retrievals of which have not completed"
+    — the consumer's ``get()`` receives this error and must escalate to the
+    orchestrator, which re-invokes the producer (at-least-once on top of
+    at-most-once).
+    """
+
+    code = "XDT.ProducerGone"
+
+
+class XDTObjectExhausted(XDTError):
+    """All N permitted retrievals of this reference already completed."""
+
+    code = "XDT.ObjectExhausted"
+
+
+class XDTWouldBlock(XDTError):
+    """Non-blocking ``put()`` found no free buffer slot (flow control)."""
+
+    code = "XDT.WouldBlock"
+
+
+class XDTTimeout(XDTError):
+    """Blocking ``put()``/``get()`` exceeded its deadline."""
+
+    code = "XDT.Timeout"
+
+
+class InlineTooLarge(XDTError):
+    """Inline payload exceeds the provider's control-plane cap (6 MB sync)."""
+
+    code = "Provider.InlineTooLarge"
+
+
+class InvocationReplayed(XDTError):
+    """A second execution of the same invocation id was attempted.
+
+    Raised by the workflow engine to enforce at-most-once execution.
+    """
+
+    code = "Provider.InvocationReplayed"

@@ -1,0 +1,168 @@
+"""Control-plane analogue: activator + autoscaler + per-instance queue-proxy.
+
+Paper §2.2: every invocation traverses the *activator* (load balancer), which
+steers it to the least-loaded instance; the *autoscaler* watches per-instance
+load (reported by each instance's *queue-proxy*) and scales the deployment;
+cold starts buffer the invocation until a new instance is up.
+
+XDT's core compatibility claim is that the control plane is **unchanged** —
+placement decisions happen exactly here, before any bulk data moves, and the
+data plane then pulls producer->chosen-consumer directly.  The serving engine
+(`repro.serving`) uses this scheduler to pick decode slices; the workflow
+engine uses it to pick function instances.
+
+Everything is deterministic under a seeded clock so tests can assert scaling
+decisions exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class ScalingPolicy:
+    """Knative-style concurrency autoscaling."""
+
+    target_concurrency: int = 1       # desired in-flight per instance
+    min_instances: int = 0
+    max_instances: int = 64
+    keep_alive_s: float = 60.0        # idle instance lifetime (paper §4.1: >> data lifetime)
+    cold_start_s: float = 0.5         # instance boot latency
+
+
+@dataclasses.dataclass
+class Instance:
+    instance_id: int
+    coords: Tuple[int, ...]           # placement (e.g. pod / mesh slice)
+    in_flight: int = 0
+    last_used: float = 0.0
+    epoch: int = 0                    # bumps when instance is recycled
+    ready_at: float = 0.0             # cold-start gate
+    alive: bool = True
+
+    @property
+    def load(self) -> int:
+        return self.in_flight
+
+
+class Deployment:
+    """One function's fleet of instances + its autoscaling state."""
+
+    def __init__(
+        self,
+        name: str,
+        policy: ScalingPolicy,
+        placer: Optional[Callable[[int], Tuple[int, ...]]] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.name = name
+        self.policy = policy
+        self.placer = placer or (lambda i: (i,))
+        self.clock = clock
+        self.instances: Dict[int, Instance] = {}
+        self._ids = itertools.count()
+        self.stats = {"cold_starts": 0, "scale_downs": 0, "steered": 0, "buffered": 0}
+        for _ in range(policy.min_instances):
+            self._spawn(cold=False)
+
+    # -- autoscaler ----------------------------------------------------------
+    def _spawn(self, cold: bool = True) -> Instance:
+        iid = next(self._ids)
+        now = self.clock()
+        inst = Instance(
+            instance_id=iid,
+            coords=self.placer(iid),
+            last_used=now,
+            ready_at=now + (self.policy.cold_start_s if cold else 0.0),
+        )
+        if cold:
+            self.stats["cold_starts"] += 1
+        self.instances[iid] = inst
+        return inst
+
+    def _reap_idle(self) -> None:
+        now = self.clock()
+        alive = len(self.instances)
+        for iid, inst in list(self.instances.items()):
+            if alive <= self.policy.min_instances:
+                break
+            if inst.in_flight == 0 and now - inst.last_used > self.policy.keep_alive_s:
+                inst.alive = False
+                del self.instances[iid]
+                alive -= 1
+                self.stats["scale_downs"] += 1
+
+    # -- activator -----------------------------------------------------------
+    def steer(self) -> Tuple[Instance, float]:
+        """Pick an instance for one invocation.
+
+        Returns (instance, wait_s) where wait_s > 0 models the activator
+        buffering the request across a cold start.
+        """
+        self._reap_idle()
+        now = self.clock()
+        ready = [
+            i for i in self.instances.values()
+            if i.ready_at <= now and i.in_flight < self.policy.target_concurrency
+        ]
+        if ready:
+            inst = min(ready, key=lambda i: (i.load, i.instance_id))
+            wait = 0.0
+        else:
+            # scale up if allowed; otherwise queue on the least-loaded
+            if len(self.instances) < self.policy.max_instances:
+                inst = self._spawn(cold=True)
+                wait = max(0.0, inst.ready_at - now)
+                self.stats["buffered"] += 1
+            else:
+                inst = min(self.instances.values(), key=lambda i: (i.load, i.instance_id))
+                wait = 0.0
+        inst.in_flight += 1
+        inst.last_used = now
+        self.stats["steered"] += 1
+        return inst, wait
+
+    def release(self, instance_id: int) -> None:
+        inst = self.instances.get(instance_id)
+        if inst is not None:
+            inst.in_flight = max(0, inst.in_flight - 1)
+            inst.last_used = self.clock()
+
+    def kill(self, instance_id: int) -> bool:
+        """Fault injection: a node dies.  Outstanding XDT buffers die with it."""
+        inst = self.instances.pop(instance_id, None)
+        if inst is None:
+            return False
+        inst.alive = False
+        return True
+
+    @property
+    def n_instances(self) -> int:
+        return len(self.instances)
+
+
+class ControlPlane:
+    """The activator/autoscaler pair for a set of deployments."""
+
+    def __init__(self, clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.deployments: Dict[str, Deployment] = {}
+
+    def register(
+        self,
+        name: str,
+        policy: Optional[ScalingPolicy] = None,
+        placer: Optional[Callable[[int], Tuple[int, ...]]] = None,
+    ) -> Deployment:
+        dep = Deployment(name, policy or ScalingPolicy(), placer, self.clock)
+        self.deployments[name] = dep
+        return dep
+
+    def steer(self, name: str) -> Tuple[Instance, float]:
+        return self.deployments[name].steer()
+
+    def release(self, name: str, instance_id: int) -> None:
+        self.deployments[name].release(instance_id)

@@ -1,0 +1,245 @@
+"""TransferEngine: the XDT API (`invoke`/`put`/`get`) over real ``jax.Array``s.
+
+This is the host-level data plane used by the serving engine and the data
+pipeline.  Four backends, mirroring the paper's §2.3 taxonomy:
+
+``xdt``
+    The paper's contribution.  ``put`` leaves the array **device-resident in
+    its producer sharding** inside the producer's :class:`BufferRegistry`
+    (zero copies) and mints an HMAC-signed :class:`XDTRef`.  ``get`` opens the
+    ref provider-side and moves the bytes once, directly, to the consumer's
+    sharding (``jax.device_put`` here; inside a jitted step graph the same
+    pull is a ``collective-permute``, see :mod:`repro.core.patterns`).
+
+``inline``
+    The payload rides the control message.  Enforces the 6 MB cap and pays a
+    host staging round-trip (the activator path).
+
+``s3`` / ``elasticache``
+    Through-storage: device -> host copy into the simulated service, then
+    host -> device on ``get``.  Functionally real (the copies happen), with
+    latency/cost book-keeping from the calibrated constants so framework-level
+    reports stay consistent with the cluster simulator.
+
+Every backend records *modeled* transfer seconds (what the transfer would
+cost on the calibrated cluster) plus the cost-model accounting, so examples
+and benchmarks can report latency and $ per transfer without real AWS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .buffers import BufferRegistry
+from .cluster import DEFAULT_NET, NetConstants, TransferAccounting
+from .errors import InlineTooLarge, XDTRefInvalid
+from .refs import ObjectDescriptor, RefMinter, RefPayload, XDTRef
+
+Sharding = Any  # jax.sharding.Sharding
+
+
+def _nbytes(x) -> int:
+    """Total bytes of an array or pytree of arrays."""
+    total = 0
+    for leaf in jax.tree.leaves(x):
+        leaf = jnp.asarray(leaf) if not hasattr(leaf, "nbytes") else leaf
+        total += int(leaf.nbytes)
+    return total
+
+
+def _describe(obj) -> Tuple[Tuple[int, ...], str]:
+    """(shape, dtype-string) for the descriptor; pytrees get a summary."""
+    if isinstance(obj, (jax.Array, np.ndarray)):
+        return tuple(obj.shape), str(obj.dtype)
+    return (len(jax.tree.leaves(obj)),), "pytree"
+
+
+@dataclasses.dataclass
+class TransferStats:
+    transfers: int = 0
+    bytes_moved: int = 0
+    modeled_seconds: float = 0.0
+    wall_seconds: float = 0.0
+
+
+def modeled_transfer_seconds(
+    backend: str, nbytes: int, net: NetConstants = DEFAULT_NET
+) -> float:
+    """Deterministic latency model for one producer->consumer object move."""
+    if backend == "inline":
+        return net.ctrl_plane_latency + nbytes / net.nic_bw
+    if backend == "s3":
+        return (
+            2 * net.s3_op_latency
+            + net.ctrl_plane_latency
+            + 2 * nbytes / min(net.s3_stream_bw, net.nic_bw)
+        )
+    if backend == "elasticache":
+        return (
+            2 * net.ec_op_latency
+            + net.ctrl_plane_latency
+            + 2 * nbytes / min(net.ec_stream_bw, net.nic_bw)
+        )
+    if backend == "xdt":
+        return (
+            net.ctrl_plane_latency
+            + net.xdt_pull_rtt
+            + nbytes / min(net.xdt_stream_bw, net.nic_bw * net.xdt_stream_eff)
+        )
+    raise ValueError(backend)
+
+
+class TransferEngine:
+    """One producer-side endpoint of the XDT substrate."""
+
+    BACKENDS = ("xdt", "inline", "s3", "elasticache")
+
+    def __init__(
+        self,
+        backend: str = "xdt",
+        *,
+        producer_coords: Tuple[int, ...] = (0,),
+        registry: Optional[BufferRegistry] = None,
+        minter: Optional[RefMinter] = None,
+        net: NetConstants = DEFAULT_NET,
+        inline_limit: Optional[int] = None,
+    ):
+        if backend not in self.BACKENDS:
+            raise ValueError(f"backend must be one of {self.BACKENDS}")
+        self.backend = backend
+        self.producer_coords = producer_coords
+        self.registry = registry if registry is not None else BufferRegistry()
+        self.minter = minter if minter is not None else RefMinter()
+        self.net = net
+        self.inline_limit = (
+            net.inline_limit if inline_limit is None else inline_limit
+        )
+        self.stats = TransferStats()
+        self.acct = TransferAccounting()
+        # the simulated external service: key -> host-resident bytes
+        self._service_store: Dict[int, np.ndarray] = {}
+        self._service_refcount: Dict[int, int] = {}
+        self._service_key = 0
+
+    # ------------------------------------------------------------------ put
+    def put(
+        self,
+        obj: jax.Array,
+        n_retrievals: int = 1,
+        *,
+        block: bool = True,
+        timeout: Optional[float] = None,
+    ) -> XDTRef:
+        """Buffer ``obj`` (array or pytree) and mint a reference permitting
+        ``n_retrievals`` pulls."""
+        nbytes = _nbytes(obj)
+        t0 = time.perf_counter()
+
+        if self.backend == "xdt":
+            # Zero-copy: arrays stay device-resident in producer sharding.
+            buffer_id, epoch = self.registry.put(
+                obj, n_retrievals, nbytes=nbytes, block=block, timeout=timeout
+            )
+        elif self.backend == "inline":
+            if nbytes > self.inline_limit:
+                raise InlineTooLarge(
+                    f"{nbytes}B exceeds inline cap {self.inline_limit}B"
+                )
+            buffer_id, epoch = self.registry.put(
+                jax.tree.map(np.asarray, obj),  # staged via control plane (host)
+                n_retrievals, nbytes=nbytes, block=block, timeout=timeout,
+            )
+        else:  # s3 / elasticache: device -> host copy into the service
+            host = jax.tree.map(np.asarray, obj)
+            self._service_key += 1
+            self._service_store[self._service_key] = host
+            self._service_refcount[self._service_key] = n_retrievals
+            buffer_id, epoch = self._service_key, 0
+            self.acct.n_storage_puts += 1
+            self.acct.store(time.monotonic(), nbytes / 1e9)
+
+        self.stats.wall_seconds += time.perf_counter() - t0
+        shape, dtype = _describe(obj)
+        desc = ObjectDescriptor(
+            shape=shape,
+            dtype=dtype,
+            nbytes=nbytes,
+            n_retrievals=n_retrievals,
+        )
+        return self.minter.mint(
+            RefPayload(
+                producer=self.producer_coords,
+                buffer_id=buffer_id,
+                epoch=epoch,
+                desc=desc,
+            )
+        )
+
+    # ------------------------------------------------------------------ get
+    def get(self, ref: XDTRef, sharding: Optional[Sharding] = None) -> jax.Array:
+        """One retrieval.  Moves the object directly to the consumer sharding."""
+        payload = self.minter.open(ref)  # raises XDTRefInvalid on forgery
+        nbytes = payload.desc.nbytes
+        t0 = time.perf_counter()
+
+        if self.backend in ("xdt", "inline"):
+            obj = self.registry.get(payload.buffer_id, payload.epoch)
+            if self.backend == "inline":
+                obj = jax.tree.map(jnp.asarray, obj)
+        else:
+            from .errors import XDTObjectExhausted
+
+            host = self._service_store.get(payload.buffer_id)
+            if host is None:
+                raise XDTObjectExhausted(f"service object {payload.buffer_id} gone")
+            obj = jax.tree.map(jnp.asarray, host)
+            self.acct.n_storage_gets += 1
+            self._service_refcount[payload.buffer_id] -= 1
+            if self._service_refcount[payload.buffer_id] <= 0:
+                # last retrieval frees the service-resident copy
+                self.acct.free(time.monotonic(), nbytes / 1e9)
+                self._service_store.pop(payload.buffer_id, None)
+                self._service_refcount.pop(payload.buffer_id, None)
+
+        if sharding is not None:
+            obj = (
+                jax.device_put(obj, sharding)
+                if isinstance(obj, (jax.Array, np.ndarray))
+                else jax.tree.map(lambda v: jax.device_put(v, sharding), obj)
+            )
+
+        self.stats.transfers += 1
+        self.stats.bytes_moved += nbytes
+        self.stats.wall_seconds += time.perf_counter() - t0
+        self.stats.modeled_seconds += modeled_transfer_seconds(
+            self.backend, nbytes, self.net
+        )
+        return obj
+
+    # --------------------------------------------------------------- invoke
+    def invoke(
+        self,
+        handler: Callable[[jax.Array], Any],
+        obj: jax.Array,
+        *,
+        consumer_sharding: Optional[Sharding] = None,
+    ) -> Any:
+        """Blocking 1-1 call: pass ``obj`` by value to ``handler``.
+
+        The SDK splits the call into control (the ref) + data (the pull) and
+        re-joins them at the consumer before the handler runs — paper Fig. 4.
+        """
+        ref = self.put(obj, n_retrievals=1)
+        payload = self.get(ref, sharding=consumer_sharding)
+        return handler(payload)
+
+    # ------------------------------------------------------------ lifecycle
+    def kill_producer(self) -> int:
+        """Producer instance death: drops buffers, invalidates epochs."""
+        self._service_store.clear()
+        return self.registry.kill_instance()

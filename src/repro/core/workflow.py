@@ -1,0 +1,155 @@
+"""Workflow engine: chained serverless functions with XDT transfer edges.
+
+A workflow is a DAG of named functions.  Each function is user logic with the
+signature ``handler(ctx, payload) -> payload`` where ``ctx`` exposes the XDT
+API (paper Table 1): ``ctx.invoke(fn, obj)``, ``ctx.put(obj, n) -> ref``,
+``ctx.get(ref) -> obj``.  Placement is delegated to the control plane
+(:mod:`repro.core.scheduler`), transfers to a :class:`TransferEngine`.
+
+Semantics (paper §4.2.2):
+
+* **At-most-once per invocation id** — the engine records executed ids and
+  refuses replays (:class:`InvocationReplayed`).
+* **Producer-death recovery** — if a consumer's ``get()`` raises
+  ``XDTProducerGone``, the error propagates to the *orchestrator*, which
+  re-invokes the producer sub-workflow with the same arguments under a fresh
+  invocation id (at-least-once at workflow level, at-most-once per id).
+* Retries are bounded (``max_retries``), after which the error surfaces to
+  the caller — identical to Step Functions fallback behaviour.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .errors import XDTError, XDTProducerGone
+from .refs import XDTRef
+from .scheduler import ControlPlane, ScalingPolicy
+from .transfer import TransferEngine
+
+
+@dataclasses.dataclass
+class InvocationRecord:
+    invocation_id: int
+    function: str
+    instance_id: int
+    attempt: int
+    status: str  # "ok" | "error"
+    error_code: Optional[str] = None
+
+
+class Context:
+    """Per-invocation SDK handle given to user handlers."""
+
+    def __init__(self, engine: "WorkflowEngine", function: str, attempt: int):
+        self._engine = engine
+        self.function = function
+        self.attempt = attempt
+
+    # XDT API (paper Table 1)
+    def invoke(self, fn_name: str, obj: Any) -> Any:
+        return self._engine._invoke(fn_name, obj)
+
+    def put(self, obj: Any, n_retrievals: int = 1) -> XDTRef:
+        return self._engine.transfer.put(obj, n_retrievals)
+
+    def get(self, ref: XDTRef) -> Any:
+        return self._engine.transfer.get(ref)
+
+    # collective conveniences built from the primitives (paper §7.1)
+    def scatter(self, fn_name: str, objs: Sequence[Any]) -> List[Any]:
+        return [self._engine._invoke(fn_name, o) for o in objs]
+
+    def broadcast(self, fn_name: str, obj: Any, fan: int) -> List[Any]:
+        ref = self.put(obj, n_retrievals=fan)
+        return [self._engine._invoke(fn_name, ref) for _ in range(fan)]
+
+    def gather(self, refs: Sequence[XDTRef]) -> List[Any]:
+        return [self.get(r) for r in refs]
+
+
+class WorkflowEngine:
+    """Executes function DAGs with at-most-once invocation semantics."""
+
+    def __init__(
+        self,
+        transfer: Optional[TransferEngine] = None,
+        control_plane: Optional[ControlPlane] = None,
+        max_retries: int = 2,
+    ):
+        self.transfer = transfer if transfer is not None else TransferEngine("xdt")
+        self.control = control_plane if control_plane is not None else ControlPlane()
+        self.functions: Dict[str, Callable[[Context, Any], Any]] = {}
+        self.max_retries = max_retries
+        self._invocation_ids = itertools.count(1)
+        self._executed_ids: set = set()
+        self.records: List[InvocationRecord] = []
+
+    # -- registration ----------------------------------------------------------
+    def register(
+        self,
+        name: str,
+        handler: Callable[[Context, Any], Any],
+        policy: Optional[ScalingPolicy] = None,
+    ) -> None:
+        self.functions[name] = handler
+        self.control.register(name, policy or ScalingPolicy(max_instances=16))
+
+    # -- execution ---------------------------------------------------------------
+    def _invoke(self, fn_name: str, payload: Any) -> Any:
+        """One control-plane-mediated invocation (no retry at this layer)."""
+        if fn_name not in self.functions:
+            raise KeyError(f"unknown function {fn_name!r}")
+        invocation_id = next(self._invocation_ids)
+        if invocation_id in self._executed_ids:  # pragma: no cover - invariant
+            from .errors import InvocationReplayed
+
+            raise InvocationReplayed(f"id {invocation_id} already executed")
+        self._executed_ids.add(invocation_id)
+
+        instance, _wait = self.control.steer(fn_name)
+        ctx = Context(self, fn_name, attempt=0)
+        try:
+            result = self.functions[fn_name](ctx, payload)
+            self.records.append(
+                InvocationRecord(invocation_id, fn_name, instance.instance_id, 0, "ok")
+            )
+            return result
+        except XDTError as e:
+            self.records.append(
+                InvocationRecord(
+                    invocation_id, fn_name, instance.instance_id, 0, "error", e.code
+                )
+            )
+            raise
+        finally:
+            self.control.release(fn_name, instance.instance_id)
+
+    def run(self, entry: str, payload: Any) -> Any:
+        """Orchestrator: run the workflow from ``entry``; on XDTProducerGone
+        re-invoke the whole sub-workflow with the original arguments."""
+        attempt = 0
+        while True:
+            try:
+                return self._invoke(entry, payload)
+            except XDTProducerGone:
+                attempt += 1
+                if attempt > self.max_retries:
+                    raise
+                # The producer instance is gone; its buffered objects died
+                # with it.  Re-invoking from the entry function regenerates
+                # them (paper §4.2.2: re-invoke the producer with the same
+                # original arguments).
+                continue
+
+    # -- introspection -----------------------------------------------------------
+    def executed_count(self, fn_name: Optional[str] = None) -> int:
+        return sum(
+            1 for r in self.records if fn_name is None or r.function == fn_name
+        )
+
+    def assert_at_most_once(self) -> None:
+        """Invariant: no invocation id appears twice in the records."""
+        ids = [r.invocation_id for r in self.records]
+        assert len(ids) == len(set(ids)), "invocation id executed more than once"

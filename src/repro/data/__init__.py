@@ -1,0 +1,2 @@
+from .pipeline import SyntheticCorpus, ShardedLoader, make_batch_specs
+from .prefetch import PrefetchingFeed

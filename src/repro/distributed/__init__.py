@@ -1,0 +1,1 @@
+from .sharding import DEFAULT_RULES, ShardingRules, abstract, logical_sharding

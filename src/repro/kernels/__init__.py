@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Kernels (each <name>.py is the pl.pallas_call + BlockSpec implementation,
+:mod:`ops` the dispatching jit wrapper, :mod:`ref` the pure-jnp oracle):
+
+* :mod:`flash_attention`  — prefill blockwise online-softmax attention.
+* :mod:`decode_attention` — one-token GQA decode vs 32k-512k KV (flash-decoding).
+* :mod:`mamba_scan`       — chunked Mamba-1 selective scan, channel-tiled.
+* :mod:`xdt_pull`         — the XDT data-plane stream copy with fused
+                            dequant/cast ("reconstruct the request" in-flight).
+"""
+from .ops import decode_attention, flash_attention, mamba_scan, xdt_pull
+from . import ref
+
+__all__ = ["decode_attention", "flash_attention", "mamba_scan", "xdt_pull", "ref"]

@@ -1,0 +1,82 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU the Pallas lowering runs natively; everywhere else
+(this CPU container, unit tests) the same kernel body executes in interpret
+mode when shapes are block-aligned, falling back to the pure-jnp oracle for
+ragged shapes.  Numerics are identical across all three paths (asserted by
+the sweep tests), so models can call these unconditionally.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .decode_attention import decode_attention as _decode_kernel
+from .flash_attention import flash_attention as _flash_kernel
+from .mamba_scan import mamba_scan as _mamba_kernel
+from .xdt_pull import xdt_pull as _pull_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool = True, q_offset: int = 0, scale: Optional[float] = None,
+    block_q: int = 128, block_k: int = 128,
+) -> jax.Array:
+    Sq, Sk = q.shape[1], k.shape[1]
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    if Sq % bq or Sk % bk or q.shape[2] % k.shape[2]:
+        return _ref.flash_attention_ref(
+            q, k, v, causal=causal, q_offset=q_offset, scale=scale
+        )
+    return _flash_kernel(
+        q, k, v, causal=causal, q_offset=q_offset, scale=scale,
+        block_q=bq, block_k=bk, interpret=not _on_tpu(),
+    )
+
+
+def decode_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
+    *, scale: Optional[float] = None, block_t: int = 512,
+) -> jax.Array:
+    T = k.shape[1]
+    bt = min(block_t, T)
+    if T % bt or q.shape[1] % k.shape[2]:
+        return _ref.decode_attention_ref(q, k, v, lengths, scale=scale)
+    return _decode_kernel(
+        q, k, v, lengths, scale=scale, block_t=bt, interpret=not _on_tpu()
+    )
+
+
+def mamba_scan(
+    x: jax.Array, dt: jax.Array, B_in: jax.Array, C_in: jax.Array,
+    A: jax.Array, D: jax.Array, h0: Optional[jax.Array] = None,
+    *, chunk: int = 256, block_d: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    S, d_in = x.shape[1], x.shape[2]
+    c, bd = min(chunk, S), min(block_d, d_in)
+    if S % c or d_in % bd:
+        return _ref.mamba_scan_ref(x, dt, B_in, C_in, A, D, h0)
+    return _mamba_kernel(
+        x, dt, B_in, C_in, A, D, h0, chunk=c, block_d=bd,
+        interpret=not _on_tpu(),
+    )
+
+
+def xdt_pull(
+    src: jax.Array, scale: Optional[jax.Array] = None,
+    *, out_dtype=jnp.bfloat16, block_n: int = 512,
+) -> jax.Array:
+    N = src.shape[0]
+    bn = min(block_n, N)
+    if src.ndim != 2 or N % bn:
+        return _ref.xdt_pull_ref(src, scale, out_dtype=out_dtype)
+    return _pull_kernel(
+        src, scale, out_dtype=out_dtype, block_n=bn, interpret=not _on_tpu()
+    )

@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` implements the kernel's numerics contract with plain jax.numpy
+(f32 softmax/scan accumulation, same masking semantics) and is the
+ground-truth in the shape/dtype sweep tests: kernels must ``assert_allclose``
+against these in interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill): grouped SDPA, online-softmax contract
+# ---------------------------------------------------------------------------
+
+
+def flash_attention_ref(
+    q: jax.Array,               # (B, Sq, H, hd)
+    k: jax.Array,               # (B, Sk, KV, hd)
+    v: jax.Array,               # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = (hd ** -0.5) if scale is None else scale
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        k_pos = jnp.arange(Sk)
+        mask = k_pos[None, :] <= q_pos[:, None]           # (Sq, Sk)
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# decode attention: 1 query token vs long KV cache, per-sequence lengths
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_ref(
+    q: jax.Array,               # (B, H, hd)
+    k: jax.Array,               # (B, T, KV, hd)
+    v: jax.Array,               # (B, T, KV, hd)
+    lengths: jax.Array,         # (B,) int32: positions [0, len] are valid
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = (hd ** -0.5) if scale is None else scale
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgh,btkh->bkgt", qg, k).astype(jnp.float32) * scale
+    valid = jnp.arange(T)[None, :] <= lengths[:, None]    # (B, T)
+    scores = jnp.where(valid[:, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w.astype(v.dtype), v)
+    return out.reshape(B, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# mamba-1 selective scan: h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t; y = C.h
+# ---------------------------------------------------------------------------
+
+
+def mamba_scan_ref(
+    x: jax.Array,               # (B, S, d_in) post-conv/silu
+    dt: jax.Array,              # (B, S, d_in) post-softplus
+    B_in: jax.Array,            # (B, S, ds)
+    C_in: jax.Array,            # (B, S, ds)
+    A: jax.Array,               # (d_in, ds) negative
+    D: jax.Array,               # (d_in,)
+    h0: Optional[jax.Array] = None,   # (B, d_in, ds) f32
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,d_in) in x.dtype, h_last (B,d_in,ds) f32)."""
+    Bsz, S, d_in = x.shape
+    ds = B_in.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, d_in, ds), f32)
+
+    a = jnp.exp(dt.astype(f32)[..., None] * A)            # (B,S,d_in,ds)
+    # f32 contract: inputs are upcast BEFORE any multiply (kernel-aligned)
+    b = (dt.astype(f32) * x.astype(f32))[..., None] * B_in.astype(f32)[:, :, None, :]
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    y = jnp.einsum("sbdn,bsn->bsd", hs, C_in.astype(f32))
+    y = y + x.astype(f32) * D
+    return y.astype(x.dtype), h_last
+
+
+# ---------------------------------------------------------------------------
+# xdt pull: streamed copy with fused dequant/cast (the data-plane hot loop)
+# ---------------------------------------------------------------------------
+
+
+def xdt_pull_ref(
+    src: jax.Array,             # (N, D) producer-resident buffer
+    scale: Optional[jax.Array] = None,   # per-row (N,) or scalar dequant scale
+    out_dtype=jnp.bfloat16,
+) -> jax.Array:
+    x = src.astype(jnp.float32)
+    if scale is not None:
+        s = scale if scale.ndim == 0 else scale[:, None]
+        x = x * s
+    return x.astype(out_dtype)

@@ -1,0 +1,320 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: a successful
+``.lower().compile()`` on the 256-chip single-pod and 512-chip two-pod host
+meshes means every sharding resolves, every collective is supported, and the
+per-device memory/cost analysis is available for the roofline.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out results/dryrun.json
+
+Results are cached per cell (re-runs skip completed cells unless --force).
+"""
+# The VERY FIRST lines, before any other import: jax locks the device count
+# on first init, and the production mesh needs 512 host devices.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..models import make_decode_fn, make_loss_fn, make_prefill_fn
+from ..optim import OptConfig
+from ..train import make_train_step
+from .input_specs import SHAPE_CELLS, cell_applicable, input_specs
+from .mesh import make_production_mesh
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+(?:e[0-9m]+)?)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO shape string like ``bf16[16,4096]``; tuples summed."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device wire-byte estimate per collective type.
+
+    ``compiled.as_text()`` is the post-SPMD module, so shapes are per-device.
+    Convention (ring schedules): all-reduce counts 2x its payload
+    (reduce-scatter + all-gather phases); the others count their output
+    payload once.  Start/done pairs are deduplicated via the -start suffix.
+    """
+    out: Dict[str, int] = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        opname = m.group(3)
+        base = None
+        for op in COLLECTIVE_OPS:
+            if opname == op or opname == op + "-start":
+                base = op
+                break
+        if base is None:
+            continue
+        if opname.endswith("-done"):
+            continue
+        nbytes = _shape_bytes(m.group(2))
+        mult = 2 if base == "all-reduce" else 1
+        out[base] += nbytes * mult
+    return {k: v for k, v in out.items() if v}
+
+
+def build_step(cfg, kind: str, mesh, specs):
+    """Returns (callable, example_args tuple of abstract values)."""
+    if kind == "train":
+        step = make_train_step(cfg, mesh, OptConfig(), remat="full", donate=False)
+        return step, (specs["params"], specs["opt_state"], specs["batch"])
+    if kind == "prefill":
+        fn = jax.jit(make_prefill_fn(cfg, mesh, remat="none"))
+        return fn, (specs["params"], specs["batch"])
+    fn = jax.jit(make_decode_fn(cfg, mesh))
+    return fn, (specs["params"], specs["cache"], specs["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# depth-extrapolated cost probes
+# ---------------------------------------------------------------------------
+#
+# XLA's ``cost_analysis`` counts a ``scan`` body ONCE, not trip-count times
+# (verified empirically on this jax/jaxlib), so the scanned-over-layers
+# production lowering wildly undercounts FLOPs/bytes.  The probes below lower
+# the SAME cell at two reduced depths with the layer scan fully unrolled,
+# then extrapolate linearly in depth:
+#   f(L) = f(L1) + (f(L2)-f(L1)) / (L2-L1) * (L-L1).
+#
+# TWO probe variants per cell, because chunking cuts both ways:
+#  * FLOPs + collectives come from the UNCHUNKED probe (attention/SSM chunk
+#    scans collapsed to one block) — the inner chunk scan is also a ``scan``
+#    whose body XLA counts once, so leaving it chunked would undercount the
+#    attention FLOPs by the trip count.
+#  * BYTES come from the CHUNKED probe — collapsing the chunk scan
+#    materializes the full O(S^2) score matrix, inflating HBM bytes by
+#    orders of magnitude vs the real blockwise/flash implementation (whose
+#    HBM traffic the chunk-preserving lowering matches: weights +
+#    activations + KV streamed once).
+# Probe lowerings are cost-only: their memory analysis is ignored (the real,
+# chunked, remat'd lowering above is what proves the cell fits).
+
+
+def _probe_cfg(cfg, n_layers: int, chunked: bool = False):
+    import dataclasses as dc
+
+    big = 1 << 30
+    kw = dict(n_layers=n_layers, scan_unroll=True)
+    if not chunked:
+        # Attention only: collapsing the q-chunk scan recovers the full
+        # quadratic FLOP count that a scanned body would undercount, without
+        # changing the math.  The SSM chunk is NEVER collapsed — the SSD
+        # intra-chunk term is O(chunk^2), so chunk=S would change the
+        # ALGORITHM's cost (verified: it inflated zamba2 prefill collectives
+        # 40x), while at the production chunk the scan-interior math is a
+        # negligible slice of the (correctly counted) projection FLOPs.
+        kw["attn_chunk"] = big
+    return dc.replace(cfg, **kw)
+
+
+def _probe_depths(cfg):
+    if cfg.family == "hybrid":
+        e = cfg.hybrid.attn_every
+        return e, 2 * e
+    return 1, 2
+
+
+def run_cost_probes(cfg, kind: str, shape: str, mesh) -> Optional[Dict[str, Any]]:
+    L1, L2 = _probe_depths(cfg)
+    vals: Dict[Any, Any] = {}
+    for chunked in (False, True):
+        for L in (L1, L2):
+            pcfg = _probe_cfg(cfg, L, chunked=chunked)
+            specs = input_specs(pcfg, shape, mesh)
+            step, args = build_step(pcfg, kind, mesh, specs)
+            with mesh:
+                lowered = step.lower(*args)
+                compiled = lowered.compile()
+                ca = compiled.cost_analysis()
+                coll = (
+                    parse_collective_bytes(compiled.as_text())
+                    if not chunked else {}
+                )
+            vals[(chunked, L)] = {
+                "flops": ca.get("flops", 0.0),
+                "bytes": ca.get("bytes accessed", 0.0),
+                "coll": coll,
+            }
+    L = cfg.n_layers
+
+    def extrap(f1, f2):
+        slope = (f2 - f1) / (L2 - L1)
+        return f1 + slope * (L - L1)
+
+    un1, un2 = vals[(False, L1)], vals[(False, L2)]
+    ch1, ch2 = vals[(True, L1)], vals[(True, L2)]
+    all_ops = set(un1["coll"]) | set(un2["coll"])
+    coll = {
+        op: max(0.0, extrap(un1["coll"].get(op, 0), un2["coll"].get(op, 0)))
+        for op in all_ops
+    }
+    return {
+        # FLOPs/collectives: unchunked probe (chunk scans would undercount)
+        "flops_per_device": extrap(un1["flops"], un2["flops"]),
+        # bytes: chunked probe (unchunked would materialize O(S^2) scores)
+        "bytes_per_device": extrap(ch1["bytes"], ch2["bytes"]),
+        "bytes_per_device_unchunked": extrap(un1["bytes"], un2["bytes"]),
+        "collective_bytes_per_device": coll,
+        "probe_depths": [L1, L2],
+        "probe_raw": {f"chunked={c},L={l}": v for (c, l), v in vals.items()},
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        kind = SHAPE_CELLS[shape]["kind"]
+        specs = input_specs(cfg, shape, mesh)
+        step, args = build_step(cfg, kind, mesh, specs)
+        t0 = time.time()
+        with mesh:
+            lowered = step.lower(*args)
+            t_lower = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t1
+            ca = compiled.cost_analysis()
+            ma = compiled.memory_analysis()
+            hlo = compiled.as_text()
+        probes = run_cost_probes(cfg, kind, shape, mesh)
+        rec.update(
+            status="ok",
+            kind=kind,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            # raw (scan-undercounted) numbers from the production lowering:
+            flops_per_device_scanbody=ca.get("flops", 0.0),
+            bytes_per_device_scanbody=ca.get("bytes accessed", 0.0),
+            collective_bytes_per_device_scanbody=parse_collective_bytes(hlo),
+            # depth-extrapolated HLO cost (the roofline inputs):
+            flops_per_device=probes["flops_per_device"],
+            bytes_per_device=probes["bytes_per_device"],
+            bytes_per_device_unchunked=probes.get("bytes_per_device_unchunked"),
+            collective_bytes_per_device=probes["collective_bytes_per_device"],
+            probe_depths=probes["probe_depths"],
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_estimate_bytes": ma.argument_size_in_bytes
+                + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+            n_devices=len(mesh.devices.flat),
+        )
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update(status="failed", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=["all"] + list(SHAPE_CELLS))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPE_CELLS) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results: Dict[str, Any] = {}
+    if os.path.exists(args.out):
+        # ALWAYS merge into the existing file; --force only re-runs the
+        # selected cells (it must never discard other cells' records).
+        with open(args.out) as f:
+            results = json.load(f)
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+                if key in results and results[key].get("status") in ("ok", "skipped") and not args.force:
+                    print(f"[cached] {key}: {results[key]['status']}")
+                    continue
+                print(f"[run] {key} ...", flush=True)
+                rec = run_cell(arch, shape, mp)
+                results[key] = rec
+                line = rec["status"]
+                if rec["status"] == "ok":
+                    line += (
+                        f" lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                        f"flops/dev={rec['flops_per_device']:.3e} "
+                        f"peak_mem/dev={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB"
+                    )
+                elif rec["status"] == "failed":
+                    line += " " + rec["error"][:200]
+                print(f"      {line}", flush=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_fail = sum(1 for r in results.values() if r["status"] == "failed")
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped (documented), {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

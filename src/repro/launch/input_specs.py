@@ -1,0 +1,128 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x input-shape) cell.
+
+``input_specs(arch, shape, mesh)`` returns the exact abstract arguments the
+dry-run lowers: weak-type-correct, sharded, zero-allocation.  The same specs
+drive the roofline accounting.
+
+Shape cells (assignment-fixed):
+
+=============  ========  ============  =========================================
+cell           seq_len   global_batch  lowers
+=============  ========  ============  =========================================
+train_4k       4,096     256           train_step (loss+grad+AdamW)
+prefill_32k    32,768    32            prefill_step (fwd + cache emission)
+decode_32k     32,768    128           serve_step (1 token vs 32k cache)
+long_500k      524,288   1             serve_step (1 token vs 512k context)
+=============  ========  ============  =========================================
+
+Applicability: encoder-only archs skip decode cells; ``long_500k`` runs only
+for sub-quadratic (SSM/hybrid) archs — skips carry the config's
+``skip_note`` into the results table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..data.pipeline import make_batch_specs
+from ..distributed.sharding import ShardingRules
+from ..models import abstract_params, cache_shapes
+from ..models.config import ModelConfig
+
+SHAPE_CELLS: Dict[str, Dict[str, Any]] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    kind = SHAPE_CELLS[shape]["kind"]
+    if kind == "decode" and not cfg.has_decode:
+        return False, cfg.skip_note or "encoder-only: no decode step"
+    if shape == "long_500k" and not cfg.subquadratic:
+        return False, cfg.skip_note or "full attention: long_500k skipped"
+    return True, ""
+
+
+def _abstract(shape, dtype, axes, mesh) -> jax.ShapeDtypeStruct:
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+    rules = ShardingRules(mesh)
+    return jax.ShapeDtypeStruct(
+        shape, jnp.dtype(dtype), sharding=rules.named(list(axes), shape)
+    )
+
+
+def batch_specs(cfg: ModelConfig, shape: str, mesh) -> Dict[str, jax.ShapeDtypeStruct]:
+    cell = SHAPE_CELLS[shape]
+    out = {}
+    for key, (shp, dtype, axes) in make_batch_specs(cfg, cell["batch"], cell["seq"]).items():
+        out[key] = _abstract(shp, dtype, axes, mesh)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: str, mesh):
+    """Prefill consumes tokens/frames/patches but no labels."""
+    specs = batch_specs(cfg, shape, mesh)
+    specs.pop("labels", None)
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: str, mesh):
+    """(cache, tokens) abstract args for serve_step."""
+    cell = SHAPE_CELLS[shape]
+    B, T = cell["batch"], cell["seq"]
+    cache = {
+        key: _abstract(shp, dtype, axes, mesh)
+        for key, (shp, axes, dtype) in cache_shapes(cfg, B, T).items()
+    }
+    tokens = _abstract((B, 1), jnp.int32, ("batch", None), mesh)
+    return cache, tokens
+
+
+def opt_state_specs(params_abstract, cfg=None, mesh=None, zero1: bool = False) -> Dict[str, Any]:
+    if zero1 and mesh is not None and cfg is not None:
+        from ..distributed.sharding import rules_for
+        from ..models import param_shapes
+
+        rules = rules_for(cfg, mesh)
+        is_spec = lambda x: (isinstance(x, tuple) and len(x) == 2
+                             and isinstance(x[0], tuple))
+        axes_tree = jax.tree.map(lambda s: tuple(s[1]), param_shapes(cfg),
+                                 is_leaf=is_spec)
+        mk = lambda ax, p: jax.ShapeDtypeStruct(
+            p.shape, jnp.float32, sharding=rules.zero1_named(list(ax), p.shape)
+        )
+        is_axes = lambda x: isinstance(x, tuple)   # axes tuples are leaves
+        return {
+            "mu": jax.tree.map(mk, axes_tree, params_abstract, is_leaf=is_axes),
+            "nu": jax.tree.map(mk, axes_tree, params_abstract, is_leaf=is_axes),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=getattr(p, "sharding", None))
+    return {
+        "mu": jax.tree.map(f32, params_abstract),
+        "nu": jax.tree.map(f32, params_abstract),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ModelConfig, shape: str, mesh, zero1: bool = False) -> Dict[str, Any]:
+    """All abstract arguments for the cell's step function."""
+    kind = SHAPE_CELLS[shape]["kind"]
+    params = abstract_params(cfg, mesh)
+    if kind == "train":
+        return {
+            "params": params,
+            "opt_state": opt_state_specs(params, cfg, mesh, zero1=zero1),
+            "batch": batch_specs(cfg, shape, mesh),
+        }
+    if kind == "prefill":
+        return {"params": params, "batch": prefill_batch_specs(cfg, shape, mesh)}
+    cache, tokens = decode_specs(cfg, shape, mesh)
+    return {"params": params, "cache": cache, "tokens": tokens}

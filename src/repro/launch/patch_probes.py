@@ -1,0 +1,86 @@
+"""Refresh the probe-derived fields of an existing dryrun.json in place.
+
+Used to upgrade a recorded sweep to the v2 probe methodology without
+re-compiling the (expensive) production lowerings: for non-SSM archs only
+the chunked-bytes probes are re-run (FLOPs/collectives are unchanged by the
+methodology fix); for SSM/hybrid archs the full probe set is re-run (the
+SSM-chunk fix changes FLOPs and collectives too).
+
+    PYTHONPATH=src python -m repro.launch.patch_probes [--out results/dryrun.json]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+
+from ..configs import get_config
+from .dryrun import _probe_cfg, _probe_depths, build_step, run_cost_probes
+from .input_specs import input_specs
+from .mesh import make_production_mesh
+
+
+def chunked_bytes_probe(cfg, kind, shape, mesh) -> float:
+    L1, L2 = _probe_depths(cfg)
+    vals = {}
+    for L in (L1, L2):
+        pcfg = _probe_cfg(cfg, L, chunked=True)
+        specs = input_specs(pcfg, shape, mesh)
+        step, args = build_step(pcfg, kind, mesh, specs)
+        with mesh:
+            compiled = step.lower(*args).compile()
+            vals[L] = compiled.cost_analysis().get("bytes accessed", 0.0)
+    L = cfg.n_layers
+    return vals[L1] + (vals[L2] - vals[L1]) / (L2 - L1) * (L - L1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    args = ap.parse_args()
+    with open(args.out) as f:
+        results = json.load(f)
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    # single-pod first (feeds the roofline table), cheap archs first
+    keys = [k for k in sorted(results)
+            if results[k].get("status") == "ok" and k.split("|")[2] in meshes]
+    keys.sort(key=lambda k: (k.split("|")[2] != "single",
+                             get_config(k.split("|")[0]).family in ("ssm", "hybrid")))
+    for key in keys:
+        rec = results[key]
+        if rec.get("probe_v2"):
+            continue
+        arch, shape, mesh_name = key.split("|")
+        cfg = get_config(arch)
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+        kind = rec["kind"]
+        t0 = time.time()
+        try:
+            if cfg.family in ("ssm", "hybrid"):
+                probes = run_cost_probes(cfg, kind, shape, mesh)
+                rec.update(
+                    flops_per_device=probes["flops_per_device"],
+                    bytes_per_device=probes["bytes_per_device"],
+                    collective_bytes_per_device=probes["collective_bytes_per_device"],
+                )
+            else:
+                rec["bytes_per_device"] = chunked_bytes_probe(cfg, kind, shape, mesh)
+            rec["probe_v2"] = True
+            print(f"[patched] {key} ({time.time()-t0:.0f}s)", flush=True)
+        except Exception as e:
+            print(f"[FAILED]  {key}: {type(e).__name__}: {e}", flush=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

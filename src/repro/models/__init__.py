@@ -1,0 +1,10 @@
+from .config import HybridConfig, ModelConfig, MoEConfig, SSMConfig
+from .lm import (
+    abstract_params,
+    cache_shapes,
+    init_params,
+    make_decode_fn,
+    make_loss_fn,
+    make_prefill_fn,
+    param_shapes,
+)

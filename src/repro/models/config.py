@@ -1,0 +1,154 @@
+"""Unified architecture configuration covering all assigned model families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    # "replicated_ep": activations replicated over the model axis, experts
+    #   sharded on it; combine folds into one psum (baseline).
+    # "dense": every expert computed for every token (tiny-config oracle).
+    dispatch: str = "replicated_ep"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    version: int = 1            # 1 = Mamba (S6), 2 = Mamba2 (SSD)
+    expand: int = 2
+    conv_width: int = 4
+    head_dim: int = 64          # Mamba2 only
+    dt_rank: Optional[int] = None  # Mamba1; default ceil(d_model/16)
+    chunk: int = 256            # scan chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style: shared attention block applied every ``attn_every``
+    backbone layers, with one set of shared weights."""
+
+    attn_every: int = 6
+    shared_d_ff: int = 8192
+    shared_n_heads: int = 32
+    shared_n_kv_heads: int = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    rms_eps: float = 1e-5
+    causal: bool = True
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    frontend: Optional[str] = None      # None | "audio" | "vlm"
+    frontend_seq: int = 0               # patch/frame positions in the sequence
+    dtype: str = "bfloat16"
+    # capability flags (drive shape-cell applicability)
+    has_decode: bool = True
+    subquadratic: bool = False          # can run long_500k
+    attn_chunk: int = 512               # q-block for chunked attention
+    scan_unroll: bool = False           # unroll layer scans (dry-run cost probes)
+    # ---- performance knobs (EXPERIMENTS.md §Perf hillclimb) ----
+    loss_chunk: int = 0                 # tokens/chunk for streamed CE (0 = off):
+                                        # never materializes the (B,S,V) logits
+    seq_shard_acts: bool = False        # Megatron-style sequence parallelism:
+                                        # inter-block activations sharded over
+                                        # the model axis (AG/RS replace psum)
+    decode_scatter_update: bool = False # serve_step KV update via scatter
+                                        # (O(B) bytes) instead of the one-hot
+                                        # full-cache rewrite (O(B*T) x3)
+    fsdp_params: bool = False           # shard params' d_model dim over the
+                                        # data axis (ZeRO-3/FSDP via GSPMD):
+                                        # per-layer weight all-gathers replace
+                                        # per-layer activation psums
+    # note for DESIGN §Arch-applicability when a shape cell is skipped
+    skip_note: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // max(1, self.n_heads)
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def n_params(self) -> int:
+        """Total parameter count (embedding included once if tied)."""
+        d, f, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hd = self.hd
+        n = V * d  # embedding
+        if not self.tie_embeddings:
+            n += V * d
+        per_layer = 0
+        if self.family in ("dense", "moe", "encoder", "vlm"):
+            per_layer += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+            per_layer += 2 * d  # norms
+            if self.qk_norm:
+                per_layer += 2 * hd
+        if self.family == "moe":
+            m = self.moe
+            per_layer += d * m.n_experts  # router
+            per_layer += m.n_experts * 3 * d * m.d_ff_expert
+        elif self.family in ("dense", "encoder", "vlm"):
+            per_layer += 3 * d * f
+        elif self.family in ("ssm", "hybrid"):
+            s = self.ssm
+            d_in = s.expand * d
+            if s.version == 1:
+                dtr = s.dt_rank or -(-d // 16)
+                per_layer += d * 2 * d_in               # in_proj
+                per_layer += d_in * s.conv_width        # conv
+                per_layer += d_in * (dtr + 2 * s.d_state) + dtr * d_in
+                per_layer += d_in * s.d_state + d_in    # A, D
+                per_layer += d_in * d                   # out_proj
+            else:
+                n_h = d_in // s.head_dim
+                per_layer += d * (2 * d_in + 2 * s.d_state + n_h)  # in_proj(z,x,B,C,dt)
+                per_layer += (d_in + 2 * s.d_state) * s.conv_width
+                per_layer += 2 * n_h + d_in             # A, D, norm
+                per_layer += d_in * d
+            per_layer += d  # norm
+        n += L * per_layer
+        if self.family == "hybrid":
+            h = self.hybrid
+            shd = self.hd
+            shared = (
+                d * h.shared_n_heads * shd
+                + 2 * d * h.shared_n_kv_heads * shd
+                + h.shared_n_heads * shd * d
+                + 3 * d * h.shared_d_ff
+                + 2 * d
+            )
+            n += shared
+        n += d  # final norm
+        return n
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: only top_k experts count)."""
+        if self.family != "moe":
+            return self.n_params()
+        m = self.moe
+        total = self.n_params()
+        all_experts = self.n_layers * m.n_experts * 3 * self.d_model * m.d_ff_expert
+        active = self.n_layers * m.top_k * 3 * self.d_model * m.d_ff_expert
+        return total - all_experts + active

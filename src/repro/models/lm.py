@@ -1,0 +1,640 @@
+"""Model assembly: parameters, forward/loss, prefill and decode steps for
+every assigned architecture family (dense / moe / ssm / hybrid / encoder /
+vlm).
+
+Design notes
+------------
+* **Scan over layers.**  All per-layer parameters are stacked with a leading
+  ``n_layers`` dim and the forward is a single ``lax.scan`` (hybrid archs:
+  grouped scans around the shared attention block), keeping HLO size — and
+  hence dry-run compile time — O(1) in depth.
+* **Remat.**  The layer body is wrapped in ``jax.checkpoint`` (policy
+  selectable) so 4k-sequence training fits HBM at batch 16/device.
+* **Sharding.**  Tensors are annotated through
+  :class:`repro.distributed.sharding.ShardingRules`; activations are
+  constrained after embedding and between blocks.  Attention picks its plan
+  (head-TP vs context-parallel) from mesh divisibility — see
+  :mod:`repro.models.layers`.
+* **Caches.**  Decode state is a pytree: attention archs carry
+  ``{"k","v"}`` of shape (L, B, T, KV, hd) with T sequence-sharded over the
+  model axis (flash-decoding layout); SSM archs carry (conv, ssm) states;
+  hybrids carry both.  The KV cache is THE ephemeral object the XDT serving
+  path hands between prefill and decode pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh
+
+from ..distributed.sharding import ShardingRules, rules_for
+from .config import ModelConfig
+from .layers import (
+    AttnPlan,
+    attention_layer,
+    attn_param_shapes,
+    decode_attention_layer,
+    mlp_param_shapes,
+    plan_attention,
+    rms_norm,
+    swiglu,
+)
+from .moe import moe_layer, moe_param_shapes
+from .ssm import mamba1_block, mamba2_block, ssm_param_shapes, ssm_state_shapes
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# parameter inventory
+# ---------------------------------------------------------------------------
+
+
+def _stack(shapes: Dict[str, Tuple[Tuple[int, ...], Tuple]], n: int):
+    return {
+        k: ((n,) + shape, ("layers",) + tuple(axes))
+        for k, (shape, axes) in shapes.items()
+    }
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Nested pytree of (shape, logical_axes) describing all parameters."""
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    out: Dict[str, Any] = {
+        "embed": ((V, D), ("vocab", "embed")),
+        "final_norm": ((D,), ("embed",)),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ((D, V), ("embed", "vocab"))
+
+    if cfg.family in ("dense", "encoder", "vlm"):
+        out["blocks"] = {
+            "attn": _stack(attn_param_shapes(cfg), L),
+            "mlp": _stack(mlp_param_shapes(cfg), L),
+            "ln1": ((L, D), ("layers", "embed")),
+            "ln2": ((L, D), ("layers", "embed")),
+        }
+    elif cfg.family == "moe":
+        out["blocks"] = {
+            "attn": _stack(attn_param_shapes(cfg), L),
+            "moe": _stack(moe_param_shapes(cfg), L),
+            "ln1": ((L, D), ("layers", "embed")),
+            "ln2": ((L, D), ("layers", "embed")),
+        }
+    elif cfg.family == "ssm":
+        out["blocks"] = {
+            "ssm": _stack(ssm_param_shapes(cfg), L),
+            "ln": ((L, D), ("layers", "embed")),
+        }
+    elif cfg.family == "hybrid":
+        h = cfg.hybrid
+        out["blocks"] = {
+            "ssm": _stack(ssm_param_shapes(cfg), L),
+            "ln": ((L, D), ("layers", "embed")),
+        }
+        shared_attn = attn_param_shapes(
+            cfg, n_heads=h.shared_n_heads, n_kv=h.shared_n_kv_heads
+        )
+        out["shared"] = {
+            "attn": shared_attn,
+            "mlp": mlp_param_shapes(cfg, d_ff=h.shared_d_ff),
+            "ln1": ((D,), ("embed",)),
+            "ln2": ((D,), ("embed",)),
+        }
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+def _leaf_is_spec(x) -> bool:
+    return (
+        isinstance(x, tuple)
+        and len(x) == 2
+        and isinstance(x[0], tuple)
+        and all(isinstance(d, int) for d in x[0])
+    )
+
+
+def abstract_params(cfg: ModelConfig, mesh: Optional[Mesh]) -> PyTree:
+    """ShapeDtypeStruct pytree with resolved shardings (dry-run stand-in)."""
+    rules = rules_for(cfg, mesh) if mesh is not None else None
+    dt = cfg.compute_dtype
+
+    def mk(spec):
+        shape, axes = spec
+        if rules is None:
+            return jax.ShapeDtypeStruct(shape, dt)
+        return jax.ShapeDtypeStruct(shape, dt, sharding=rules.named(axes, shape))
+
+    return jax.tree.map(mk, param_shapes(cfg), is_leaf=_leaf_is_spec)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, mesh: Optional[Mesh] = None) -> PyTree:
+    """Real parameter init (smoke tests / examples — small configs only)."""
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree.flatten(shapes, is_leaf=_leaf_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    rules = rules_for(cfg, mesh) if mesh is not None else None
+    dt = cfg.compute_dtype
+
+    vals = []
+    for k, (shape, axes) in zip(keys, leaves):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        if len(shape) == 1 or shape[-1] == 1:
+            v = jnp.ones(shape, dt) if len(shape) <= 2 else jnp.zeros(shape, dt)
+        else:
+            v = (jax.random.normal(k, shape, jnp.float32) * (fan_in ** -0.5) * 0.5).astype(dt)
+        # norms / biases / special ssm params
+        vals.append(v)
+    params = jax.tree.unflatten(treedef, vals)
+
+    # fix up special leaves (norm scales = 1, A_log sensible, dt_bias small)
+    def fixup(path, spec, val):
+        name = path[-1] if path else ""
+        shape, _ = spec
+        if name in ("ln", "ln1", "ln2", "final_norm", "norm", "q_norm", "k_norm"):
+            return jnp.ones(shape, dt)
+        if name == "A_log":
+            return jnp.log(jnp.linspace(1.0, 8.0, int(np.prod(shape)))).reshape(shape).astype(dt)
+        if name == "dt_bias":
+            return jnp.full(shape, -1.0, dt)
+        if name == "D":
+            return jnp.ones(shape, dt)
+        if name in ("conv_b",):
+            return jnp.zeros(shape, dt)
+        return val
+
+    def walk(sh, pr, path=()):
+        if _leaf_is_spec(sh):
+            return fixup(path, sh, pr)
+        return {k: walk(sh[k], pr[k], path + (k,)) for k in sh}
+
+    params = walk(shapes, params)
+    if mesh is not None:
+        def put(spec, val):
+            _, axes = spec
+            return jax.device_put(val, rules.named(axes, val.shape))
+        params = jax.tree.map(put, shapes, params, is_leaf=_leaf_is_spec)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared forward plumbing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBuild:
+    """Everything a step function needs beyond params+batch."""
+
+    cfg: ModelConfig
+    mesh: Optional[Mesh]
+    remat: str = "full"  # "full" | "none"
+
+    @property
+    def rules(self) -> Optional[ShardingRules]:
+        return rules_for(self.cfg, self.mesh) if self.mesh is not None else None
+
+    @property
+    def plan(self) -> AttnPlan:
+        return plan_attention(self.cfg, self.mesh)
+
+
+def _constrain(x, build: ModelBuild, axes):
+    if build.mesh is None:
+        return x
+    return lax.with_sharding_constraint(x, build.rules.named(axes, x.shape))
+
+
+def _constrain_hidden(x, build: ModelBuild):
+    """Inter-block activation layout.  Default: replicated over the model
+    axis (pure Megatron TP).  With ``seq_shard_acts`` (§Perf hillclimb) the
+    sequence axis is sharded over the model axis between blocks — activation
+    residency and HBM traffic drop by the TP width, and GSPMD converts each
+    block's entry/exit psum into all-gather + reduce-scatter (same wire
+    bytes, 1/TP the activation footprint)."""
+    if build.cfg.seq_shard_acts:
+        return _constrain(x, build, ["batch", "seq_model", None])
+    return _constrain(x, build, ["batch", None, None])
+
+
+def _embed(params, tokens, build: ModelBuild):
+    x = params["embed"][tokens].astype(build.cfg.compute_dtype)
+    return _constrain(x, build, ["batch", None, None])
+
+
+def _logits(params, x, build: ModelBuild):
+    cfg = build.cfg
+    head = params["embed"] if cfg.tie_embeddings or "lm_head" not in params else None
+    if head is not None:
+        logits = jnp.einsum("bsd,vd->bsv", x, head)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return _constrain(logits, build, ["batch", None, "vocab"])
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def token_loss(params, x, labels, build: ModelBuild):
+    """Mean next-token NLL from final hidden states ``x`` (B, S, D).
+
+    With ``cfg.loss_chunk`` set (§Perf hillclimb), the (B, S, V) logits are
+    never materialized: a remat'd scan walks sequence chunks, computing each
+    chunk's logits + NLL and discarding them — HBM traffic for the loss head
+    drops from O(S·V) tensors x several passes to O(chunk·V) working set,
+    and the backward pass recomputes per-chunk under ``jax.checkpoint``.
+    """
+    cfg = build.cfg
+    B, S, _D = x.shape
+    c = cfg.loss_chunk
+    if not c or S % c or S == c:
+        return cross_entropy(_logits(params, x, build), labels)
+
+    n = S // c
+    xc = x.reshape(B, n, c, x.shape[-1]).swapaxes(0, 1)        # (n, B, c, D)
+    lc = labels.reshape(B, n, c).swapaxes(0, 1)                # (n, B, c)
+
+    @jax.checkpoint
+    def body(acc, args):
+        xi, li = args
+        logits = _logits(params, xi, build)                    # (B, c, V)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return acc + (lse - gold).sum(), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc),
+                        unroll=cfg.scan_unroll)
+    return total / (B * S)
+
+
+def _attn_mlp_block(x, bp, build: ModelBuild, *, positions=None, return_kv=False,
+                    causal=None):
+    cfg = build.cfg
+    h, kv = attention_layer(
+        rms_norm(x, bp["ln1"], cfg.rms_eps), bp["attn"], cfg, build.plan,
+        build.mesh, build.rules, positions=positions, causal=causal,
+        return_kv=return_kv,
+    )
+    x = x + h
+    hn = rms_norm(x, bp["ln2"], cfg.rms_eps)
+    if cfg.family == "moe" and "moe" in bp:
+        m, aux = moe_layer(hn, bp["moe"], cfg, build.mesh)
+    else:
+        m, aux = swiglu(hn, bp["mlp"]["wi"], bp["mlp"]["wg"], bp["mlp"]["wo"]), 0.0
+    x = x + m
+    x = _constrain_hidden(x, build)
+    return x, kv, aux
+
+
+# ---------------------------------------------------------------------------
+# forward passes (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, build: ModelBuild):
+    return jax.checkpoint(fn) if build.remat == "full" else fn
+
+
+def forward_transformer(params, x, build: ModelBuild, *, positions=None,
+                        collect_kv=False, causal=None):
+    """dense/moe/encoder/vlm backbone.  x: (B,S,D) embedded input."""
+    def body(carry, bp):
+        h, aux = carry
+        h, kv, aux_l = _attn_mlp_block(
+            h, bp, build, positions=positions, return_kv=collect_kv, causal=causal
+        )
+        return (h, aux + aux_l), kv
+
+    body = _maybe_remat(body, build)
+    (x, aux), kvs = lax.scan(body, (x, 0.0), params["blocks"],
+                             unroll=build.cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], build.cfg.rms_eps)
+    return x, aux, kvs
+
+
+def forward_ssm(params, x, build: ModelBuild, *, states=None, collect_state=False):
+    """ssm backbone.  states: stacked (L, ...) pytree or None."""
+    cfg = build.cfg
+    block = mamba1_block if cfg.ssm.version == 1 else mamba2_block
+
+    def body(h, layer):
+        bp, st = layer
+        out, new_st = block(rms_norm(h, bp["ln"], cfg.rms_eps), bp["ssm"], cfg, st)
+        h = _constrain_hidden(h + out, build)
+        return h, (new_st if collect_state else None)
+
+    body = _maybe_remat(body, build)
+    x, new_states = lax.scan(body, x, (params["blocks"], states),
+                             unroll=build.cfg.scan_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x, new_states
+
+
+def forward_hybrid(params, x, build: ModelBuild, *, positions=None,
+                   collect_kv=False, states=None, collect_state=False):
+    """zamba2-style: groups of mamba2 layers + one shared attention block."""
+    cfg = build.cfg
+    h = cfg.hybrid
+    L = cfg.n_layers
+    every = h.attn_every
+    n_apps = L // every
+    shared = params["shared"]
+
+    def mamba_span(x, bp_span, st_span):
+        def body(hc, layer):
+            bp, st = layer
+            out, new_st = mamba2_block(rms_norm(hc, bp["ln"], cfg.rms_eps), bp["ssm"], cfg, st)
+            hc = _constrain_hidden(hc + out, build)
+            return hc, (new_st if collect_state else None)
+        return lax.scan(_maybe_remat(body, build), x, (bp_span, st_span),
+                        unroll=build.cfg.scan_unroll)
+
+    def shared_attn(x):
+        a, kv = attention_layer(
+            rms_norm(x, shared["ln1"], cfg.rms_eps), shared["attn"], cfg,
+            build.plan, build.mesh, build.rules, positions=positions,
+            return_kv=collect_kv,
+        )
+        x = x + a
+        x = x + swiglu(rms_norm(x, shared["ln2"], cfg.rms_eps),
+                       shared["mlp"]["wi"], shared["mlp"]["wg"], shared["mlp"]["wo"])
+        return _constrain_hidden(x, build), kv
+
+    kvs, new_states = [], []
+    sl = lambda t, a, b: jax.tree.map(lambda v: v[a:b], t)
+    for g in range(n_apps):
+        x, kv = shared_attn(x)
+        kvs.append(kv)
+        span_states = None if states is None else sl(states, g * every, (g + 1) * every)
+        x, st = mamba_span(x, sl(params["blocks"], g * every, (g + 1) * every), span_states)
+        new_states.append(st)
+    if L % every:
+        span_states = None if states is None else sl(states, n_apps * every, L)
+        x, st = mamba_span(x, sl(params["blocks"], n_apps * every, L), span_states)
+        new_states.append(st)
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    stacked_kv = None
+    if collect_kv:
+        ks = jnp.stack([kv[0] for kv in kvs])
+        vs = jnp.stack([kv[1] for kv in kvs])
+        stacked_kv = (ks, vs)
+    stacked_states = (
+        jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_states)
+        if collect_state else None
+    )
+    return x, stacked_kv, stacked_states
+
+
+# ---------------------------------------------------------------------------
+# public step functions
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ModelConfig, mesh: Optional[Mesh], remat: str = "full",
+                 aux_weight: float = 0.01):
+    """Returns loss_fn(params, batch) -> scalar."""
+    build = ModelBuild(cfg, mesh, remat)
+
+    def loss_fn(params, batch):
+        if cfg.family == "vlm":
+            tok_x = _embed(params, batch["tokens"], build)
+            x = jnp.concatenate(
+                [batch["patches"].astype(cfg.compute_dtype), tok_x], axis=1
+            )
+            x = _constrain(x, build, ["batch", None, None])
+            x, aux, _ = forward_transformer(params, x, build)
+            n_img = batch["patches"].shape[1]
+            return token_loss(params, x[:, n_img:], batch["labels"], build) \
+                + aux_weight * aux
+        if cfg.family == "encoder":
+            x = batch["frames"].astype(cfg.compute_dtype)
+            x = _constrain(x, build, ["batch", None, None])
+            x, aux, _ = forward_transformer(params, x, build, causal=False)
+            return token_loss(params, x, batch["labels"], build)
+        if cfg.family == "ssm":
+            x = _embed(params, batch["tokens"], build)
+            x, _ = forward_ssm(params, x, build)
+            return token_loss(params, x, batch["labels"], build)
+        if cfg.family == "hybrid":
+            x = _embed(params, batch["tokens"], build)
+            x, _, _ = forward_hybrid(params, x, build)
+            return token_loss(params, x, batch["labels"], build)
+        # dense / moe
+        x = _embed(params, batch["tokens"], build)
+        x, aux, _ = forward_transformer(params, x, build)
+        return token_loss(params, x, batch["labels"], build) + aux_weight * aux
+
+    return loss_fn
+
+
+def _constrain_cache(kv, build: ModelBuild):
+    k, v = kv
+    axes = ["layers", "batch", "kv_seq", None, None]
+    return (_constrain(k, build, axes), _constrain(v, build, axes))
+
+
+def make_prefill_fn(cfg: ModelConfig, mesh: Optional[Mesh], remat: str = "full",
+                    pad_to: Optional[int] = None):
+    """Returns prefill(params, batch) -> (last_logits (B,V), cache pytree).
+
+    The returned cache is the XDT ephemeral object: sequence-sharded KV (and
+    SSM states), ready for a decode pod to pull.  ``pad_to`` grows the KV
+    sequence axis to the decode context budget.
+    """
+    build = ModelBuild(cfg, mesh, remat)
+
+    def _pad_kv(kv):
+        if pad_to is None:
+            return kv
+        k, v = kv
+        extra = pad_to - k.shape[2]
+        if extra <= 0:
+            return kv
+        pad = [(0, 0)] * k.ndim
+        pad[2] = (0, extra)
+        return jnp.pad(k, pad), jnp.pad(v, pad)
+
+    def prefill(params, batch):
+        cache: Dict[str, Any] = {}
+        if cfg.family in ("dense", "moe", "vlm", "encoder"):
+            if cfg.family == "vlm":
+                tok_x = _embed(params, batch["tokens"], build)
+                x = jnp.concatenate(
+                    [batch["patches"].astype(cfg.compute_dtype), tok_x], axis=1
+                )
+            elif cfg.family == "encoder":
+                x = batch["frames"].astype(cfg.compute_dtype)
+            else:
+                x = _embed(params, batch["tokens"], build)
+            x, _, kvs = forward_transformer(
+                params, x, build, collect_kv=True,
+                causal=None if cfg.causal else False,
+            )
+            cache["k"], cache["v"] = _constrain_cache(_pad_kv(kvs), build)
+        elif cfg.family == "ssm":
+            x = _embed(params, batch["tokens"], build)
+            S = x.shape[1]
+            zero = _zero_states(cfg, x.shape[0], build)
+            x, states = forward_ssm(params, x, build, states=zero, collect_state=True)
+            cache.update(states)
+        else:  # hybrid
+            x = _embed(params, batch["tokens"], build)
+            zero = _zero_states(cfg, x.shape[0], build)
+            x, kvs, states = forward_hybrid(
+                params, x, build, collect_kv=True, states=zero, collect_state=True
+            )
+            cache["k"], cache["v"] = _constrain_cache(_pad_kv(kvs), build)
+            cache["conv"], cache["ssm"] = states["conv"], states["ssm"]
+        B = x.shape[0]
+        S = x.shape[1]
+        cache["pos"] = jnp.full((B,), S, jnp.int32)
+        logits = _logits(params, x[:, -1:], build)[:, 0]
+        return logits, cache
+
+    return prefill
+
+
+def _zero_states(cfg: ModelConfig, batch: int, build: ModelBuild):
+    shapes = ssm_state_shapes(cfg, batch)
+    out = {}
+    for k, (shape, axes) in shapes.items():
+        full = (cfg.n_layers,) + shape
+        z = jnp.zeros(full, jnp.float32 if k == "ssm" else cfg.compute_dtype)
+        out[k] = _constrain(z, build, ["layers"] + list(axes))
+    return out
+
+
+def make_decode_fn(cfg: ModelConfig, mesh: Optional[Mesh]):
+    """Returns decode(params, cache, tokens (B,1)) -> (logits (B,V), cache).
+
+    This is ``serve_step``: one new token against the resident cache.
+    """
+    build = ModelBuild(cfg, mesh, remat="none")
+
+    def decode(params, cache, tokens):
+        pos = cache["pos"]  # (B,)
+        x = _embed(params, tokens, build)
+
+        if cfg.family in ("dense", "moe", "vlm"):
+            def body(carry, layer):
+                h = carry
+                bp, ck, cv = layer
+                hn = rms_norm(h, bp["ln1"], cfg.rms_eps)
+                a, nk, nv = decode_attention_layer(hn, bp["attn"], cfg, ck, cv, pos)
+                h = h + a
+                hn = rms_norm(h, bp["ln2"], cfg.rms_eps)
+                if cfg.family == "moe":
+                    m, _ = moe_layer(hn, bp["moe"], cfg, build.mesh)
+                else:
+                    m = swiglu(hn, bp["mlp"]["wi"], bp["mlp"]["wg"], bp["mlp"]["wo"])
+                return h + m, (nk, nv)
+
+            x, (nk, nv) = lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]),
+                                   unroll=cfg.scan_unroll)
+            new_cache = dict(cache, k=nk, v=nv, pos=pos + 1)
+        elif cfg.family == "ssm":
+            def body(carry, layer):
+                h = carry
+                bp, st = layer
+                out, new_st = (mamba1_block if cfg.ssm.version == 1 else mamba2_block)(
+                    rms_norm(h, bp["ln"], cfg.rms_eps), bp["ssm"], cfg, st
+                )
+                return h + out, new_st
+
+            states = {"conv": cache["conv"], "ssm": cache["ssm"]}
+            x, new_states = lax.scan(body, x, (params["blocks"], states),
+                                     unroll=cfg.scan_unroll)
+            new_cache = dict(cache, pos=pos + 1, **new_states)
+        else:  # hybrid
+            h = cfg.hybrid
+            every = h.attn_every
+            n_apps = cfg.n_layers // every
+            shared = params["shared"]
+            sl = lambda t, a, b: jax.tree.map(lambda v: v[a:b], t)
+            states = {"conv": cache["conv"], "ssm": cache["ssm"]}
+            nk, nv, new_states = [], [], []
+
+            def mamba_span(x, bp_span, st_span):
+                def body(hc, layer):
+                    bp, st = layer
+                    out, new_st = mamba2_block(
+                        rms_norm(hc, bp["ln"], cfg.rms_eps), bp["ssm"], cfg, st
+                    )
+                    return hc + out, new_st
+                return lax.scan(body, x, (bp_span, st_span), unroll=cfg.scan_unroll)
+
+            for g in range(n_apps):
+                hn = rms_norm(x, shared["ln1"], cfg.rms_eps)
+                a, k_g, v_g = decode_attention_layer(
+                    hn, shared["attn"], cfg, cache["k"][g], cache["v"][g], pos
+                )
+                nk.append(k_g)
+                nv.append(v_g)
+                x = x + a
+                x = x + swiglu(rms_norm(x, shared["ln2"], cfg.rms_eps),
+                               shared["mlp"]["wi"], shared["mlp"]["wg"], shared["mlp"]["wo"])
+                x, st = mamba_span(x, sl(params["blocks"], g * every, (g + 1) * every),
+                                   sl(states, g * every, (g + 1) * every))
+                new_states.append(st)
+            if cfg.n_layers % every:
+                x, st = mamba_span(
+                    x, sl(params["blocks"], n_apps * every, cfg.n_layers),
+                    sl(states, n_apps * every, cfg.n_layers))
+                new_states.append(st)
+            merged = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_states)
+            new_cache = dict(
+                cache, k=jnp.stack(nk), v=jnp.stack(nv), pos=pos + 1, **merged
+            )
+
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        logits = _logits(params, x, build)[:, 0]
+        return logits, new_cache
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# cache shape inventory (dry-run stand-ins for decode cells)
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Tuple]:
+    """(shape, logical_axes, dtype) per cache leaf for serve_step lowering."""
+    out: Dict[str, Tuple] = {}
+    dt = cfg.compute_dtype
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.hd)
+        axes = ("layers", "batch", "kv_seq", None, None)
+        out["k"] = (kv, axes, dt)
+        out["v"] = (kv, axes, dt)
+    elif cfg.family == "ssm":
+        for k, (shape, axes) in ssm_state_shapes(cfg, batch).items():
+            out[k] = ((cfg.n_layers,) + shape, ("layers",) + tuple(axes),
+                      jnp.float32 if k == "ssm" else dt)
+    else:  # hybrid
+        h = cfg.hybrid
+        n_apps = cfg.n_layers // h.attn_every
+        kv = (n_apps, batch, seq_len, h.shared_n_kv_heads, cfg.hd)
+        axes = ("layers", "batch", "kv_seq", None, None)
+        out["k"] = (kv, axes, dt)
+        out["v"] = (kv, axes, dt)
+        for k, (shape, saxes) in ssm_state_shapes(cfg, batch).items():
+            out[k] = ((cfg.n_layers,) + shape, ("layers",) + tuple(saxes),
+                      jnp.float32 if k == "ssm" else dt)
+    out["pos"] = ((batch,), ("batch",), jnp.int32)
+    return out

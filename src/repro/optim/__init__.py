@@ -1,0 +1,3 @@
+from .adamw import OptConfig, adamw_init, adamw_update, global_norm
+from .schedule import warmup_cosine
+from .compression import int8_compress, int8_decompress, compressed_psum

@@ -1,0 +1,94 @@
+"""AdamW with decoupled weight decay, global-norm clipping, bf16 params /
+f32 moments (production memory layout: 2 + 8 bytes per parameter)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    # ZeRO-1 (§Perf hillclimb): shard f32 moments + the update math over the
+    # data/pod axes; grads reduce-scatter instead of all-reduce, params
+    # all-gather after the sharded update.  Memory: 8 bytes/param -> 8/DP.
+    zero1: bool = False
+
+
+def adamw_init(params: PyTree) -> PyTree:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    params: PyTree,
+    grads: PyTree,
+    state: PyTree,
+    cfg: OptConfig,
+    lr_schedule: Optional[Callable[[jax.Array], jax.Array]] = None,
+) -> Tuple[PyTree, PyTree, jax.Array]:
+    """Returns (new_params, new_state, grad_norm)."""
+    step = state["step"] + 1
+    if lr_schedule is None:
+        from .schedule import warmup_cosine
+
+        lr_schedule = warmup_cosine(cfg.peak_lr, cfg.warmup_steps, cfg.total_steps)
+    lr = lr_schedule(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        update = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (update + cfg.weight_decay * pf)
+        return pf.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a)
+        new_mu.append(b)
+        new_nu.append(c)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {
+            "mu": jax.tree.unflatten(treedef, new_mu),
+            "nu": jax.tree.unflatten(treedef, new_nu),
+            "step": step,
+        },
+        gnorm,
+    )

@@ -1,0 +1,19 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``final_frac * peak_lr``."""
+
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / jnp.maximum(1.0, float(warmup_steps))
+        t = (step - warmup_steps) / jnp.maximum(1.0, float(total_steps - warmup_steps))
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return schedule

@@ -1,0 +1,2 @@
+from .engine import Request, ServingEngine
+from .disagg import DisaggregatedServer

@@ -1,0 +1,137 @@
+"""Continuous-batching serving engine.
+
+One decode batch of ``max_batch`` slots steps in lockstep; finished/empty
+slots are refilled from the request queue by running prefill and *inserting*
+the resulting KV/state cache into the slot.  That insert is exactly the
+ephemeral-object handoff XDT addresses — in the single-pod engine it is a
+device-local dynamic-update; in :mod:`repro.serving.disagg` it crosses pods
+through the XDT transfer substrate.
+
+Greedy decoding; per-slot lengths tracked via the cache's ``pos`` vector
+(decode attention masks beyond each sequence's own length, so ragged batches
+are exact, not approximate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import cache_shapes, make_decode_fn, make_prefill_fn
+from ..models.config import ModelConfig
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def empty_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    out = {}
+    for key, (shape, _axes, dtype) in cache_shapes(cfg, batch, max_len).items():
+        out[key] = jnp.zeros(shape, dtype)
+    return out
+
+
+def insert_cache(batch_cache: PyTree, single_cache: PyTree, slot: int) -> PyTree:
+    """Insert a prefill cache (batch=1) into decode slot ``slot``.
+
+    Every cache leaf has the batch axis at position 1 (leaf layout
+    (L, B, ...)) except ``pos`` (B,).
+    """
+    def ins(dst, src):
+        if dst.ndim == 1:  # pos
+            return dst.at[slot].set(src[0].astype(dst.dtype))
+        return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+
+    return jax.tree.map(ins, batch_cache, single_cache)
+
+
+class ServingEngine:
+    """Single-pod continuous batching."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: PyTree,
+        mesh=None,
+        max_batch: int = 4,
+        max_len: int = 64,
+    ):
+        assert cfg.has_decode, f"{cfg.name} is encoder-only"
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.prefill = jax.jit(make_prefill_fn(cfg, mesh, remat="none", pad_to=max_len))
+        self.decode = jax.jit(make_decode_fn(cfg, mesh))
+        self.cache = empty_cache(cfg, max_batch, max_len)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.queue: List[Request] = []
+        self._ids = itertools.count()
+        self.completed: Dict[int, Request] = {}
+        self.steps = 0
+
+    # -- API ----------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        req = Request(next(self._ids), np.asarray(prompt, np.int32), max_new_tokens)
+        self.queue.append(req)
+        return req.request_id
+
+    def prefill_request(self, req: Request) -> Tuple[PyTree, int]:
+        """Run prefill for one request; returns (cache, first_token)."""
+        logits, cache = self.prefill(
+            self.params, {"tokens": jnp.asarray(req.prompt)[None]}
+        )
+        return cache, int(jnp.argmax(logits[0]))
+
+    def admit(self, req: Request, cache: PyTree, first_token: int, slot: int) -> None:
+        self.cache = insert_cache(self.cache, cache, slot)
+        self.last_tokens = self.last_tokens.at[slot, 0].set(first_token)
+        req.generated.append(first_token)
+        self.slots[slot] = req
+
+    def _refill(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slots[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                cache, tok = self.prefill_request(req)
+                self.admit(req, cache, tok, slot)
+
+    def step(self) -> None:
+        """One engine iteration: refill free slots, one decode step."""
+        self._refill()
+        if all(s is None for s in self.slots):
+            return
+        logits, self.cache = self.decode(self.params, self.cache, self.last_tokens)
+        next_tokens = jnp.argmax(logits, axis=-1)
+        self.last_tokens = next_tokens[:, None].astype(jnp.int32)
+        self.steps += 1
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            req.generated.append(int(next_tokens[slot]))
+            if (
+                len(req.generated) >= req.max_new_tokens
+                or len(req.prompt) + len(req.generated) >= self.max_len - 1
+            ):
+                req.done = True
+                self.completed[req.request_id] = req
+                self.slots[slot] = None
+
+    def run_until_drained(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        while (self.queue or any(s is not None for s in self.slots)) and self.steps < max_steps:
+            self.step()
+        return self.completed

@@ -1,0 +1,145 @@
+"""BufferRegistry: refcounted retrievals, flow control, instance lifetime."""
+import threading
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffers import BufferRegistry
+from repro.core.errors import (
+    XDTObjectExhausted,
+    XDTProducerGone,
+    XDTTimeout,
+    XDTWouldBlock,
+)
+
+
+def test_put_get_roundtrip():
+    reg = BufferRegistry()
+    bid, epoch = reg.put({"x": 1}, n_retrievals=1)
+    assert reg.get(bid, epoch) == {"x": 1}
+
+
+def test_n_retrievals_then_exhausted():
+    reg = BufferRegistry()
+    bid, ep = reg.put("obj", n_retrievals=3)
+    for _ in range(3):
+        assert reg.get(bid, ep) == "obj"
+    with pytest.raises(XDTObjectExhausted):
+        reg.get(bid, ep)
+
+
+def test_free_on_last_retrieval_releases_bytes():
+    reg = BufferRegistry(max_bytes=1000)
+    bid, ep = reg.put(b"x" * 600, n_retrievals=2)
+    assert reg.stats().bytes_in_use == 600
+    reg.get(bid, ep)
+    assert reg.stats().bytes_in_use == 600      # one pull left
+    reg.get(bid, ep)
+    assert reg.stats().bytes_in_use == 0        # freed on the Nth pull
+
+
+def test_producer_death_invalidates_epoch():
+    reg = BufferRegistry()
+    bid, ep = reg.put("obj", n_retrievals=5)
+    assert reg.kill_instance() == 1
+    with pytest.raises(XDTProducerGone):
+        reg.get(bid, ep)
+
+
+def test_nonblocking_put_raises_when_full():
+    reg = BufferRegistry(max_slots=1)
+    reg.put("a")
+    with pytest.raises(XDTWouldBlock):
+        reg.put("b", block=False)
+
+
+def test_blocking_put_timeout():
+    reg = BufferRegistry(max_slots=1)
+    reg.put("a")
+    with pytest.raises(XDTTimeout):
+        reg.put("b", block=True, timeout=0.05)
+
+
+def test_blocking_put_unblocks_on_get():
+    """Flow control: a blocked put proceeds when a retrieval frees a slot."""
+    reg = BufferRegistry(max_slots=1)
+    bid, ep = reg.put("a")
+    result = {}
+
+    def blocked_put():
+        result["id"] = reg.put("b", block=True, timeout=5.0)
+
+    t = threading.Thread(target=blocked_put)
+    t.start()
+    reg.get(bid, ep)          # frees the slot
+    t.join(timeout=5.0)
+    assert "id" in result
+    bid2, ep2 = result["id"]
+    assert reg.get(bid2, ep2) == "b"
+    assert reg.stats().blocked_puts >= 1
+
+
+def test_oversized_object_admitted_when_empty():
+    """A single object larger than the byte budget still streams through."""
+    reg = BufferRegistry(max_bytes=10)
+    bid, ep = reg.put(b"x" * 100)
+    assert reg.get(bid, ep) == b"x" * 100
+
+
+def test_ttl_sweep():
+    now = [0.0]
+    reg = BufferRegistry(clock=lambda: now[0])
+    reg.put("old")
+    now[0] = 100.0
+    bid, ep = reg.put("fresh")
+    assert reg.expire_older_than(50.0) == 1
+    assert reg.get(bid, ep) == "fresh"
+
+
+def test_stats_accounting():
+    reg = BufferRegistry()
+    bid, ep = reg.put(b"x" * 10, n_retrievals=2)
+    reg.put(b"y" * 20)
+    reg.get(bid, ep)
+    s = reg.stats()
+    assert s.puts == 2 and s.gets == 1
+    assert s.high_water_bytes == 30
+    assert s.slots_in_use == 2
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(1, 4), st.integers(1, 100)),  # (n_retrievals, nbytes)
+        min_size=1, max_size=30,
+    )
+)
+def test_property_bytes_conserved(ops):
+    """Invariant: bytes_in_use == sum of nbytes of live (unexhausted) objects,
+    regardless of the put/get interleaving."""
+    reg = BufferRegistry(max_slots=1000, max_bytes=1 << 30)
+    live = {}
+    for n, nb in ops:
+        bid, ep = reg.put(b"z" * nb, n_retrievals=n)
+        live[bid] = [n, nb, ep]
+        # drain every other object by one retrieval
+        for obid in list(live):
+            if obid % 2 == 0:
+                reg.get(obid, live[obid][2])
+                live[obid][0] -= 1
+                if live[obid][0] == 0:
+                    del live[obid]
+    expect = sum(nb for _, nb, _ in live.values())
+    assert reg.stats().bytes_in_use == expect
+    assert reg.stats().slots_in_use == len(live)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 16))
+def test_property_exactly_n_retrievals(n):
+    reg = BufferRegistry()
+    bid, ep = reg.put("o", n_retrievals=n)
+    for _ in range(n):
+        reg.get(bid, ep)
+    with pytest.raises(XDTObjectExhausted):
+        reg.get(bid, ep)

@@ -1,0 +1,135 @@
+"""Calibrated simulator vs the paper's measured anchors (Figs 2, 5, 6)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DEFAULT_NET,
+    InlineTooLarge,
+    effective_bandwidth_Bps,
+    measure_pattern,
+)
+from repro.core.cluster import LAMBDA_NET, ServerlessCluster, Simulator
+
+
+# ---------------------------------------------------------------- event loop
+
+
+def test_simulator_determinism():
+    t1, _ = measure_pattern("1-1", "s3", 1 << 20, seed=7)
+    t2, _ = measure_pattern("1-1", "s3", 1 << 20, seed=7)
+    assert t1 == t2
+
+
+def test_simulator_event_ordering():
+    sim = Simulator()
+    order = []
+    sim.schedule(2.0, lambda: order.append("b"))
+    sim.schedule(1.0, lambda: order.append("a"))
+    sim.schedule(3.0, lambda: order.append("c"))
+    sim.run()
+    assert order == ["a", "b", "c"]
+    assert sim.now == 3.0
+
+
+def test_fifo_link_serializes():
+    sim = Simulator()
+    from repro.core.cluster import FifoLink
+
+    link = FifoLink(sim, bw_Bps=100.0)
+    e1 = link.transfer(100)   # 1 s
+    e2 = link.transfer(100)   # queued behind e1 -> finishes at 2 s
+    sim.run()
+    assert e1.fired and e2.fired
+    assert sim.now == pytest.approx(2.0)
+
+
+# ------------------------------------------------------------ Fig. 2 anchors
+
+
+def test_fig2_inline_vs_s3_100kb():
+    """Paper: inline latency 8.1x lower than S3 at 100 KB (Lambda testbed)."""
+    n = 100 << 10
+    t_inline, _ = measure_pattern("1-1", "inline", n, net=LAMBDA_NET, deterministic=True)
+    t_s3, _ = measure_pattern("1-1", "s3", n, net=LAMBDA_NET, deterministic=True)
+    ratio = t_s3 / t_inline
+    assert 6.0 < ratio < 11.0, ratio
+
+
+def test_fig2_inline_vs_elasticache_100kb():
+    """Paper: inline 1.3x lower latency than ElastiCache at 100 KB."""
+    n = 100 << 10
+    t_inline, _ = measure_pattern("1-1", "inline", n, net=LAMBDA_NET, deterministic=True)
+    t_ec, _ = measure_pattern("1-1", "elasticache", n, net=LAMBDA_NET, deterministic=True)
+    ratio = t_ec / t_inline
+    assert 1.05 < ratio < 1.8, ratio
+
+
+def test_fig2_inline_size_cap():
+    with pytest.raises(InlineTooLarge):
+        measure_pattern("1-1", "inline", 7 << 20)          # > 6 MB
+
+
+# ------------------------------------------------------------ Fig. 5 anchors
+
+
+def _median_tail(backend, nbytes, n=60):
+    ts = [measure_pattern("1-1", backend, nbytes, seed=s)[0] for s in range(n)]
+    return float(np.median(ts)), float(np.percentile(ts, 99))
+
+
+def test_fig5_small_object_ordering():
+    """10 KB: EC median ~89% below S3; XDT ~12% below EC."""
+    n = 10 << 10
+    m_s3, _ = _median_tail("s3", n)
+    m_ec, _ = _median_tail("elasticache", n)
+    m_xdt, _ = _median_tail("xdt", n)
+    assert m_ec < 0.25 * m_s3          # >= 75% reduction (paper: 89%)
+    assert m_xdt < m_ec                # XDT strictly better
+    assert m_xdt > 0.6 * m_ec          # but in the "few %..15%" band, not 10x
+
+
+def test_fig5_large_object_ordering():
+    """10 MB: EC ~87% below S3; XDT median ~45% below EC."""
+    n = 10 << 20
+    m_s3, t_s3 = _median_tail("s3", n)
+    m_ec, t_ec = _median_tail("elasticache", n)
+    m_xdt, t_xdt = _median_tail("xdt", n)
+    assert m_ec < 0.3 * m_s3
+    assert 0.4 < m_xdt / m_ec < 0.75   # paper: 45% lower median
+    assert t_xdt < t_ec                 # tails too
+
+
+# ------------------------------------------------------------ Fig. 6 anchors
+
+
+@pytest.mark.parametrize("pattern", ["scatter", "gather", "broadcast"])
+@pytest.mark.parametrize("fan", [4, 16])
+def test_fig6_collective_ordering(pattern, fan):
+    """XDT matches-or-beats EC, and EC beats S3, for every pattern x fan."""
+    n = 10 << 20
+    t_s3, _ = measure_pattern(pattern, "s3", n, fan=fan, deterministic=True)
+    t_ec, _ = measure_pattern(pattern, "elasticache", n, fan=fan, deterministic=True)
+    t_xdt, _ = measure_pattern(pattern, "xdt", n, fan=fan, deterministic=True)
+    assert t_xdt <= t_ec * 1.02, (pattern, fan, t_xdt, t_ec)
+    assert t_ec < t_s3, (pattern, fan)
+
+
+def test_fig6_effective_bandwidth_fan32():
+    """Paper: at fan 32 / 10 MB, XDT 16.4 Gb/s (82% of 20 Gb/s NIC),
+    EC 14.0 Gb/s, S3 5.5 Gb/s."""
+    n = 10 << 20
+    bw_xdt = effective_bandwidth_Bps("gather", "xdt", n, fan=32)
+    bw_ec = effective_bandwidth_Bps("gather", "elasticache", n, fan=32)
+    bw_s3 = effective_bandwidth_Bps("gather", "s3", n, fan=32)
+    gbps = lambda b: b * 8 / 1e9
+    assert 14.5 < gbps(bw_xdt) < 17.5, gbps(bw_xdt)   # ~16.4
+    assert 12.0 < gbps(bw_ec) < 15.5, gbps(bw_ec)     # ~14.0
+    assert 4.0 < gbps(bw_s3) < 7.0, gbps(bw_s3)       # ~5.5
+    assert bw_xdt > bw_ec > bw_s3
+
+
+def test_storage_accounting_in_sim():
+    _, cluster = measure_pattern("gather", "s3", 1 << 20, fan=4, deterministic=True)
+    acct = cluster.accounting("s3")
+    assert acct.n_storage_puts == 4
+    assert acct.n_storage_gets == 4

@@ -1,0 +1,97 @@
+"""AWS cost model units (paper §6.5.1 pricing snapshot)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import (
+    CostBreakdown,
+    WorkflowCostInputs,
+    elasticache_storage_cost,
+    lambda_compute_cost,
+    s3_storage_cost,
+    workflow_cost,
+    xdt_storage_cost,
+)
+
+
+def test_lambda_pricing_anchor():
+    """1M invocations = $0.20; 1 GB-s = $0.0000166667."""
+    assert lambda_compute_cost(0.0, 1_000_000) == pytest.approx(0.20)
+    assert lambda_compute_cost(2.0, 0, mem_gb=1.0) == pytest.approx(2 * 0.0000166667)
+
+
+def test_paper_memory_footprint_default():
+    """Paper fixes 512 MB for all functions."""
+    one_sec = lambda_compute_cost(1.0, 0)
+    assert one_sec == pytest.approx(0.5 * 0.0000166667)
+
+
+def test_s3_request_fees():
+    assert s3_storage_cost(1000, 0) == pytest.approx(0.005)
+    assert s3_storage_cost(0, 1000) == pytest.approx(0.0004)
+
+
+def test_s3_residency_negligible_for_ephemeral():
+    """Seconds-lived GBs cost ~nothing on S3 — request fees dominate."""
+    fee = s3_storage_cost(1, 1, gb_seconds=10.0)
+    assert fee == pytest.approx(0.005 / 1e3 + 0.0004 / 1e3, rel=0.05)
+
+
+def test_elasticache_hour_granularity():
+    """Cache capacity is billed >= 1 hour even for seconds-lived data —
+    the structural reason EC is 17-772x more expensive than XDT."""
+    assert elasticache_storage_cost(1.0, hours=0.001) == pytest.approx(0.02)
+    assert elasticache_storage_cost(1.0, hours=2.5) == pytest.approx(0.06)
+
+
+def test_s3_vs_ec_700x_anchor():
+    """Paper §2.3.1: S3 $0.02/GB-month vs EC $0.02/GB-hour ~= 700x."""
+    gb_month_s3 = 0.023
+    gb_month_ec = 0.02 * 24 * 30
+    assert 500 < gb_month_ec / gb_month_s3 < 900
+
+
+def test_xdt_zero():
+    assert xdt_storage_cost() == 0.0
+
+
+def test_workflow_cost_dispatch():
+    inputs = WorkflowCostInputs(
+        n_function_invocations=10, billed_duration_s=5.0,
+        n_storage_puts=4, n_storage_gets=8,
+        storage_gb_seconds=1.0, peak_resident_gb=0.5,
+    )
+    s3 = workflow_cost(inputs, "s3")
+    ec = workflow_cost(inputs, "elasticache")
+    xdt = workflow_cost(inputs, "xdt")
+    assert s3.compute == ec.compute == xdt.compute
+    assert xdt.storage == 0.0
+    assert ec.storage == pytest.approx(0.5 * 0.02)
+    assert s3.storage > 0
+    with pytest.raises(ValueError):
+        workflow_cost(inputs, "dynamo")
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    invs=st.integers(0, 10_000),
+    dur=st.floats(0, 1e4, allow_nan=False),
+    puts=st.integers(0, 10_000),
+    gets=st.integers(0, 10_000),
+    peak=st.floats(0, 100, allow_nan=False),
+)
+def test_property_costs_monotone_nonnegative(invs, dur, puts, gets, peak):
+    inputs = WorkflowCostInputs(invs, dur, puts, gets, 0.0, peak)
+    for backend in ("s3", "elasticache", "xdt"):
+        c = workflow_cost(inputs, backend)
+        assert c.compute >= 0 and c.storage >= 0
+        bigger = workflow_cost(
+            WorkflowCostInputs(invs + 1, dur + 1, puts + 1, gets + 1, 0.0, peak + 1),
+            backend,
+        )
+        assert bigger.total >= c.total
+
+
+def test_breakdown_micro_usd():
+    c = CostBreakdown(compute=17e-6, storage=0.0)
+    m = c.as_micro_usd()
+    assert m["total_uUSD"] == pytest.approx(17.0)

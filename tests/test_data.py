@@ -1,0 +1,130 @@
+"""Data pipeline: determinism, elastic sharding, XDT-mediated prefetch."""
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import smoke_config
+from repro.core.buffers import BufferRegistry
+from repro.core.transfer import TransferEngine
+from repro.data import ShardedLoader, SyntheticCorpus
+from repro.data.prefetch import PrefetchingFeed
+
+
+def test_corpus_deterministic():
+    c = SyntheticCorpus(vocab=128, seed=3)
+    a = c.sample(42, 64)
+    b = c.sample(42, 64)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 128
+
+
+def test_corpus_distinct_indices():
+    c = SyntheticCorpus(vocab=1024)
+    assert not np.array_equal(c.sample(1, 64), c.sample(2, 64))
+
+
+def test_corpus_has_learnable_structure():
+    """Bigram injection: consecutive-token correlation is present."""
+    c = SyntheticCorpus(vocab=256)
+    toks = np.concatenate([c.sample(i, 256) for i in range(8)])
+    follows = ((toks[1:] == (toks[:-1] * 31 + 7) % 256).mean())
+    assert follows > 0.2          # ~half the positions by construction
+
+
+def test_loader_shards_are_disjoint_and_cover():
+    cfg = smoke_config("granite_8b")
+    R, GB = 4, 8
+    loaders = [ShardedLoader(cfg, GB, 16, data_rank=r, data_ranks=R) for r in range(R)]
+    batches = [l.batch_at(step=2) for l in loaders]
+    merged = np.concatenate([b["tokens"] for b in batches])
+    single = ShardedLoader(cfg, GB, 16).batch_at(2)["tokens"]
+    # same global sample set regardless of R (order differs by rank layout)
+    assert sorted(map(tuple, merged.tolist())) == sorted(map(tuple, single.tolist()))
+
+
+def test_loader_elastic_reshape_preserves_global_batch():
+    """R=2 and R=8 produce the same global batch at every step — the
+    checkpoint-restart-on-different-topology guarantee."""
+    cfg = smoke_config("qwen3_4b")
+    GB = 8
+    for step in (0, 3):
+        sets = []
+        for R in (2, 8):
+            rows = np.concatenate([
+                ShardedLoader(cfg, GB, 8, r, R).batch_at(step)["tokens"]
+                for r in range(R)
+            ])
+            sets.append(sorted(map(tuple, rows.tolist())))
+        assert sets[0] == sets[1]
+
+
+def test_loader_modalities():
+    enc = smoke_config("hubert_xlarge")
+    b = ShardedLoader(enc, 2, 8).batch_at(0)
+    assert "frames" in b and "tokens" not in b
+    assert b["frames"].shape == (2, 8, enc.d_model)
+
+    vlm = smoke_config("llava_next_mistral_7b")
+    b = ShardedLoader(vlm, 2, 8).batch_at(0)
+    assert set(b) == {"tokens", "labels", "patches"}
+
+
+@settings(max_examples=25, deadline=None)
+@given(step=st.integers(0, 1000), rank=st.integers(0, 3))
+def test_property_loader_pure_function_of_step(step, rank):
+    cfg = smoke_config("smollm_360m")
+    l = ShardedLoader(cfg, 8, 8, data_rank=rank, data_ranks=4)
+    a, b = l.batch_at(step), l.batch_at(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+# ------------------------------------------------------------- prefetch
+
+
+def test_prefetch_feed_delivers_in_order():
+    cfg = smoke_config("smollm_360m")
+    loader = ShardedLoader(cfg, 2, 8)
+    feed = PrefetchingFeed(loader.batch_at, depth=2)
+    try:
+        for step in range(5):
+            batch = feed.get_batch(step)
+            np.testing.assert_array_equal(
+                np.asarray(batch["tokens"]), loader.batch_at(step)["tokens"]
+            )
+    finally:
+        feed.close()
+
+
+def test_prefetch_survives_producer_death():
+    """Killing the producer mid-stream -> consumer regenerates from the
+    deterministic index (the paper's re-invoke recovery, applied to data)."""
+    cfg = smoke_config("smollm_360m")
+    loader = ShardedLoader(cfg, 2, 8)
+    engine = TransferEngine("xdt", registry=BufferRegistry(max_slots=2))
+    feed = PrefetchingFeed(loader.batch_at, depth=2, engine=engine, timeout_s=2.0)
+    try:
+        _ = feed.get_batch(0)
+        engine.kill_producer()          # all buffered refs die
+        batch = feed.get_batch(1)       # must still be exact
+        np.testing.assert_array_equal(
+            np.asarray(batch["tokens"]), loader.batch_at(1)["tokens"]
+        )
+    finally:
+        feed.close()
+
+
+def test_prefetch_flow_control_backpressure():
+    """Bounded registry slots: the producer thread cannot run unboundedly
+    ahead of the consumer."""
+    cfg = smoke_config("smollm_360m")
+    loader = ShardedLoader(cfg, 2, 8)
+    engine = TransferEngine("xdt", registry=BufferRegistry(max_slots=2))
+    feed = PrefetchingFeed(loader.batch_at, depth=2, engine=engine)
+    try:
+        time.sleep(0.5)                  # let the producer run ahead
+        assert engine.registry.stats().slots_in_use <= 2
+    finally:
+        feed.close()

@@ -1,0 +1,119 @@
+"""Dry-run machinery units: HLO parsing, cell applicability, input specs.
+
+These never build the 512-device mesh (pytest sees one device); the full
+lower+compile sweep runs via ``python -m repro.launch.dryrun`` and its
+results are validated in test_dryrun_results.py.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.launch.dryrun import _shape_bytes, parse_collective_bytes
+from repro.launch.input_specs import SHAPE_CELLS, cell_applicable, input_specs
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,4096]") == 16 * 4096 * 2
+    assert _shape_bytes("f32[8]") == 32
+    assert _shape_bytes("(bf16[4,4], f32[2])") == 32 + 8
+    assert _shape_bytes("u8[3]") == 3
+    assert _shape_bytes("token[]") == 0
+
+
+def test_parse_collective_bytes():
+    hlo = """
+  %ag = bf16[32,128] all-gather(bf16[2,128] %x), replica_groups={}
+  %ar = f32[64] all-reduce(f32[64] %y), to_apply=%sum
+  %rs.1 = f32[8] reduce-scatter(f32[64] %z), dimensions={0}
+  %cp = bf16[16,16] collective-permute(bf16[16,16] %w)
+  %a2a = f32[4,4] all-to-all(f32[4,4] %v)
+  %ars = f32[64] all-reduce-start(f32[64] %q), to_apply=%sum
+  %ard = f32[64] all-reduce-done(f32[64] %ars)
+"""
+    out = parse_collective_bytes(hlo)
+    assert out["all-gather"] == 32 * 128 * 2
+    # all-reduce counts 2x (ring = reduce-scatter + all-gather), and the
+    # start/done pair counts once
+    assert out["all-reduce"] == 2 * (64 * 4) * 2
+    assert out["reduce-scatter"] == 8 * 4
+    assert out["collective-permute"] == 16 * 16 * 2
+    assert out["all-to-all"] == 4 * 4 * 4
+
+
+def test_parse_ignores_non_collectives():
+    hlo = "%d = f32[128,128] dot(f32[128,64] %a, f32[64,128] %b)"
+    assert parse_collective_bytes(hlo) == {}
+
+
+# ------------------------------------------------------------ applicability
+
+
+def test_cell_matrix_counts():
+    """40 assigned cells: 31 applicable + 9 documented skips
+    (hubert: decode_32k + long_500k; 7 quadratic archs: long_500k)."""
+    total = applicable = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPE_CELLS:
+            total += 1
+            ok, why = cell_applicable(cfg, shape)
+            if ok:
+                applicable += 1
+            else:
+                assert why, f"{arch}/{shape} skip must carry a reason"
+    assert total == 40
+    assert applicable == 31
+
+
+def test_encoder_skips_decode_cells():
+    cfg = get_config("hubert_xlarge")
+    assert cell_applicable(cfg, "train_4k")[0]
+    assert cell_applicable(cfg, "prefill_32k")[0]
+    assert not cell_applicable(cfg, "decode_32k")[0]
+    assert not cell_applicable(cfg, "long_500k")[0]
+
+
+def test_long_context_only_subquadratic():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        ok, _ = cell_applicable(cfg, "long_500k")
+        assert ok == (cfg.family in ("ssm", "hybrid")), arch
+
+
+# ------------------------------------------------------------ input specs
+
+
+@pytest.mark.parametrize("shape", list(SHAPE_CELLS))
+def test_input_specs_abstract_no_allocation(shape):
+    """Specs are ShapeDtypeStructs with the assignment's exact global dims."""
+    cfg = get_config("granite_8b")
+    if not cell_applicable(cfg, shape)[0]:
+        pytest.skip("n/a")
+    specs = input_specs(cfg, shape, mesh=None)
+    cell = SHAPE_CELLS[shape]
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    if cell["kind"] == "train":
+        assert specs["batch"]["tokens"].shape == (cell["batch"], cell["seq"])
+        assert specs["opt_state"]["mu"]["embed"].dtype == jnp.float32
+    elif cell["kind"] == "prefill":
+        assert specs["batch"]["tokens"].shape == (cell["batch"], cell["seq"])
+        assert "labels" not in specs["batch"]
+    else:
+        assert specs["tokens"].shape == (cell["batch"], 1)
+        assert specs["cache"]["k"].shape[2] == cell["seq"]
+
+
+def test_vlm_specs_split_patch_and_text():
+    cfg = get_config("llava_next_mistral_7b")
+    specs = input_specs(cfg, "train_4k", mesh=None)
+    s_img = cfg.frontend_seq
+    assert specs["batch"]["patches"].shape == (256, s_img, cfg.d_model)
+    assert specs["batch"]["tokens"].shape == (256, 4096 - s_img)
+
+
+def test_encoder_specs_use_frames():
+    cfg = get_config("hubert_xlarge")
+    specs = input_specs(cfg, "train_4k", mesh=None)
+    assert "frames" in specs["batch"] and "tokens" not in specs["batch"]

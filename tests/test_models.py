@@ -1,0 +1,201 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, registry, smoke_config
+from repro.data import ShardedLoader
+from repro.models import (
+    cache_shapes,
+    init_params,
+    make_decode_fn,
+    make_loss_fn,
+    make_prefill_fn,
+    param_shapes,
+)
+from repro.optim import OptConfig, adamw_init
+from repro.train import make_train_step
+
+ASSIGNED_DIMS = {
+    # arch: (L, d_model, H, KV, d_ff, vocab)  — assignment-fixed numbers
+    "smollm_360m": (32, 960, 15, 5, 2560, 49152),
+    "granite_8b": (36, 4096, 32, 8, 14336, 49152),
+    "qwen3_4b": (36, 2560, 32, 8, 9728, 151936),
+    "starcoder2_15b": (40, 6144, 48, 4, 24576, 49152),
+    "llama4_scout_17b_a16e": (48, 5120, 40, 8, 8192, 202048),
+    "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 1408, 163840),
+    "falcon_mamba_7b": (64, 4096, None, None, 0, 65024),
+    "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+    "llava_next_mistral_7b": (32, 4096, 32, 8, 14336, 32000),
+    "zamba2_1p2b": (38, 2048, 32, 32, 8192, 32000),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, d, H, KV, ff, V = ASSIGNED_DIMS[arch]
+    assert cfg.n_layers == L and cfg.d_model == d and cfg.vocab == V
+    if H is not None:
+        assert cfg.n_heads == H and cfg.n_kv_heads == KV
+    assert cfg.d_ff == ff
+
+
+def test_registry_covers_all_ten():
+    assert len(registry()) == 10
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    """One forward/train step on CPU: correct shapes, finite loss."""
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = ShardedLoader(cfg, global_batch=4, seq_len=16).batch_at(0)
+    step = make_train_step(cfg, None, OptConfig(warmup_steps=2, total_steps=8),
+                           remat="none", donate=False)
+    p2, o2, m = step(params, adamw_init(params), batch)
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["grad_norm"]) > 0
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        assert a.shape == b.shape
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_loss_decreases(arch):
+    """A few steps on a fixed batch must reduce the loss (learnable system)."""
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = ShardedLoader(cfg, global_batch=4, seq_len=16).batch_at(0)
+    step = make_train_step(cfg, None,
+                           OptConfig(peak_lr=3e-3, warmup_steps=1, total_steps=30),
+                           remat="none", donate=False)
+    opt = adamw_init(params)
+    first = None
+    for _ in range(8):
+        params, opt, m = step(params, opt, batch)
+        first = float(m["loss"]) if first is None else first
+    assert float(m["loss"]) < first
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if get_config(a).has_decode])
+def test_prefill_decode_consistency(arch):
+    """Greedy decode over a prompt == argmax of the teacher-forced forward.
+
+    prefill(prompt[:n]) then decode(token n) must give the same logits as
+    prefill(prompt[:n+1])'s last position — the KV/state handoff is exact.
+    """
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompt = np.arange(1, 9) % cfg.vocab
+    pad_to = 16 + cfg.frontend_seq
+    prefill = make_prefill_fn(cfg, None, remat="none", pad_to=pad_to)
+    decode = make_decode_fn(cfg, None)
+
+    def batch(toks):
+        b = {"tokens": jnp.asarray(toks)}
+        if cfg.family == "vlm":      # modality frontend stub: fixed patches
+            rng = np.random.default_rng(0)
+            b["patches"] = jnp.asarray(
+                rng.standard_normal((1, cfg.frontend_seq, cfg.d_model)) * 0.1,
+                jnp.bfloat16,
+            )
+        return b
+
+    logits_a, cache = prefill(params, batch(prompt[None, :-1]))
+    logits_b, _ = decode(params, cache, jnp.asarray(prompt[None, -1:], jnp.int32))
+
+    logits_full, _ = prefill(params, batch(prompt[None]))
+    np.testing.assert_allclose(
+        np.asarray(logits_b, np.float32), np.asarray(logits_full, np.float32),
+        rtol=0.05, atol=0.15,
+    )
+
+
+def test_encoder_has_no_decode():
+    cfg = get_config("hubert_xlarge")
+    assert not cfg.has_decode
+    with pytest.raises(AssertionError):
+        from repro.serving import ServingEngine
+
+        ServingEngine(cfg, {}, max_batch=1)
+
+
+def test_subquadratic_flags():
+    """Only SSM/hybrid archs run long_500k (DESIGN §Arch-applicability)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        expect = cfg.family in ("ssm", "hybrid")
+        assert cfg.subquadratic == expect, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_sane(arch):
+    """n_params within a loose band of the arch's advertised size."""
+    expected = {
+        "smollm_360m": 0.36e9, "granite_8b": 8e9, "qwen3_4b": 4e9,
+        "starcoder2_15b": 15e9, "llama4_scout_17b_a16e": 17e9 * 6,  # total w/ experts
+        "moonshot_v1_16b_a3b": 16e9, "falcon_mamba_7b": 7e9,
+        "hubert_xlarge": 1e9, "llava_next_mistral_7b": 7e9, "zamba2_1p2b": 1.2e9,
+    }[arch]
+    n = get_config(arch).n_params()
+    assert 0.3 * expected < n < 3.0 * expected, (arch, n, expected)
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("moonshot_v1_16b_a3b")
+    assert cfg.n_active_params() < 0.35 * cfg.n_params()   # 16B total / ~3B active
+
+
+def test_cache_shapes_cover_families():
+    for arch, keys in [
+        ("granite_8b", {"k", "v", "pos"}),
+        ("falcon_mamba_7b", {"conv", "ssm", "pos"}),
+        ("zamba2_1p2b", {"k", "v", "conv", "ssm", "pos"}),
+    ]:
+        cfg = smoke_config(arch)
+        assert set(cache_shapes(cfg, 2, 8)) == keys
+
+
+def test_param_shapes_match_init():
+    cfg = smoke_config("qwen3_4b")
+    shapes = param_shapes(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    is_spec = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+
+    def walk(s, p):
+        if is_spec(s):
+            assert tuple(p.shape) == s[0]
+            return
+        for k in s:
+            walk(s[k], p[k])
+
+    walk(shapes, params)
+
+
+def test_qk_norm_present_only_for_qwen():
+    assert get_config("qwen3_4b").qk_norm
+    assert not get_config("granite_8b").qk_norm
+    p = param_shapes(smoke_config("qwen3_4b"))
+    assert "q_norm" in p["blocks"]["attn"]
+
+
+def test_vlm_prefix_changes_logits():
+    """The VLM patch prefix must actually condition the text logits."""
+    cfg = smoke_config("llava_next_mistral_7b")
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    loss_fn = make_loss_fn(cfg, None, remat="none")
+    B, S_img, S_txt = 2, cfg.frontend_seq, 8
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S_txt)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S_txt)), jnp.int32),
+        "patches": jnp.asarray(rng.standard_normal((B, S_img, cfg.d_model)) * 0.1,
+                               jnp.bfloat16),
+    }
+    l1 = float(loss_fn(params, batch))
+    batch2 = dict(batch, patches=batch["patches"] * 3.0 + 1.0)
+    l2 = float(loss_fn(params, batch2))
+    assert l1 != l2

@@ -1,0 +1,114 @@
+"""Optimizer, schedule, and gradient-compression unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    OptConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    int8_compress,
+    int8_decompress,
+    warmup_cosine,
+)
+from repro.optim.compression import compress_with_feedback
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    cfg = OptConfig(peak_lr=0.3, warmup_steps=1, total_steps=200, weight_decay=0.0)
+    loss = lambda p: jnp.sum(jnp.square(p["w"]))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_weight_decay_pulls_to_zero():
+    params = {"w": jnp.asarray([1.0])}
+    state = adamw_init(params)
+    cfg = OptConfig(peak_lr=0.1, warmup_steps=1, total_steps=100, weight_decay=0.5)
+    zero_grad = {"w": jnp.asarray([0.0])}
+    for _ in range(50):
+        params, state, _ = adamw_update(params, zero_grad, state, cfg)
+    assert abs(float(params["w"][0])) < 0.2
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params)
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=1, total_steps=10, clip_norm=1.0,
+                    weight_decay=0.0)
+    huge = {"w": jnp.full(4, 1e6)}
+    p2, state, gnorm = adamw_update(params, huge, state, cfg)
+    assert float(gnorm) == pytest.approx(2e6)
+    # first-step Adam update magnitude is ~lr regardless of clip, but the
+    # moments must reflect the CLIPPED gradient
+    assert float(jnp.max(jnp.abs(state["mu"]["w"]))) <= 0.1 * (1e6 / 2e6) * 2
+
+
+def test_bf16_params_f32_moments():
+    params = {"w": jnp.ones(4, jnp.bfloat16)}
+    state = adamw_init(params)
+    assert state["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones(4, jnp.bfloat16)}
+    p2, s2, _ = adamw_update(params, g, state, OptConfig())
+    assert p2["w"].dtype == jnp.bfloat16
+    assert s2["nu"]["w"].dtype == jnp.float32
+
+
+def test_warmup_cosine_shape():
+    sched = warmup_cosine(1e-3, warmup_steps=10, total_steps=100)
+    steps = jnp.arange(0, 101)
+    lrs = jax.vmap(sched)(steps)
+    assert float(lrs[0]) == 0.0
+    assert float(lrs[10]) == pytest.approx(1e-3, rel=1e-5)
+    # monotone warmup
+    assert bool(jnp.all(jnp.diff(lrs[:11]) >= 0))
+    # cosine decay to final_frac * peak
+    assert float(lrs[100]) == pytest.approx(1e-4, rel=1e-3)
+    assert bool(jnp.all(jnp.diff(lrs[10:]) <= 1e-9))
+
+
+def test_global_norm():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(tree)) == pytest.approx(5.0)
+
+
+# ------------------------------------------------------------ compression
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_int8_roundtrip_bounded(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,), jnp.float32) * 10
+    q, scale = int8_compress(x)
+    err = jnp.max(jnp.abs(int8_decompress(q, scale) - x))
+    assert float(err) <= float(scale) / 2 + 1e-6   # half-step rounding bound
+
+
+def test_int8_preserves_amax():
+    x = jnp.asarray([-7.0, 3.0, 7.0])
+    q, scale = int8_compress(x)
+    assert int(q[2]) == 127 and int(q[0]) == -127
+
+
+def test_error_feedback_accumulates_residual():
+    """EF: the sum of quantized emissions tracks the sum of true grads."""
+    rng = jax.random.PRNGKey(0)
+    true_sum = jnp.zeros(32)
+    emitted_sum = jnp.zeros(32)
+    residual = None
+    for i in range(20):
+        g = jax.random.normal(jax.random.fold_in(rng, i), (32,)) * 0.1
+        true_sum = true_sum + g
+        q, scale, residual = compress_with_feedback(g, residual)
+        emitted_sum = emitted_sum + int8_decompress(q, scale)
+    # without EF the error would be ~20 half-steps; with EF it is ~1 step
+    final_err = float(jnp.max(jnp.abs(emitted_sum - true_sum)))
+    q_last, scale_last = int8_compress(true_sum / 20)
+    assert final_err < 4 * float(scale_last) + 1e-3

@@ -1,0 +1,104 @@
+"""§Perf hillclimb knobs: every optimization must be numerics-preserving.
+
+These run mesh-free on CPU (the mesh-level checks for zero1 / fsdp /
+seq_shard / moe-a2a live in tests/_multidevice_checks.py and the hillclimb
+artifacts); here we pin the single-device contracts.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data import ShardedLoader
+from repro.models import init_params, make_decode_fn, make_loss_fn, make_prefill_fn
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = smoke_config("granite_8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = ShardedLoader(cfg, 4, 16).batch_at(0)
+    return cfg, params, batch
+
+
+def test_loss_chunk_matches_full(dense_setup):
+    """Streamed CE == monolithic CE, in value AND gradient."""
+    cfg, params, batch = dense_setup
+    full = make_loss_fn(cfg, None, remat="none")
+    chunked = make_loss_fn(dataclasses.replace(cfg, loss_chunk=4), None, remat="none")
+    assert abs(float(full(params, batch)) - float(chunked(params, batch))) < 1e-4
+    gf = jax.grad(full)(params, batch)
+    gc = jax.grad(chunked)(params, batch)
+    for a, b in zip(jax.tree.leaves(gf), jax.tree.leaves(gc)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-2, atol=2e-3,
+        )
+
+
+def test_loss_chunk_ragged_falls_back(dense_setup):
+    """Chunk sizes that don't divide S transparently use the full path."""
+    cfg, params, batch = dense_setup
+    odd = make_loss_fn(dataclasses.replace(cfg, loss_chunk=7), None, remat="none")
+    full = make_loss_fn(cfg, None, remat="none")
+    assert abs(float(odd(params, batch)) - float(full(params, batch))) < 1e-5
+
+
+def test_decode_scatter_update_exact(dense_setup):
+    """Scatter KV update == one-hot rewrite, logits and cache bit-equal."""
+    cfg, params, _ = dense_setup
+    prompt = np.arange(1, 9)
+    prefill = make_prefill_fn(cfg, None, remat="none", pad_to=16)
+    _, cache = prefill(params, {"tokens": jnp.asarray(prompt[None, :-1])})
+    toks = jnp.asarray(prompt[None, -1:], jnp.int32)
+    l1, c1 = make_decode_fn(cfg, None)(params, cache, toks)
+    cfg2 = dataclasses.replace(cfg, decode_scatter_update=True)
+    l2, c2 = make_decode_fn(cfg2, None)(params, cache, toks)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32)
+        )
+
+
+def test_seq_shard_and_fsdp_noop_without_mesh(dense_setup):
+    """Mesh-free lowering ignores the layout knobs (identical loss)."""
+    cfg, params, batch = dense_setup
+    base = float(make_loss_fn(cfg, None, remat="none")(params, batch))
+    for kw in ({"seq_shard_acts": True}, {"fsdp_params": True}):
+        v = float(make_loss_fn(dataclasses.replace(cfg, **kw), None,
+                               remat="none")(params, batch))
+        assert v == pytest.approx(base, abs=1e-6), kw
+
+
+def test_moe_a2a_single_shard_degenerates():
+    """dispatch='a2a' without a model axis falls back to single-rank EP."""
+    cfg = smoke_config("moonshot_v1_16b_a3b")
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    batch = ShardedLoader(cfg, 2, 8).batch_at(0)
+    base = float(make_loss_fn(cfg, None, remat="none")(params, batch))
+    cfg2 = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="a2a"))
+    v = float(make_loss_fn(cfg2, None, remat="none")(params, batch))
+    assert v == pytest.approx(base, abs=1e-5)
+
+
+def test_zero1_resolve_layout():
+    """ZeRO-1 spec: DP axes land on the first free divisible dim only."""
+    import os
+    import subprocess
+    import sys
+
+    # needs >1 device: verified in tests/_multidevice_checks.py; here we
+    # check the pure resolver logic on a trivial mesh via direct call
+    from repro.distributed.sharding import ShardingRules
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(data=1, model=1)
+    rules = ShardingRules(mesh)
+    spec = rules.zero1_resolve(["embed", "d_ff"], [64, 128])
+    # with 1-sized axes nothing shards, but resolution must not crash
+    assert len(spec) == 2

@@ -1,0 +1,77 @@
+"""Trainer: fault-tolerant loop — checkpoint/restart, fault injection."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data import ShardedLoader
+from repro.models import init_params
+from repro.optim import OptConfig
+from repro.train import Trainer, TrainerConfig
+from repro.train.trainer import SimulatedFailure
+
+
+def _mk_trainer(tmp_path, steps=12, fault_hook=None, seed=0):
+    cfg = smoke_config("smollm_360m")
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    loader = ShardedLoader(cfg, global_batch=4, seq_len=8)
+    return Trainer(
+        cfg, params, mesh=None,
+        opt_cfg=OptConfig(peak_lr=1e-3, warmup_steps=2, total_steps=steps),
+        tcfg=TrainerConfig(steps=steps, checkpoint_every=4, log_every=2,
+                           remat="none"),
+        workdir=str(tmp_path),
+        batch_at=loader.batch_at,
+        fault_hook=fault_hook,
+    )
+
+
+def _params_of(t):
+    return [np.asarray(x, np.float32) for x in jax.tree.leaves(t.params)]
+
+
+def test_loss_decreases(tmp_path):
+    t = _mk_trainer(tmp_path / "a", steps=12)
+    out = t.run()
+    assert out["final_step"] == 12
+    losses = [m["loss"] for m in out["log"]]
+    assert losses[-1] < losses[0]
+
+
+def test_crash_restart_bit_identical(tmp_path):
+    """Kill at step 6, restart from the step-4 checkpoint, finish — final
+    params must be bit-identical to an uninterrupted run."""
+    ref = _mk_trainer(tmp_path / "ref", steps=10)
+    ref.run()
+    golden = _params_of(ref)
+
+    def bomb(step):
+        if step == 6 and not getattr(bomb, "fired", False):
+            bomb.fired = True
+            raise SimulatedFailure("node lost")
+
+    crashy = _mk_trainer(tmp_path / "crash", steps=10, fault_hook=bomb)
+    with pytest.raises(SimulatedFailure):
+        crashy.run()
+
+    resumed = _mk_trainer(tmp_path / "crash", steps=10)
+    out = resumed.run()
+    assert out["final_step"] == 10
+    assert resumed.start_step == 4          # resumed from the last commit
+    for a, b in zip(golden, _params_of(resumed)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_resume_skips_completed_run(tmp_path):
+    t1 = _mk_trainer(tmp_path / "done", steps=8)
+    t1.run()
+    t2 = _mk_trainer(tmp_path / "done", steps=8)
+    out = t2.run()
+    assert t2.start_step == 8 and out["final_step"] == 8
+
+
+def test_straggler_accounting(tmp_path):
+    t = _mk_trainer(tmp_path / "s", steps=4)
+    t.tcfg.straggler_deadline_s = 0.0       # every step blows the deadline
+    out = t.run()
+    assert out["stragglers"] == 4

@@ -1,0 +1,131 @@
+"""TransferEngine: the four backends' functional + modeled behaviour."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DEFAULT_NET,
+    InlineTooLarge,
+    TransferEngine,
+    XDTObjectExhausted,
+    XDTProducerGone,
+    XDTRefInvalid,
+    modeled_transfer_seconds,
+)
+from repro.core.refs import XDTRef
+
+
+@pytest.mark.parametrize("backend", TransferEngine.BACKENDS)
+def test_roundtrip_preserves_values(backend):
+    eng = TransferEngine(backend)
+    x = jnp.arange(128, dtype=jnp.float32).reshape(8, 16)
+    ref = eng.put(x)
+    out = eng.get(ref)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+@pytest.mark.parametrize("backend", TransferEngine.BACKENDS)
+def test_pytree_roundtrip(backend):
+    eng = TransferEngine(backend)
+    tree = {"k": jnp.ones((4, 4)), "v": jnp.zeros((2,), jnp.int32)}
+    out = eng.get(eng.put(tree))
+    assert set(out) == {"k", "v"}
+    np.testing.assert_array_equal(np.asarray(out["k"]), np.ones((4, 4)))
+
+
+def test_inline_cap_enforced():
+    eng = TransferEngine("inline", inline_limit=1024)
+    with pytest.raises(InlineTooLarge):
+        eng.put(jnp.zeros((1024,), jnp.float32))      # 4 KiB > 1 KiB cap
+    eng.put(jnp.zeros((128,), jnp.float32))           # 512 B fits
+
+
+def test_n_retrievals_exhaustion():
+    eng = TransferEngine("xdt")
+    ref = eng.put(jnp.ones(4), n_retrievals=2)
+    eng.get(ref)
+    eng.get(ref)
+    with pytest.raises(XDTObjectExhausted):
+        eng.get(ref)
+
+
+def test_storage_backend_exhaustion():
+    eng = TransferEngine("s3")
+    ref = eng.put(jnp.ones(4), n_retrievals=1)
+    eng.get(ref)
+    with pytest.raises(XDTObjectExhausted):
+        eng.get(ref)
+
+
+def test_producer_death_surfaces_to_get():
+    eng = TransferEngine("xdt")
+    ref = eng.put(jnp.ones(4))
+    eng.kill_producer()
+    with pytest.raises(XDTProducerGone):
+        eng.get(ref)
+
+
+def test_forged_ref_rejected():
+    eng = TransferEngine("xdt")
+    eng.put(jnp.ones(4))
+    with pytest.raises(XDTRefInvalid):
+        eng.get(XDTRef(b"\x00" * 48))
+
+
+def test_cross_engine_ref_rejected():
+    """Refs are bound to the minter's trust domain."""
+    a, b = TransferEngine("xdt"), TransferEngine("xdt")
+    ref = a.put(jnp.ones(4))
+    with pytest.raises(XDTRefInvalid):
+        b.get(ref)
+
+
+def test_invoke_blocking_semantics():
+    eng = TransferEngine("xdt")
+    out = eng.invoke(lambda x: x * 2, jnp.ones((4,)))
+    np.testing.assert_array_equal(np.asarray(out), 2 * np.ones(4))
+    assert eng.stats.transfers == 1
+
+
+def test_modeled_latency_ordering_large_objects():
+    """Paper Fig. 2/5: for large transfers XDT < ElastiCache < S3."""
+    for nbytes in (10 << 20, 100 << 20):
+        t_xdt = modeled_transfer_seconds("xdt", nbytes)
+        t_ec = modeled_transfer_seconds("elasticache", nbytes)
+        t_s3 = modeled_transfer_seconds("s3", nbytes)
+        assert t_xdt < t_ec < t_s3, (nbytes, t_xdt, t_ec, t_s3)
+
+
+def test_modeled_latency_small_objects():
+    """At 10 KB the paper measures XDT ~12% under EC and ~89% under S3."""
+    n = 10 << 10
+    t_xdt = modeled_transfer_seconds("xdt", n)
+    t_ec = modeled_transfer_seconds("elasticache", n)
+    t_s3 = modeled_transfer_seconds("s3", n)
+    assert t_xdt < t_ec
+    assert t_ec < 0.25 * t_s3          # ~89% lower in the paper
+
+
+def test_storage_accounting():
+    eng = TransferEngine("elasticache")
+    ref = eng.put(jnp.zeros((1024,), jnp.float32), n_retrievals=2)
+    eng.get(ref)
+    eng.get(ref)
+    assert eng.acct.n_storage_puts == 1
+    assert eng.acct.n_storage_gets == 2
+    assert eng.acct.peak_resident_gb > 0
+
+
+def test_xdt_zero_storage_accounting():
+    eng = TransferEngine("xdt")
+    ref = eng.put(jnp.zeros((1024,), jnp.float32))
+    eng.get(ref)
+    assert eng.acct.n_storage_puts == 0
+    assert eng.acct.n_storage_gets == 0
+
+
+def test_stats_bytes_moved():
+    eng = TransferEngine("xdt")
+    x = jnp.zeros((256,), jnp.float32)
+    eng.get(eng.put(x))
+    assert eng.stats.bytes_moved == x.nbytes

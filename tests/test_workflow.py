@@ -1,0 +1,128 @@
+"""Workflow engine: at-most-once invocations, producer-death recovery."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import TransferEngine, WorkflowEngine, XDTProducerGone
+from repro.core.scheduler import ScalingPolicy
+
+
+def test_chain_invocation():
+    eng = WorkflowEngine()
+    eng.register("consumer", lambda ctx, x: x + 1)
+    eng.register("producer", lambda ctx, x: ctx.invoke("consumer", x * 2))
+    assert eng.run("producer", 5) == 11
+    eng.assert_at_most_once()
+    assert eng.executed_count("consumer") == 1
+
+
+def test_put_get_edge():
+    eng = WorkflowEngine()
+
+    def producer(ctx, x):
+        ref = ctx.put(jnp.full((4,), x, jnp.float32), n_retrievals=1)
+        return ctx.invoke("consumer", ref)
+
+    eng.register("producer", producer)
+    eng.register("consumer", lambda ctx, ref: float(ctx.get(ref).sum()))
+    assert eng.run("producer", 3) == 12.0
+
+
+def test_scatter_gather():
+    eng = WorkflowEngine()
+
+    def mapper(ctx, shard):
+        return ctx.put(jnp.asarray(shard) * 2, n_retrievals=1)
+
+    def driver(ctx, data):
+        refs = ctx.scatter("mapper", [data[i::2] for i in range(2)])
+        parts = ctx.gather(refs)
+        return sum(float(p.sum()) for p in parts)
+
+    eng.register("mapper", mapper)
+    eng.register("driver", driver)
+    assert eng.run("driver", np.arange(6.0)) == 2 * np.arange(6.0).sum()
+
+
+def test_broadcast_refcount():
+    eng = WorkflowEngine()
+    seen = []
+
+    def worker(ctx, ref):
+        seen.append(float(ctx.get(ref).sum()))
+        return None
+
+    def driver(ctx, x):
+        ctx.broadcast("worker", jnp.ones((4,)) * x, fan=3)
+        return len(seen)
+
+    eng.register("worker", worker)
+    eng.register("driver", driver)
+    assert eng.run("driver", 2.0) == 3
+    assert seen == [8.0, 8.0, 8.0]
+    # the broadcast object was freed after its Nth (=3rd) retrieval
+    assert eng.transfer.registry.stats().slots_in_use == 0
+
+
+def test_producer_gone_triggers_orchestrator_retry():
+    """Consumer hits XDTProducerGone -> orchestrator re-invokes the producer
+    sub-workflow with the same original arguments (at-least-once recovery)."""
+    eng = WorkflowEngine(max_retries=2)
+    attempts = []
+
+    def producer(ctx, x):
+        ref = ctx.put(jnp.ones((2,)) * x)
+        attempts.append(x)
+        if len(attempts) == 1:
+            eng.transfer.kill_producer()  # instance dies before the pull
+        return ctx.invoke("consumer", ref)
+
+    eng.register("producer", producer)
+    eng.register("consumer", lambda ctx, ref: float(ctx.get(ref).sum()))
+    assert eng.run("producer", 4.0) == 8.0
+    assert attempts == [4.0, 4.0]        # same original argument re-invoked
+    eng.assert_at_most_once()            # but fresh invocation ids
+
+
+def test_retry_budget_exhaustion():
+    eng = WorkflowEngine(max_retries=1)
+
+    def producer(ctx, x):
+        ref = ctx.put(jnp.ones((2,)))
+        eng.transfer.kill_producer()     # always dies
+        return ctx.invoke("consumer", ref)
+
+    eng.register("producer", producer)
+    eng.register("consumer", lambda ctx, ref: ctx.get(ref))
+    with pytest.raises(XDTProducerGone):
+        eng.run("producer", 0)
+
+
+def test_error_records():
+    eng = WorkflowEngine(max_retries=0)
+
+    def failing(ctx, x):
+        ref = ctx.put(jnp.ones((2,)))
+        eng.transfer.kill_producer()
+        return ctx.get(ref)
+
+    eng.register("failing", failing)
+    with pytest.raises(XDTProducerGone):
+        eng.run("failing", 0)
+    errs = [r for r in eng.records if r.status == "error"]
+    assert errs and errs[0].error_code == "XDT.ProducerGone"
+
+
+def test_unknown_function():
+    eng = WorkflowEngine()
+    with pytest.raises(KeyError):
+        eng.run("nope", 0)
+
+
+def test_scaling_policy_respected():
+    eng = WorkflowEngine()
+    eng.register("f", lambda ctx, x: x, policy=ScalingPolicy(max_instances=2))
+    for i in range(5):
+        eng.run("f", i)
+    dep = eng.control.deployments["f"]
+    assert dep.n_instances <= 2

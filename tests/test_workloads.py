@@ -1,0 +1,140 @@
+"""Real-world workload models vs the paper's Fig. 7 / Table 2 anchors.
+
+Assertions are BANDS around the paper's reported numbers; exact per-u$
+figures cannot be reverse-engineered from the paper (documented deviations
+in EXPERIMENTS.md §Paper-claims).  Averages over 10 seeds mirror the paper's
+10-measurement protocol.
+"""
+import numpy as np
+import pytest
+
+from repro.core.workloads import BACKENDS, WORKLOADS
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for name, fn in WORKLOADS.items():
+        agg = {}
+        for b in BACKENDS:
+            rs = [fn(b, seed=s) for s in range(10)]
+            agg[b] = {
+                "latency": float(np.mean([r.latency_s for r in rs])),
+                "cost": float(np.mean([r.cost.total for r in rs])),
+                "compute": float(np.mean([r.cost.compute for r in rs])),
+                "storage": float(np.mean([r.cost.storage for r in rs])),
+                "breakdown": rs[0].breakdown,
+            }
+        out[name] = agg
+    return out
+
+
+def _speedup(res, wl, baseline):
+    return res[wl][baseline]["latency"] / res[wl]["xdt"]["latency"]
+
+
+def _cost_ratio(res, wl, baseline):
+    return res[wl][baseline]["cost"] / res[wl]["xdt"]["cost"]
+
+
+# ------------------------------------------------------------------ Fig. 7
+
+
+def test_vid_speedups(results):
+    """Paper: VID 1.36x vs S3, 1.02x vs EC."""
+    assert 1.25 < _speedup(results, "vid", "s3") < 1.65
+    assert 1.00 <= _speedup(results, "vid", "elasticache") < 1.12
+
+
+def test_set_speedups(results):
+    """Paper: SET 3.4x vs S3, 1.05x vs EC."""
+    assert 2.0 < _speedup(results, "set", "s3") < 3.8
+    assert 1.00 <= _speedup(results, "set", "elasticache") < 1.25
+
+
+def test_mr_speedups(results):
+    """Paper: MR 1.26x vs S3, 1.05x vs EC."""
+    assert 1.15 < _speedup(results, "mr", "s3") < 1.55
+    assert 1.00 <= _speedup(results, "mr", "elasticache") < 1.35
+
+
+def test_abstract_speedup_band(results):
+    """Abstract: XDT delivers 1.3-3.4x over S3 across real workloads."""
+    sus = [_speedup(results, wl, "s3") for wl in WORKLOADS]
+    assert min(sus) > 1.2
+    assert max(sus) < 4.0
+
+
+# ------------------------------------------------------------------ Table 2
+
+
+def test_vid_cost_ratios(results):
+    """Paper Table 2: VID 3x cheaper than S3-based, 56x than EC-based."""
+    assert 1.8 < _cost_ratio(results, "vid", "s3") < 4.5
+    assert 18 < _cost_ratio(results, "vid", "elasticache") < 80
+
+
+def test_set_cost_ratios(results):
+    """Paper Table 2: SET 2x cheaper than S3, 17x than EC."""
+    assert 2.0 < _cost_ratio(results, "set", "s3") < 8.0
+    assert 15 < _cost_ratio(results, "set", "elasticache") < 80
+
+
+def test_mr_cost_ratios(results):
+    """Paper Table 2: MR 5x cheaper than S3, 772x than EC (EC dominated by
+    provisioned-capacity cost of the multi-GB shuffle)."""
+    assert 2.5 < _cost_ratio(results, "mr", "s3") < 6.5
+    assert 40 < _cost_ratio(results, "mr", "elasticache") < 900
+
+
+def test_xdt_storage_cost_is_zero(results):
+    """XDT's defining property: no intermediate-service bill at all (only
+    the unavoidable S3 fees for ORIGINAL input, in MR)."""
+    assert results["vid"]["xdt"]["storage"] == 0.0
+    assert results["set"]["xdt"]["storage"] == 0.0
+    assert results["mr"]["xdt"]["storage"] < 10e-6      # input-read fees only
+
+
+def test_ec_storage_dominates_ec_cost(results):
+    """Paper §7.2: EC storage cost exceeds compute by 1-2 orders of
+    magnitude — the cost barrier the title refers to."""
+    for wl in WORKLOADS:
+        ec = results[wl]["elasticache"]
+        assert ec["storage"] > 10 * ec["compute"], wl
+
+
+# ----------------------------------------------------- latency breakdowns
+
+
+def test_vid_transfer_fraction_shrinks(results):
+    """Paper: VID spends 39% of time in transfers on S3, 4% on XDT."""
+    def frac(b):
+        bd = results["vid"][b]["breakdown"]
+        tr = bd["fragment_transfer"] + bd["frames_transfer"]
+        return tr / sum(bd.values())
+
+    assert frac("s3") > 0.25
+    assert frac("xdt") < 0.10
+
+
+def test_mr_shuffle_collapse(results):
+    """Paper: mapper-put/reducer-get shrink 23.4x/4.8x vs S3 with XDT."""
+    s3 = results["mr"]["s3"]["breakdown"]
+    xdt = results["mr"]["xdt"]["breakdown"]
+    s3_shuffle = s3["mapper_put"] + s3["reducer_get"]
+    xdt_shuffle = xdt["mapper_put"] + xdt["reducer_get"]
+    assert s3_shuffle > 4 * xdt_shuffle
+
+
+def test_mr_input_not_optimized(results):
+    """The original-input S3 read is identical across backends."""
+    reads = [results["mr"][b]["breakdown"]["input_read_s3"] for b in BACKENDS]
+    assert max(reads) / min(reads) < 1.35       # jitter only
+
+
+def test_determinism():
+    from repro.core.workloads import run_vid
+
+    a = run_vid("xdt", seed=5, deterministic=True)
+    b = run_vid("xdt", seed=9, deterministic=True)
+    assert a.latency_s == b.latency_s
