@@ -20,6 +20,7 @@ from . import (
     fig5_latency_cdf,
     fig6_collectives,
     fig7_workloads,
+    fig8_throughput,
     table2_cost,
 )
 from .common import RESULTS_DIR
@@ -29,6 +30,7 @@ HARNESSES = {
     "fig5": fig5_latency_cdf.main,
     "fig6": fig6_collectives.main,
     "fig7": fig7_workloads.main,
+    "fig8": lambda: fig8_throughput.main([]),
     "table2": table2_cost.main,
 }
 

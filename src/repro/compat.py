@@ -1,0 +1,21 @@
+"""Version-compatibility shims for the pinned container toolchain.
+
+``shard_map`` graduated from ``jax.experimental`` to the top-level namespace
+in newer JAX releases; the container pins an older version.  Import it from
+here so call sites work on both.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.6: experimental module, `check_rep` kwarg
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    def shard_map(f, **kwargs):  # type: ignore[no-redef]
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _experimental_shard_map(f, **kwargs)
+
+__all__ = ["shard_map"]

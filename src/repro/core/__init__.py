@@ -4,17 +4,25 @@ Layers
 ------
 * :mod:`refs`      — unforgeable capability tokens for ephemeral objects.
 * :mod:`buffers`   — producer-side refcounted buffer registry + flow control.
-* :mod:`transfer`  — the XDT API (invoke/put/get) over jax.Arrays, with
-                     inline / S3 / ElastiCache baselines.
+* :mod:`clock`     — the injected time source (real or simulator-driven)
+                     shared by scheduler, transfer accounting, and workflows.
+* :mod:`transfer`  — the XDT API (invoke/put/get) over jax.Arrays; every
+                     medium (xdt / inline / s3 / elasticache / hybrid) is a
+                     TransferBackend strategy class over one ServiceStore.
 * :mod:`patterns`  — 1-1 / scatter / gather / broadcast as mesh collectives.
 * :mod:`scheduler` — activator/autoscaler control plane (placement first,
                      data second — the XDT separation).
-* :mod:`workflow`  — function-DAG engine with at-most-once semantics.
+* :mod:`workflow`  — event-driven function-DAG engine: concurrent requests,
+                     overlapping fan-out/fan-in, at-most-once semantics,
+                     all on the simulator's virtual clock.
+* :mod:`loadgen`   — closed/open-loop request drivers for throughput and
+                     tail-latency sweeps under virtual time.
 * :mod:`cluster`   — calibrated discrete-event simulator for the paper's
                      latency/bandwidth/cost evaluation.
 * :mod:`cost`      — AWS cost model (Table 2).
 """
 from .buffers import BufferRegistry, RegistryStats
+from .clock import Clock, MonotonicClock, VirtualClock
 from .cluster import (
     DEFAULT_NET,
     NetConstants,
@@ -27,6 +35,7 @@ from .cluster import (
 from .cost import (
     CostBreakdown,
     WorkflowCostInputs,
+    cost_per_1k_requests,
     elasticache_storage_cost,
     lambda_compute_cost,
     s3_storage_cost,
@@ -52,10 +61,19 @@ from .patterns import (
     pattern_wire_bytes,
     scatter_shard,
 )
+from .loadgen import LoadGenerator, LoadReport
 from .refs import ObjectDescriptor, RefMinter, RefPayload, XDTRef
 from .workloads import WORKLOADS, WorkloadResult, run_all, run_mr, run_set, run_vid
 from .scheduler import ControlPlane, Deployment, Instance, ScalingPolicy
-from .transfer import TransferEngine, TransferStats, modeled_transfer_seconds
-from .workflow import Context, WorkflowEngine
+from .transfer import (
+    ServiceStore,
+    TransferBackend,
+    TransferEngine,
+    TransferStats,
+    available_backends,
+    modeled_transfer_seconds,
+    register_backend,
+)
+from .workflow import AsyncResult, Context, WorkflowEngine, WorkflowRequest
 
 __all__ = [k for k in dir() if not k.startswith("_")]

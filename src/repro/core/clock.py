@@ -1,0 +1,60 @@
+"""Injected time source for the whole execution substrate.
+
+Every component that makes time-dependent decisions — the autoscaler's
+keep-alive reaper, cold-start gates, transfer accounting's GB-second
+integrals, the workflow engine's latency records — reads time through a
+``Clock`` instead of calling ``time.monotonic()`` directly.  Two
+implementations:
+
+:class:`MonotonicClock`
+    Real wall time (``time.monotonic``).  The default everywhere, so
+    interactive use behaves exactly as before.
+
+:class:`VirtualClock`
+    Bound to a discrete-event :class:`~repro.core.cluster.Simulator`; returns
+    ``sim.now``.  Under this clock a 60-second keep-alive expiry is one heap
+    pop, which makes autoscaling decisions exactly assertable in tests and
+    lets the load-generator sweep minutes of offered load in milliseconds.
+
+A clock is just a zero-argument callable returning seconds as ``float``, so
+every existing ``clock: Callable[[], float]`` parameter accepts one.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Clock(Protocol):
+    """Zero-arg callable returning the current time in seconds."""
+
+    def __call__(self) -> float: ...
+
+
+class MonotonicClock:
+    """Real time: delegates to ``time.monotonic``."""
+
+    def __call__(self) -> float:
+        return time.monotonic()
+
+    def __repr__(self) -> str:
+        return "MonotonicClock()"
+
+
+class VirtualClock:
+    """Simulator-driven time: reads ``sim.now``; advances only via events."""
+
+    def __init__(self, sim):
+        self.sim = sim
+
+    def __call__(self) -> float:
+        return float(self.sim.now)
+
+    def __repr__(self) -> str:
+        return f"VirtualClock(now={self.sim.now:.6f})"
+
+
+def ensure_clock(clock: Callable[[], float] | None) -> Callable[[], float]:
+    """``None`` -> a fresh MonotonicClock; anything else passes through."""
+    return MonotonicClock() if clock is None else clock

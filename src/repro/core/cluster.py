@@ -77,6 +77,13 @@ class Simulator:
         self._seq = 0
         self.rng = np.random.default_rng(seed)
 
+    @property
+    def clock(self) -> Callable[[], float]:
+        """A :class:`~repro.core.clock.VirtualClock` reading this sim's time."""
+        from .clock import VirtualClock
+
+        return VirtualClock(self)
+
     # -- primitives ---------------------------------------------------------
     def schedule(self, delay: float, fn: Callable[[], None]) -> None:
         self._seq += 1
@@ -188,6 +195,10 @@ class NetConstants:
     xdt_jitter_sigma: float = 0.18
 
     ctrl_jitter_sigma: float = 0.15
+
+    # hybrid (two-tier) backend: objects below the cutoff go to cache,
+    # larger ones to object storage (see transfer.HybridBackend)
+    hybrid_small_cutoff: int = 1 << 20
 
 
 # The paper's two testbeds, calibrated separately:

@@ -126,8 +126,26 @@ def workflow_cost(inputs: WorkflowCostInputs, backend: str) -> CostBreakdown:
         )
     elif backend == "elasticache":
         storage = elasticache_storage_cost(inputs.peak_resident_gb)
+    elif backend == "hybrid":
+        # Two-tier (cache + object storage): the aggregate accounting does
+        # not split ops per tier, so price conservatively as the sum of both
+        # fee structures — request fees on every op plus provisioned cache
+        # capacity for the peak resident set (an upper bound on either tier
+        # alone).
+        storage = s3_storage_cost(
+            inputs.n_storage_puts, inputs.n_storage_gets, inputs.storage_gb_seconds
+        ) + elasticache_storage_cost(inputs.peak_resident_gb)
     elif backend in ("xdt", "inline"):
         storage = xdt_storage_cost()
     else:
         raise ValueError(f"unknown backend {backend!r}")
     return CostBreakdown(compute=compute, storage=storage)
+
+
+def cost_per_1k_requests(
+    inputs: WorkflowCostInputs, backend: str, n_requests: int
+) -> float:
+    """USD per 1000 workflow requests, given the run's aggregate accounting."""
+    if n_requests <= 0:
+        raise ValueError("n_requests must be positive")
+    return workflow_cost(inputs, backend).total / n_requests * 1000.0

@@ -1,0 +1,189 @@
+"""Load generators for the event-driven workflow engine.
+
+Two standard driving modes, both on the engine's virtual clock (minutes of
+offered load run in milliseconds of wall time):
+
+* **Closed loop** — ``n_clients`` clients, each submitting one workflow
+  request, waiting for its completion, thinking for ``think_time_s``, and
+  repeating.  Offered load adapts to service capacity (the classic
+  benchmark-harness loop; concurrency is the controlled variable).
+* **Open loop** — Poisson arrivals at ``rate_rps`` for ``duration_s``,
+  independent of completions.  This is the regime where queueing, cold
+  starts, and autoscaler lag actually show up in the tail (the paper's
+  concurrent-workflow claims live here).
+
+Both return a :class:`LoadReport` with per-request latencies, percentile
+summaries, achieved throughput, and the cost-model inputs needed to price the
+run ($ per 1k requests via :func:`repro.core.cost.cost_per_1k_requests`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Generator, List, Optional
+
+import numpy as np
+
+from .cost import WorkflowCostInputs, cost_per_1k_requests
+from .workflow import WorkflowEngine, WorkflowRequest
+
+
+@dataclasses.dataclass
+class LoadReport:
+    """Summary of one load-generation run (all times virtual seconds)."""
+
+    mode: str                          # "closed" | "open"
+    backend: str
+    offered_rps: float                 # open: arrival rate; closed: achieved
+    achieved_rps: float
+    n_requests: int
+    n_ok: int
+    duration_s: float
+    p50_s: float
+    p99_s: float
+    mean_s: float
+    latencies_s: List[float]
+    cost_inputs: WorkflowCostInputs = None  # type: ignore[assignment]
+    usd_per_1k_requests: float = 0.0
+
+    def as_row(self) -> Dict[str, Any]:
+        return {
+            "mode": self.mode,
+            "backend": self.backend,
+            "offered_rps": self.offered_rps,
+            "achieved_rps": self.achieved_rps,
+            "n_requests": self.n_requests,
+            "n_ok": self.n_ok,
+            "p50_s": self.p50_s,
+            "p99_s": self.p99_s,
+            "mean_s": self.mean_s,
+            "usd_per_1k_requests": self.usd_per_1k_requests,
+        }
+
+
+class LoadGenerator:
+    """Drives a :class:`WorkflowEngine` with synthetic request arrivals."""
+
+    def __init__(
+        self,
+        engine: WorkflowEngine,
+        entry: str,
+        payload_fn: Optional[Callable[[int], Any]] = None,
+    ):
+        self.engine = engine
+        self.entry = entry
+        self.payload_fn = payload_fn or (lambda i: i)
+        self._requests: List[WorkflowRequest] = []
+
+    def _baseline(self) -> Dict[str, float]:
+        """Snapshot cumulative engine counters so repeated runs on one
+        engine report only their own invocations/storage ops."""
+        acct = self.engine.transfer.acct
+        acct.touch(self.engine.sim.now)
+        records = self.engine.records
+        return {
+            "n_records": len(records),
+            "billed_s": sum(r.t_end - r.t_start for r in records),
+            "puts": acct.n_storage_puts,
+            "gets": acct.n_storage_gets,
+            "gb_seconds": acct.storage_gb_seconds,
+        }
+
+    # -- closed loop ---------------------------------------------------------
+    def run_closed(
+        self,
+        n_clients: int,
+        requests_per_client: int,
+        think_time_s: float = 0.0,
+    ) -> LoadReport:
+        sim = self.engine.sim
+        t_start = sim.now
+        base = self._baseline()
+
+        def client(cid: int) -> Generator:
+            for k in range(requests_per_client):
+                req = self.engine.submit(
+                    self.entry, self.payload_fn(cid * requests_per_client + k)
+                )
+                self._requests.append(req)
+                yield req.done
+                if think_time_s > 0:
+                    yield sim.timeout(think_time_s)
+
+        procs = [sim.spawn(client(c)).done for c in range(n_clients)]
+        fin = sim.all_of(procs)
+        sim.run()
+        if not fin.fired:
+            raise RuntimeError("closed-loop clients deadlocked")
+        return self._report("closed", t_start, base, offered_rps=None)
+
+    # -- open loop -------------------------------------------------------------
+    def run_open(self, rate_rps: float, duration_s: float) -> LoadReport:
+        sim = self.engine.sim
+        t_start = sim.now
+        base = self._baseline()
+        # Poisson arrivals from the simulator's seeded rng: deterministic.
+        t, i, arrivals = t_start, 0, []
+        while True:
+            t += float(sim.rng.exponential(1.0 / rate_rps))
+            if t - t_start >= duration_s:
+                break
+            arrivals.append((t, i))
+            i += 1
+
+        def arrive(idx: int):
+            def fire():
+                self._requests.append(
+                    self.engine.submit(self.entry, self.payload_fn(idx))
+                )
+            return fire
+
+        for at, idx in arrivals:
+            sim.schedule(at - sim.now, arrive(idx))
+        sim.run()
+        return self._report("open", t_start, base, offered_rps=rate_rps)
+
+    # -- summary ---------------------------------------------------------------
+    def _report(
+        self,
+        mode: str,
+        t_start: float,
+        base: Dict[str, float],
+        offered_rps: Optional[float],
+    ) -> LoadReport:
+        reqs = self._requests
+        self._requests = []
+        done = [r for r in reqs if r.status in ("ok", "error")]
+        lat = [r.latency_s for r in done]
+        duration = max(self.engine.sim.now - t_start, 1e-12)
+        achieved = len(done) / duration
+        records = self.engine.records
+        acct = self.engine.transfer.acct
+        acct.touch(self.engine.sim.now)
+        inputs = WorkflowCostInputs(
+            n_function_invocations=len(records) - int(base["n_records"]),
+            billed_duration_s=(
+                sum(r.t_end - r.t_start for r in records) - base["billed_s"]
+            ),
+            n_storage_puts=acct.n_storage_puts - int(base["puts"]),
+            n_storage_gets=acct.n_storage_gets - int(base["gets"]),
+            storage_gb_seconds=acct.storage_gb_seconds - base["gb_seconds"],
+            peak_resident_gb=acct.peak_resident_gb,
+        )
+        backend = self.engine.transfer.backend
+        return LoadReport(
+            mode=mode,
+            backend=backend,
+            offered_rps=achieved if offered_rps is None else offered_rps,
+            achieved_rps=achieved,
+            n_requests=len(done),
+            n_ok=sum(1 for r in done if r.status == "ok"),
+            duration_s=duration,
+            p50_s=float(np.percentile(lat, 50)) if lat else 0.0,
+            p99_s=float(np.percentile(lat, 99)) if lat else 0.0,
+            mean_s=float(np.mean(lat)) if lat else 0.0,
+            latencies_s=lat,
+            cost_inputs=inputs,
+            usd_per_1k_requests=cost_per_1k_requests(
+                inputs, backend, max(1, len(done))
+            ),
+        )

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
+
 
 # --------------------------------------------------------------------------
 # Per-shard collective programs (call inside shard_map)
@@ -164,7 +166,7 @@ def build_pattern_fn(
     else:
         raise ValueError(pattern)
 
-    mapped = jax.shard_map(fn, mesh=mesh, in_specs=spec1, out_specs=spec1)
+    mapped = shard_map(fn, mesh=mesh, in_specs=spec1, out_specs=spec1)
     return jax.jit(mapped)
 
 

@@ -11,15 +11,19 @@ data plane then pulls producer->chosen-consumer directly.  The serving engine
 (`repro.serving`) uses this scheduler to pick decode slices; the workflow
 engine uses it to pick function instances.
 
-Everything is deterministic under a seeded clock so tests can assert scaling
-decisions exactly.
+All time-dependent decisions (keep-alive reaping, cold-start gates) read the
+injected clock (:mod:`repro.core.clock`): real time by default, a
+:class:`~repro.core.clock.VirtualClock` under the event-driven workflow
+engine — which makes autoscaler dynamics exactly assertable in tests and
+fast-forwardable in load sweeps.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
 from typing import Callable, Dict, List, Optional, Tuple
+
+from .clock import ensure_clock
 
 
 @dataclasses.dataclass
@@ -56,12 +60,12 @@ class Deployment:
         name: str,
         policy: ScalingPolicy,
         placer: Optional[Callable[[int], Tuple[int, ...]]] = None,
-        clock: Callable[[], float] = time.monotonic,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.name = name
         self.policy = policy
         self.placer = placer or (lambda i: (i,))
-        self.clock = clock
+        self.clock = ensure_clock(clock)
         self.instances: Dict[int, Instance] = {}
         self._ids = itertools.count()
         self.stats = {"cold_starts": 0, "scale_downs": 0, "steered": 0, "buffered": 0}
@@ -147,8 +151,8 @@ class Deployment:
 class ControlPlane:
     """The activator/autoscaler pair for a set of deployments."""
 
-    def __init__(self, clock: Callable[[], float] = time.monotonic):
-        self.clock = clock
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        self.clock = ensure_clock(clock)
         self.deployments: Dict[str, Deployment] = {}
 
     def register(

@@ -1,43 +1,57 @@
 """TransferEngine: the XDT API (`invoke`/`put`/`get`) over real ``jax.Array``s.
 
-This is the host-level data plane used by the serving engine and the data
-pipeline.  Four backends, mirroring the paper's §2.3 taxonomy:
+This is the host-level data plane used by the serving engine, the data
+pipeline, and the workflow engine.  Each transfer medium is a
+:class:`TransferBackend` *strategy class* registered by name — adding a new
+medium (see :class:`HybridBackend` for a two-tier example) is one subclass
+plus :func:`register_backend`, not edits to the engine.  The paper's §2.3
+taxonomy maps to:
 
 ``xdt``
     The paper's contribution.  ``put`` leaves the array **device-resident in
     its producer sharding** inside the producer's :class:`BufferRegistry`
     (zero copies) and mints an HMAC-signed :class:`XDTRef`.  ``get`` opens the
     ref provider-side and moves the bytes once, directly, to the consumer's
-    sharding (``jax.device_put`` here; inside a jitted step graph the same
-    pull is a ``collective-permute``, see :mod:`repro.core.patterns`).
+    sharding.  Buffers die with the producer instance (``kill_producer``).
 
 ``inline``
     The payload rides the control message.  Enforces the 6 MB cap and pays a
-    host staging round-trip (the activator path).
+    host staging round-trip (the activator path).  Dies with the producer.
 
 ``s3`` / ``elasticache``
-    Through-storage: device -> host copy into the simulated service, then
-    host -> device on ``get``.  Functionally real (the copies happen), with
-    latency/cost book-keeping from the calibrated constants so framework-level
-    reports stay consistent with the cluster simulator.
+    Through-storage: device -> host copy into a :class:`ServiceStore`, then
+    host -> device on ``get``.  The service is **durable across producer
+    instance death** (the baseline premise of through-storage designs) and
+    can be shared by every engine in a cluster so consumers on other
+    instances resolve the same keys.
+
+``hybrid``
+    Two-tier through-storage: objects below ``net.hybrid_small_cutoff`` are
+    priced/modeled as cache (ElastiCache), larger ones as object storage
+    (S3) — the classic cost/latency compromise the paper's taxonomy
+    describes.  Functionally identical to the other service backends.
 
 Every backend records *modeled* transfer seconds (what the transfer would
 cost on the calibrated cluster) plus the cost-model accounting, so examples
-and benchmarks can report latency and $ per transfer without real AWS.
+and benchmarks report latency and $ per transfer without real AWS.  All
+accounting timestamps go through the injected :class:`~repro.core.clock`
+clock, so an engine owned by a virtual-time workflow engine integrates
+GB-seconds in simulated time.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, ClassVar, Dict, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .buffers import BufferRegistry
+from .clock import ensure_clock
 from .cluster import DEFAULT_NET, NetConstants, TransferAccounting
-from .errors import InlineTooLarge, XDTRefInvalid
+from .errors import InlineTooLarge, XDTObjectExhausted, XDTRefInvalid
 from .refs import ObjectDescriptor, RefMinter, RefPayload, XDTRef
 
 Sharding = Any  # jax.sharding.Sharding
@@ -67,36 +81,266 @@ class TransferStats:
     wall_seconds: float = 0.0
 
 
-def modeled_transfer_seconds(
-    backend: str, nbytes: int, net: NetConstants = DEFAULT_NET
-) -> float:
-    """Deterministic latency model for one producer->consumer object move."""
-    if backend == "inline":
-        return net.ctrl_plane_latency + nbytes / net.nic_bw
-    if backend == "s3":
-        return (
-            2 * net.s3_op_latency
-            + net.ctrl_plane_latency
-            + 2 * nbytes / min(net.s3_stream_bw, net.nic_bw)
+# ---------------------------------------------------------------------------
+# The simulated external storage service (shared per cluster)
+# ---------------------------------------------------------------------------
+
+
+class ServiceStore:
+    """Host-resident simulated storage service (the S3/ElastiCache analogue).
+
+    One store per *cluster*, shared by every :class:`TransferEngine` whose
+    backend goes through storage: a key minted by the producer's engine
+    resolves from any consumer's engine, and — crucially — objects survive
+    producer instance death.  Retrieval refcounts free an object after its
+    last permitted ``get``; the copy-out happens **before** the refcount is
+    decremented so a failed materialization does not leak a retrieval.
+    """
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        self.clock = ensure_clock(clock)
+        self._objects: Dict[int, Any] = {}
+        self._refcount: Dict[int, int] = {}
+        self._nbytes: Dict[int, int] = {}
+        self._next_key = 0
+        # Service-side view of residency/ops (engines keep their own too).
+        self.acct = TransferAccounting()
+
+    def put(self, host_obj: Any, n_retrievals: int, nbytes: int) -> int:
+        self._next_key += 1
+        key = self._next_key
+        self._objects[key] = host_obj
+        self._refcount[key] = n_retrievals
+        self._nbytes[key] = nbytes
+        self.acct.n_storage_puts += 1
+        self.acct.store(self.clock(), nbytes / 1e9)
+        return key
+
+    def fetch(self, key: int) -> Any:
+        """Read without consuming a retrieval (consume() after a good copy)."""
+        if key not in self._objects:
+            raise XDTObjectExhausted(f"service object {key} gone")
+        return self._objects[key]
+
+    def consume(self, key: int) -> bool:
+        """Burn one retrieval; frees the object on the last one.
+
+        Missing keys raise :class:`XDTObjectExhausted` (never ``KeyError``)
+        so cleanup races surface as the documented error.
+        """
+        if key not in self._refcount:
+            raise XDTObjectExhausted(f"service object {key} gone")
+        self._refcount[key] -= 1
+        self.acct.n_storage_gets += 1
+        if self._refcount[key] <= 0:
+            nbytes = self._nbytes[key]
+            self.acct.free(self.clock(), nbytes / 1e9)
+            self._objects.pop(key, None)
+            self._refcount.pop(key, None)
+            self._nbytes.pop(key, None)
+            return True
+        return False
+
+    def nbytes_of(self, key: int) -> int:
+        return self._nbytes.get(key, 0)
+
+    def __len__(self) -> int:
+        return len(self._objects)
+
+
+# ---------------------------------------------------------------------------
+# Backend strategies
+# ---------------------------------------------------------------------------
+
+
+class TransferBackend:
+    """One transfer medium: how ``put``/``get`` move bytes, what they model.
+
+    Subclasses implement the storage mechanics; the engine keeps the shared
+    concerns (refs, stats, sharding placement, wall timing).  Register new
+    media with :func:`register_backend`.
+    """
+
+    name: ClassVar[str] = ""
+    #: objects survive producer instance death (through-storage services)
+    durable: ClassVar[bool] = False
+
+    def __init__(self, engine: "TransferEngine"):
+        self.engine = engine
+
+    def put(
+        self, obj: Any, n_retrievals: int, nbytes: int,
+        block: bool, timeout: Optional[float],
+    ) -> Tuple[int, int]:
+        """Store ``obj``; return (buffer_id, epoch) for the ref payload."""
+        raise NotImplementedError
+
+    def get(self, payload: RefPayload) -> Any:
+        """One retrieval; returns the materialized object."""
+        raise NotImplementedError
+
+    def on_producer_death(self) -> None:
+        """Producer instance died.  Durable backends keep their objects."""
+
+    @classmethod
+    def modeled_seconds(cls, nbytes: int, net: NetConstants) -> float:
+        """Deterministic producer->consumer latency on the calibrated cluster."""
+        raise NotImplementedError
+
+
+class XDTBackend(TransferBackend):
+    """Zero-copy: arrays stay device-resident in the producer's registry."""
+
+    name = "xdt"
+
+    def put(self, obj, n_retrievals, nbytes, block, timeout):
+        return self.engine.registry.put(
+            obj, n_retrievals, nbytes=nbytes, block=block, timeout=timeout
         )
-    if backend == "elasticache":
-        return (
-            2 * net.ec_op_latency
-            + net.ctrl_plane_latency
-            + 2 * nbytes / min(net.ec_stream_bw, net.nic_bw)
-        )
-    if backend == "xdt":
+
+    def get(self, payload):
+        return self.engine.registry.get(payload.buffer_id, payload.epoch)
+
+    @classmethod
+    def modeled_seconds(cls, nbytes, net):
         return (
             net.ctrl_plane_latency
             + net.xdt_pull_rtt
             + nbytes / min(net.xdt_stream_bw, net.nic_bw * net.xdt_stream_eff)
         )
-    raise ValueError(backend)
+
+
+class InlineBackend(TransferBackend):
+    """Payload rides the control message: 6 MB cap, host staging round-trip."""
+
+    name = "inline"
+
+    def put(self, obj, n_retrievals, nbytes, block, timeout):
+        if nbytes > self.engine.inline_limit:
+            raise InlineTooLarge(
+                f"{nbytes}B exceeds inline cap {self.engine.inline_limit}B"
+            )
+        return self.engine.registry.put(
+            jax.tree.map(np.asarray, obj),  # staged via control plane (host)
+            n_retrievals, nbytes=nbytes, block=block, timeout=timeout,
+        )
+
+    def get(self, payload):
+        obj = self.engine.registry.get(payload.buffer_id, payload.epoch)
+        return jax.tree.map(jnp.asarray, obj)
+
+    @classmethod
+    def modeled_seconds(cls, nbytes, net):
+        return net.ctrl_plane_latency + nbytes / net.nic_bw
+
+
+class _ServiceBackend(TransferBackend):
+    """Shared mechanics of through-storage backends: device -> service ->
+    device, durable across producer death, exception-safe refcounting."""
+
+    durable = True
+
+    def put(self, obj, n_retrievals, nbytes, block, timeout):
+        host = jax.tree.map(np.asarray, obj)
+        key = self.engine.service.put(host, n_retrievals, nbytes)
+        self.engine.acct.n_storage_puts += 1
+        self.engine.acct.store(self.engine.clock(), nbytes / 1e9)
+        return key, 0
+
+    def get(self, payload):
+        service = self.engine.service
+        host = service.fetch(payload.buffer_id)  # raises if gone/exhausted
+        # Materialize BEFORE consuming the retrieval: a failed host->device
+        # copy must not burn one of the N permitted pulls.
+        obj = jax.tree.map(jnp.asarray, host)
+        freed = service.consume(payload.buffer_id)
+        self.engine.acct.n_storage_gets += 1
+        if freed:
+            self.engine.acct.free(
+                self.engine.clock(), payload.desc.nbytes / 1e9
+            )
+        return obj
+
+
+class S3Backend(_ServiceBackend):
+    name = "s3"
+
+    @classmethod
+    def modeled_seconds(cls, nbytes, net):
+        return (
+            2 * net.s3_op_latency
+            + net.ctrl_plane_latency
+            + 2 * nbytes / min(net.s3_stream_bw, net.nic_bw)
+        )
+
+
+class ElastiCacheBackend(_ServiceBackend):
+    name = "elasticache"
+
+    @classmethod
+    def modeled_seconds(cls, nbytes, net):
+        return (
+            2 * net.ec_op_latency
+            + net.ctrl_plane_latency
+            + 2 * nbytes / min(net.ec_stream_bw, net.nic_bw)
+        )
+
+
+class HybridBackend(_ServiceBackend):
+    """Two-tier through-storage: cache for small objects, S3 for large.
+
+    Demonstrates that a new medium is one strategy class: it reuses the
+    service mechanics wholesale and only redefines the latency model (and,
+    in :func:`repro.core.cost.workflow_cost`, the pricing) by object size.
+    """
+
+    name = "hybrid"
+
+    @classmethod
+    def modeled_seconds(cls, nbytes, net):
+        if nbytes < net.hybrid_small_cutoff:
+            return ElastiCacheBackend.modeled_seconds(nbytes, net)
+        return S3Backend.modeled_seconds(nbytes, net)
+
+
+_BACKEND_REGISTRY: Dict[str, Type[TransferBackend]] = {}
+
+
+def register_backend(cls: Type[TransferBackend]) -> Type[TransferBackend]:
+    """Register a strategy class under ``cls.name`` (idempotent overwrite)."""
+    if not cls.name:
+        raise ValueError("backend class needs a non-empty `name`")
+    _BACKEND_REGISTRY[cls.name] = cls
+    return cls
+
+
+for _cls in (XDTBackend, InlineBackend, S3Backend, ElastiCacheBackend, HybridBackend):
+    register_backend(_cls)
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(_BACKEND_REGISTRY)
+
+
+def modeled_transfer_seconds(
+    backend: str, nbytes: int, net: NetConstants = DEFAULT_NET
+) -> float:
+    """Deterministic latency model for one producer->consumer object move."""
+    cls = _BACKEND_REGISTRY.get(backend)
+    if cls is None:
+        raise ValueError(backend)
+    return cls.modeled_seconds(nbytes, net)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
 
 
 class TransferEngine:
     """One producer-side endpoint of the XDT substrate."""
 
+    #: the paper's §2.3 taxonomy; the full set is `available_backends()`
     BACKENDS = ("xdt", "inline", "s3", "elasticache")
 
     def __init__(
@@ -108,12 +352,19 @@ class TransferEngine:
         minter: Optional[RefMinter] = None,
         net: NetConstants = DEFAULT_NET,
         inline_limit: Optional[int] = None,
+        service: Optional[ServiceStore] = None,
+        clock: Optional[Callable[[], float]] = None,
     ):
-        if backend not in self.BACKENDS:
-            raise ValueError(f"backend must be one of {self.BACKENDS}")
+        if backend not in _BACKEND_REGISTRY:
+            raise ValueError(
+                f"backend must be one of {available_backends()}"
+            )
         self.backend = backend
         self.producer_coords = producer_coords
-        self.registry = registry if registry is not None else BufferRegistry()
+        self.clock = ensure_clock(clock)
+        self.registry = (
+            registry if registry is not None else BufferRegistry(clock=self.clock)
+        )
         self.minter = minter if minter is not None else RefMinter()
         self.net = net
         self.inline_limit = (
@@ -121,10 +372,9 @@ class TransferEngine:
         )
         self.stats = TransferStats()
         self.acct = TransferAccounting()
-        # the simulated external service: key -> host-resident bytes
-        self._service_store: Dict[int, np.ndarray] = {}
-        self._service_refcount: Dict[int, int] = {}
-        self._service_key = 0
+        # the simulated external service; pass one in to share it cluster-wide
+        self.service = service if service is not None else ServiceStore(self.clock)
+        self._backend = _BACKEND_REGISTRY[backend](self)
 
     # ------------------------------------------------------------------ put
     def put(
@@ -139,30 +389,9 @@ class TransferEngine:
         ``n_retrievals`` pulls."""
         nbytes = _nbytes(obj)
         t0 = time.perf_counter()
-
-        if self.backend == "xdt":
-            # Zero-copy: arrays stay device-resident in producer sharding.
-            buffer_id, epoch = self.registry.put(
-                obj, n_retrievals, nbytes=nbytes, block=block, timeout=timeout
-            )
-        elif self.backend == "inline":
-            if nbytes > self.inline_limit:
-                raise InlineTooLarge(
-                    f"{nbytes}B exceeds inline cap {self.inline_limit}B"
-                )
-            buffer_id, epoch = self.registry.put(
-                jax.tree.map(np.asarray, obj),  # staged via control plane (host)
-                n_retrievals, nbytes=nbytes, block=block, timeout=timeout,
-            )
-        else:  # s3 / elasticache: device -> host copy into the service
-            host = jax.tree.map(np.asarray, obj)
-            self._service_key += 1
-            self._service_store[self._service_key] = host
-            self._service_refcount[self._service_key] = n_retrievals
-            buffer_id, epoch = self._service_key, 0
-            self.acct.n_storage_puts += 1
-            self.acct.store(time.monotonic(), nbytes / 1e9)
-
+        buffer_id, epoch = self._backend.put(
+            obj, n_retrievals, nbytes, block, timeout
+        )
         self.stats.wall_seconds += time.perf_counter() - t0
         shape, dtype = _describe(obj)
         desc = ObjectDescriptor(
@@ -186,25 +415,7 @@ class TransferEngine:
         payload = self.minter.open(ref)  # raises XDTRefInvalid on forgery
         nbytes = payload.desc.nbytes
         t0 = time.perf_counter()
-
-        if self.backend in ("xdt", "inline"):
-            obj = self.registry.get(payload.buffer_id, payload.epoch)
-            if self.backend == "inline":
-                obj = jax.tree.map(jnp.asarray, obj)
-        else:
-            from .errors import XDTObjectExhausted
-
-            host = self._service_store.get(payload.buffer_id)
-            if host is None:
-                raise XDTObjectExhausted(f"service object {payload.buffer_id} gone")
-            obj = jax.tree.map(jnp.asarray, host)
-            self.acct.n_storage_gets += 1
-            self._service_refcount[payload.buffer_id] -= 1
-            if self._service_refcount[payload.buffer_id] <= 0:
-                # last retrieval frees the service-resident copy
-                self.acct.free(time.monotonic(), nbytes / 1e9)
-                self._service_store.pop(payload.buffer_id, None)
-                self._service_refcount.pop(payload.buffer_id, None)
+        obj = self._backend.get(payload)
 
         if sharding is not None:
             obj = (
@@ -216,8 +427,8 @@ class TransferEngine:
         self.stats.transfers += 1
         self.stats.bytes_moved += nbytes
         self.stats.wall_seconds += time.perf_counter() - t0
-        self.stats.modeled_seconds += modeled_transfer_seconds(
-            self.backend, nbytes, self.net
+        self.stats.modeled_seconds += self._backend.modeled_seconds(
+            nbytes, self.net
         )
         return obj
 
@@ -240,6 +451,10 @@ class TransferEngine:
 
     # ------------------------------------------------------------ lifecycle
     def kill_producer(self) -> int:
-        """Producer instance death: drops buffers, invalidates epochs."""
-        self._service_store.clear()
+        """Producer instance death: drops device buffers, invalidates epochs.
+
+        Objects in durable through-storage services (s3/elasticache/hybrid)
+        survive by design — only instance-resident XDT/inline buffers die.
+        """
+        self._backend.on_producer_death()
         return self.registry.kill_instance()

@@ -1,4 +1,4 @@
-"""Workflow engine: chained serverless functions with XDT transfer edges.
+"""Event-driven workflow engine: concurrent function DAGs on virtual time.
 
 A workflow is a DAG of named functions.  Each function is user logic with the
 signature ``handler(ctx, payload) -> payload`` where ``ctx`` exposes the XDT
@@ -6,23 +6,53 @@ API (paper Table 1): ``ctx.invoke(fn, obj)``, ``ctx.put(obj, n) -> ref``,
 ``ctx.get(ref) -> obj``.  Placement is delegated to the control plane
 (:mod:`repro.core.scheduler`), transfers to a :class:`TransferEngine`.
 
-Semantics (paper §4.2.2):
+Execution model
+---------------
+The engine runs on the discrete-event :class:`~repro.core.cluster.Simulator`:
+scheduler, transfer accounting, and per-request latency records all share one
+:class:`~repro.core.clock.VirtualClock`.  Many workflow *requests* can be in
+flight at once (``submit`` + ``drain``), their invocations overlap in virtual
+time, and cold starts gate execution exactly as the autoscaler decides.
+
+Two handler styles:
+
+* **Plain handlers** (``def h(ctx, payload): return ...``) run atomically at
+  one virtual instant; the virtual time they owe — cold-start waits, modeled
+  transfer seconds from ``ctx.get`` (puts are producer-local buffering and
+  charge nothing; the through-storage round-trip is billed at the pull),
+  ``ctx.sleep`` compute, the function's registered ``service_time`` —
+  accrues as *debt* that the engine pays as one timeout after the handler
+  body.  ``ctx.invoke`` is a blocking inline sub-invocation, as before.
+* **Generator handlers** (``def h(ctx, payload): ... yield ...``) interleave
+  with the rest of the cluster at every yield.  Yield a number to spend
+  compute seconds, an :class:`AsyncResult` from ``ctx.call(fn, obj)`` to
+  await one concurrent sub-invocation, or a list of them for fan-out/fan-in
+  that actually overlaps.
+
+Semantics (paper §4.2.2), unchanged from the synchronous engine:
 
 * **At-most-once per invocation id** — the engine records executed ids and
   refuses replays (:class:`InvocationReplayed`).
 * **Producer-death recovery** — if a consumer's ``get()`` raises
-  ``XDTProducerGone``, the error propagates to the *orchestrator*, which
-  re-invokes the producer sub-workflow with the same arguments under a fresh
-  invocation id (at-least-once at workflow level, at-most-once per id).
+  ``XDTProducerGone``, the error propagates to the *orchestrator* (the
+  request process), which re-invokes the entry sub-workflow with the same
+  arguments under fresh invocation ids (at-least-once at workflow level,
+  at-most-once per id).
 * Retries are bounded (``max_retries``), after which the error surfaces to
   the caller — identical to Step Functions fallback behaviour.
+
+The blocking ``run(entry, payload)`` API is a thin wrapper: one ``submit``
+plus driving the simulator to quiescence.
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import itertools
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
+from .cluster import Simulator
+from .clock import VirtualClock
 from .errors import XDTError, XDTProducerGone
 from .refs import XDTRef
 from .scheduler import ControlPlane, ScalingPolicy
@@ -37,54 +67,139 @@ class InvocationRecord:
     attempt: int
     status: str  # "ok" | "error"
     error_code: Optional[str] = None
+    t_start: float = 0.0              # virtual time the invocation was steered
+    t_end: float = 0.0                # virtual time it completed
+
+    def overlaps(self, other: "InvocationRecord") -> bool:
+        return self.t_start < other.t_end and other.t_start < self.t_end
+
+
+@dataclasses.dataclass
+class WorkflowRequest:
+    """One end-to-end workflow execution tracked by the orchestrator."""
+
+    request_id: int
+    entry: str
+    payload: Any
+    submitted_at: float
+    status: str = "pending"           # pending | running | ok | error
+    result: Any = None
+    error: Optional[BaseException] = None
+    started_at: float = 0.0
+    finished_at: float = 0.0
+    attempts: int = 0
+    done: Any = None                  # simulator Event, set on completion
+
+    @property
+    def latency_s(self) -> float:
+        return self.finished_at - self.submitted_at
+
+
+class AsyncResult:
+    """Handle for one concurrent sub-invocation (``ctx.call``)."""
+
+    def __init__(self, sim: Simulator, function: str):
+        self.function = function
+        self.done = sim.event()
+        self.value: Any = None
+        self.error: Optional[BaseException] = None
 
 
 class Context:
     """Per-invocation SDK handle given to user handlers."""
 
-    def __init__(self, engine: "WorkflowEngine", function: str, attempt: int):
+    def __init__(
+        self,
+        engine: "WorkflowEngine",
+        function: str,
+        attempt: int,
+        instance=None,
+    ):
         self._engine = engine
+        self._debt = 0.0              # virtual seconds owed at next pay point
         self.function = function
         self.attempt = attempt
+        self.instance = instance
+
+    # -- debt ------------------------------------------------------------
+    def _take_debt(self) -> float:
+        d, self._debt = self._debt, 0.0
+        return d
+
+    def sleep(self, seconds: float) -> None:
+        """Spend ``seconds`` of virtual compute time in this invocation."""
+        self._debt += max(0.0, float(seconds))
 
     # XDT API (paper Table 1)
     def invoke(self, fn_name: str, obj: Any) -> Any:
-        return self._engine._invoke(fn_name, obj)
+        """Blocking sub-invocation: the caller stalls until the callee is
+        done, and inherits the callee's virtual-time debt."""
+        return self._engine._invoke_inline(fn_name, obj, parent=self)
+
+    def call(self, fn_name: str, obj: Any) -> AsyncResult:
+        """Concurrent sub-invocation.  Generator handlers ``yield`` the
+        handle (or a list of handles) to fan-in."""
+        return self._engine._spawn_invocation(fn_name, obj)
 
     def put(self, obj: Any, n_retrievals: int = 1) -> XDTRef:
         return self._engine.transfer.put(obj, n_retrievals)
 
     def get(self, ref: XDTRef) -> Any:
-        return self._engine.transfer.get(ref)
+        before = self._engine.transfer.stats.modeled_seconds
+        obj = self._engine.transfer.get(ref)
+        # the modeled pull latency becomes virtual time owed by this function
+        self._debt += self._engine.transfer.stats.modeled_seconds - before
+        return obj
 
     # collective conveniences built from the primitives (paper §7.1)
     def scatter(self, fn_name: str, objs: Sequence[Any]) -> List[Any]:
-        return [self._engine._invoke(fn_name, o) for o in objs]
+        return [self.invoke(fn_name, o) for o in objs]
+
+    def scatter_async(self, fn_name: str, objs: Sequence[Any]) -> List[AsyncResult]:
+        """Overlapping scatter: spawn all, fan-in with ``yield handles``."""
+        return [self.call(fn_name, o) for o in objs]
 
     def broadcast(self, fn_name: str, obj: Any, fan: int) -> List[Any]:
         ref = self.put(obj, n_retrievals=fan)
-        return [self._engine._invoke(fn_name, ref) for _ in range(fan)]
+        return [self.invoke(fn_name, ref) for _ in range(fan)]
 
     def gather(self, refs: Sequence[XDTRef]) -> List[Any]:
         return [self.get(r) for r in refs]
 
 
 class WorkflowEngine:
-    """Executes function DAGs with at-most-once invocation semantics."""
+    """Executes function DAGs concurrently with at-most-once semantics."""
 
     def __init__(
         self,
         transfer: Optional[TransferEngine] = None,
         control_plane: Optional[ControlPlane] = None,
         max_retries: int = 2,
+        simulator: Optional[Simulator] = None,
+        seed: int = 0,
+        backend: str = "xdt",
     ):
-        self.transfer = transfer if transfer is not None else TransferEngine("xdt")
-        self.control = control_plane if control_plane is not None else ControlPlane()
+        self.sim = simulator if simulator is not None else Simulator(seed=seed)
+        self.clock = VirtualClock(self.sim)
+        # `backend` picks the default transfer medium; pass `transfer` to
+        # bring your own engine (it should share this engine's clock, or
+        # GB-second accounting runs on wall time while requests run virtual).
+        self.transfer = (
+            transfer if transfer is not None
+            else TransferEngine(backend, clock=self.clock)
+        )
+        self.control = (
+            control_plane if control_plane is not None
+            else ControlPlane(clock=self.clock)
+        )
         self.functions: Dict[str, Callable[[Context, Any], Any]] = {}
+        self.service_times: Dict[str, float] = {}
         self.max_retries = max_retries
         self._invocation_ids = itertools.count(1)
+        self._request_ids = itertools.count(1)
         self._executed_ids: set = set()
         self.records: List[InvocationRecord] = []
+        self.requests: List[WorkflowRequest] = []
 
     # -- registration ----------------------------------------------------------
     def register(
@@ -92,56 +207,205 @@ class WorkflowEngine:
         name: str,
         handler: Callable[[Context, Any], Any],
         policy: Optional[ScalingPolicy] = None,
+        service_time: float = 0.0,
     ) -> None:
+        """Register ``handler`` under ``name``.  ``service_time`` is the
+        function's intrinsic compute duration in virtual seconds (on top of
+        any ``ctx.sleep``/transfer debt it accrues)."""
         self.functions[name] = handler
+        self.service_times[name] = service_time
         self.control.register(name, policy or ScalingPolicy(max_instances=16))
 
+    # -- orchestrator ------------------------------------------------------------
+    def submit(self, entry: str, payload: Any) -> WorkflowRequest:
+        """Enqueue one workflow request; drive with ``drain()``/``run()``."""
+        if entry not in self.functions:
+            raise KeyError(f"unknown function {entry!r}")
+        req = WorkflowRequest(
+            request_id=next(self._request_ids),
+            entry=entry,
+            payload=payload,
+            submitted_at=self.sim.now,
+            done=self.sim.event(),
+        )
+        self.requests.append(req)
+        self.sim.spawn(self._request_proc(req))
+        return req
+
+    def drain(self) -> List[WorkflowRequest]:
+        """Run the simulator until every submitted request completed."""
+        self.sim.run()
+        pending = [r for r in self.requests if r.status in ("pending", "running")]
+        if pending:
+            raise RuntimeError(f"workflow deadlock: {pending}")
+        return self.requests
+
+    def run(self, entry: str, payload: Any) -> Any:
+        """Blocking wrapper: submit one request and drive it to completion;
+        on XDTProducerGone the orchestrator re-invokes the entry sub-workflow
+        with the original arguments, up to ``max_retries`` times."""
+        req = self.submit(entry, payload)
+        self.sim.run()
+        if req.status == "error":
+            raise req.error
+        return req.result
+
+    def _request_proc(self, req: WorkflowRequest) -> Generator:
+        req.status = "running"
+        req.started_at = self.sim.now
+        retries = 0
+        while True:
+            handle = self._spawn_invocation(req.entry, req.payload)
+            req.attempts += 1
+            yield handle.done
+            if handle.error is None:
+                req.status, req.result = "ok", handle.value
+                break
+            if isinstance(handle.error, XDTProducerGone) and retries < self.max_retries:
+                # The producer instance is gone; its buffered objects died
+                # with it.  Re-invoking from the entry function regenerates
+                # them (paper §4.2.2) under fresh invocation ids.
+                retries += 1
+                continue
+            req.status, req.error = "error", handle.error
+            break
+        req.finished_at = self.sim.now
+        req.done.set(req)
+
     # -- execution ---------------------------------------------------------------
-    def _invoke(self, fn_name: str, payload: Any) -> Any:
-        """One control-plane-mediated invocation (no retry at this layer)."""
-        if fn_name not in self.functions:
-            raise KeyError(f"unknown function {fn_name!r}")
+    def _next_invocation_id(self) -> int:
         invocation_id = next(self._invocation_ids)
         if invocation_id in self._executed_ids:  # pragma: no cover - invariant
             from .errors import InvocationReplayed
 
             raise InvocationReplayed(f"id {invocation_id} already executed")
         self._executed_ids.add(invocation_id)
+        return invocation_id
 
-        instance, _wait = self.control.steer(fn_name)
-        ctx = Context(self, fn_name, attempt=0)
+    def _spawn_invocation(self, fn_name: str, payload: Any) -> AsyncResult:
+        """Start one control-plane-mediated invocation as a sim process."""
+        handle = AsyncResult(self.sim, fn_name)
+
+        def proc():
+            try:
+                handle.value = yield from self._invocation_body(fn_name, payload)
+            except BaseException as e:  # captured; surfaced at the waiter
+                handle.error = e
+            handle.done.set(handle)
+
+        self.sim.spawn(proc())
+        return handle
+
+    def _invocation_body(self, fn_name: str, payload: Any) -> Generator:
+        if fn_name not in self.functions:
+            raise KeyError(f"unknown function {fn_name!r}")
+        invocation_id = self._next_invocation_id()
+        instance, wait = self.control.steer(fn_name)
+        t0 = self.sim.now
+        if wait > 0:                       # activator buffers across cold start
+            yield self.sim.timeout(wait)
+        ctrl = self.transfer.net.ctrl_plane_latency
+        if ctrl > 0:
+            yield self.sim.timeout(ctrl)
+        ctx = Context(self, fn_name, attempt=0, instance=instance)
+        status, code = "ok", None
         try:
-            result = self.functions[fn_name](ctx, payload)
-            self.records.append(
-                InvocationRecord(invocation_id, fn_name, instance.instance_id, 0, "ok")
-            )
-            return result
+            out = self.functions[fn_name](ctx, payload)
+            if inspect.isgenerator(out):
+                out = yield from self._drive(ctx, out)
+            debt = ctx._take_debt() + self.service_times.get(fn_name, 0.0)
+            if debt > 0:
+                yield self.sim.timeout(debt)
+            return out
         except XDTError as e:
-            self.records.append(
-                InvocationRecord(
-                    invocation_id, fn_name, instance.instance_id, 0, "error", e.code
-                )
-            )
+            status, code = "error", e.code
+            raise
+        except BaseException:
+            status = "error"               # foreign errors: no stable code
             raise
         finally:
+            self.records.append(
+                InvocationRecord(
+                    invocation_id, fn_name, instance.instance_id, 0,
+                    status, code, t_start=t0, t_end=self.sim.now,
+                )
+            )
             self.control.release(fn_name, instance.instance_id)
 
-    def run(self, entry: str, payload: Any) -> Any:
-        """Orchestrator: run the workflow from ``entry``; on XDTProducerGone
-        re-invoke the whole sub-workflow with the original arguments."""
-        attempt = 0
+    def _drive(self, ctx: Context, gen: Generator) -> Generator:
+        """Step a generator handler, paying debt at every yield boundary."""
+        send, throw = None, None
         while True:
             try:
-                return self._invoke(entry, payload)
-            except XDTProducerGone:
-                attempt += 1
-                if attempt > self.max_retries:
-                    raise
-                # The producer instance is gone; its buffered objects died
-                # with it.  Re-invoking from the entry function regenerates
-                # them (paper §4.2.2: re-invoke the producer with the same
-                # original arguments).
-                continue
+                yielded = gen.throw(throw) if throw is not None else gen.send(send)
+            except StopIteration as stop:
+                return stop.value
+            send, throw = None, None
+            debt = ctx._take_debt()
+            if debt > 0:
+                yield self.sim.timeout(debt)
+            if isinstance(yielded, (int, float)):
+                yield self.sim.timeout(float(yielded))
+            elif isinstance(yielded, AsyncResult):
+                yield yielded.done
+                if yielded.error is not None:
+                    throw = yielded.error
+                else:
+                    send = yielded.value
+            elif isinstance(yielded, (list, tuple)) and all(
+                isinstance(h, AsyncResult) for h in yielded
+            ):
+                yield self.sim.all_of([h.done for h in yielded])
+                errs = [h.error for h in yielded if h.error is not None]
+                if errs:
+                    throw = errs[0]
+                else:
+                    send = [h.value for h in yielded]
+            else:
+                raise TypeError(
+                    f"handler {ctx.function!r} yielded {type(yielded).__name__}; "
+                    "yield seconds, an AsyncResult, or a list of AsyncResults"
+                )
+
+    def _invoke_inline(self, fn_name: str, payload: Any, parent: Context) -> Any:
+        """Blocking sub-invocation from inside a running handler.
+
+        Executes at the caller's current virtual instant; the callee's
+        cold-start wait, control-plane hop, transfer debt, and service time
+        are charged to the *caller's* debt (blocking-chain billing, the
+        vSwarm semantics the cost model assumes).
+        """
+        if fn_name not in self.functions:
+            raise KeyError(f"unknown function {fn_name!r}")
+        invocation_id = self._next_invocation_id()
+        instance, wait = self.control.steer(fn_name)
+        t0 = self.sim.now
+        parent._debt += wait + self.transfer.net.ctrl_plane_latency
+        ctx = Context(self, fn_name, attempt=0, instance=instance)
+        status, code = "ok", None
+        try:
+            out = self.functions[fn_name](ctx, payload)
+            if inspect.isgenerator(out):
+                raise TypeError(
+                    f"generator handler {fn_name!r} cannot be invoked inline; "
+                    "use ctx.call() / scatter_async() / submit()"
+                )
+            parent._debt += ctx._take_debt() + self.service_times.get(fn_name, 0.0)
+            return out
+        except XDTError as e:
+            status, code = "error", e.code
+            raise
+        except BaseException:
+            status = "error"               # foreign errors: no stable code
+            raise
+        finally:
+            self.records.append(
+                InvocationRecord(
+                    invocation_id, fn_name, instance.instance_id, 0,
+                    status, code, t_start=t0, t_end=self.sim.now,
+                )
+            )
+            self.control.release(fn_name, instance.instance_id)
 
     # -- introspection -----------------------------------------------------------
     def executed_count(self, fn_name: Optional[str] = None) -> int:
@@ -153,3 +417,11 @@ class WorkflowEngine:
         """Invariant: no invocation id appears twice in the records."""
         ids = [r.invocation_id for r in self.records]
         assert len(ids) == len(set(ids)), "invocation id executed more than once"
+
+    def latency_records(self) -> List[Tuple[int, float]]:
+        """(request_id, end-to-end latency in virtual seconds) per request."""
+        return [
+            (r.request_id, r.latency_s)
+            for r in self.requests
+            if r.status in ("ok", "error")
+        ]

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..distributed.sharding import ShardingRules
 from .config import ModelConfig
 
@@ -249,7 +250,7 @@ def _seq_parallel_attention(q, k, v, cfg: ModelConfig, mesh, causal: bool):
     bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)
     qspec = P(bspec, "model", None, None)
     kvspec = P(bspec, None, None, None)
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(qspec, kvspec, kvspec),

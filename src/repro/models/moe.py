@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..compat import shard_map
 from .config import ModelConfig, MoEConfig
 
 
@@ -200,7 +201,7 @@ def _moe_ep_sharded(x, p, cfg, mesh: Mesh):
 
     xspec = P(bspec, None, None)
     wspec = P("model", None, None)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         local,
         mesh=mesh,
         in_specs=(xspec, P(None, None), wspec, wspec, wspec),
@@ -297,7 +298,7 @@ def _moe_ep_a2a(x, p, cfg, mesh: Mesh):
 
     xspec = P(bspec, "model", None)
     wspec = P("model", None, None)
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         local,
         mesh=mesh,
         in_specs=(xspec, P(None, None), wspec, wspec, wspec),

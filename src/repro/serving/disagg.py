@@ -31,6 +31,7 @@ import jax
 import numpy as np
 
 from ..core.buffers import BufferRegistry
+from ..core.clock import ensure_clock
 from ..core.refs import XDTRef
 from ..core.scheduler import ControlPlane, ScalingPolicy
 from ..core.transfer import TransferEngine, modeled_transfer_seconds
@@ -52,16 +53,19 @@ class DisaggregatedServer:
         max_batch: int = 4,
         max_len: int = 64,
         backend: str = "xdt",
+        clock=None,
     ):
         self.cfg = cfg
         self.backend = backend
+        self.clock = ensure_clock(clock)  # virtual under a simulator harness
         engine_backend = "xdt" if backend == "xdt" else "elasticache"
         self.transfer = TransferEngine(
             engine_backend,
             producer_coords=(0,),
-            registry=BufferRegistry(max_slots=64),
+            registry=BufferRegistry(max_slots=64, clock=self.clock),
+            clock=self.clock,
         )
-        self.control = ControlPlane()
+        self.control = ControlPlane(clock=self.clock)
         self.control.register(
             "decode",
             ScalingPolicy(min_instances=n_decode_pods, max_instances=n_decode_pods,

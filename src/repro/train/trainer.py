@@ -172,6 +172,18 @@ class Trainer:
 
     # -- main loop -----------------------------------------------------------------
     def run(self) -> Dict[str, Any]:
+        try:
+            return self._run_loop()
+        finally:
+            # Flush outstanding async checkpoint IO even when the loop raises:
+            # the snapshot was taken before the fault, so the committed
+            # checkpoint must land on disk for restart to see it.
+            try:
+                self.store.wait()
+            except Exception:
+                pass  # surfaced by the next save/wait; don't mask the fault
+
+    def _run_loop(self) -> Dict[str, Any]:
         self.try_resume()
         step = self.start_step
         while step < self.tcfg.steps:

@@ -1,0 +1,122 @@
+"""Deterministic stand-in for the optional ``hypothesis`` dependency.
+
+The property tests in this suite use a small slice of the hypothesis API:
+``@settings(...)``, ``@given(...)``, and the ``integers`` / ``floats`` /
+``binary`` / ``lists`` / ``tuples`` strategies.  When the real package is
+installed (see ``requirements-dev.txt``) it is used and this module is inert.
+When it is missing, ``conftest.py`` registers this module under the
+``hypothesis`` name so the suite still runs: each ``@given`` test executes a
+fixed number of examples drawn from a seeded PRNG (deterministic across runs),
+always including a minimum-size example.  That trades hypothesis's shrinking
+and coverage for zero dependencies — full property coverage requires the real
+package.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+from typing import Any, Callable
+
+N_EXAMPLES = 12  # per @given test when running on the stub
+
+
+class _Strategy:
+    """A deterministic value source: ``draw(rng)`` and a minimal example."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], minimal: Any):
+        self.draw = draw
+        self.minimal = minimal
+
+
+def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value), min_value)
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    allow_nan: bool = True,
+    allow_infinity: bool = True,
+) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value), min_value)
+
+
+def binary(min_size: int = 0, max_size: int = 64) -> _Strategy:
+    def draw(rng: random.Random) -> bytes:
+        n = rng.randint(min_size, max_size)
+        return bytes(rng.randrange(256) for _ in range(n))
+
+    return _Strategy(draw, b"\x00" * min_size)
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng: random.Random) -> list:
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw, [elements.minimal] * min_size)
+
+
+def tuples(*elems: _Strategy) -> _Strategy:
+    return _Strategy(
+        lambda rng: tuple(e.draw(rng) for e in elems),
+        tuple(e.minimal for e in elems),
+    )
+
+
+def settings(*_args, **_kwargs):
+    """No-op decorator factory (max_examples/deadline are stub-fixed)."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    """Run the test over N_EXAMPLES deterministic draws + the minimal example."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*outer_args, **outer_kwargs):
+            rng = random.Random(fn.__qualname__)  # deterministic per test
+            examples = [
+                (
+                    tuple(s.minimal for s in arg_strategies),
+                    {k: s.minimal for k, s in kw_strategies.items()},
+                )
+            ]
+            for _ in range(N_EXAMPLES):
+                examples.append(
+                    (
+                        tuple(s.draw(rng) for s in arg_strategies),
+                        {k: s.draw(rng) for k, s in kw_strategies.items()},
+                    )
+                )
+            for args, kwargs in examples:
+                fn(*outer_args, *args, **outer_kwargs, **kwargs)
+
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (it follows __wrapped__ otherwise).
+        del wrapper.__wrapped__
+        supplied = set(kw_strategies)
+        params = [
+            p
+            for i, p in enumerate(inspect.signature(fn).parameters.values())
+            if p.name not in supplied and i >= len(arg_strategies)
+        ]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+
+    return deco
+
+
+# `from hypothesis import strategies as st` needs a module-like attribute.
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.binary = binary
+strategies.lists = lists
+strategies.tuples = tuples

@@ -20,6 +20,8 @@ import traceback
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.compat import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import smoke_config
@@ -144,7 +146,7 @@ def check_compressed_psum():
         return out[None], res[None]
 
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             local, mesh=mesh, in_specs=P("data"), out_specs=(P("data"), P("data")),
             check_vma=False,
         )
@@ -156,7 +158,7 @@ def check_compressed_psum():
     # error feedback: re-reduce the SAME grads with carried residual; the
     # two-step average must beat one step's quant error
     out2, _ = jax.jit(
-        jax.shard_map(
+        shard_map(
             lambda gi, ri: tuple(x[None] for x in compressed_psum(gi[0], "data", ri[0])),
             mesh=mesh, in_specs=(P("data"), P("data")),
             out_specs=(P("data"), P("data")), check_vma=False,

@@ -13,6 +13,18 @@ SRC = os.path.join(REPO, "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
+# `hypothesis` is optional (requirements-dev.txt): fall back to the
+# deterministic stub so the property tests still run without it.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    if os.path.dirname(os.path.abspath(__file__)) not in sys.path:
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_stub
+
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
+
 
 @pytest.fixture(scope="session")
 def multidevice_results():

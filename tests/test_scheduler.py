@@ -1,4 +1,9 @@
 """Control plane: autoscaling, load balancing, keep-alive, fault injection."""
+import pytest
+
+from repro.core import WorkflowEngine
+from repro.core.clock import MonotonicClock, VirtualClock
+from repro.core.cluster import Simulator
 from repro.core.scheduler import ControlPlane, Deployment, ScalingPolicy
 
 
@@ -110,3 +115,87 @@ def test_placement_first_coords_available_before_data_moves():
         inst, _ = cp.steer("decode")
         seen.add(inst.coords)
     assert seen == {(1, 0), (2, 0), (3, 0)}
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler dynamics under virtual time (the injected Clock abstraction)
+# ---------------------------------------------------------------------------
+
+
+def _advance(sim, dt):
+    """Advance virtual time by dt (a no-op event at now+dt)."""
+    sim.schedule(dt, lambda: None)
+    sim.run()
+
+
+def test_virtual_clock_reads_simulator_time():
+    sim = Simulator()
+    clock = VirtualClock(sim)
+    assert clock() == 0.0
+    _advance(sim, 2.5)
+    assert clock() == 2.5
+    assert isinstance(MonotonicClock()(), float)
+
+
+def test_scale_up_on_concurrency_pressure_virtual():
+    sim = Simulator()
+    d = Deployment("f", ScalingPolicy(min_instances=1, target_concurrency=2,
+                                      max_instances=8, cold_start_s=0.4),
+                   clock=VirtualClock(sim))
+    # 2 in-flight fit the single instance; the 3rd forces a cold scale-up
+    waits = [d.steer()[1] for _ in range(3)]
+    assert d.n_instances == 2
+    assert waits[:2] == [0.0, 0.0]
+    assert waits[2] == pytest.approx(0.4)      # gated on the cold start, exactly
+    assert d.stats["cold_starts"] == 1
+
+
+def test_cold_start_gate_expires_with_virtual_time():
+    sim = Simulator()
+    d = Deployment("f", ScalingPolicy(min_instances=0, target_concurrency=1,
+                                      max_instances=8, cold_start_s=0.4),
+                   clock=VirtualClock(sim))
+    inst, wait = d.steer()
+    assert wait == pytest.approx(0.4)
+    d.release(inst.instance_id)
+    _advance(sim, 0.4)                         # the instance finished booting
+    inst2, wait2 = d.steer()
+    assert wait2 == 0.0 and inst2.instance_id == inst.instance_id
+
+
+def test_keep_alive_expiry_scales_down_exactly():
+    sim = Simulator()
+    d = Deployment("f", ScalingPolicy(min_instances=1, target_concurrency=1,
+                                      keep_alive_s=10.0, max_instances=8),
+                   clock=VirtualClock(sim))
+    insts = [d.steer()[0] for _ in range(4)]
+    for i in insts:
+        d.release(i.instance_id)
+    assert d.n_instances == 4
+    _advance(sim, 9.9)
+    d.steer()                                  # within keep-alive: no reaping
+    assert d.stats["scale_downs"] == 0
+    _advance(sim, 0.2)                         # now 10.1s idle: expired
+    d.steer()
+    assert d.stats["scale_downs"] >= 2
+    assert d.n_instances >= 1                  # min_instances floor holds
+
+
+def test_workflow_burst_scales_up_then_idles_down():
+    """End-to-end: a burst of concurrent requests grows the fleet; after the
+    keep-alive window the next request finds it scaled back down."""
+    eng = WorkflowEngine()
+    eng.register("f", lambda ctx, x: x,
+                 policy=ScalingPolicy(min_instances=1, target_concurrency=1,
+                                      keep_alive_s=30.0, max_instances=16),
+                 service_time=0.2)
+    for i in range(6):
+        eng.submit("f", i)
+    eng.drain()
+    dep = eng.control.deployments["f"]
+    assert dep.n_instances == 6                # burst pressure scaled up
+    assert dep.stats["cold_starts"] == 5
+    _advance(eng.sim, 31.0)                    # idle past keep-alive
+    eng.run("f", 99)
+    assert dep.stats["scale_downs"] >= 4       # reaped down toward the floor
+    assert dep.n_instances <= 2

@@ -129,3 +129,118 @@ def test_stats_bytes_moved():
     x = jnp.zeros((256,), jnp.float32)
     eng.get(eng.put(x))
     assert eng.stats.bytes_moved == x.nbytes
+
+
+# ---------------------------------------------------------------------------
+# Backend strategy classes: durability, exception safety, extensibility
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["s3", "elasticache", "hybrid"])
+def test_service_objects_survive_producer_death(backend):
+    """Through-storage durability: only XDT/inline buffers die with the
+    producer instance; service-resident objects must remain retrievable."""
+    eng = TransferEngine(backend)
+    x = jnp.arange(64, dtype=jnp.float32)
+    ref = eng.put(x, n_retrievals=1)
+    eng.kill_producer()
+    out = eng.get(ref)                       # regression: used to raise
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_service_refcount_not_burned_by_failed_copy():
+    """s3/elasticache get(): the host->device copy happens before the
+    retrieval is consumed, so a failed copy does not leak one of the N."""
+    eng = TransferEngine("s3")
+    ref = eng.put(jnp.ones(8), n_retrievals=1)
+    key = next(iter(eng.service._objects))
+
+    class Unarrayable:
+        def __array__(self, *a, **k):
+            raise RuntimeError("corrupt host object")
+
+    good = eng.service._objects[key]
+    eng.service._objects[key] = Unarrayable()
+    with pytest.raises(RuntimeError):
+        eng.get(ref)
+    eng.service._objects[key] = good         # service heals; retrieval intact
+    out = eng.get(ref)
+    np.testing.assert_array_equal(np.asarray(out), np.ones(8))
+    with pytest.raises(XDTObjectExhausted):
+        eng.get(ref)                         # now genuinely exhausted
+
+
+def test_service_consume_missing_key_raises_exhausted():
+    from repro.core.transfer import ServiceStore
+
+    store = ServiceStore()
+    with pytest.raises(XDTObjectExhausted):
+        store.consume(999)
+    with pytest.raises(XDTObjectExhausted):
+        store.fetch(999)
+
+
+def test_shared_service_store_across_engines():
+    """One ServiceStore per cluster: a consumer-side engine resolves keys
+    minted by the producer-side engine (and survives the producer dying)."""
+    from repro.core.refs import RefMinter
+    from repro.core.transfer import ServiceStore
+
+    store, minter = ServiceStore(), RefMinter()
+    producer = TransferEngine("s3", service=store, minter=minter)
+    consumer = TransferEngine("s3", service=store, minter=minter,
+                              producer_coords=(1,))
+    ref = producer.put(jnp.full((16,), 3.0), n_retrievals=1)
+    producer.kill_producer()
+    out = consumer.get(ref)
+    np.testing.assert_array_equal(np.asarray(out), 3.0 * np.ones(16))
+    assert consumer.stats.transfers == 1
+    # the store's own accounting is the authoritative cluster-level view
+    # (per-engine accts only see their side of a cross-engine transfer)
+    assert store.acct.n_storage_puts == 1
+    assert store.acct.n_storage_gets == 1
+    assert store.acct.peak_resident_gb > 0
+    assert len(store) == 0                   # freed after the last retrieval
+
+
+def test_hybrid_backend_roundtrip_and_tiering():
+    eng = TransferEngine("hybrid")
+    x = jnp.arange(32, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(eng.get(eng.put(x))), np.asarray(x))
+    # modeled latency: cache tier below the cutoff, S3 tier above it
+    small, large = 10 << 10, 10 << 20
+    assert modeled_transfer_seconds("hybrid", small) == modeled_transfer_seconds(
+        "elasticache", small
+    )
+    assert modeled_transfer_seconds("hybrid", large) == modeled_transfer_seconds(
+        "s3", large
+    )
+
+
+def test_register_custom_backend():
+    from repro.core.transfer import (
+        XDTBackend,
+        available_backends,
+        register_backend,
+    )
+
+    class LoopbackBackend(XDTBackend):
+        name = "loopback"
+
+        @classmethod
+        def modeled_seconds(cls, nbytes, net):
+            return 0.0
+
+    register_backend(LoopbackBackend)
+    assert "loopback" in available_backends()
+    eng = TransferEngine("loopback")
+    out = eng.get(eng.put(jnp.ones(4)))
+    np.testing.assert_array_equal(np.asarray(out), np.ones(4))
+    assert modeled_transfer_seconds("loopback", 1 << 20) == 0.0
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError):
+        TransferEngine("dynamo")
+    with pytest.raises(ValueError):
+        modeled_transfer_seconds("dynamo", 1024)

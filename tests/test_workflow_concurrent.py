@@ -1,0 +1,270 @@
+"""Event-driven workflow engine: concurrency, virtual time, load generation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LoadGenerator, WorkflowEngine, XDTProducerGone
+from repro.core.scheduler import ScalingPolicy
+
+
+def _policy(**kw):
+    kw.setdefault("max_instances", 16)
+    kw.setdefault("target_concurrency", 1)
+    return ScalingPolicy(**kw)
+
+
+# --------------------------------------------------------------- concurrency
+
+
+def test_two_requests_overlap_in_virtual_time():
+    eng = WorkflowEngine()
+    eng.register("work", lambda ctx, x: x * 2, policy=_policy(), service_time=0.2)
+    a = eng.submit("work", 1)
+    b = eng.submit("work", 2)
+    eng.drain()
+    assert (a.result, b.result) == (2, 4)
+    recs = [r for r in eng.records if r.function == "work"]
+    assert len(recs) == 2
+    assert recs[0].overlaps(recs[1])               # genuinely concurrent
+    assert recs[0].instance_id != recs[1].instance_id  # scale-up, not queueing
+    # each paid its own cold start + control hop + service time, concurrently
+    assert a.latency_s == pytest.approx(0.5 + 0.0023 + 0.2)
+    assert b.latency_s == pytest.approx(a.latency_s)
+    eng.assert_at_most_once()
+
+
+def test_fan_out_fan_in_overlaps():
+    """Generator handler: scatter_async workers run concurrently, so the
+    fan-out costs one worker's service time, not fan x service time."""
+    eng = WorkflowEngine()
+    eng.register("worker", lambda ctx, x: x + 1, policy=_policy(),
+                 service_time=0.3)
+
+    def driver(ctx, xs):
+        results = yield ctx.scatter_async("worker", xs)
+        return sum(results)
+
+    eng.register("driver", driver, policy=_policy())
+    out = eng.run("driver", [1, 2, 3, 4])
+    assert out == 2 + 3 + 4 + 5
+    workers = [r for r in eng.records if r.function == "worker"]
+    assert len(workers) == 4
+    for i in range(1, 4):
+        assert workers[0].overlaps(workers[i])
+    req = eng.requests[-1]
+    # far below the 4 * 0.3 sequential bound (cold starts + one 0.3 wave)
+    assert req.latency_s < 0.5 + 0.3 + 0.5 + 0.1
+
+
+def test_generator_chain_with_async_call():
+    eng = WorkflowEngine()
+    eng.register("double", lambda ctx, x: x * 2, policy=_policy())
+
+    def entry(ctx, x):
+        h = ctx.call("double", x)
+        doubled = yield h
+        yield 0.05                       # explicit virtual compute
+        return doubled + 1
+
+    eng.register("entry", entry, policy=_policy())
+    assert eng.run("entry", 10) == 21
+
+
+def test_generator_handler_rejected_inline():
+    eng = WorkflowEngine()
+
+    def gen_handler(ctx, x):
+        yield 0.1
+        return x
+
+    eng.register("g", gen_handler)
+    eng.register("caller", lambda ctx, x: ctx.invoke("g", x))
+    with pytest.raises(TypeError, match="inline"):
+        eng.run("caller", 0)
+
+
+def test_producer_death_retry_in_concurrent_path():
+    """XDTProducerGone inside a ctx.call sub-invocation escalates through the
+    fan-in to the orchestrator, which re-invokes the entry workflow."""
+    eng = WorkflowEngine(max_retries=2)
+    attempts = []
+
+    def producer(ctx, x):
+        ref = ctx.put(jnp.ones((2,)) * x)
+        attempts.append(x)
+        if len(attempts) == 1:
+            eng.transfer.kill_producer()
+        return ref
+
+    def consumer(ctx, ref):
+        return float(ctx.get(ref).sum())
+
+    def driver(ctx, x):
+        ref = yield ctx.call("producer", x)
+        out = yield ctx.call("consumer", ref)
+        return out
+
+    eng.register("producer", producer)
+    eng.register("consumer", consumer)
+    eng.register("driver", driver)
+    assert eng.run("driver", 4.0) == 8.0
+    assert attempts == [4.0, 4.0]
+    assert eng.requests[-1].attempts == 2
+    eng.assert_at_most_once()
+
+
+def test_retry_budget_exhaustion_concurrent():
+    eng = WorkflowEngine(max_retries=1)
+
+    def producer(ctx, x):
+        ref = ctx.put(jnp.ones((2,)))
+        eng.transfer.kill_producer()
+        return ctx.invoke("consumer", ref)
+
+    eng.register("producer", producer)
+    eng.register("consumer", lambda ctx, ref: ctx.get(ref))
+    with pytest.raises(XDTProducerGone):
+        eng.run("producer", 0)
+    assert eng.requests[-1].status == "error"
+
+
+# ------------------------------------------------------------ virtual timing
+
+
+def test_cold_start_gates_first_request_only():
+    eng = WorkflowEngine()
+    eng.register("f", lambda ctx, x: x,
+                 policy=_policy(cold_start_s=0.5, keep_alive_s=60.0))
+    eng.run("f", 0)
+    first = eng.requests[-1].latency_s
+    eng.run("f", 0)                       # warm instance: no cold start
+    second = eng.requests[-1].latency_s
+    assert first == pytest.approx(0.5 + 0.0023)
+    assert second == pytest.approx(0.0023)
+
+
+def test_prewarmed_min_instances_skip_cold_start():
+    eng = WorkflowEngine()
+    eng.register("f", lambda ctx, x: x,
+                 policy=_policy(min_instances=1, cold_start_s=0.5))
+    eng.run("f", 0)
+    assert eng.requests[-1].latency_s == pytest.approx(0.0023)
+
+
+def test_transfer_debt_becomes_virtual_latency():
+    """A put/get edge charges the modeled backend latency to the request."""
+    lat = {}
+    for backend in ("xdt", "s3"):
+        eng = WorkflowEngine(backend=backend)
+        eng.register("consumer", lambda ctx, ref: float(ctx.get(ref).sum()),
+                     policy=_policy(min_instances=1))
+
+        def producer(ctx, x):
+            ref = ctx.put(jnp.full((1024,), x, jnp.float32), n_retrievals=1)
+            return ctx.invoke("consumer", ref)
+
+        eng.register("producer", producer, policy=_policy(min_instances=1))
+        assert eng.run("producer", 2.0) == 2.0 * 1024
+        lat[backend] = eng.requests[-1].latency_s
+    assert lat["s3"] > lat["xdt"]         # through-storage pays the round-trip
+
+
+def test_blocking_run_api_unchanged_for_sync_workflows():
+    eng = WorkflowEngine()
+    eng.register("consumer", lambda ctx, x: x + 1)
+    eng.register("producer", lambda ctx, x: ctx.invoke("consumer", x * 2))
+    assert eng.run("producer", 5) == 11
+    assert eng.requests[-1].status == "ok"
+    assert eng.requests[-1].latency_s > 0
+
+
+# ----------------------------------------------------------------- load gen
+
+
+def _loaded_engine(backend="xdt", seed=0):
+    eng = WorkflowEngine(seed=seed, backend=backend)
+    eng.register("worker", lambda ctx, ref: float(ctx.get(ref).sum()),
+                 policy=_policy(max_instances=32))
+
+    def entry(ctx, i):
+        ref = ctx.put(jnp.full((256,), float(i), jnp.float32), n_retrievals=1)
+        h = ctx.call("worker", ref)
+        out = yield h
+        return out
+
+    eng.register("entry", entry, policy=_policy(max_instances=32),
+                 service_time=0.01)
+    return eng
+
+
+def test_closed_loop_load_generator():
+    eng = _loaded_engine()
+    rep = LoadGenerator(eng, "entry").run_closed(
+        n_clients=4, requests_per_client=3, think_time_s=0.05
+    )
+    assert rep.mode == "closed"
+    assert rep.n_requests == 12 and rep.n_ok == 12
+    assert rep.achieved_rps > 0
+    assert 0 < rep.p50_s <= rep.p99_s
+    assert len(rep.latencies_s) == 12
+
+
+def test_open_loop_load_generator_deterministic():
+    reps = [
+        LoadGenerator(_loaded_engine(seed=7), "entry").run_open(
+            rate_rps=20.0, duration_s=2.0
+        )
+        for _ in range(2)
+    ]
+    assert reps[0].n_requests == reps[1].n_requests > 0
+    np.testing.assert_allclose(reps[0].latencies_s, reps[1].latencies_s)
+
+
+def test_foreign_exception_recorded_as_error():
+    """Non-XDT handler exceptions surface to the caller AND are recorded
+    with status "error" (no stable code), not silently marked ok."""
+    eng = WorkflowEngine()
+
+    def bad(ctx, x):
+        raise ValueError("boom")
+
+    eng.register("bad", bad)
+    with pytest.raises(ValueError):
+        eng.run("bad", 0)
+    rec = [r for r in eng.records if r.function == "bad"][0]
+    assert rec.status == "error" and rec.error_code is None
+    # same through the inline path
+    eng.register("caller", lambda ctx, x: ctx.invoke("bad", x))
+    with pytest.raises(ValueError):
+        eng.run("caller", 0)
+    assert all(r.status == "error" for r in eng.records if r.function == "bad")
+
+
+def test_load_report_isolated_across_runs():
+    """Reusing one engine/generator: each report prices only its own run."""
+    eng = _loaded_engine("s3")
+    gen = LoadGenerator(eng, "entry")
+    first = gen.run_closed(n_clients=2, requests_per_client=3)
+    second = gen.run_closed(n_clients=2, requests_per_client=3)
+    assert second.n_requests == first.n_requests == 6
+    assert second.cost_inputs.n_storage_puts == first.cost_inputs.n_storage_puts
+    assert second.cost_inputs.n_function_invocations == (
+        first.cost_inputs.n_function_invocations
+    )
+    # warm instances make the second run cheaper-or-equal, never ~2x
+    assert second.usd_per_1k_requests <= first.usd_per_1k_requests * 1.05
+
+
+def test_load_report_prices_backends_apart():
+    """Through-storage pays request fees; XDT's storage bill is zero."""
+    costs = {}
+    for backend in ("xdt", "s3"):
+        rep = LoadGenerator(_loaded_engine(backend), "entry").run_closed(
+            n_clients=2, requests_per_client=4
+        )
+        costs[backend] = rep
+    assert costs["s3"].cost_inputs.n_storage_puts > 0
+    assert costs["xdt"].cost_inputs.n_storage_puts == 0
+    assert (
+        costs["s3"].usd_per_1k_requests > costs["xdt"].usd_per_1k_requests > 0
+    )
