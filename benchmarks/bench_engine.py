@@ -1,0 +1,243 @@
+"""Engine benchmark: virtual-time substrate throughput on a fig8-style sweep.
+
+Measures the *simulation substrate itself* — event loop, control plane,
+workflow engine, transfer bookkeeping — not the modeled cluster: wall-clock
+events/sec and simulated-requests/sec over an open-loop Poisson sweep
+(3 backends x 4 load points, >=100k total requests at reference scale), plus
+peak RSS and fixed-seed per-request latency checksums so optimizations that
+change semantics are caught immediately.
+
+The workload is the fig8 DAG (driver --scatter(FAN)--> workers --> reducer,
+one ephemeral object per edge) with small numpy payloads: large enough to
+exercise put/get/ref minting on every edge, small enough that the substrate —
+not array math — is what is being timed.
+
+Results go to ``results/BENCH_engine.json`` and are tracked PR-over-PR:
+
+* ``reference`` — the full sweep (the perf-trajectory point of record).
+* ``smoke``     — a seconds-long subset for CI; CI fails when smoke
+  events/sec regresses >30% against the committed baseline.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_engine [--smoke] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import resource
+import sys
+import time
+
+import numpy as np
+
+from repro.core import LoadGenerator, ScalingPolicy, WorkflowEngine
+
+from .common import RESULTS_DIR, fmt_s, save_json
+
+RESULT_NAME = "BENCH_engine.json"
+
+BACKENDS = ["xdt", "s3", "elasticache"]
+
+# Reference sweep: >=100k total requests, always below the max_instances cap
+# so per-request latencies are a pure function of the substrate's semantics
+# (and therefore comparable bit-for-bit across optimization PRs).
+REFERENCE = {
+    "offered_rps": [50.0, 100.0, 200.0, 400.0],
+    "duration_s": 45.0,
+    "seed": 1234,
+}
+SMOKE = {
+    "offered_rps": [50.0, 200.0],
+    "duration_s": 4.0,
+    "seed": 1234,
+}
+
+FAN = 2
+EDGE_FLOATS = 16                   # tiny payload: time the substrate, not numpy
+SERVICE_TIME = {"driver": 0.010, "worker": 0.030, "reducer": 0.015}
+POLICY = dict(max_instances=1024, target_concurrency=1)
+
+
+def build_engine(backend: str, seed: int, records: str = "columnar") -> WorkflowEngine:
+    # Explicit sweep-scale buffer budget: the registry's blocking flow
+    # control is wall-clock and deadlocks a single-threaded virtual-time
+    # sweep once ~256 requests are in flight.  Constructed explicitly so the
+    # same workload also runs on the pre-optimization substrate (the
+    # baseline measurement this benchmark is compared against).
+    from repro.core import Simulator
+    from repro.core.buffers import BufferRegistry
+    from repro.core.clock import VirtualClock
+    from repro.core.transfer import TransferEngine
+
+    sim = Simulator(seed=seed)
+    clock = VirtualClock(sim)
+    registry = BufferRegistry(max_slots=1 << 20, max_bytes=1 << 40, clock=clock)
+    transfer = TransferEngine(backend, registry=registry, clock=clock)
+    try:
+        eng = WorkflowEngine(transfer=transfer, simulator=sim, records=records)
+    except TypeError:               # pre-optimization engine: objects only
+        eng = WorkflowEngine(transfer=transfer, simulator=sim)
+
+    def worker(ctx, ref):
+        x = ctx.get(ref)
+        return ctx.put(x * 2.0, n_retrievals=1)
+
+    def reducer(ctx, refs):
+        return float(sum(ctx.get(r).sum() for r in refs))
+
+    def driver(ctx, i):
+        refs = [
+            ctx.put(np.full((EDGE_FLOATS,), float(i % 7), np.float32),
+                    n_retrievals=1)
+            for _ in range(FAN)
+        ]
+        handles = yield [ctx.call("worker", r) for r in refs]
+        total = yield ctx.call("reducer", handles)
+        return total
+
+    for name, fn in (("worker", worker), ("reducer", reducer), ("driver", driver)):
+        eng.register(name, fn, policy=ScalingPolicy(**POLICY),
+                     service_time=SERVICE_TIME[name])
+    return eng
+
+
+def _count_events(sim):
+    """Events processed by the loop; falls back to counting schedules on
+    simulators that predate the ``events_processed`` counter."""
+    n = getattr(sim, "events_processed", None)
+    if n is not None:
+        return int(n)
+    return int(getattr(sim, "_bench_scheduled", 0))
+
+
+def _instrument(sim):
+    if hasattr(sim, "events_processed"):
+        return
+    sim._bench_scheduled = 0
+    orig = sim.schedule
+
+    def counting_schedule(delay, fn):
+        sim._bench_scheduled += 1
+        orig(delay, fn)
+
+    sim.schedule = counting_schedule
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def run_sweep(cfg, quiet=False):
+    rows = []
+    total_events = total_reqs = 0
+    total_wall = 0.0
+    for backend in BACKENDS:
+        for rate in cfg["offered_rps"]:
+            eng = build_engine(backend, seed=cfg["seed"])
+            _instrument(eng.sim)
+            gen = LoadGenerator(eng, "driver")
+            t0 = time.perf_counter()
+            rep = gen.run_open(rate_rps=rate, duration_s=cfg["duration_s"])
+            wall = time.perf_counter() - t0
+            events = _count_events(eng.sim)
+            lat = np.asarray(rep.latencies_s, dtype=np.float64)
+            row = {
+                "backend": backend,
+                "offered_rps": rate,
+                "n_requests": rep.n_requests,
+                "n_ok": rep.n_ok,
+                "p50_s": rep.p50_s,
+                "p99_s": rep.p99_s,
+                "wall_s": wall,
+                "events": events,
+                "events_per_sec": events / wall,
+                "requests_per_sec_wall": rep.n_requests / wall,
+                "latency_checksum": hashlib.sha256(lat.tobytes()).hexdigest()[:16],
+                "latency_sum_s": float(lat.sum()),
+            }
+            rows.append(row)
+            total_events += events
+            total_reqs += rep.n_requests
+            total_wall += wall
+            if not quiet:
+                print(f"{backend:>12} {rate:>7.0f} rps  {rep.n_requests:>7d} req  "
+                      f"{fmt_s(rep.p50_s):>9} p50  {fmt_s(rep.p99_s):>9} p99  "
+                      f"{wall:7.2f}s wall  {row['events_per_sec']:>10.0f} ev/s  "
+                      f"{row['latency_checksum']}")
+    return {
+        "rows": rows,
+        "config": {**cfg, "backends": BACKENDS, "fan": FAN,
+                   "edge_floats": EDGE_FLOATS, "service_time": SERVICE_TIME,
+                   "policy": POLICY},
+        "totals": {
+            "n_requests": total_reqs,
+            "events": total_events,
+            "wall_s": total_wall,
+            "events_per_sec": total_events / total_wall,
+            "requests_per_sec": total_reqs / total_wall,
+            "peak_rss_mb": _peak_rss_mb(),
+        },
+    }
+
+
+def _load_existing():
+    path = os.path.join(RESULTS_DIR, RESULT_NAME)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="seconds-long CI subset; preserves the committed "
+                        "reference section")
+    p.add_argument("--check", action="store_true",
+                   help="fail (exit 1) on >30%% smoke events/sec regression "
+                        "vs the committed baseline")
+    args = p.parse_args(sys.argv[1:] if argv is None else argv)
+
+    existing = _load_existing()
+    baseline_eps = (existing.get("smoke") or {}).get("totals", {}).get(
+        "events_per_sec"
+    )
+
+    if args.smoke:
+        print("# bench_engine --smoke: 3 backends x 2 load points")
+        out = dict(existing)
+        out["smoke"] = run_sweep(SMOKE)
+    else:
+        print("# bench_engine reference sweep: 3 backends x 4 load points")
+        out = dict(existing)
+        out["reference"] = run_sweep(REFERENCE)
+        print("# smoke subset (CI baseline)")
+        out["smoke"] = run_sweep(SMOKE)
+
+    out["schema"] = 1
+    tot = out["smoke"]["totals"] if args.smoke else out["reference"]["totals"]
+    print(f"# totals: {tot['n_requests']} requests, "
+          f"{tot['events_per_sec']:.0f} events/s, "
+          f"{tot['requests_per_sec']:.0f} req/s, "
+          f"peak RSS {tot['peak_rss_mb']:.0f} MB")
+    path = save_json(RESULT_NAME, out)
+    print(f"# wrote {path}")
+
+    if args.check:
+        fresh = out["smoke"]["totals"]["events_per_sec"]
+        if baseline_eps is None:
+            print("# --check: no committed baseline; recorded this run")
+        elif fresh < 0.7 * baseline_eps:
+            print(f"# REGRESSION: smoke {fresh:.0f} ev/s < 70% of committed "
+                  f"baseline {baseline_eps:.0f} ev/s")
+            return 1
+        else:
+            print(f"# --check ok: smoke {fresh:.0f} ev/s vs committed "
+                  f"baseline {baseline_eps:.0f} ev/s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,7 +37,7 @@ def _default_nbytes(obj: Any) -> int:
     return 64  # opaque python object: accounting floor
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _Entry:
     obj: Any
     nbytes: int

@@ -49,7 +49,7 @@ class VirtualClock:
         self.sim = sim
 
     def __call__(self) -> float:
-        return float(self.sim.now)
+        return self.sim.now          # always a float; no conversion on the hot path
 
     def __repr__(self) -> str:
         return f"VirtualClock(now={self.sim.now:.6f})"

@@ -24,6 +24,8 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+from collections import deque
+from heapq import heappush as _heappush
 from typing import Callable, Dict, Generator, List, Optional, Tuple
 
 import numpy as np
@@ -32,49 +34,91 @@ from .errors import InlineTooLarge
 
 # --------------------------------------------------------------------------
 # Event-loop core
+#
+# The loop is allocation-lean by design: a process carries its generator and
+# pending send-value *intrusively* (no per-step closures), numeric yields go
+# straight onto the heap as slotted (time, seq, process) entries with no
+# intermediate Event, and wakeups of already-runnable work go through a FIFO
+# run queue instead of synchronous recursion — so arbitrarily long zero-delay
+# completion chains execute iteratively (no RecursionError) and every callback
+# of one virtual instant runs before the clock advances.
 # --------------------------------------------------------------------------
 
 
 class Event:
+    """One-shot level-triggered event.
+
+    ``set()`` never runs waiters synchronously: they are appended to the
+    simulator's run queue and execute, in FIFO order, at the same virtual
+    instant — before any later-scheduled heap entry.  Waiters may be plain
+    callables or :class:`Process` objects (intrusive fast path: the process
+    is resumed with ``value`` without allocating a wrapper closure).
+    """
+
     __slots__ = ("_sim", "fired", "value", "_waiters")
 
     def __init__(self, sim: "Simulator"):
         self._sim = sim
         self.fired = False
         self.value = None
-        self._waiters: List[Callable[[], None]] = []
+        self._waiters: Optional[list] = []
 
     def set(self, value=None) -> None:
         if self.fired:
             return
         self.fired = True
         self.value = value
-        waiters, self._waiters = self._waiters, []
-        for w in waiters:
-            w()
+        waiters = self._waiters
+        if waiters:
+            self._waiters = None
+            ready = self._sim._ready
+            for w in waiters:
+                if w.__class__ is Process:
+                    w._send = value
+                ready.append(w)
+        else:
+            self._waiters = None
 
     def add_waiter(self, fn: Callable[[], None]) -> None:
+        """Run ``fn`` once the event fires (deferred via the run queue if it
+        already has — immediate wakeups never recurse)."""
         if self.fired:
-            fn()
+            self._sim._ready.append(fn)
         else:
             self._waiters.append(fn)
 
 
 class Process:
-    __slots__ = ("done",)
+    """A generator coroutine on the simulator.
+
+    Intrusive scheduling state: the generator and the value to send on resume
+    live on the process itself, so suspending/resuming allocates nothing
+    beyond the heap entry.
+    """
+
+    __slots__ = ("done", "gen", "_send")
 
     def __init__(self, sim: "Simulator", gen: Generator):
         self.done = Event(sim)
-        sim._step_process(self, gen)
+        self.gen = gen
+        self._send = None
+        sim._step(self)
 
 
 class Simulator:
-    """Minimal deterministic discrete-event simulator."""
+    """Minimal deterministic discrete-event simulator.
+
+    ``events_processed`` counts executed callbacks (heap pops + run-queue
+    wakeups) — the denominator-free numerator of the engine benchmark's
+    events/sec metric.
+    """
 
     def __init__(self, seed: int = 0):
         self.now = 0.0
-        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._heap: List[tuple] = []
+        self._ready: deque = deque()
         self._seq = 0
+        self.events_processed = 0
         self.rng = np.random.default_rng(seed)
 
     @property
@@ -89,51 +133,119 @@ class Simulator:
         self._seq += 1
         heapq.heappush(self._heap, (self.now + max(0.0, delay), self._seq, fn))
 
+    def schedule_abs(self, t: float, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` at absolute virtual time ``t`` (clamped to now).
+
+        Unlike ``schedule(t - now, fn)`` this is exact in floating point —
+        open-loop arrival trains land on their precomputed timestamps."""
+        self._seq += 1
+        heapq.heappush(self._heap, (t if t > self.now else self.now, self._seq, fn))
+
     def event(self) -> Event:
         return Event(self)
 
     def timeout(self, delay: float) -> Event:
+        """An event that fires ``delay`` seconds from now.
+
+        The Event itself is the heap entry (the run loop calls ``set()`` on
+        it) — no bound-method or closure allocation per timeout.
+        """
         ev = Event(self)
-        self.schedule(delay, ev.set)
+        self._seq += 1
+        heapq.heappush(
+            self._heap, (self.now + (delay if delay > 0.0 else 0.0), self._seq, ev)
+        )
         return ev
 
     def all_of(self, events: List[Event]) -> Event:
         ev = Event(self)
-        pending = [len(events)]
-        if not events:
+        pending = sum(1 for e in events if not e.fired)
+        if pending == 0:
             ev.set()
             return ev
+        box = [pending]
+
+        def dec():
+            box[0] -= 1
+            if box[0] == 0:
+                ev.set()
+
         for e in events:
-            def dec(e=e):
-                pending[0] -= 1
-                if pending[0] == 0:
-                    ev.set()
-            e.add_waiter(dec)
+            if not e.fired:
+                e._waiters.append(dec)
         return ev
 
     def spawn(self, gen: Generator) -> Process:
         return Process(self, gen)
 
-    def _step_process(self, proc: Process, gen: Generator, send=None) -> None:
-        try:
-            yielded = gen.send(send)
-        except StopIteration as stop:
-            proc.done.set(stop.value)
-            return
-        if isinstance(yielded, (int, float)):
-            self.schedule(float(yielded), lambda: self._step_process(proc, gen))
-        elif isinstance(yielded, Event):
-            yielded.add_waiter(
-                lambda: self._step_process(proc, gen, yielded.value)
-            )
-        else:  # pragma: no cover - defensive
+    # -- process stepping ----------------------------------------------------
+    def _step(self, proc: Process) -> None:
+        """Trampolined stepper: drives ``proc.gen`` through every yield that
+        is immediately satisfiable (already-fired events) in a flat loop."""
+        gen = proc.gen
+        send = proc._send
+        proc._send = None
+        while True:
+            try:
+                yielded = gen.send(send)
+            except StopIteration as stop:
+                proc.done.set(stop.value)
+                return
+            cls = yielded.__class__
+            if cls is Event or (cls is not float and cls is not int
+                                and isinstance(yielded, Event)):
+                if yielded.fired:
+                    send = yielded.value
+                    continue
+                yielded._waiters.append(proc)
+                return
+            if cls is float or cls is int or isinstance(yielded, (int, float)):
+                self._seq = seq = self._seq + 1
+                _heappush(
+                    self._heap,
+                    (self.now + (yielded if yielded > 0 else 0.0), seq, proc),
+                )
+                return
             raise TypeError(f"process yielded {type(yielded)}")
 
+    # legacy alias (pre-optimization name, kept for external callers)
+    def _step_process(self, proc: Process, gen: Generator, send=None) -> None:
+        proc.gen = gen
+        proc._send = send
+        self._step(proc)
+
     def run(self, until: float = math.inf) -> None:
-        while self._heap and self._heap[0][0] <= until:
-            t, _, fn = heapq.heappop(self._heap)
-            self.now = max(self.now, t)
-            fn()
+        heap = self._heap
+        ready = self._ready
+        pop = heapq.heappop
+        n = 0
+        try:
+            while True:
+                while ready:
+                    item = ready.popleft()
+                    n += 1
+                    cls = item.__class__
+                    if cls is Process:
+                        self._step(item)
+                    elif cls is Event:
+                        item.set()
+                    else:
+                        item()
+                if not heap or heap[0][0] > until:
+                    return
+                t, _, item = pop(heap)
+                if t > self.now:
+                    self.now = t
+                n += 1
+                cls = item.__class__
+                if cls is Process:
+                    self._step(item)
+                elif cls is Event:
+                    item.set()
+                else:
+                    item()
+        finally:
+            self.events_processed += n
 
 
 class FifoLink:
@@ -231,13 +343,17 @@ class TransferAccounting:
         self._last_t = now
 
     def store(self, now: float, gb: float) -> None:
-        self.touch(now)
-        self._resident_gb += gb
-        self.peak_resident_gb = max(self.peak_resident_gb, self._resident_gb)
+        self.storage_gb_seconds += self._resident_gb * (now - self._last_t)
+        self._last_t = now
+        resident = self._resident_gb = self._resident_gb + gb
+        if resident > self.peak_resident_gb:
+            self.peak_resident_gb = resident
 
     def free(self, now: float, gb: float) -> None:
-        self.touch(now)
-        self._resident_gb = max(0.0, self._resident_gb - gb)
+        self.storage_gb_seconds += self._resident_gb * (now - self._last_t)
+        self._last_t = now
+        resident = self._resident_gb - gb
+        self._resident_gb = resident if resident > 0.0 else 0.0
 
 
 # --------------------------------------------------------------------------

@@ -16,11 +16,22 @@ injected clock (:mod:`repro.core.clock`): real time by default, a
 :class:`~repro.core.clock.VirtualClock` under the event-driven workflow
 engine — which makes autoscaler dynamics exactly assertable in tests and
 fast-forwardable in load sweeps.
+
+Scalability: ``steer()`` is O(log n) in fleet size.  Ready instances live in
+a lazily-invalidated min-heap keyed ``(load, instance_id)`` (exactly the old
+linear scan's ordering), booting instances in a ``ready_at`` heap that
+matures them into the ready set, and keep-alive reaping is driven by
+scheduled expiry times instead of sweeping every instance on every steer.
+Heap entries carry the instance's version counter; any in-flight change bumps
+the version, so stale entries are discarded on pop instead of being searched
+for and removed — the million-steer path never scans the fleet.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+from collections import deque
+from heapq import heapify, heappop, heappush
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .clock import ensure_clock
@@ -35,9 +46,12 @@ class ScalingPolicy:
     max_instances: int = 64
     keep_alive_s: float = 60.0        # idle instance lifetime (paper §4.1: >> data lifetime)
     cold_start_s: float = 0.5         # instance boot latency
+    #: at the max_instances cap, model the activator's queue delay from the
+    #: chosen instance's excess depth (False restores the legacy wait=0 bug)
+    queue_wait_model: bool = True
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Instance:
     instance_id: int
     coords: Tuple[int, ...]           # placement (e.g. pod / mesh slice)
@@ -46,6 +60,12 @@ class Instance:
     epoch: int = 0                    # bumps when instance is recycled
     ready_at: float = 0.0             # cold-start gate
     alive: bool = True
+    #: bumped on every in_flight change / death; heap entries minted against
+    #: an older version are stale and discarded on pop
+    version: int = 0
+    #: steer timestamps of in-flight requests (FIFO): release() pairs them to
+    #: measure holding time for the deployment's service-time estimate
+    starts: deque = dataclasses.field(default_factory=deque)
 
     @property
     def load(self) -> int:
@@ -68,7 +88,25 @@ class Deployment:
         self.clock = ensure_clock(clock)
         self.instances: Dict[int, Instance] = {}
         self._ids = itertools.count()
-        self.stats = {"cold_starts": 0, "scale_downs": 0, "steered": 0, "buffered": 0}
+        # (load, iid, version): ready instances with spare concurrency
+        self._ready_heap: List[Tuple[int, int, int]] = []
+        # (load, iid, version): live instances for the cap-path least-loaded
+        # pick.  Maintained lazily: entries are only pushed while the fleet
+        # sits at max_instances (the only time the heap is consulted) and the
+        # heap is rebuilt from the live fleet when its entries go stale —
+        # the un-capped common path pays nothing for it.
+        self._all_heap: List[Tuple[int, int, int]] = []
+        self._all_dirty = True            # heap missing below-cap mutations
+        # (ready_at, iid): booting instances awaiting maturation
+        self._warming: List[Tuple[float, int]] = []
+        # (expire_at, iid, last_used): scheduled keep-alive expiries
+        self._expiry: List[Tuple[float, int, float]] = []
+        # EWMA of observed request holding time; feeds the cap queue model
+        self._service_ewma = 0.0
+        self.stats = {
+            "cold_starts": 0, "scale_downs": 0, "steered": 0,
+            "buffered": 0, "queued": 0,
+        }
         for _ in range(policy.min_instances):
             self._spawn(cold=False)
 
@@ -85,55 +123,189 @@ class Deployment:
         if cold:
             self.stats["cold_starts"] += 1
         self.instances[iid] = inst
+        if inst.ready_at <= now:
+            heappush(self._ready_heap, (0, iid, 0))
+        else:
+            heappush(self._warming, (inst.ready_at, iid))
+        self._all_dirty = True            # new instance unknown to the cap heap
+        heappush(self._expiry, (now + self.policy.keep_alive_s, iid, now))
         return inst
 
+    def _mature_warming(self, now: float) -> None:
+        warming = self._warming
+        while warming and warming[0][0] <= now:
+            _, iid = heappop(warming)
+            inst = self.instances.get(iid)
+            if (
+                inst is not None
+                and inst.in_flight < self.policy.target_concurrency
+            ):
+                heappush(
+                    self._ready_heap, (inst.in_flight, iid, inst.version)
+                )
+
+    def _reap_expired(self, now: float) -> None:
+        """Keep-alive reaping from scheduled expiry times: O(expired), not
+        O(fleet), per steer.  Matches the legacy full sweep exactly: reaps
+        every idle instance past keep-alive, lowest instance_id first, never
+        below ``min_instances``."""
+        heap = self._expiry
+        expired: List[Tuple[int, float, float]] = []
+        seen = set()
+        while heap and heap[0][0] < now:
+            exp_at, iid, lu = heappop(heap)
+            inst = self.instances.get(iid)
+            if (
+                iid in seen                   # duplicate entry for one instance
+                or inst is None               # stale: instance already gone
+                or inst.in_flight != 0        # stale: instance busy again
+                or inst.last_used != lu       # stale: instance re-used since
+            ):
+                continue
+            seen.add(iid)
+            expired.append((iid, exp_at, lu))
+        if not expired:
+            return
+        expired.sort()                        # legacy sweep order: by iid
+        alive = len(self.instances)
+        floor = self.policy.min_instances
+        for iid, exp_at, lu in expired:
+            if alive <= floor:
+                # Floor binds: leave alive, but re-arm the entry one
+                # keep-alive out instead of at its past expiry — re-pushing
+                # exp_at < now would make every subsequent steer re-pop and
+                # re-sort the floor-bound set forever.  The last_used stale
+                # check still governs reaping whenever it does fire.
+                heappush(heap, (now + self.policy.keep_alive_s, iid, lu))
+                continue
+            inst = self.instances.pop(iid)
+            inst.alive = False
+            inst.version += 1
+            alive -= 1
+            self.stats["scale_downs"] += 1
+
+    # keep the legacy entry point (tests / external callers)
     def _reap_idle(self) -> None:
         now = self.clock()
-        alive = len(self.instances)
-        for iid, inst in list(self.instances.items()):
-            if alive <= self.policy.min_instances:
-                break
-            if inst.in_flight == 0 and now - inst.last_used > self.policy.keep_alive_s:
-                inst.alive = False
-                del self.instances[iid]
-                alive -= 1
-                self.stats["scale_downs"] += 1
+        # the legacy sweep reaped at strictly-greater-than keep_alive idle;
+        # expiry entries use last_used + keep_alive < now, the same predicate
+        self._reap_expired(now)
 
     # -- activator -----------------------------------------------------------
-    def steer(self) -> Tuple[Instance, float]:
-        """Pick an instance for one invocation.
+    def _pop_ready(self) -> Optional[Instance]:
+        heap = self._ready_heap
+        instances = self.instances
+        target = self.policy.target_concurrency
+        while heap:
+            load, iid, version = heap[0]
+            inst = instances.get(iid)
+            if (
+                inst is None
+                or inst.version != version
+                or inst.in_flight >= target
+            ):
+                heappop(heap)                 # stale entry
+                continue
+            heappop(heap)
+            return inst
+        return None
 
-        Returns (instance, wait_s) where wait_s > 0 models the activator
-        buffering the request across a cold start.
+    def _pop_least_loaded(self) -> Instance:
+        if self._all_dirty:
+            # below-cap mutations bypassed the heap: rebuild from the fleet
+            heap = self._all_heap = [
+                (i.in_flight, i.instance_id, i.version)
+                for i in self.instances.values()
+            ]
+            heapify(heap)
+            self._all_dirty = False
+        heap = self._all_heap
+        instances = self.instances
+        while True:
+            load, iid, version = heap[0]
+            inst = instances.get(iid)
+            if inst is None or inst.version != version:
+                heappop(heap)                 # stale entry
+                continue
+            heappop(heap)
+            return inst
+
+    def steer(self) -> Tuple[Instance, float]:
+        """Pick an instance for one invocation — O(log n) in fleet size.
+
+        Returns (instance, wait_s): wait_s > 0 models the activator buffering
+        the request across a cold start and, at the ``max_instances`` cap,
+        the queue delay implied by the chosen instance's excess depth.
         """
-        self._reap_idle()
         now = self.clock()
-        ready = [
-            i for i in self.instances.values()
-            if i.ready_at <= now and i.in_flight < self.policy.target_concurrency
-        ]
-        if ready:
-            inst = min(ready, key=lambda i: (i.load, i.instance_id))
+        self._reap_expired(now)
+        self._mature_warming(now)
+        pol = self.policy
+        inst = self._pop_ready()
+        if inst is not None:
             wait = 0.0
+        elif len(self.instances) < pol.max_instances:
+            inst = self._spawn(cold=True)
+            wait = max(0.0, inst.ready_at - now)
+            self.stats["buffered"] += 1
         else:
-            # scale up if allowed; otherwise queue on the least-loaded
-            if len(self.instances) < self.policy.max_instances:
-                inst = self._spawn(cold=True)
+            # cap reached: queue on the least-loaded instance.  The request
+            # waits out any residual boot plus the modeled queue drain — its
+            # position beyond the concurrency target times the deployment's
+            # observed per-request holding time (EWMA), per concurrency slot.
+            inst = self._pop_least_loaded()
+            wait = 0.0
+            if pol.queue_wait_model:
                 wait = max(0.0, inst.ready_at - now)
-                self.stats["buffered"] += 1
-            else:
-                inst = min(self.instances.values(), key=lambda i: (i.load, i.instance_id))
-                wait = 0.0
+                excess = inst.in_flight - pol.target_concurrency + 1
+                if excess > 0 and self._service_ewma > 0.0:
+                    wait += (
+                        excess * self._service_ewma
+                        / max(1, pol.target_concurrency)
+                    )
+                self.stats["queued"] += 1
         inst.in_flight += 1
+        inst.version += 1
         inst.last_used = now
+        # occupancy starts once the modeled wait has elapsed: the holding
+        # estimate must measure service time, not the queueing it feeds
+        inst.starts.append(now + wait)
+        iid = inst.instance_id
+        if inst.in_flight < pol.target_concurrency and inst.ready_at <= now:
+            heappush(self._ready_heap, (inst.in_flight, iid, inst.version))
+        if not self._all_dirty:           # keep the cap heap live once built
+            heappush(self._all_heap, (inst.in_flight, iid, inst.version))
         self.stats["steered"] += 1
         return inst, wait
 
     def release(self, instance_id: int) -> None:
         inst = self.instances.get(instance_id)
-        if inst is not None:
-            inst.in_flight = max(0, inst.in_flight - 1)
-            inst.last_used = self.clock()
+        if inst is None:
+            return
+        now = self.clock()
+        if inst.starts:
+            held = now - inst.starts.popleft()
+            if held > 0.0:        # inline zero-time invocations carry no signal
+                self._service_ewma = (
+                    held if self._service_ewma == 0.0
+                    else 0.8 * self._service_ewma + 0.2 * held
+                )
+        if inst.in_flight > 0:
+            inst.in_flight -= 1
+        inst.version += 1
+        inst.last_used = now
+        iid = inst.instance_id
+        if inst.in_flight == 0:
+            heappush(
+                self._expiry, (now + self.policy.keep_alive_s, iid, now)
+            )
+        if (
+            inst.in_flight < self.policy.target_concurrency
+            and inst.ready_at <= now
+        ):
+            heappush(self._ready_heap, (inst.in_flight, iid, inst.version))
+        if not self._all_dirty:           # keep the cap heap live once built
+            heappush(self._all_heap, (inst.in_flight, iid, inst.version))
 
     def kill(self, instance_id: int) -> bool:
         """Fault injection: a node dies.  Outstanding XDT buffers die with it."""
@@ -141,6 +313,7 @@ class Deployment:
         if inst is None:
             return False
         inst.alive = False
+        inst.version += 1
         return True
 
     @property

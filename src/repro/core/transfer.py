@@ -19,11 +19,12 @@ taxonomy maps to:
     host staging round-trip (the activator path).  Dies with the producer.
 
 ``s3`` / ``elasticache``
-    Through-storage: device -> host copy into a :class:`ServiceStore`, then
-    host -> device on ``get``.  The service is **durable across producer
-    instance death** (the baseline premise of through-storage designs) and
-    can be shared by every engine in a cluster so consumers on other
-    instances resolve the same keys.
+    Through-storage: device -> host copy into a :class:`ServiceStore`;
+    ``get`` returns the host-resident object and defers the host -> device
+    move to the consumer's first jax op (or an explicit ``sharding=``).  The
+    service is **durable across producer instance death** (the baseline
+    premise of through-storage designs) and can be shared by every engine in
+    a cluster so consumers on other instances resolve the same keys.
 
 ``hybrid``
     Two-tier through-storage: objects below ``net.hybrid_small_cutoff`` are
@@ -59,6 +60,9 @@ Sharding = Any  # jax.sharding.Sharding
 
 def _nbytes(x) -> int:
     """Total bytes of an array or pytree of arrays."""
+    nb = getattr(x, "nbytes", None)
+    if nb is not None:                    # fast path: a single array
+        return int(nb)
     total = 0
     for leaf in jax.tree.leaves(x):
         leaf = jnp.asarray(leaf) if not hasattr(leaf, "nbytes") else leaf
@@ -66,10 +70,32 @@ def _nbytes(x) -> int:
     return total
 
 
+def _to_host(obj):
+    """Host (numpy) view of an array or pytree; zero-copy when already host.
+
+    ``np.asarray`` triggers ``__array__`` — a corrupt object still raises
+    here, before any retrieval refcount is consumed."""
+    if isinstance(obj, (np.ndarray, jax.Array)):
+        return np.asarray(obj)
+    return jax.tree.map(np.asarray, obj)
+
+
+_DTYPE_STR: Dict[Any, str] = {}
+
+
+def _dtype_str(dt) -> str:
+    """Cached ``str(dtype)`` — numpy's dtype name formatting is surprisingly
+    expensive and sits on the per-put hot path."""
+    s = _DTYPE_STR.get(dt)
+    if s is None:
+        s = _DTYPE_STR[dt] = str(dt)
+    return s
+
+
 def _describe(obj) -> Tuple[Tuple[int, ...], str]:
     """(shape, dtype-string) for the descriptor; pytrees get a summary."""
     if isinstance(obj, (jax.Array, np.ndarray)):
-        return tuple(obj.shape), str(obj.dtype)
+        return tuple(obj.shape), _dtype_str(obj.dtype)
     return (len(jax.tree.leaves(obj)),), "pytree"
 
 
@@ -221,13 +247,16 @@ class InlineBackend(TransferBackend):
                 f"{nbytes}B exceeds inline cap {self.engine.inline_limit}B"
             )
         return self.engine.registry.put(
-            jax.tree.map(np.asarray, obj),  # staged via control plane (host)
+            _to_host(obj),                  # staged via control plane (host)
             n_retrievals, nbytes=nbytes, block=block, timeout=timeout,
         )
 
     def get(self, payload):
-        obj = self.engine.registry.get(payload.buffer_id, payload.epoch)
-        return jax.tree.map(jnp.asarray, obj)
+        # Host-resident result: device materialization is lazy (the
+        # consumer's first jax op — or an explicit ``sharding=`` on
+        # ``TransferEngine.get`` — moves the bytes), so the control path
+        # never pays a device_put per retrieval.
+        return _to_host(self.engine.registry.get(payload.buffer_id, payload.epoch))
 
     @classmethod
     def modeled_seconds(cls, nbytes, net):
@@ -236,12 +265,13 @@ class InlineBackend(TransferBackend):
 
 class _ServiceBackend(TransferBackend):
     """Shared mechanics of through-storage backends: device -> service ->
-    device, durable across producer death, exception-safe refcounting."""
+    consumer (lazy device materialization), durable across producer death,
+    exception-safe refcounting."""
 
     durable = True
 
     def put(self, obj, n_retrievals, nbytes, block, timeout):
-        host = jax.tree.map(np.asarray, obj)
+        host = _to_host(obj)
         key = self.engine.service.put(host, n_retrievals, nbytes)
         self.engine.acct.n_storage_puts += 1
         self.engine.acct.store(self.engine.clock(), nbytes / 1e9)
@@ -250,9 +280,11 @@ class _ServiceBackend(TransferBackend):
     def get(self, payload):
         service = self.engine.service
         host = service.fetch(payload.buffer_id)  # raises if gone/exhausted
-        # Materialize BEFORE consuming the retrieval: a failed host->device
-        # copy must not burn one of the N permitted pulls.
-        obj = jax.tree.map(jnp.asarray, host)
+        # Materialize BEFORE consuming the retrieval: a corrupt service
+        # object must not burn one of the N permitted pulls.  The result
+        # stays host-resident; the device copy is lazy (the consumer's first
+        # jax op, or an explicit ``sharding=`` on ``TransferEngine.get``).
+        obj = _to_host(host)
         freed = service.consume(payload.buffer_id)
         self.engine.acct.n_storage_gets += 1
         if freed:
@@ -375,6 +407,10 @@ class TransferEngine:
         # the simulated external service; pass one in to share it cluster-wide
         self.service = service if service is not None else ServiceStore(self.clock)
         self._backend = _BACKEND_REGISTRY[backend](self)
+        # nbytes -> modeled seconds: net constants are fixed per engine and
+        # workloads reuse a handful of object sizes, so the per-get model
+        # evaluation collapses to a dict hit
+        self._modeled_cache: Dict[int, float] = {}
 
     # ------------------------------------------------------------------ put
     def put(
@@ -424,12 +460,16 @@ class TransferEngine:
                 else jax.tree.map(lambda v: jax.device_put(v, sharding), obj)
             )
 
-        self.stats.transfers += 1
-        self.stats.bytes_moved += nbytes
-        self.stats.wall_seconds += time.perf_counter() - t0
-        self.stats.modeled_seconds += self._backend.modeled_seconds(
-            nbytes, self.net
-        )
+        stats = self.stats
+        stats.transfers += 1
+        stats.bytes_moved += nbytes
+        stats.wall_seconds += time.perf_counter() - t0
+        modeled = self._modeled_cache.get(nbytes)
+        if modeled is None:
+            modeled = self._modeled_cache[nbytes] = (
+                self._backend.modeled_seconds(nbytes, self.net)
+            )
+        stats.modeled_seconds += modeled
         return obj
 
     # --------------------------------------------------------------- invoke

@@ -31,8 +31,10 @@ Two handler styles:
 
 Semantics (paper §4.2.2), unchanged from the synchronous engine:
 
-* **At-most-once per invocation id** — the engine records executed ids and
-  refuses replays (:class:`InvocationReplayed`).
+* **At-most-once per invocation id** — invocation ids are issued from a
+  monotonic high-watermark counter, so an id at or below the watermark can
+  never be executed (re-issued) again; :class:`InvocationReplayed` guards the
+  invariant without keeping every id ever issued alive in a set.
 * **Producer-death recovery** — if a consumer's ``get()`` raises
   ``XDTProducerGone``, the error propagates to the *orchestrator* (the
   request process), which re-invokes the entry sub-workflow with the same
@@ -43,23 +45,31 @@ Semantics (paper §4.2.2), unchanged from the synchronous engine:
 
 The blocking ``run(entry, payload)`` API is a thin wrapper: one ``submit``
 plus driving the simulator to quiescence.
+
+Memory at sweep scale
+---------------------
+``WorkflowEngine(records="columnar")`` switches invocation and request
+bookkeeping to parallel arrays (:class:`InvocationLog`, :class:`RequestLog`):
+O(a few dozen bytes) per invocation instead of an object each, and completed
+:class:`WorkflowRequest` shells are not retained — million-request sweeps fit
+in memory.  The default (``records="objects"``) keeps the legacy object lists.
 """
 from __future__ import annotations
 
 import dataclasses
-import inspect
-import itertools
+from array import array
+from types import GeneratorType
 from typing import Any, Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
-from .cluster import Simulator
+from .cluster import Event, Simulator
 from .clock import VirtualClock
-from .errors import XDTError, XDTProducerGone
+from .errors import InvocationReplayed, XDTError, XDTProducerGone
 from .refs import XDTRef
 from .scheduler import ControlPlane, ScalingPolicy
 from .transfer import TransferEngine
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class InvocationRecord:
     invocation_id: int
     function: str
@@ -74,7 +84,87 @@ class InvocationRecord:
         return self.t_start < other.t_end and other.t_start < self.t_end
 
 
-@dataclasses.dataclass
+class InvocationLog:
+    """Columnar invocation records: parallel arrays, O(1) bookkeeping.
+
+    Supports ``len``, indexing, and iteration (materializing
+    :class:`InvocationRecord` views lazily) so introspection code written
+    against the object list keeps working; the hot-path aggregates the
+    engine and load generator need — count, billed seconds, per-function
+    tallies — are maintained incrementally.
+    """
+
+    __slots__ = (
+        "invocation_ids", "functions", "instance_ids", "statuses",
+        "error_codes", "t_starts", "t_ends", "billed_s",
+    )
+
+    def __init__(self):
+        self.invocation_ids = array("q")
+        self.functions: List[str] = []
+        self.instance_ids = array("q")
+        self.statuses = array("b")        # 1 = ok, 0 = error
+        self.error_codes: Dict[int, str] = {}   # sparse: index -> code
+        self.t_starts = array("d")
+        self.t_ends = array("d")
+        self.billed_s = 0.0
+
+    def append(
+        self, invocation_id: int, function: str, instance_id: int,
+        status: str, error_code: Optional[str], t_start: float, t_end: float,
+    ) -> None:
+        if error_code is not None:
+            self.error_codes[len(self.invocation_ids)] = error_code
+        self.invocation_ids.append(invocation_id)
+        self.functions.append(function)
+        self.instance_ids.append(instance_id)
+        self.statuses.append(1 if status == "ok" else 0)
+        self.t_starts.append(t_start)
+        self.t_ends.append(t_end)
+        self.billed_s += t_end - t_start
+
+    def __len__(self) -> int:
+        return len(self.invocation_ids)
+
+    def __getitem__(self, i: int) -> InvocationRecord:
+        if i < 0:
+            i += len(self.invocation_ids)   # error_codes is keyed by position
+        return InvocationRecord(
+            invocation_id=self.invocation_ids[i],
+            function=self.functions[i],
+            instance_id=self.instance_ids[i],
+            attempt=0,
+            status="ok" if self.statuses[i] else "error",
+            error_code=self.error_codes.get(i),
+            t_start=self.t_starts[i],
+            t_end=self.t_ends[i],
+        )
+
+    def __iter__(self):
+        for i in range(len(self.invocation_ids)):
+            yield self[i]
+
+
+class RequestLog:
+    """Columnar end-to-end request outcomes (columnar engine mode)."""
+
+    __slots__ = ("request_ids", "latencies_s", "ok_flags")
+
+    def __init__(self):
+        self.request_ids = array("q")
+        self.latencies_s = array("d")
+        self.ok_flags = array("b")
+
+    def append(self, request_id: int, latency_s: float, ok: bool) -> None:
+        self.request_ids.append(request_id)
+        self.latencies_s.append(latency_s)
+        self.ok_flags.append(1 if ok else 0)
+
+    def __len__(self) -> int:
+        return len(self.request_ids)
+
+
+@dataclasses.dataclass(slots=True)
 class WorkflowRequest:
     """One end-to-end workflow execution tracked by the orchestrator."""
 
@@ -98,15 +188,19 @@ class WorkflowRequest:
 class AsyncResult:
     """Handle for one concurrent sub-invocation (``ctx.call``)."""
 
+    __slots__ = ("function", "done", "value", "error")
+
     def __init__(self, sim: Simulator, function: str):
         self.function = function
-        self.done = sim.event()
+        self.done = Event(sim)
         self.value: Any = None
         self.error: Optional[BaseException] = None
 
 
 class Context:
     """Per-invocation SDK handle given to user handlers."""
+
+    __slots__ = ("_engine", "_debt", "function", "attempt", "instance")
 
     def __init__(
         self,
@@ -145,10 +239,11 @@ class Context:
         return self._engine.transfer.put(obj, n_retrievals)
 
     def get(self, ref: XDTRef) -> Any:
-        before = self._engine.transfer.stats.modeled_seconds
+        stats = self._engine.transfer.stats
+        before = stats.modeled_seconds
         obj = self._engine.transfer.get(ref)
         # the modeled pull latency becomes virtual time owed by this function
-        self._debt += self._engine.transfer.stats.modeled_seconds - before
+        self._debt += stats.modeled_seconds - before
         return obj
 
     # collective conveniences built from the primitives (paper §7.1)
@@ -178,28 +273,56 @@ class WorkflowEngine:
         simulator: Optional[Simulator] = None,
         seed: int = 0,
         backend: str = "xdt",
+        records: str = "objects",
     ):
         self.sim = simulator if simulator is not None else Simulator(seed=seed)
         self.clock = VirtualClock(self.sim)
         # `backend` picks the default transfer medium; pass `transfer` to
         # bring your own engine (it should share this engine's clock, or
         # GB-second accounting runs on wall time while requests run virtual).
-        self.transfer = (
-            transfer if transfer is not None
-            else TransferEngine(backend, clock=self.clock)
-        )
+        if transfer is not None:
+            self.transfer = transfer
+        else:
+            # The registry's blocking flow control is wall-clock: on the
+            # single-threaded virtual-time engine a blocked put() can never
+            # be unblocked (the consumer that would free a slot runs on this
+            # same thread), so the default 256-slot budget deadlocked sweeps
+            # with a few hundred requests in flight.  Size the buffer budget
+            # for sweep-scale concurrency instead; backpressure at this
+            # layer is modeled in virtual time, not thread-blocked.
+            from .buffers import BufferRegistry
+
+            registry = BufferRegistry(
+                max_slots=1 << 20, max_bytes=1 << 40, clock=self.clock
+            )
+            self.transfer = TransferEngine(
+                backend, registry=registry, clock=self.clock
+            )
         self.control = (
             control_plane if control_plane is not None
             else ControlPlane(clock=self.clock)
         )
         self.functions: Dict[str, Callable[[Context, Any], Any]] = {}
         self.service_times: Dict[str, float] = {}
+        self._deployments: Dict[str, Any] = {}   # per-function direct dispatch
         self.max_retries = max_retries
-        self._invocation_ids = itertools.count(1)
-        self._request_ids = itertools.count(1)
-        self._executed_ids: set = set()
-        self.records: List[InvocationRecord] = []
+        # high-watermark at-most-once: ids are issued monotonically; every id
+        # <= the watermark is spent and can never be executed again
+        self._invocation_watermark = 0
+        self._request_counter = 0
+        self._inflight_requests = 0
+        if records not in ("objects", "columnar"):
+            raise ValueError(f"records must be 'objects' or 'columnar', got {records!r}")
+        self._columnar = records == "columnar"
+        self.records: Any = InvocationLog() if self._columnar else []
         self.requests: List[WorkflowRequest] = []
+        self.request_log = RequestLog() if self._columnar else None
+        # prebound recorder: columnar appends go straight to the log with no
+        # dispatch frame in between (the signatures match by construction)
+        if self._columnar:
+            self._record = self.records.append
+        # net constants are frozen per engine: cache the control-plane hop
+        self._ctrl_latency = self.transfer.net.ctrl_plane_latency
 
     # -- registration ----------------------------------------------------------
     def register(
@@ -214,29 +337,38 @@ class WorkflowEngine:
         any ``ctx.sleep``/transfer debt it accrues)."""
         self.functions[name] = handler
         self.service_times[name] = service_time
-        self.control.register(name, policy or ScalingPolicy(max_instances=16))
+        self._deployments[name] = self.control.register(
+            name, policy or ScalingPolicy(max_instances=16)
+        )
 
     # -- orchestrator ------------------------------------------------------------
     def submit(self, entry: str, payload: Any) -> WorkflowRequest:
         """Enqueue one workflow request; drive with ``drain()``/``run()``."""
         if entry not in self.functions:
             raise KeyError(f"unknown function {entry!r}")
+        self._request_counter += 1
         req = WorkflowRequest(
-            request_id=next(self._request_ids),
+            request_id=self._request_counter,
             entry=entry,
             payload=payload,
             submitted_at=self.sim.now,
-            done=self.sim.event(),
+            done=Event(self.sim),
         )
-        self.requests.append(req)
+        self._inflight_requests += 1
+        if not self._columnar:
+            # columnar mode does not retain completed request shells; the
+            # outcome lands in `request_log` instead
+            self.requests.append(req)
         self.sim.spawn(self._request_proc(req))
         return req
 
     def drain(self) -> List[WorkflowRequest]:
         """Run the simulator until every submitted request completed."""
         self.sim.run()
-        pending = [r for r in self.requests if r.status in ("pending", "running")]
-        if pending:
+        if self._inflight_requests:
+            pending = [
+                r for r in self.requests if r.status in ("pending", "running")
+            ] or self._inflight_requests
             raise RuntimeError(f"workflow deadlock: {pending}")
         return self.requests
 
@@ -270,67 +402,89 @@ class WorkflowEngine:
             req.status, req.error = "error", handle.error
             break
         req.finished_at = self.sim.now
+        self._inflight_requests -= 1
+        if self._columnar:
+            self.request_log.append(
+                req.request_id, req.finished_at - req.submitted_at,
+                req.status == "ok",
+            )
         req.done.set(req)
 
     # -- execution ---------------------------------------------------------------
     def _next_invocation_id(self) -> int:
-        invocation_id = next(self._invocation_ids)
-        if invocation_id in self._executed_ids:  # pragma: no cover - invariant
-            from .errors import InvocationReplayed
-
+        invocation_id = self._invocation_watermark + 1
+        if invocation_id <= self._invocation_watermark:  # pragma: no cover
             raise InvocationReplayed(f"id {invocation_id} already executed")
-        self._executed_ids.add(invocation_id)
+        self._invocation_watermark = invocation_id
         return invocation_id
+
+    def _record(
+        self, invocation_id: int, fn_name: str, instance_id: int,
+        status: str, code: Optional[str], t_start: float, t_end: float,
+    ) -> None:
+        # objects mode only; columnar engines bind InvocationLog.append
+        # directly over this method in __init__
+        self.records.append(
+            InvocationRecord(
+                invocation_id, fn_name, instance_id, 0,
+                status, code, t_start=t_start, t_end=t_end,
+            )
+        )
 
     def _spawn_invocation(self, fn_name: str, payload: Any) -> AsyncResult:
         """Start one control-plane-mediated invocation as a sim process."""
         handle = AsyncResult(self.sim, fn_name)
-
-        def proc():
-            try:
-                handle.value = yield from self._invocation_body(fn_name, payload)
-            except BaseException as e:  # captured; surfaced at the waiter
-                handle.error = e
-            handle.done.set(handle)
-
-        self.sim.spawn(proc())
+        self.sim.spawn(self._invocation_proc(handle, fn_name, payload))
         return handle
 
-    def _invocation_body(self, fn_name: str, payload: Any) -> Generator:
-        if fn_name not in self.functions:
-            raise KeyError(f"unknown function {fn_name!r}")
-        invocation_id = self._next_invocation_id()
-        instance, wait = self.control.steer(fn_name)
-        t0 = self.sim.now
-        if wait > 0:                       # activator buffers across cold start
-            yield self.sim.timeout(wait)
-        ctrl = self.transfer.net.ctrl_plane_latency
-        if ctrl > 0:
-            yield self.sim.timeout(ctrl)
-        ctx = Context(self, fn_name, attempt=0, instance=instance)
-        status, code = "ok", None
+    def _invocation_proc(
+        self, handle: AsyncResult, fn_name: str, payload: Any
+    ) -> Generator:
+        """One control-plane-mediated invocation: steer, pay the cold-start
+        and control-plane timeouts, run the handler, pay its debt, record.
+        (Single generator frame per invocation — this is the hot path.)"""
         try:
-            out = self.functions[fn_name](ctx, payload)
-            if inspect.isgenerator(out):
-                out = yield from self._drive(ctx, out)
-            debt = ctx._take_debt() + self.service_times.get(fn_name, 0.0)
-            if debt > 0:
-                yield self.sim.timeout(debt)
-            return out
-        except XDTError as e:
-            status, code = "error", e.code
-            raise
-        except BaseException:
-            status = "error"               # foreign errors: no stable code
-            raise
-        finally:
-            self.records.append(
-                InvocationRecord(
-                    invocation_id, fn_name, instance.instance_id, 0,
-                    status, code, t_start=t0, t_end=self.sim.now,
+            fn = self.functions.get(fn_name)
+            if fn is None:
+                raise KeyError(f"unknown function {fn_name!r}")
+            invocation_id = self._next_invocation_id()
+            deployment = self._deployments[fn_name]
+            instance, wait = deployment.steer()
+            sim = self.sim
+            t0 = sim.now
+            # separate timeouts for the activator's cold-start buffering and
+            # the control-plane hop: merging them would re-associate the
+            # float sums and shift timestamps by ulps vs the legacy engine
+            if wait > 0:                   # activator buffers across cold start
+                yield wait
+            ctrl = self._ctrl_latency
+            if ctrl > 0:
+                yield ctrl
+            ctx = Context(self, fn_name, attempt=0, instance=instance)
+            status, code = "ok", None
+            try:
+                out = fn(ctx, payload)
+                if type(out) is GeneratorType:
+                    out = yield from self._drive(ctx, out)
+                debt = ctx._take_debt() + self.service_times[fn_name]
+                if debt > 0:
+                    yield debt
+                handle.value = out
+            except XDTError as e:
+                status, code = "error", e.code
+                raise
+            except BaseException:
+                status = "error"           # foreign errors: no stable code
+                raise
+            finally:
+                self._record(
+                    invocation_id, fn_name, instance.instance_id,
+                    status, code, t0, sim.now,
                 )
-            )
-            self.control.release(fn_name, instance.instance_id)
+                deployment.release(instance.instance_id)
+        except BaseException as e:  # captured; surfaced at the waiter
+            handle.error = e
+        handle.done.set(handle)
 
     def _drive(self, ctx: Context, gen: Generator) -> Generator:
         """Step a generator handler, paying debt at every yield boundary."""
@@ -343,9 +497,9 @@ class WorkflowEngine:
             send, throw = None, None
             debt = ctx._take_debt()
             if debt > 0:
-                yield self.sim.timeout(debt)
+                yield debt
             if isinstance(yielded, (int, float)):
-                yield self.sim.timeout(float(yielded))
+                yield float(yielded)
             elif isinstance(yielded, AsyncResult):
                 yield yielded.done
                 if yielded.error is not None:
@@ -375,22 +529,24 @@ class WorkflowEngine:
         are charged to the *caller's* debt (blocking-chain billing, the
         vSwarm semantics the cost model assumes).
         """
-        if fn_name not in self.functions:
+        fn = self.functions.get(fn_name)
+        if fn is None:
             raise KeyError(f"unknown function {fn_name!r}")
         invocation_id = self._next_invocation_id()
-        instance, wait = self.control.steer(fn_name)
+        deployment = self._deployments[fn_name]
+        instance, wait = deployment.steer()
         t0 = self.sim.now
-        parent._debt += wait + self.transfer.net.ctrl_plane_latency
+        parent._debt += wait + self._ctrl_latency
         ctx = Context(self, fn_name, attempt=0, instance=instance)
         status, code = "ok", None
         try:
-            out = self.functions[fn_name](ctx, payload)
-            if inspect.isgenerator(out):
+            out = fn(ctx, payload)
+            if type(out) is GeneratorType:
                 raise TypeError(
                     f"generator handler {fn_name!r} cannot be invoked inline; "
                     "use ctx.call() / scatter_async() / submit()"
                 )
-            parent._debt += ctx._take_debt() + self.service_times.get(fn_name, 0.0)
+            parent._debt += ctx._take_debt() + self.service_times[fn_name]
             return out
         except XDTError as e:
             status, code = "error", e.code
@@ -399,27 +555,43 @@ class WorkflowEngine:
             status = "error"               # foreign errors: no stable code
             raise
         finally:
-            self.records.append(
-                InvocationRecord(
-                    invocation_id, fn_name, instance.instance_id, 0,
-                    status, code, t_start=t0, t_end=self.sim.now,
-                )
+            self._record(
+                invocation_id, fn_name, instance.instance_id,
+                status, code, t0, self.sim.now,
             )
-            self.control.release(fn_name, instance.instance_id)
+            deployment.release(instance.instance_id)
 
     # -- introspection -----------------------------------------------------------
     def executed_count(self, fn_name: Optional[str] = None) -> int:
+        if self._columnar:
+            if fn_name is None:
+                return len(self.records)
+            return self.records.functions.count(fn_name)
         return sum(
             1 for r in self.records if fn_name is None or r.function == fn_name
         )
 
+    def billed_virtual_seconds(self) -> float:
+        """Sum of per-invocation (t_end - t_start) across all records."""
+        if self._columnar:
+            return self.records.billed_s
+        return sum(r.t_end - r.t_start for r in self.records)
+
     def assert_at_most_once(self) -> None:
         """Invariant: no invocation id appears twice in the records."""
-        ids = [r.invocation_id for r in self.records]
+        if self._columnar:
+            ids = list(self.records.invocation_ids)
+        else:
+            ids = [r.invocation_id for r in self.records]
         assert len(ids) == len(set(ids)), "invocation id executed more than once"
 
     def latency_records(self) -> List[Tuple[int, float]]:
         """(request_id, end-to-end latency in virtual seconds) per request."""
+        if self._columnar:
+            log = self.request_log
+            # the log appends in completion order; report in request-id
+            # (submission) order like the legacy object list
+            return sorted(zip(log.request_ids, log.latencies_s))
         return [
             (r.request_id, r.latency_s)
             for r in self.requests

@@ -1,0 +1,404 @@
+"""Substrate scalability: O(1)-ish steering, run-queue wakeups, bounded memory.
+
+Three families of guarantees from the event-loop/scheduler optimization pass:
+
+* **Semantics preserved** — the heap-based ``steer()`` picks exactly the
+  instance the legacy linear scan picked (differential test over randomized
+  load/release/clock sequences), and fixed-seed open-loop sweeps reproduce
+  the per-request latency checksums committed in ``results/BENCH_engine.json``
+  bit-for-bit.
+* **Zero-delay chains don't recurse** — immediate wakeups go through the run
+  queue, so completion cascades thousands deep execute iteratively.
+* **Memory is bounded** — at-most-once is a high-watermark integer, not an
+  ever-growing id set; columnar record mode retains no per-request objects.
+"""
+import hashlib
+import json
+import os
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import LoadGenerator, WorkflowEngine
+from repro.core.cluster import Simulator
+from repro.core.loadgen import poisson_arrival_times
+from repro.core.scheduler import Deployment, Instance, ScalingPolicy
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results", "BENCH_engine.json")
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# Zero-delay wakeups: run queue, not recursion
+# ---------------------------------------------------------------------------
+
+
+def test_deep_zero_delay_completion_chain_no_recursion():
+    """A completion cascade thousands of processes deep used to recurse
+    through Event.set -> waiter -> step -> set ... and blow the Python stack;
+    the run queue executes it iteratively at one virtual instant."""
+    sim = Simulator()
+    depth = 5 * sys_recursion_limit()
+
+    def relay(prev):
+        yield prev
+        return None
+
+    prev = sim.timeout(1.0)
+    tail = None
+    for _ in range(depth):
+        tail = sim.spawn(relay(prev))
+        prev = tail.done
+    sim.run()
+    assert tail.done.fired
+    assert sim.now == 1.0
+
+
+def sys_recursion_limit():
+    import sys
+
+    return sys.getrecursionlimit()
+
+
+def test_deep_zero_debt_call_chain_in_engine():
+    """Generator handlers chained via ctx.call: every link completes at the
+    same virtual instant (zero service time), so the fan-in cascade is one
+    long zero-delay chain through the engine."""
+    eng = WorkflowEngine()
+    depth = 400   # legacy engine recursed ~6 frames per link: dead < 200
+
+    def link(ctx, k):
+        if k > 0:
+            out = yield ctx.call("link", k - 1)
+            return out + 1
+        return 0
+        yield  # pragma: no cover
+
+    eng.register("link", link,
+                 policy=ScalingPolicy(max_instances=depth + 1,
+                                      target_concurrency=1))
+    assert eng.run("link", depth) == depth
+    eng.assert_at_most_once()
+
+
+def test_already_fired_event_wakeup_is_deferred_not_recursive():
+    sim = Simulator()
+    ev = sim.timeout(0.0)
+    sim.run()
+    assert ev.fired
+    hits = []
+    ev.add_waiter(lambda: hits.append(1))
+    assert hits == []          # deferred through the run queue...
+    sim.run()
+    assert hits == [1]         # ...and delivered at the same instant
+
+
+# ---------------------------------------------------------------------------
+# Differential: optimized steer() == legacy linear scan
+# ---------------------------------------------------------------------------
+
+
+class LegacyDeployment:
+    """The pre-optimization O(n) Deployment, verbatim modulo cosmetics."""
+
+    def __init__(self, policy, clock):
+        self.policy = policy
+        self.clock = clock
+        self.instances = {}
+        self._next = 0
+        self.stats = {"cold_starts": 0, "scale_downs": 0}
+        for _ in range(policy.min_instances):
+            self._spawn(cold=False)
+
+    def _spawn(self, cold=True):
+        iid = self._next
+        self._next += 1
+        now = self.clock()
+        inst = Instance(
+            instance_id=iid, coords=(iid,), last_used=now,
+            ready_at=now + (self.policy.cold_start_s if cold else 0.0),
+        )
+        if cold:
+            self.stats["cold_starts"] += 1
+        self.instances[iid] = inst
+        return inst
+
+    def _reap_idle(self):
+        now = self.clock()
+        alive = len(self.instances)
+        for iid, inst in list(self.instances.items()):
+            if alive <= self.policy.min_instances:
+                break
+            if inst.in_flight == 0 and now - inst.last_used > self.policy.keep_alive_s:
+                del self.instances[iid]
+                alive -= 1
+                self.stats["scale_downs"] += 1
+
+    def steer(self):
+        self._reap_idle()
+        now = self.clock()
+        ready = [
+            i for i in self.instances.values()
+            if i.ready_at <= now and i.in_flight < self.policy.target_concurrency
+        ]
+        if ready:
+            inst = min(ready, key=lambda i: (i.in_flight, i.instance_id))
+            wait = 0.0
+        elif len(self.instances) < self.policy.max_instances:
+            inst = self._spawn(cold=True)
+            wait = max(0.0, inst.ready_at - now)
+        else:
+            inst = min(self.instances.values(),
+                       key=lambda i: (i.in_flight, i.instance_id))
+            wait = 0.0
+        inst.in_flight += 1
+        inst.last_used = now
+        return inst, wait
+
+    def release(self, instance_id):
+        inst = self.instances.get(instance_id)
+        if inst is not None:
+            inst.in_flight = max(0, inst.in_flight - 1)
+            inst.last_used = self.clock()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize(
+    "policy_kw",
+    [
+        dict(min_instances=0, max_instances=6, target_concurrency=1,
+             keep_alive_s=8.0, cold_start_s=2.0),
+        dict(min_instances=2, max_instances=4, target_concurrency=3,
+             keep_alive_s=5.0, cold_start_s=1.0),
+        dict(min_instances=1, max_instances=12, target_concurrency=2,
+             keep_alive_s=20.0, cold_start_s=3.0),
+    ],
+)
+def test_steer_differential_vs_legacy_linear_scan(seed, policy_kw):
+    """Property test: under randomized steer/release/advance sequences the
+    heap-based deployment picks the same instance ids and waits as the
+    legacy O(n) scan (queue model off = legacy cap behaviour).  Integer
+    clock steps keep both keep-alive predicates float-exact."""
+    rng = random.Random(seed)
+    clock = FakeClock()
+    new = Deployment("f", ScalingPolicy(queue_wait_model=False, **policy_kw),
+                     clock=clock)
+    old = LegacyDeployment(ScalingPolicy(queue_wait_model=False, **policy_kw),
+                           clock)
+    outstanding = []
+    for step in range(600):
+        op = rng.random()
+        if op < 0.5:
+            a, wa = new.steer()
+            b, wb = old.steer()
+            assert a.instance_id == b.instance_id, (step, policy_kw)
+            assert wa == wb, (step, policy_kw)
+            outstanding.append(a.instance_id)
+        elif op < 0.8 and outstanding:
+            iid = outstanding.pop(rng.randrange(len(outstanding)))
+            new.release(iid)
+            old.release(iid)
+        else:
+            clock.advance(float(rng.randint(1, 6)))
+        assert set(new.instances) == set(old.instances), (step, policy_kw)
+        assert new.n_instances == len(old.instances)
+
+
+# ---------------------------------------------------------------------------
+# Queue wait at the max_instances cap (ROADMAP bug)
+# ---------------------------------------------------------------------------
+
+
+def test_saturated_cap_models_queue_wait_from_depth():
+    clock = FakeClock()
+    d = Deployment("f", ScalingPolicy(min_instances=1, max_instances=1,
+                                      target_concurrency=1, cold_start_s=0.0),
+                   clock=clock)
+    # train the holding-time estimate: two 2-second requests
+    for _ in range(2):
+        inst, _ = d.steer()
+        clock.advance(2.0)
+        d.release(inst.instance_id)
+    a, wa = d.steer()                  # occupies the only instance
+    b, wb = d.steer()                  # queued behind a
+    c, wc = d.steer()                  # queued behind a and b
+    assert b.instance_id == a.instance_id == c.instance_id
+    assert wa == 0.0
+    assert wb == pytest.approx(2.0)    # one request ahead x ~2s holding time
+    assert wc > wb                     # deeper queue, longer modeled wait
+    assert d.stats["queued"] == 2
+
+
+def test_queue_wait_model_off_restores_legacy_zero_wait():
+    clock = FakeClock()
+    d = Deployment("f", ScalingPolicy(min_instances=1, max_instances=1,
+                                      target_concurrency=1, cold_start_s=0.0,
+                                      queue_wait_model=False),
+                   clock=clock)
+    inst, _ = d.steer()
+    clock.advance(2.0)
+    d.release(inst.instance_id)
+    d.steer()
+    _, wait = d.steer()
+    assert wait == 0.0
+
+
+def test_saturated_fleet_latency_rises_beyond_cap():
+    """End-to-end: beyond the cap, modeled queue wait makes p50 latency grow
+    with offered load instead of flat-lining (the fig8 underestimate)."""
+
+    def run(rate, queue_model):
+        eng = WorkflowEngine(records="columnar")
+        pol = ScalingPolicy(max_instances=4, target_concurrency=1,
+                            queue_wait_model=queue_model)
+        eng.register("f", lambda ctx, x: x, policy=pol, service_time=0.05)
+        rep = LoadGenerator(eng, "f").run_open(rate_rps=rate, duration_s=10.0)
+        return rep.p50_s
+
+    saturated = run(400.0, True)        # 400 rps >> 4 / 0.05s = 80 rps capacity
+    legacy = run(400.0, False)
+    assert saturated > 5 * legacy       # queueing now visible in latency
+
+
+# ---------------------------------------------------------------------------
+# Memory-bounded bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_at_most_once_high_watermark_not_id_set():
+    eng = WorkflowEngine()
+    eng.register("f", lambda ctx, x: x)
+    for i in range(50):
+        eng.submit("f", i)
+    eng.drain()
+    assert not hasattr(eng, "_executed_ids")
+    assert eng._invocation_watermark == 50
+    eng.assert_at_most_once()
+
+
+def test_columnar_records_match_object_records():
+    def build(records):
+        eng = WorkflowEngine(seed=7, records=records)
+        eng.register("worker", lambda ctx, x: x + 1,
+                     policy=ScalingPolicy(max_instances=8), service_time=0.02)
+
+        def entry(ctx, x):
+            outs = yield ctx.scatter_async("worker", [x, x + 1])
+            return sum(outs)
+
+        eng.register("entry", entry, policy=ScalingPolicy(max_instances=8),
+                     service_time=0.01)
+        gen = LoadGenerator(eng, "entry")
+        rep = gen.run_open(rate_rps=40.0, duration_s=2.0)
+        return eng, rep
+
+    obj_eng, obj_rep = build("objects")
+    col_eng, col_rep = build("columnar")
+    assert col_rep.n_requests == obj_rep.n_requests > 0
+    np.testing.assert_array_equal(col_rep.latencies_s, obj_rep.latencies_s)
+    assert col_eng.executed_count() == obj_eng.executed_count()
+    assert col_eng.executed_count("worker") == obj_eng.executed_count("worker")
+    assert col_eng.billed_virtual_seconds() == pytest.approx(
+        obj_eng.billed_virtual_seconds()
+    )
+    assert col_eng.latency_records() == obj_eng.latency_records()
+    # columnar mode retains no per-request objects
+    assert col_eng.requests == []
+    assert len(col_eng.request_log) == col_rep.n_requests
+    # record views materialize lazily and agree, including negative indices
+    assert col_eng.records[0].function == obj_eng.records[0].function
+    assert col_eng.records[0].t_end == obj_eng.records[0].t_end
+    assert col_eng.records[-1].invocation_id == obj_eng.records[-1].invocation_id
+    col_eng.assert_at_most_once()
+
+
+def test_columnar_negative_index_preserves_error_code():
+    from repro.core.workflow import InvocationLog
+
+    log = InvocationLog()
+    log.append(1, "f", 0, "error", "XDT.ProducerGone", 0.0, 1.0)
+    assert log[0].error_code == "XDT.ProducerGone"
+    assert log[-1].error_code == "XDT.ProducerGone"
+
+
+def test_high_inflight_put_does_not_deadlock_virtual_time():
+    """Regression: the default 256-slot buffer budget wall-clock-blocked
+    ``put()`` once a few hundred requests were in flight — a permanent
+    deadlock on the single-threaded virtual-time engine.  The workflow
+    engine's default registry is now sized for sweep-scale concurrency."""
+    eng = WorkflowEngine()
+    eng.register(
+        "hold",
+        lambda ctx, x: ctx.put(np.ones(4), n_retrievals=1),
+        policy=ScalingPolicy(max_instances=512, target_concurrency=1),
+        service_time=1.0,   # all puts alive simultaneously
+    )
+    for i in range(400):    # > legacy 256-slot budget
+        eng.submit("hold", i)
+    reqs = eng.drain()
+    assert sum(1 for r in reqs if r.status == "ok") == 400
+
+
+def test_columnar_cost_isolation_across_runs():
+    eng = WorkflowEngine(backend="s3", records="columnar")
+    eng.register("f", lambda ctx, x: x, policy=ScalingPolicy(max_instances=8))
+    gen = LoadGenerator(eng, "f")
+    first = gen.run_closed(n_clients=2, requests_per_client=3)
+    second = gen.run_closed(n_clients=2, requests_per_client=3)
+    assert first.n_requests == second.n_requests == 6
+    assert second.cost_inputs.n_function_invocations == (
+        first.cost_inputs.n_function_invocations
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fixed-seed reproducibility anchors
+# ---------------------------------------------------------------------------
+
+
+def test_vectorized_arrivals_match_sequential_draws():
+    for rate, dur in [(50.0, 20.0), (300.0, 20.0)]:
+        r1 = np.random.default_rng(99)
+        t, legacy = 0.0, []
+        while True:
+            t += float(r1.exponential(1.0 / rate))
+            if t >= dur:
+                break
+            legacy.append(t)
+        vec = poisson_arrival_times(np.random.default_rng(99), rate, dur)
+        np.testing.assert_array_equal(np.asarray(legacy), vec)
+
+
+@pytest.mark.skipif(not os.path.exists(RESULTS),
+                    reason="no committed BENCH_engine.json")
+def test_fixed_seed_latency_checksums_match_committed_baseline():
+    """Bit-identical per-request latencies versus the perf-trajectory file:
+    any change to steering, debt accounting, or event ordering that shifts a
+    single latency float shows up here."""
+    from benchmarks.bench_engine import SMOKE, build_engine
+
+    with open(RESULTS) as f:
+        committed = json.load(f)
+    rows = committed["smoke"]["rows"]
+    assert rows, "committed benchmark has no smoke rows"
+    for row in rows:
+        eng = build_engine(row["backend"], seed=SMOKE["seed"])
+        rep = LoadGenerator(eng, "driver").run_open(
+            rate_rps=row["offered_rps"], duration_s=SMOKE["duration_s"]
+        )
+        lat = np.asarray(rep.latencies_s, dtype=np.float64)
+        checksum = hashlib.sha256(lat.tobytes()).hexdigest()[:16]
+        assert rep.n_requests == row["n_requests"], row
+        assert checksum == row["latency_checksum"], row
