@@ -1,45 +1,84 @@
 """Paper Fig. 7: end-to-end latency + breakdown for VID / SET / MR under
-S3 / ElastiCache / XDT.
+S3 / ElastiCache / XDT — plus the per-edge-routed ``hybrid`` column.
 
 Paper anchors: speedups vs S3 — VID 1.36x, SET 3.4x, MR 1.26x; vs EC —
 1.02-1.05x across workloads.
+
+The ``hybrid`` column executes the same :class:`~repro.core.dag.WorkflowDAG`
+with every ``route="default"`` edge resolved per object by
+:data:`~repro.core.workloads.HYBRID_ROUTE` (inline under the activator
+payload cap on sync handoffs, XDT otherwise, S3 for evictable producers) and
+prices each edge by the medium it actually used.
+
+``--smoke`` is the seconds-long CI subset: 2 seeds, and a hard gate that the
+hybrid configuration is never costlier than the best single backend on any
+workload (per-edge routing must dominate, or the router is mis-ranking
+media).
 """
 from __future__ import annotations
 
+import sys
+
 import numpy as np
 
-from repro.core.workloads import BACKENDS, WORKLOADS
+from repro.core.workloads import BACKENDS, ROUTED_BACKENDS, WORKLOADS
 
 from .common import fmt_s, save_json
 
 PAPER_SPEEDUPS = {"vid": (1.36, 1.02), "set": (3.4, 1.05), "mr": (1.26, 1.05)}
 
 
-def run(n_seeds: int = 10):
+def run(n_seeds: int = 10, backends=ROUTED_BACKENDS):
     out = {}
     for name, fn in WORKLOADS.items():
         agg = {}
-        for b in BACKENDS:
+        for b in backends:
             rs = [fn(b, seed=s) for s in range(n_seeds)]
             agg[b] = {
                 "latency_s": float(np.mean([r.latency_s for r in rs])),
+                "total_uUSD": float(np.mean([r.cost.total for r in rs])) * 1e6,
                 "breakdown": {
                     k: float(np.mean([r.breakdown[k] for r in rs]))
                     for k in rs[0].breakdown
                 },
+                "edge_media": rs[0].edge_media,
             }
         out[name] = agg
     return out
 
 
-def main():
-    out = run()
-    print("# Fig 7 — real-world workloads: latency breakdown")
+def check_hybrid_dominates(out) -> None:
+    """CI gate: on every workload, hybrid total cost <= the best single
+    backend's, and hybrid latency <= the fastest single backend's + 5%.
+    Raises (not assert: the gate must survive ``python -O``)."""
+    for name, agg in out.items():
+        best_cost = min(agg[b]["total_uUSD"] for b in BACKENDS)
+        hybrid = agg["hybrid"]["total_uUSD"]
+        if hybrid > best_cost * (1 + 1e-9):
+            raise RuntimeError(
+                f"{name}: hybrid costs {hybrid:.1f}uUSD > best single "
+                f"backend {best_cost:.1f}uUSD — per-edge routing should "
+                f"dominate"
+            )
+        best_lat = min(agg[b]["latency_s"] for b in BACKENDS)
+        hyb_lat = agg["hybrid"]["latency_s"]
+        if hyb_lat > best_lat * 1.05:
+            raise RuntimeError(
+                f"{name}: hybrid latency {hyb_lat:.3f}s > best single "
+                f"{best_lat:.3f}s + 5%"
+            )
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    out = run(n_seeds=2 if smoke else 10)
+    print("# Fig 7 — real-world workloads: latency breakdown (+hybrid routing)")
     for name, agg in out.items():
         xdt = agg["xdt"]["latency_s"]
         p_s3, p_ec = PAPER_SPEEDUPS[name]
         print(f"\n  {name.upper()}:")
-        for b in BACKENDS:
+        for b in ROUTED_BACKENDS:
             d = agg[b]
             su = d["latency_s"] / xdt
             note = ""
@@ -47,11 +86,22 @@ def main():
                 note = f"  -> XDT speedup {su:.2f}x (paper {p_s3}x)"
             elif b == "elasticache":
                 note = f"  -> XDT speedup {su:.2f}x (paper {p_ec}x)"
-            print(f"    {b:12s} total={fmt_s(d['latency_s'])}{note}")
-            for phase, t in d["breakdown"].items():
-                frac = t / d["latency_s"] * 100
-                print(f"        {phase:22s} {fmt_s(t):>9}  ({frac:4.1f}%)")
-    save_json("fig7_workloads.json", out)
+            elif b == "hybrid":
+                media = ", ".join(
+                    f"{e}:{m}" for e, m in d["edge_media"].items()
+                )
+                note = f"  [{media}]"
+            print(f"    {b:12s} total={fmt_s(d['latency_s'])} "
+                  f"cost={d['total_uUSD']:8.1f}uUSD{note}")
+            if not smoke:
+                for phase, t in d["breakdown"].items():
+                    frac = t / d["latency_s"] * 100
+                    print(f"        {phase:22s} {fmt_s(t):>9}  ({frac:4.1f}%)")
+    if not smoke:
+        save_json("fig7_workloads.json", out)    # artifact survives a gate trip
+    check_hybrid_dominates(out)
+    print("\nhybrid-dominates gate: cost <= best single backend on every "
+          "workload OK")
     return out
 
 

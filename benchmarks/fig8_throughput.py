@@ -11,7 +11,15 @@ transfer backend over the event-driven workflow engine on virtual time:
 * reports p50/p99 end-to-end latency, achieved RPS, and $ per 1k requests
   from the calibrated cost model.
 
-Run:  PYTHONPATH=src python -m benchmarks.fig8_throughput [--quick]
+``--dag`` sweeps the *declarative* paper workloads instead: each
+:class:`~repro.core.dag.WorkflowDAG` in ``repro.core.workloads.DAGS`` is
+compiled onto the engine (``dag.bind``) per (route x offered load) cell —
+including the per-edge-routed ``hybrid`` configuration, priced per medium by
+the load generator's routed cost path.  Objects are down-scaled
+(``DAG_BYTES_SCALE``) so real arrays still move on every edge at sweep
+concurrency.
+
+Run:  PYTHONPATH=src python -m benchmarks.fig8_throughput [--quick] [--dag]
 """
 from __future__ import annotations
 
@@ -29,6 +37,12 @@ DURATION_S = 20.0          # virtual seconds per load point
 FAN = 2                    # scatter width inside each request
 EDGE_BYTES = 64 << 10      # ephemeral object per edge (real arrays move)
 SERVICE_TIME = {"driver": 0.010, "worker": 0.030, "reducer": 0.015}
+
+# -- DAG sweep (declarative paper workloads over the engine) ---------------
+DAG_ROUTES = ["xdt", "s3", "elasticache", "hybrid"]
+DAG_OFFERED_RPS = [1.0, 4.0]
+DAG_DURATION_S = 10.0
+DAG_BYTES_SCALE = 1e-5     # scale declared edge bytes to sweep-size arrays
 
 
 def build_engine(backend: str, seed: int = 0) -> WorkflowEngine:
@@ -79,9 +93,65 @@ def run(offered=None, duration_s=DURATION_S):
     }}
 
 
+def build_dag_binding(workload: str, route: str, seed: int = 0):
+    """One (DAG workload, route) cell: a fresh engine + compiled binding."""
+    from repro.core.workloads import DAGS, HYBRID_ROUTE
+
+    eng = WorkflowEngine(seed=seed, backend="xdt", records="columnar")
+    binding = DAGS[workload].bind(
+        eng,
+        default_route=HYBRID_ROUTE if route == "hybrid" else route,
+        bytes_scale=DAG_BYTES_SCALE,
+    )
+    return eng, binding
+
+
+def run_dag(workloads=None, offered=None, duration_s=DAG_DURATION_S):
+    from repro.core.workloads import DAGS
+
+    workloads = workloads or list(DAGS)
+    offered = offered or DAG_OFFERED_RPS
+    rows = []
+    for workload in workloads:
+        for route in DAG_ROUTES:
+            for rate in offered:
+                eng, binding = build_dag_binding(workload, route)
+                rep = LoadGenerator(eng, binding).run_open(
+                    rate_rps=rate, duration_s=duration_s
+                )
+                row = rep.as_row()
+                row["workflow"] = workload
+                row["backend"] = route          # short label, not describe()
+                row["n_cold_starts"] = sum(
+                    d.stats["cold_starts"]
+                    for d in eng.control.deployments.values()
+                )
+                row["edges"] = binding.edge_report()
+                rows.append(row)
+    return {"rows": rows, "config": {
+        "workloads": workloads, "routes": DAG_ROUTES, "offered_rps": offered,
+        "duration_s": duration_s, "bytes_scale": DAG_BYTES_SCALE,
+    }}
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
     quick = "--quick" in argv
+    if "--dag" in argv:
+        out = run_dag(
+            offered=[2.0] if quick else None,
+            duration_s=4.0 if quick else DAG_DURATION_S,
+        )
+        print("# Fig 8 (DAG) — workload x route x load: p50/p99, RPS, $/1k req")
+        print(f"{'workflow':>9} {'route':>12} {'offered':>8} {'achieved':>9} "
+              f"{'p50':>10} {'p99':>10} {'$/1k':>10} {'cold':>5}")
+        for r in out["rows"]:
+            print(f"{r['workflow']:>9} {r['backend']:>12} "
+                  f"{r['offered_rps']:>8.1f} {r['achieved_rps']:>9.2f} "
+                  f"{fmt_s(r['p50_s']):>10} {fmt_s(r['p99_s']):>10} "
+                  f"{r['usd_per_1k_requests']:>10.5f} {r['n_cold_starts']:>5}")
+        save_json("fig8_dag_throughput.json", out)
+        return out
     out = run(
         offered=[4.0, 16.0] if quick else None,
         duration_s=4.0 if quick else DURATION_S,

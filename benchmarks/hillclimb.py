@@ -155,8 +155,16 @@ def main():
             print(f"    C={rec['t_compute_s']*1e3:.0f}ms M={rec['t_memory_s']*1e3:.0f}ms "
                   f"X={rec['t_collective_s']*1e3:.0f}ms bound={rec['bottleneck']}"
                   f" peak={rec['peak_mem_GiB']:.1f}GiB", flush=True)
-    out = args.out or f"results/hillclimb_{arch}_{shape}.json"
-    os.makedirs(os.path.dirname(out), exist_ok=True)
+    # write next to the other harness artifacts (benchmarks.common.RESULTS_DIR
+    # is absolute, so invocation cwd doesn't matter); imported lazily because
+    # this module must set XLA_FLAGS before anything imports jax
+    from .common import RESULTS_DIR
+
+    out = args.out or os.path.join(
+        RESULTS_DIR, f"hillclimb_{arch}_{shape}.json"
+    )
+    if os.path.dirname(out):
+        os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump(results, f, indent=1)
     print(f"wrote {out}")

@@ -1,11 +1,23 @@
-"""Benchmark driver: one harness per paper table/figure + the roofline.
+"""Benchmark driver: one CLI for every paper table/figure plus the engine
+benchmark and the roofline.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig5,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig7,...] [--smoke]
 
-Writes JSON artifacts under results/ and prints each harness's table.
-The roofline section reads results/dryrun.json (produced by
-``python -m repro.launch.dryrun``); it is skipped with a notice if the
-sweep has not been recorded yet.
+Every harness runs through the unified substrate: fig5/fig6/fig2 drive the
+calibrated cluster simulator, fig7/table2 interpret the declarative
+:class:`~repro.core.dag.WorkflowDAG` workloads (including the per-edge-routed
+``hybrid`` column), fig8 sweeps the event-driven engine — ``fig8dag`` compiles
+the same DAGs onto it via ``dag.bind`` — and ``bench`` tracks the substrate's
+events/sec trajectory.
+
+``--smoke`` swaps each harness for its seconds-long CI subset (fig7's smoke
+additionally gates hybrid-dominates; bench additionally gates events/sec
+regression).  Writes JSON artifacts under results/ and prints each harness's
+table.  The roofline section reads results/dryrun.json (produced by
+``python -m repro.launch.dryrun``); it is skipped with a notice if the sweep
+has not been recorded yet.  The jax hillclimb harness
+(``benchmarks.hillclimb``) needs the 512-host-device XLA flag set before jax
+imports, so it stays a separate entry point.
 """
 from __future__ import annotations
 
@@ -16,6 +28,7 @@ import time
 import traceback
 
 from . import (
+    bench_engine,
     fig2_single_transfer,
     fig5_latency_cdf,
     fig6_collectives,
@@ -25,13 +38,19 @@ from . import (
 )
 from .common import RESULTS_DIR
 
+#: name -> (full invocation, seconds-long smoke invocation)
 HARNESSES = {
-    "fig2": fig2_single_transfer.main,
-    "fig5": fig5_latency_cdf.main,
-    "fig6": fig6_collectives.main,
-    "fig7": fig7_workloads.main,
-    "fig8": lambda: fig8_throughput.main([]),
-    "table2": table2_cost.main,
+    "fig2": (fig2_single_transfer.main, fig2_single_transfer.main),
+    "fig5": (fig5_latency_cdf.main, lambda: fig5_latency_cdf.run(20)),
+    "fig6": (fig6_collectives.main, lambda: fig6_collectives.run(2)),
+    "fig7": (fig7_workloads.main, lambda: fig7_workloads.main(["--smoke"])),
+    "fig8": (lambda: fig8_throughput.main([]),
+             lambda: fig8_throughput.main(["--quick"])),
+    "fig8dag": (lambda: fig8_throughput.main(["--dag"]),
+                lambda: fig8_throughput.main(["--dag", "--quick"])),
+    "table2": (table2_cost.main, table2_cost.main),
+    "bench": (lambda: bench_engine.main([]),
+              lambda: bench_engine.main(["--smoke", "--check"])),
 }
 
 
@@ -53,6 +72,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list from: " + ",".join(HARNESSES) + ",roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-long CI subset of every harness")
     args = ap.parse_args()
     wanted = args.only.split(",") if args.only else list(HARNESSES) + ["roofline"]
 
@@ -64,7 +85,8 @@ def main():
             if name == "roofline":
                 run_roofline()
             else:
-                HARNESSES[name]()
+                full, smoke = HARNESSES[name]
+                (smoke if args.smoke else full)()
             print(f"[benchmarks.run] {name} done in {time.time()-t0:.1f}s")
         except Exception as e:
             failures.append(name)

@@ -15,6 +15,9 @@ Layers
 * :mod:`workflow`  — event-driven function-DAG engine: concurrent requests,
                      overlapping fan-out/fan-in, at-most-once semantics,
                      all on the simulator's virtual clock.
+* :mod:`dag`       — declarative workflow graphs (Stage/Edge/WorkflowDAG)
+                     with per-edge transfer routing; lowered onto the cluster
+                     simulator or compiled onto the workflow engine.
 * :mod:`loadgen`   — closed/open-loop request drivers for throughput and
                      tail-latency sweeps under virtual time.
 * :mod:`cluster`   — calibrated discrete-event simulator for the paper's
@@ -34,12 +37,25 @@ from .cluster import (
 )
 from .cost import (
     CostBreakdown,
+    StorageOps,
     WorkflowCostInputs,
     cost_per_1k_requests,
     elasticache_storage_cost,
     lambda_compute_cost,
+    routed_cost_per_1k_requests,
+    routed_workflow_cost,
     s3_storage_cost,
     workflow_cost,
+)
+from .dag import (
+    DagBinding,
+    Edge,
+    FixedRoute,
+    RoutePolicy,
+    SizeRoute,
+    Stage,
+    WorkflowDAG,
+    execute_on_cluster,
 )
 from .errors import (
     InlineTooLarge,
@@ -63,7 +79,17 @@ from .patterns import (
 )
 from .loadgen import LoadGenerator, LoadReport
 from .refs import ObjectDescriptor, RefMinter, RefPayload, XDTRef
-from .workloads import WORKLOADS, WorkloadResult, run_all, run_mr, run_set, run_vid
+from .workloads import (
+    DAGS,
+    HYBRID_ROUTE,
+    ROUTED_BACKENDS,
+    WORKLOADS,
+    WorkloadResult,
+    run_all,
+    run_mr,
+    run_set,
+    run_vid,
+)
 from .scheduler import ControlPlane, Deployment, Instance, ScalingPolicy
 from .transfer import (
     ServiceStore,

@@ -115,30 +115,67 @@ class WorkflowCostInputs:
     peak_resident_gb: float = 0.0
 
 
-def workflow_cost(inputs: WorkflowCostInputs, backend: str) -> CostBreakdown:
-    """Cost of one workflow invocation under a given transfer backend."""
-    compute = lambda_compute_cost(
-        inputs.billed_duration_s, inputs.n_function_invocations
-    )
+@dataclasses.dataclass(frozen=True)
+class StorageOps:
+    """Storage-side accounting for ONE transfer medium of a (possibly
+    mixed-backend) run — the per-medium slice of :class:`WorkflowCostInputs`,
+    priced by that medium's fee structure in :func:`storage_cost_for`."""
+
+    n_puts: int = 0
+    n_gets: int = 0
+    gb_seconds: float = 0.0
+    peak_resident_gb: float = 0.0
+
+
+def storage_cost_for(backend: str, ops: StorageOps) -> float:
+    """Storage cost of one medium's ops under that medium's fee structure."""
     if backend == "s3":
-        storage = s3_storage_cost(
-            inputs.n_storage_puts, inputs.n_storage_gets, inputs.storage_gb_seconds
-        )
-    elif backend == "elasticache":
-        storage = elasticache_storage_cost(inputs.peak_resident_gb)
-    elif backend == "hybrid":
+        return s3_storage_cost(ops.n_puts, ops.n_gets, ops.gb_seconds)
+    if backend == "elasticache":
+        return elasticache_storage_cost(ops.peak_resident_gb)
+    if backend == "hybrid":
         # Two-tier (cache + object storage): the aggregate accounting does
         # not split ops per tier, so price conservatively as the sum of both
         # fee structures — request fees on every op plus provisioned cache
         # capacity for the peak resident set (an upper bound on either tier
         # alone).
-        storage = s3_storage_cost(
-            inputs.n_storage_puts, inputs.n_storage_gets, inputs.storage_gb_seconds
-        ) + elasticache_storage_cost(inputs.peak_resident_gb)
-    elif backend in ("xdt", "inline"):
-        storage = xdt_storage_cost()
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
+        return s3_storage_cost(
+            ops.n_puts, ops.n_gets, ops.gb_seconds
+        ) + elasticache_storage_cost(ops.peak_resident_gb)
+    if backend in ("xdt", "inline"):
+        return xdt_storage_cost()
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def workflow_cost(inputs: WorkflowCostInputs, backend: str) -> CostBreakdown:
+    """Cost of one workflow invocation under a given transfer backend."""
+    compute = lambda_compute_cost(
+        inputs.billed_duration_s, inputs.n_function_invocations
+    )
+    storage = storage_cost_for(
+        backend,
+        StorageOps(
+            n_puts=inputs.n_storage_puts,
+            n_gets=inputs.n_storage_gets,
+            gb_seconds=inputs.storage_gb_seconds,
+            peak_resident_gb=inputs.peak_resident_gb,
+        ),
+    )
+    return CostBreakdown(compute=compute, storage=storage)
+
+
+def routed_workflow_cost(
+    inputs: WorkflowCostInputs, media: Dict[str, StorageOps]
+) -> CostBreakdown:
+    """Cost of one workflow invocation whose edges were routed over MIXED
+    media (per-edge backend selection): the compute bill is shared, and each
+    medium's ops are priced by its own fee structure — S3 per-request fees on
+    the S3-routed edges, provisioned cache capacity for the ElastiCache-
+    resident peak, nothing for XDT/inline edges."""
+    compute = lambda_compute_cost(
+        inputs.billed_duration_s, inputs.n_function_invocations
+    )
+    storage = sum(storage_cost_for(b, ops) for b, ops in media.items())
     return CostBreakdown(compute=compute, storage=storage)
 
 
@@ -149,3 +186,12 @@ def cost_per_1k_requests(
     if n_requests <= 0:
         raise ValueError("n_requests must be positive")
     return workflow_cost(inputs, backend).total / n_requests * 1000.0
+
+
+def routed_cost_per_1k_requests(
+    inputs: WorkflowCostInputs, media: Dict[str, StorageOps], n_requests: int
+) -> float:
+    """USD per 1000 workflow requests for a mixed-backend (routed) run."""
+    if n_requests <= 0:
+        raise ValueError("n_requests must be positive")
+    return routed_workflow_cost(inputs, media).total / n_requests * 1000.0

@@ -1,0 +1,1024 @@
+"""Declarative workflow DAGs with per-edge transfer routing.
+
+The paper's central observation is that the *communication medium of each
+producer->consumer edge* — not the functions — decides a serverless
+workflow's latency and bill.  This module makes that edge-level decision a
+first-class, declarative object:
+
+* :class:`Stage` — one named function of the workflow (fan = number of
+  parallel instances, intrinsic compute seconds, orchestration style).
+* :class:`Edge` — one producer->consumer data dependency carrying its own
+  transfer policy: a fixed backend name (``"s3"``) or a :class:`RoutePolicy`
+  resolved **per object at send time** (e.g. :class:`SizeRoute`: inline under
+  a cutoff, XDT otherwise, S3 when the producer is marked evictable).
+* :class:`WorkflowDAG` — the validated graph.
+
+Two lowerings share the one description:
+
+``execute_on_cluster``
+    Interprets the DAG on the calibrated discrete-event
+    :class:`~repro.core.cluster.ServerlessCluster` — the Fig. 7 / Table 2
+    measurement path.  For a fixed single backend this reproduces the
+    legacy hand-rolled workload generators *bit-for-bit* (same op order,
+    same rng draw order, same billing spans); ``tests/test_dag.py`` guards
+    the equivalence differentially.
+
+``WorkflowDAG.bind``
+    Compiles the DAG onto the event-driven
+    :class:`~repro.core.workflow.WorkflowEngine` via the existing
+    generator-handler protocol: ``submit()``/``drain()``, at-most-once ids,
+    producer-death retries, and virtual-time accounting are reused
+    unchanged.  Real (scaled) arrays move through the
+    :class:`~repro.core.transfer.TransferEngine`; every edge's objects are
+    ``put`` on the medium its policy resolves, and per-edge bytes/latency
+    plus per-medium op counts accumulate so
+    :func:`repro.core.cost.routed_workflow_cost` prices the mixed run.
+
+Cost attribution: per-edge storage fees are exact for request-fee media
+(S3: the edge's own PUT/GET counts) and proportional for capacity-billed
+media (ElastiCache: the edge's share of bytes staged, since capacity is
+provisioned for the run-level peak, which no single edge owns).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Generator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .cluster import DEFAULT_NET, NetConstants, ServerlessCluster
+from .cost import (
+    S3_GET_USD,
+    S3_PUT_USD,
+    StorageOps,
+    WorkflowCostInputs,
+    elasticache_storage_cost,
+    routed_workflow_cost,
+)
+
+#: media whose transfers go through a storage service in the cluster model
+_STORAGE_MEDIA = ("s3", "elasticache")
+#: media a cluster-interpreted edge may resolve to
+_CLUSTER_MEDIA = ("s3", "elasticache", "xdt", "inline")
+
+
+# ---------------------------------------------------------------------------
+# Routing policies
+# ---------------------------------------------------------------------------
+
+
+class RoutePolicy:
+    """Decides the transfer medium of one object at send time.
+
+    ``resolve`` sees the edge, the object's size, and whether the producer
+    stage is marked evictable (its instance may be reclaimed before the
+    last retrieval, so instance-resident media would lose the object)."""
+
+    def resolve(self, edge: "Edge", nbytes: int, evictable: bool) -> str:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return type(self).__name__
+
+
+class FixedRoute(RoutePolicy):
+    """Always the same medium (equivalent to a plain backend-name string)."""
+
+    def __init__(self, backend: str):
+        self.backend = backend
+
+    def resolve(self, edge, nbytes, evictable):
+        return self.backend
+
+    def describe(self):
+        return self.backend
+
+
+class SizeRoute(RoutePolicy):
+    """Size/handoff-aware routing: inline under a cutoff, XDT otherwise,
+    durable storage when the producer is marked evictable.
+
+    This is the paper-motivated hybrid: small objects on *sync* handoffs
+    ride the invocation message itself (no storage bill, no extra hop —
+    inline only exists where an invoke accompanies the payload; on staged
+    fan-in/fan-out edges the consumers fetch without an invoke, so inlining
+    would add a control-plane round-trip and lose), bulk objects move over
+    the producer NIC via XDT, and only objects that must outlive their
+    producer pay a through-storage service.
+    """
+
+    def __init__(
+        self,
+        inline_under: int = 1 << 10,
+        default: str = "xdt",
+        durable: str = "s3",
+    ):
+        self.inline_under = inline_under
+        self.default = default
+        self.durable = durable
+
+    def resolve(self, edge, nbytes, evictable):
+        if evictable:
+            return self.durable
+        if edge.handoff == "sync" and nbytes < self.inline_under:
+            return "inline"
+        return self.default
+
+    def describe(self):
+        return (
+            f"inline<{self.inline_under}B sync, else {self.default}, "
+            f"{self.durable} if evictable"
+        )
+
+
+Route = Union[str, RoutePolicy]
+
+
+# ---------------------------------------------------------------------------
+# The declarative graph
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One workflow function.
+
+    ``blocking=True`` (vSwarm semantics) means the stage is invoked by the
+    producer of its in-edge, which stalls — and keeps billing — until the
+    stage's whole subtree completes.  ``blocking=False`` stages are
+    orchestrated (Step-Functions style): the entry stage spawns them in
+    dependency waves and its wait is *not* billed.
+
+    ``gather_compute_s`` is entry-only epilogue compute (e.g. SET's model
+    reconciliation) billed in a second ``<entry>_gather`` span together with
+    the gather edges.  ``evictable`` marks the stage's instances as
+    reclaimable before their objects' last retrieval — durable routing
+    policies send such edges through storage.
+    """
+
+    name: str
+    fan: int = 1
+    compute_s: float = 0.0
+    gather_compute_s: float = 0.0
+    blocking: bool = True
+    evictable: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    """One producer->consumer data dependency with its transfer policy.
+
+    * ``src=None`` marks ORIGINAL input living in S3 (the paper never
+      optimizes it); ``handoff`` must be ``"external"`` and the route a
+      through-storage medium.
+    * ``handoff="sync"`` — the blocking-invoke handoff: the producer's
+      buffer is published at invoke time and the consumer's billed span
+      covers publish + control hop + retrieval (vSwarm 1-1/scatter edges).
+    * ``handoff="staged"`` — the producer stages objects in its own billed
+      span; consumers fetch later with no control hop (datasets, shuffles,
+      gathers).
+    * ``fanout="broadcast"`` — the producer stages ``n_objects`` once and
+      EVERY consumer instance fetches all of them; ``"partition"`` — each
+      (producer, consumer) pair exchanges ``n_objects`` private objects.
+    * ``concurrency`` bounds one consumer's parallel fetches (0 =
+      unbounded; 1 = the sync-SDK sequential loop of the paper's baselines).
+    """
+
+    src: Optional[str]
+    dst: str
+    nbytes: int
+    label: str = ""
+    route: Route = "default"
+    handoff: str = "sync"            # sync | staged | external
+    fanout: str = "partition"        # partition | broadcast
+    n_objects: int = 1
+    concurrency: int = 0
+
+    def __post_init__(self):
+        if not self.label:
+            object.__setattr__(
+                self, "label", f"{self.src or 's3-input'}->{self.dst}"
+            )
+        if self.handoff not in ("sync", "staged", "external"):
+            raise ValueError(f"unknown handoff {self.handoff!r}")
+        if self.fanout not in ("partition", "broadcast"):
+            raise ValueError(f"unknown fanout {self.fanout!r}")
+        if self.src is None and self.handoff != "external":
+            raise ValueError("src=None (original input) requires handoff='external'")
+        if self.handoff == "external" and self.src is not None:
+            raise ValueError("external edges have src=None")
+
+
+class WorkflowDAG:
+    """A validated workflow graph; ``stages[0]`` is the entry stage."""
+
+    def __init__(self, name: str, stages: Sequence[Stage], edges: Sequence[Edge]):
+        self.name = name
+        self.stages: Tuple[Stage, ...] = tuple(stages)
+        self.edges: Tuple[Edge, ...] = tuple(edges)
+        if not self.stages:
+            raise ValueError("a DAG needs at least one stage")
+        self.by_name: Dict[str, Stage] = {}
+        for s in self.stages:
+            if s.name in self.by_name:
+                raise ValueError(f"duplicate stage {s.name!r}")
+            self.by_name[s.name] = s
+        self.entry = self.stages[0]
+        labels = set()
+        for e in self.edges:
+            if e.src is not None and e.src not in self.by_name:
+                raise ValueError(f"edge {e.label!r}: unknown src {e.src!r}")
+            if e.dst not in self.by_name:
+                raise ValueError(f"edge {e.label!r}: unknown dst {e.dst!r}")
+            if e.label in labels:
+                raise ValueError(f"duplicate edge label {e.label!r}")
+            labels.add(e.label)
+        self._validate()
+
+    # -- structure ---------------------------------------------------------
+    def gather_edges(self) -> List[Edge]:
+        """Back-edges into the entry (fan-in results), fetched in the
+        entry's ``_gather`` epilogue span."""
+        return [e for e in self.edges if e.dst == self.entry.name]
+
+    def in_edges(self, stage: Stage) -> List[Edge]:
+        if stage.name == self.entry.name:
+            return []
+        return [e for e in self.edges if e.dst == stage.name]
+
+    def out_edges(self, stage: Stage) -> List[Edge]:
+        return [e for e in self.edges if e.src == stage.name]
+
+    def blocking_children(self, stage: Stage) -> List[Stage]:
+        seen, out = set(), []
+        for e in self.out_edges(stage):
+            child = self.by_name[e.dst]
+            if child.blocking and child.name != self.entry.name and child.name not in seen:
+                seen.add(child.name)
+                out.append(child)
+        return out
+
+    def orchestrated_waves(self) -> List[List[Stage]]:
+        """Non-blocking stages grouped into dependency waves: a stage runs
+        once every non-entry producer of its in-edges has run."""
+        pending = [s for s in self.stages if not s.blocking and s is not self.entry]
+        done = {self.entry.name}
+        waves: List[List[Stage]] = []
+        while pending:
+            wave = [
+                s for s in pending
+                if all(
+                    e.src is None or e.src in done for e in self.in_edges(s)
+                )
+            ]
+            if not wave:
+                raise ValueError(f"cycle among orchestrated stages: "
+                                 f"{[s.name for s in pending]}")
+            for s in wave:
+                done.add(s.name)
+            pending = [s for s in pending if s.name not in done]
+            waves.append(wave)
+        return waves
+
+    def _validate(self) -> None:
+        entry = self.entry
+        if entry.fan != 1:
+            raise ValueError("entry stage must have fan=1")
+        blocking = [
+            s for s in self.stages if s.blocking and s is not entry
+        ]
+        orchestrated = [
+            s for s in self.stages if not s.blocking and s is not entry
+        ]
+        if blocking and orchestrated:
+            raise ValueError(
+                "mixed blocking and orchestrated stages are not supported "
+                "in one DAG (pick vSwarm chains OR Step-Functions style)"
+            )
+        if blocking and (self.gather_edges() or entry.gather_compute_s > 0):
+            # a blocking chain's results return via the call tree; staged
+            # gather edges would be PUT (and billed) but never fetched
+            raise ValueError(
+                "gather edges into the entry (and gather_compute_s) require "
+                "orchestrated stages (blocking=False)"
+            )
+        for s in blocking:
+            ins = self.in_edges(s)
+            if len(ins) != 1 or ins[0].handoff != "sync" or ins[0].src is None:
+                raise ValueError(
+                    f"blocking stage {s.name!r} needs exactly one sync in-edge"
+                )
+            if self.by_name[ins[0].src].fan != 1:
+                raise ValueError(
+                    f"blocking stage {s.name!r}: producer fan must be 1"
+                )
+        for e in self.edges:
+            if e.fanout == "broadcast" and e.src is not None:
+                if self.by_name[e.src].fan != 1:
+                    raise ValueError(
+                        f"broadcast edge {e.label!r}: producer fan must be 1"
+                    )
+            if e.handoff == "external" and isinstance(e.route, str) and (
+                e.route not in _STORAGE_MEDIA
+            ):
+                raise ValueError(
+                    f"external edge {e.label!r} must route to storage "
+                    f"({_STORAGE_MEDIA}), got {e.route!r}"
+                )
+        self.orchestrated_waves()       # raises on cycles
+
+    # -- routing -----------------------------------------------------------
+    def route_resolver(self, default: Route) -> Callable[[Edge, int], str]:
+        """(edge, nbytes) -> medium, applying the run default to
+        ``route="default"`` edges and policies per object at send time.
+
+        Every resolution must name a concrete medium in ``_CLUSTER_MEDIA``:
+        aggregate backends like ``"hybrid"`` (two-tier cache+object storage)
+        cannot be attributed per edge, so they are rejected here — on both
+        lowerings.  External (original-input) edges must additionally land
+        on a through-storage medium: string routes are rejected at
+        construction, policy routes here — instance-resident media can't
+        serve data that predates the workflow, and pricing the input GETs
+        as free would silently violate the paper's 'original data is never
+        optimized' invariant."""
+
+        def resolve(edge: Edge, nbytes: int) -> str:
+            route = edge.route
+            if route == "default":
+                route = default
+            if isinstance(route, RoutePolicy):
+                evictable = (
+                    edge.src is not None and self.by_name[edge.src].evictable
+                )
+                medium = route.resolve(edge, nbytes, evictable)
+            else:
+                medium = route
+            if medium not in _CLUSTER_MEDIA:
+                raise ValueError(
+                    f"edge {edge.label!r} routed to {medium!r}; per-edge "
+                    f"routable media are {_CLUSTER_MEDIA}"
+                )
+            if edge.handoff == "external" and medium not in _STORAGE_MEDIA:
+                raise ValueError(
+                    f"external edge {edge.label!r} must resolve to storage "
+                    f"({_STORAGE_MEDIA}), got {medium!r}"
+                )
+            return medium
+
+        return resolve
+
+    # -- engine lowering ---------------------------------------------------
+    def bind(
+        self,
+        engine,
+        default_route: Optional[Route] = None,
+        bytes_scale: float = 1.0,
+        policy: Optional[Callable[[Stage], Any]] = None,
+    ) -> "DagBinding":
+        """Compile this DAG onto a :class:`~repro.core.workflow.WorkflowEngine`
+        (see :class:`DagBinding`)."""
+        return DagBinding(self, engine, default_route, bytes_scale, policy)
+
+
+# ---------------------------------------------------------------------------
+# Per-edge usage accounting (shared by both lowerings)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EdgeUsage:
+    """What one edge actually did: objects/bytes per medium, ops, time.
+
+    An edge's objects are homogeneous (one declared size, one evictability),
+    so the shipped policies resolve every object of an edge identically; a
+    stateful policy may still split one edge across media, which the
+    per-medium tallies keep exact for the capacity share.  The storage-op
+    counters (``n_puts``/``n_gets``) are edge totals: request fees are
+    attributed wholly to the edge that performed them."""
+
+    media: Dict[str, int] = dataclasses.field(default_factory=dict)
+    media_bytes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    bytes_moved: int = 0
+    n_puts: int = 0
+    n_gets: int = 0
+    put_s: float = 0.0               # producer-side staging time (summed)
+    fetch_s: float = 0.0             # consumer-side retrieval time (summed)
+    modeled_s: float = 0.0           # engine lowering: modeled pull seconds
+
+    def count(self, medium: str, nbytes: int) -> None:
+        self.media[medium] = self.media.get(medium, 0) + 1
+        self.media_bytes[medium] = self.media_bytes.get(medium, 0) + nbytes
+        self.bytes_moved += nbytes
+
+    def storage_fee_usd(self, ec_capacity_usd_per_byte: float = 0.0) -> float:
+        """This edge's attributed storage bill: exact request fees for S3,
+        a bytes-proportional share of provisioned capacity for ElastiCache
+        (the run-level peak is not separable per edge; only the bytes this
+        edge actually staged there count), zero for XDT/inline.
+        """
+        fee = 0.0
+        if self.media.get("s3"):
+            fee += self.n_puts * S3_PUT_USD + self.n_gets * S3_GET_USD
+        ec_bytes = self.media_bytes.get("elasticache", 0)
+        if ec_bytes:
+            fee += ec_bytes * ec_capacity_usd_per_byte
+        return fee
+
+
+def _media_ops(accts, now: float) -> Dict[str, StorageOps]:
+    """Per-medium :class:`StorageOps` from ``(medium, TransferAccounting)``
+    pairs, GB-second integration touched to ``now``.  Media that performed
+    no storage ops are omitted.  Shared by both lowerings' reporting."""
+    out: Dict[str, StorageOps] = {}
+    for medium, acct in accts:
+        acct.touch(now)
+        if acct.n_storage_puts or acct.n_storage_gets:
+            out[medium] = StorageOps(
+                n_puts=acct.n_storage_puts,
+                n_gets=acct.n_storage_gets,
+                gb_seconds=acct.storage_gb_seconds,
+                peak_resident_gb=acct.peak_resident_gb,
+            )
+    return out
+
+
+def _edge_fee_rows(
+    edge_usage: Dict[str, EdgeUsage],
+    media: Dict[str, StorageOps],
+    extra: Callable[[EdgeUsage], Dict[str, Any]],
+) -> Dict[str, Dict[str, Any]]:
+    """Per-edge attribution table (medium, objects/bytes, ops, $ share).
+
+    One implementation for both lowerings so the attribution formula —
+    exact request fees for S3 edges, bytes-proportional share of the
+    provisioned-capacity bill for ElastiCache edges — can never diverge
+    between the cluster and engine bills.  ``extra`` supplies the
+    lowering-specific timing columns."""
+    ec = media.get("elasticache")
+    ec_bytes = sum(
+        u.media_bytes.get("elasticache", 0) for u in edge_usage.values()
+    )
+    ec_per_byte = (
+        elasticache_storage_cost(ec.peak_resident_gb) / ec_bytes
+        if ec is not None and ec_bytes else 0.0
+    )
+    return {
+        label: {
+            "media": dict(u.media),
+            "bytes": u.bytes_moved,
+            "n_puts": u.n_puts,
+            "n_gets": u.n_gets,
+            **extra(u),
+            "storage_uUSD": u.storage_fee_usd(ec_per_byte) * 1e6,
+        }
+        for label, u in edge_usage.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Lowering 1: the calibrated cluster simulator (Fig 7 / Table 2 path)
+# ---------------------------------------------------------------------------
+
+
+class Billing:
+    """Tracks per-invocation billed spans (blocking-chain semantics)."""
+
+    def __init__(self, sim):
+        self.sim = sim
+        self.spans: List[Tuple[str, float, float]] = []
+        self._open: Dict[int, Tuple[str, float]] = {}
+        self._next = 0
+
+    def start(self, name: str) -> int:
+        self._next += 1
+        self._open[self._next] = (name, self.sim.now)
+        return self._next
+
+    def stop(self, token: int) -> None:
+        name, t0 = self._open.pop(token)
+        self.spans.append((name, t0, self.sim.now))
+
+    @property
+    def n_invocations(self) -> int:
+        return len(self.spans) + len(self._open)
+
+    @property
+    def billed_s(self) -> float:
+        return sum(t1 - t0 for _, t0, t1 in self.spans)
+
+
+@dataclasses.dataclass
+class ClusterDagRun:
+    """Everything a workload wrapper needs to assemble a result."""
+
+    dag: WorkflowDAG
+    cluster: ServerlessCluster
+    bill: Billing
+    marks: Dict[str, float]
+    edge_usage: Dict[str, EdgeUsage]
+    edge_media: Dict[str, str]           # label -> media summary string
+
+    @property
+    def latency_s(self) -> float:
+        return self.cluster.sim.now
+
+    def media_storage_ops(self) -> Dict[str, StorageOps]:
+        """Per-medium storage accounting of the whole run (exact: read from
+        the cluster's per-backend accounting, touched to 'now')."""
+        return _media_ops(self.cluster.acct.items(), self.cluster.sim.now)
+
+    def cost_inputs(self) -> WorkflowCostInputs:
+        media = self.media_storage_ops()
+        return WorkflowCostInputs(
+            n_function_invocations=self.bill.n_invocations,
+            billed_duration_s=self.bill.billed_s,
+            n_storage_puts=sum(m.n_puts for m in media.values()),
+            n_storage_gets=sum(m.n_gets for m in media.values()),
+            storage_gb_seconds=sum(m.gb_seconds for m in media.values()),
+            peak_resident_gb=max(
+                (m.peak_resident_gb for m in media.values()), default=0.0
+            ),
+        )
+
+    def cost(self):
+        return routed_workflow_cost(self.cost_inputs(), self.media_storage_ops())
+
+    def edge_cost_rows(self) -> Dict[str, Dict[str, Any]]:
+        """Per-edge attribution table: medium, objects, bytes, seconds, $."""
+        return _edge_fee_rows(
+            self.edge_usage, self.media_storage_ops(),
+            lambda u: {"put_s": u.put_s, "fetch_s": u.fetch_s},
+        )
+
+
+def execute_on_cluster(
+    dag: WorkflowDAG,
+    backend: Route,
+    net: NetConstants = DEFAULT_NET,
+    seed: int = 0,
+    deterministic: bool = False,
+) -> ClusterDagRun:
+    """Interpret ``dag`` on the calibrated discrete-event cluster.
+
+    ``backend`` is the run default applied to ``route="default"`` edges: a
+    fixed medium name reproduces the legacy single-backend workloads
+    bit-for-bit; a :class:`RoutePolicy` yields a per-edge-routed (hybrid)
+    run priced per medium.
+    """
+    n_nodes = sum(s.fan for s in dag.stages)
+    cluster = ServerlessCluster(n_nodes, net, seed=seed, deterministic=deterministic)
+    sim = cluster.sim
+    bill = Billing(sim)
+    marks: Dict[str, float] = {}
+    usage: Dict[str, EdgeUsage] = {e.label: EdgeUsage() for e in dag.edges}
+    media_seen: Dict[str, set] = {e.label: set() for e in dag.edges}
+    resolve = dag.route_resolver(backend)
+
+    nodes: Dict[str, List[int]] = {}
+    base = 0
+    for s in dag.stages:
+        nodes[s.name] = list(range(base, base + s.fan))
+        base += s.fan
+
+    def _mark_max(key: str) -> None:
+        t = sim.now
+        if t > marks.get(key, -1.0):
+            marks[key] = t
+
+    def _medium(edge: Edge, nbytes: int) -> str:
+        m = resolve(edge, nbytes)       # validates against _CLUSTER_MEDIA
+        media_seen[edge.label].add(m)
+        return m
+
+    def fetch_objects(edge: Edge) -> List[Optional[int]]:
+        """Source node per object one consumer instance retrieves, in the
+        legacy fetch order (chunk-major for broadcast, producer-major for
+        partition)."""
+        if edge.handoff == "external":
+            return [None] * edge.n_objects
+        if edge.fanout == "broadcast":
+            src = nodes[edge.src][0]
+            return [src] * edge.n_objects
+        return [
+            nodes[edge.src][p]
+            for p in range(dag.by_name[edge.src].fan)
+            for _ in range(edge.n_objects)
+        ]
+
+    def consumer_fetch(edge: Edge, dst_node: int) -> Generator:
+        """Consumer-side ops of one edge for one consumer instance."""
+        u = usage[edge.label]
+        t0 = sim.now
+        nbytes = edge.nbytes
+        if edge.handoff == "sync":
+            src_node = nodes[edge.src][0]
+            m = _medium(edge, nbytes)
+            u.count(m, nbytes)
+            if m in _STORAGE_MEDIA:
+                u.n_puts += 1
+                u.n_gets += 1
+                yield cluster.storage_put(m, src_node, nbytes)
+                yield cluster.invoke_ctrl()
+                yield cluster.storage_get(m, dst_node, nbytes)
+            elif m == "xdt":
+                yield cluster.invoke_ctrl()
+                yield cluster.xdt_pull(src_node, nbytes)
+            else:                       # inline: payload rides the response
+                yield cluster.inline_send(src_node, nbytes)
+        else:
+            srcs = fetch_objects(edge)
+            per_wave = edge.concurrency if edge.concurrency > 0 else len(srcs)
+            for k in range(0, len(srcs), max(1, per_wave)):
+                evs = []
+                for src_node in srcs[k:k + per_wave]:
+                    if src_node is None:             # external original input
+                        m = _medium(edge, nbytes)
+                        u.count(m, nbytes)
+                        u.n_gets += 1
+                        evs.append(cluster.storage_get(m, dst_node, nbytes))
+                        continue
+                    m = _medium(edge, nbytes)
+                    u.count(m, nbytes)
+                    if m in _STORAGE_MEDIA:
+                        u.n_gets += 1
+                        evs.append(cluster.storage_get(m, dst_node, nbytes))
+                    elif m == "xdt":
+                        evs.append(cluster.xdt_pull(src_node, nbytes))
+                    else:
+                        evs.append(cluster.inline_send(src_node, nbytes))
+                if evs:
+                    yield sim.all_of(evs)
+        _mark_max(f"edge:{edge.label}")
+        u.fetch_s += sim.now - t0
+
+    def producer_stage_puts(edge: Edge, src_node: int) -> Generator:
+        """Producer-side staged puts of one edge for one producer instance
+        (sequential — the sync-SDK loop of the paper's baselines).
+        Instance-resident media (xdt/inline) stage nothing."""
+        u = usage[edge.label]
+        t0 = sim.now
+        n = (
+            edge.n_objects if edge.fanout == "broadcast"
+            else dag.by_name[edge.dst].fan * edge.n_objects
+        )
+        for _ in range(n):
+            m = _medium(edge, edge.nbytes)
+            if m in _STORAGE_MEDIA:
+                u.n_puts += 1
+                yield cluster.storage_put(m, src_node, edge.nbytes)
+        _mark_max(f"staged:{edge.label}")
+        u.put_s += sim.now - t0
+
+    def stage_proc(stage: Stage, i: int) -> Generator:
+        tok = bill.start(stage.name)
+        dst_node = nodes[stage.name][i]
+        for edge in dag.in_edges(stage):
+            yield from consumer_fetch(edge, dst_node)
+        if stage.compute_s > 0:
+            yield sim.timeout(stage.compute_s)
+        _mark_max(f"compute:{stage.name}")
+        for edge in dag.out_edges(stage):
+            if edge.handoff == "staged":   # incl. gather edges into the entry
+                yield from producer_stage_puts(edge, dst_node)
+        children = dag.blocking_children(stage)
+        if children:
+            done = [
+                sim.spawn(stage_proc(c, j)).done
+                for c in children
+                for j in range(c.fan)
+            ]
+            yield sim.all_of(done)
+        bill.stop(tok)
+
+    def entry_proc() -> Generator:
+        entry = dag.entry
+        entry_node = nodes[entry.name][0]
+        tok = bill.start(entry.name)
+        if entry.compute_s > 0:
+            yield sim.timeout(entry.compute_s)
+        _mark_max(f"compute:{entry.name}")
+        for edge in dag.out_edges(entry):
+            if edge.handoff == "staged":
+                yield from producer_stage_puts(edge, entry_node)
+        children = dag.blocking_children(entry)
+        if children:
+            # vSwarm blocking chain: the entry's billed span covers the
+            # whole subtree (slow transfers inflate the compute bill).
+            done = [
+                sim.spawn(stage_proc(c, j)).done
+                for c in children
+                for j in range(c.fan)
+            ]
+            yield sim.all_of(done)
+            bill.stop(tok)
+            return
+        # Orchestrated: the entry's wait on children is NOT billed.
+        bill.stop(tok)
+        for wave in dag.orchestrated_waves():
+            done = [
+                sim.spawn(stage_proc(s, i)).done
+                for s in wave
+                for i in range(s.fan)
+            ]
+            yield sim.all_of(done)
+        gathers = dag.gather_edges()
+        if gathers or entry.gather_compute_s > 0:
+            tok2 = bill.start(f"{entry.name}_gather")
+            marks["gather_start"] = sim.now
+            for edge in gathers:
+                yield from consumer_fetch(edge, entry_node)
+            marks["gather_done"] = sim.now
+            if entry.gather_compute_s > 0:
+                yield sim.timeout(entry.gather_compute_s)
+            bill.stop(tok2)
+
+    root = sim.spawn(entry_proc())
+    sim.run()
+    assert root.done.fired, f"DAG {dag.name!r} deadlocked"
+    edge_media = {
+        label: "+".join(sorted(ms)) if ms else "unused"
+        for label, ms in media_seen.items()
+    }
+    return ClusterDagRun(
+        dag=dag, cluster=cluster, bill=bill, marks=marks,
+        edge_usage=usage, edge_media=edge_media,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Lowering 2: the event-driven WorkflowEngine (sweep / loadgen path)
+# ---------------------------------------------------------------------------
+
+
+class DagBinding:
+    """A DAG compiled onto a :class:`~repro.core.workflow.WorkflowEngine`.
+
+    Registers one generator handler per stage (named ``<dag>.<stage>``) that
+    speaks the engine's existing protocol — ``ctx.put``/``ctx.get`` move
+    real (optionally down-scaled) arrays, ``ctx.call`` + ``yield`` fan out
+    — so at-most-once ids, producer-death retries, autoscaling, and
+    virtual-time records are reused unchanged.  Each edge's objects are put
+    on the medium its route resolves (per object, at send time); per-edge
+    usage lands in :attr:`edge_usage` and per-medium storage ops in the
+    transfer engine's ``media_acct`` for mixed-backend pricing.
+
+    Use with the load generator::
+
+        binding = dag.bind(engine, default_route=SizeRoute())
+        rep = LoadGenerator(engine, binding).run_open(rate_rps=50, duration_s=20)
+    """
+
+    def __init__(
+        self,
+        dag: WorkflowDAG,
+        engine,
+        default_route: Optional[Route] = None,
+        bytes_scale: float = 1.0,
+        policy: Optional[Callable[[Stage], Any]] = None,
+    ):
+        self.dag = dag
+        self.engine = engine
+        self.default_route: Route = (
+            engine.transfer.backend if default_route is None else default_route
+        )
+        self.bytes_scale = bytes_scale
+        self._resolve = dag.route_resolver(self.default_route)
+        # the graph is immutable: derive per-stage edge lists, blocking
+        # children, waves, and gathers ONCE at bind time — handlers run per
+        # request on the sweep hot path and must not rescan the edge list
+        self._in_edges: Dict[str, List[Edge]] = {
+            s.name: dag.in_edges(s) for s in dag.stages
+        }
+        self._out_edges: Dict[str, List[Edge]] = {
+            s.name: dag.out_edges(s) for s in dag.stages
+        }
+        self._children: Dict[str, List[Stage]] = {
+            s.name: dag.blocking_children(s) for s in dag.stages
+        }
+        self._waves: List[List[Stage]] = dag.orchestrated_waves()
+        self._gathers: List[Edge] = dag.gather_edges()
+        self.edge_usage: Dict[str, EdgeUsage] = {
+            e.label: EdgeUsage() for e in dag.edges
+        }
+        # external (original-input) reads never pass through the transfer
+        # engine — the consumer synthesizes the object locally and pays the
+        # modeled read — so their per-medium request fees are tracked here
+        # and merged into media_storage_ops(); the cluster lowering bills
+        # the same GETs through the cluster's per-backend accounting.
+        self._external_gets: Dict[str, int] = {}
+        self.entry = self._fn(dag.entry.name)
+        from .scheduler import ScalingPolicy   # local: avoid import cycles
+
+        default_policy = policy or (
+            lambda s: ScalingPolicy(
+                max_instances=max(16, 4 * s.fan), target_concurrency=1
+            )
+        )
+        for stage in dag.stages:
+            engine.register(
+                self._fn(stage.name),
+                self._make_handler(stage),
+                policy=default_policy(stage),
+                service_time=stage.compute_s,
+            )
+
+    def _fn(self, stage_name: str) -> str:
+        return f"{self.dag.name}.{stage_name}"
+
+    # -- data movement (tracked) ------------------------------------------
+    def _elems(self, edge: Edge) -> int:
+        return max(1, int(edge.nbytes * self.bytes_scale) // 4)
+
+    def _put(self, ctx, edge: Edge, fill: float, n_retrievals: int):
+        # Route on the DECLARED edge size (the workload's object), not the
+        # down-scaled sweep array — routing must match the modeled workload.
+        medium = self._resolve(edge, edge.nbytes)
+        arr = np.full((self._elems(edge),), fill, np.float32)
+        ref = ctx.put(arr, n_retrievals=n_retrievals, backend=medium)
+        u = self.edge_usage[edge.label]
+        u.count(medium, arr.nbytes)
+        u.n_puts += 1
+        return ref
+
+    def _get(self, ctx, edge: Edge, ref):
+        stats = self.engine.transfer.stats
+        before = stats.modeled_seconds
+        val = ctx.get(ref)
+        u = self.edge_usage[edge.label]
+        u.n_gets += 1
+        u.modeled_s += stats.modeled_seconds - before
+        return val
+
+    def _put_for_consumers(self, ctx, edge: Edge, fill: float) -> List[List[Any]]:
+        """Produce one edge's objects; returns refs per consumer instance."""
+        fd = 1 if edge.dst == self.dag.entry.name else self.dag.by_name[edge.dst].fan
+        if edge.fanout == "broadcast":
+            refs = [
+                self._put(ctx, edge, fill, n_retrievals=fd)
+                for _ in range(edge.n_objects)
+            ]
+            return [list(refs) for _ in range(fd)]
+        return [
+            [self._put(ctx, edge, fill, n_retrievals=1)
+             for _ in range(edge.n_objects)]
+            for _ in range(fd)
+        ]
+
+    def _consume_external(self, ctx, edge: Edge, fill: float) -> List[Any]:
+        """Original input: synthesize locally, charge the modeled read."""
+        from .transfer import modeled_transfer_seconds
+
+        medium = self._resolve(edge, edge.nbytes)
+        net = self.engine.transfer.net
+        out = []
+        u = self.edge_usage[edge.label]
+        for _ in range(edge.n_objects):
+            arr = np.full((self._elems(edge),), fill, np.float32)
+            modeled = modeled_transfer_seconds(medium, arr.nbytes, net)
+            ctx.sleep(modeled)
+            u.count(medium, arr.nbytes)
+            u.n_gets += 1
+            u.modeled_s += modeled
+            self._external_gets[medium] = self._external_gets.get(medium, 0) + 1
+            out.append(arr)
+        return out
+
+    # -- handlers ----------------------------------------------------------
+    def _make_handler(self, stage: Stage):
+        dag = self.dag
+        if stage is dag.entry:
+            return self._make_entry_handler(stage)
+        in_edges = self._in_edges[stage.name]
+        out_edges = self._out_edges[stage.name]
+        children = self._children[stage.name]
+
+        def handler(ctx, payload):
+            fill, inbox = payload
+            values: Dict[str, List[Any]] = {}
+            for edge in in_edges:
+                if edge.handoff == "external":
+                    values[edge.label] = self._consume_external(ctx, edge, fill)
+                else:
+                    values[edge.label] = [
+                        self._get(ctx, edge, r) for r in inbox[edge.label]
+                    ]
+            out: Dict[str, List[List[Any]]] = {}
+            for edge in out_edges:
+                out[edge.label] = self._put_for_consumers(ctx, edge, fill)
+            for child in children:
+                edge = self._in_edges[child.name][0]
+                handles = [
+                    ctx.call(self._fn(child.name),
+                             (fill, {edge.label: out[edge.label][j]}))
+                    for j in range(child.fan)
+                ]
+                yield handles
+            checksum = float(
+                sum(float(np.sum(v)) for vs in values.values() for v in vs)
+            )
+            return {"out": out, "sum": checksum}
+
+        return handler
+
+    def _make_entry_handler(self, entry: Stage):
+        out_edges = self._out_edges[entry.name]
+        children = self._children[entry.name]
+        waves = self._waves
+        gathers = self._gathers
+        in_edges = self._in_edges
+
+        def handler(ctx, fill):
+            fill = float(fill) if np.isscalar(fill) else 1.0
+            out: Dict[str, List[List[Any]]] = {}
+            for edge in out_edges:
+                out[edge.label] = self._put_for_consumers(ctx, edge, fill)
+            total = 0.0
+            if children:
+                for child in children:
+                    edge = in_edges[child.name][0]
+                    handles = [
+                        ctx.call(self._fn(child.name),
+                                 (fill, {edge.label: out[edge.label][j]}))
+                        for j in range(child.fan)
+                    ]
+                    results = yield handles
+                    total += sum(r["sum"] for r in results)
+                return total
+            # orchestrated waves: pools[label][consumer_idx] -> refs
+            pools: Dict[str, List[List[Any]]] = dict(out)
+            for wave in waves:
+                handles, owners = [], []
+                for s in wave:
+                    for j in range(s.fan):
+                        inbox = {
+                            e.label: pools[e.label][j]
+                            for e in in_edges[s.name]
+                            if e.handoff != "external"
+                        }
+                        handles.append(
+                            ctx.call(self._fn(s.name), (fill, inbox))
+                        )
+                        owners.append(s)
+                results = yield handles
+                # merge returned out-pools: consumer j's refs concatenate
+                # across all producer instances of the wave
+                for s, res in zip(owners, results):
+                    for label, per_consumer in res["out"].items():
+                        pool = pools.setdefault(
+                            label, [[] for _ in per_consumer]
+                        )
+                        for j, refs in enumerate(per_consumer):
+                            pool[j].extend(refs)
+            for edge in gathers:
+                for r in pools.get(edge.label, [[]])[0]:
+                    total += float(np.sum(self._get(ctx, edge, r)))
+            if entry.gather_compute_s > 0:
+                ctx.sleep(entry.gather_compute_s)
+            return total
+
+        return handler
+
+    # -- reporting ---------------------------------------------------------
+    def media_storage_ops(self) -> Dict[str, StorageOps]:
+        """Per-medium storage ops of the engine's run so far: the transfer
+        engine's per-medium accounting plus the external original-input GETs
+        (which bypass the transfer engine but are real request fees — the
+        cluster lowering bills them too)."""
+        out = _media_ops(
+            self.engine.transfer.media_acct.items(), self.engine.sim.now
+        )
+        for medium, n in self._external_gets.items():
+            base = out.get(medium, StorageOps())
+            out[medium] = dataclasses.replace(base, n_gets=base.n_gets + n)
+        return out
+
+    def cost(self):
+        """Price the engine's whole run so far with per-medium fees."""
+        eng = self.engine
+        inputs = WorkflowCostInputs(
+            n_function_invocations=len(eng.records),
+            billed_duration_s=eng.billed_virtual_seconds(),
+        )
+        return routed_workflow_cost(inputs, self.media_storage_ops())
+
+    def edge_report(self) -> Dict[str, Dict[str, Any]]:
+        return _edge_fee_rows(
+            self.edge_usage, self.media_storage_ops(),
+            lambda u: {"modeled_s": u.modeled_s},
+        )
+
+
+__all__ = [
+    "Billing",
+    "ClusterDagRun",
+    "DagBinding",
+    "Edge",
+    "EdgeUsage",
+    "FixedRoute",
+    "Route",
+    "RoutePolicy",
+    "SizeRoute",
+    "Stage",
+    "WorkflowDAG",
+    "execute_on_cluster",
+]

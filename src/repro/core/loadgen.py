@@ -15,6 +15,8 @@ offered load run in milliseconds of wall time):
 Both return a :class:`LoadReport` with per-request latencies, percentile
 summaries, achieved throughput, and the cost-model inputs needed to price the
 run ($ per 1k requests via :func:`repro.core.cost.cost_per_1k_requests`).
+Driving a compiled :class:`~repro.core.dag.DagBinding` instead of a function
+name prices the run per transfer medium (mixed-backend routing).
 
 Scale: open-loop arrival trains are drawn **vectorized** from the simulator's
 seeded rng (one numpy call per block instead of one Python-level exponential
@@ -27,11 +29,16 @@ sweeps are memory-bounded.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Generator, List, Optional
+from typing import Any, Callable, Dict, Generator, List, Optional, Union
 
 import numpy as np
 
-from .cost import WorkflowCostInputs, cost_per_1k_requests
+from .cost import (
+    StorageOps,
+    WorkflowCostInputs,
+    cost_per_1k_requests,
+    routed_cost_per_1k_requests,
+)
 from .workflow import WorkflowEngine, WorkflowRequest
 
 
@@ -134,16 +141,26 @@ class _OpenLoopDispatcher:
 
 
 class LoadGenerator:
-    """Drives a :class:`WorkflowEngine` with synthetic request arrivals."""
+    """Drives a :class:`WorkflowEngine` with synthetic request arrivals.
+
+    ``entry`` is a registered function name, or a compiled
+    :class:`~repro.core.dag.DagBinding` — then requests enter at the DAG's
+    entry stage and the run is priced per transfer medium
+    (:func:`~repro.core.cost.routed_cost_per_1k_requests`), so sweeps over
+    per-edge-routed (hybrid) workflows report the mixed-backend bill.
+    """
 
     def __init__(
         self,
         engine: WorkflowEngine,
-        entry: str,
+        entry: Union[str, Any],
         payload_fn: Optional[Callable[[int], Any]] = None,
     ):
         self.engine = engine
-        self.entry = entry
+        # a DagBinding (anything exposing .entry + .media_storage_ops) routes
+        # per edge; its per-medium ops price the run
+        self.binding = None if isinstance(entry, str) else entry
+        self.entry: str = entry if isinstance(entry, str) else entry.entry
         self.payload_fn = payload_fn or (lambda i: i)
         self._requests: List[WorkflowRequest] = []
         # columnar engines report from the engine's request log; object-mode
@@ -156,7 +173,7 @@ class LoadGenerator:
         eng = self.engine
         acct = eng.transfer.acct
         acct.touch(eng.sim.now)
-        return {
+        base = {
             "n_records": len(eng.records),
             "billed_s": eng.billed_virtual_seconds(),
             "puts": acct.n_storage_puts,
@@ -164,6 +181,9 @@ class LoadGenerator:
             "gb_seconds": acct.storage_gb_seconds,
             "n_req_log": 0 if eng.request_log is None else len(eng.request_log),
         }
+        if self.binding is not None:
+            base["media"] = self.binding.media_storage_ops()
+        return base
 
     # -- closed loop ---------------------------------------------------------
     def run_closed(
@@ -245,7 +265,19 @@ class LoadGenerator:
             storage_gb_seconds=acct.storage_gb_seconds - base["gb_seconds"],
             peak_resident_gb=acct.peak_resident_gb,
         )
-        backend = eng.transfer.backend
+        if self.binding is None:
+            backend = eng.transfer.backend
+            usd_per_1k = cost_per_1k_requests(inputs, backend, max(1, len(lat)))
+        else:
+            # routed run: price this window's per-medium op deltas by each
+            # medium's own fee structure
+            route = self.binding.default_route
+            backend = route if isinstance(route, str) else route.describe()
+            media = _media_delta(base.get("media", {}),
+                                 self.binding.media_storage_ops())
+            usd_per_1k = routed_cost_per_1k_requests(
+                inputs, media, max(1, len(lat))
+            )
         return LoadReport(
             mode=mode,
             backend=backend,
@@ -259,7 +291,24 @@ class LoadGenerator:
             mean_s=float(np.mean(lat)) if lat else 0.0,
             latencies_s=lat,
             cost_inputs=inputs,
-            usd_per_1k_requests=cost_per_1k_requests(
-                inputs, backend, max(1, len(lat))
-            ),
+            usd_per_1k_requests=usd_per_1k,
         )
+
+
+def _media_delta(
+    before: Dict[str, StorageOps], after: Dict[str, StorageOps]
+) -> Dict[str, StorageOps]:
+    """Per-medium storage ops performed between two snapshots.  Peak resident
+    GB is a high-watermark, not a counter — the window inherits the run's."""
+    out: Dict[str, StorageOps] = {}
+    for medium, ops in after.items():
+        b = before.get(medium, StorageOps())
+        delta = StorageOps(
+            n_puts=ops.n_puts - b.n_puts,
+            n_gets=ops.n_gets - b.n_gets,
+            gb_seconds=ops.gb_seconds - b.gb_seconds,
+            peak_resident_gb=ops.peak_resident_gb,
+        )
+        if delta.n_puts or delta.n_gets or delta.gb_seconds:
+            out[medium] = delta
+    return out

@@ -37,8 +37,8 @@ from .errors import XDTRefInvalid
 
 _MAC_LEN = 16  # truncated HMAC-SHA256 tag
 _NONCE_LEN = 12
-_PAYLOAD_VER = 2
-_PAYLOAD_HEADER = struct.calcsize("<BqiqiBBBH")
+_PAYLOAD_VER = 3
+_PAYLOAD_HEADER = struct.calcsize("<BqiqiBBBHB")
 
 
 class ObjectDescriptor(NamedTuple):
@@ -62,6 +62,10 @@ class RefPayload(NamedTuple):
     buffer_id: int
     epoch: int  # producer instance generation; stale epoch => producer gone
     desc: ObjectDescriptor
+    #: transfer medium that stored the object ("" = the engine's default).
+    #: Inside the authenticated envelope so a routed engine can dispatch
+    #: ``get()`` per object without a side-channel id->backend map.
+    medium: str = ""
 
     def to_bytes(self) -> bytes:
         """Compact binary envelope (struct-packed, version-tagged).
@@ -75,27 +79,28 @@ class RefPayload(NamedTuple):
         prod = self.producer
         shape = d.shape
         dt = d.dtype.encode()
+        med = self.medium.encode()
         shard = (
             b"" if d.sharding is None
             else json.dumps(list(d.sharding), separators=(",", ":")).encode()
         )
         return b"".join((
             struct.pack(
-                "<BqiqiBBBH", _PAYLOAD_VER, self.buffer_id, self.epoch,
+                "<BqiqiBBBHB", _PAYLOAD_VER, self.buffer_id, self.epoch,
                 d.nbytes, d.n_retrievals, len(prod), len(shape), len(dt),
-                len(shard),
+                len(shard), len(med),
             ),
             struct.pack(f"<{len(prod)}q", *prod),
             struct.pack(f"<{len(shape)}q", *shape),
             dt,
             shard,
+            med,
         ))
 
     @staticmethod
     def from_bytes(raw: bytes) -> "RefPayload":
-        ver, buffer_id, epoch, nbytes, n_ret, n_prod, n_shape, n_dt, n_shard = (
-            struct.unpack_from("<BqiqiBBBH", raw)
-        )
+        (ver, buffer_id, epoch, nbytes, n_ret, n_prod, n_shape, n_dt, n_shard,
+         n_med) = struct.unpack_from("<BqiqiBBBHB", raw)
         if ver != _PAYLOAD_VER:
             raise ValueError(f"unknown payload version {ver}")
         off = _PAYLOAD_HEADER
@@ -109,6 +114,8 @@ class RefPayload(NamedTuple):
             None if n_shard == 0
             else tuple(json.loads(raw[off:off + n_shard].decode()))
         )
+        off += n_shard
+        medium = raw[off:off + n_med].decode()
         return RefPayload(
             producer=prod,
             buffer_id=buffer_id,
@@ -117,6 +124,7 @@ class RefPayload(NamedTuple):
                 shape=shape, dtype=dtype, nbytes=nbytes,
                 sharding=sharding, n_retrievals=n_ret,
             ),
+            medium=medium,
         )
 
 

@@ -47,7 +47,9 @@ class ScalingPolicy:
     keep_alive_s: float = 60.0        # idle instance lifetime (paper §4.1: >> data lifetime)
     cold_start_s: float = 0.5         # instance boot latency
     #: at the max_instances cap, model the activator's queue delay from the
-    #: chosen instance's excess depth (False restores the legacy wait=0 bug)
+    #: chosen instance's residual work — the modeled completion time of the
+    #: in-flight request whose finish frees this request's concurrency slot
+    #: (False restores the legacy wait=0 bug)
     queue_wait_model: bool = True
 
 
@@ -63,9 +65,15 @@ class Instance:
     #: bumped on every in_flight change / death; heap entries minted against
     #: an older version are stale and discarded on pop
     version: int = 0
-    #: steer timestamps of in-flight requests (FIFO): release() pairs them to
-    #: measure holding time for the deployment's service-time estimate
+    #: occupancy start times of in-flight requests (FIFO; queued requests
+    #: carry start = steer time + modeled wait): release() pairs them to
+    #: measure holding time, and the cap-path queue model reads them to
+    #: estimate this instance's residual work
     starts: deque = dataclasses.field(default_factory=deque)
+    #: EWMA of THIS instance's observed request holding times; the cap queue
+    #: model prefers it over the deployment-wide estimate (fresh instances
+    #: fall back to the fleet's)
+    service_ewma: float = 0.0
 
     @property
     def load(self) -> int:
@@ -101,7 +109,8 @@ class Deployment:
         self._warming: List[Tuple[float, int]] = []
         # (expire_at, iid, last_used): scheduled keep-alive expiries
         self._expiry: List[Tuple[float, int, float]] = []
-        # EWMA of observed request holding time; feeds the cap queue model
+        # fleet-wide EWMA of observed request holding time: the cap queue
+        # model's fallback estimate for instances with no history of their own
         self._service_ewma = 0.0
         self.stats = {
             "cold_starts": 0, "scale_downs": 0, "steered": 0,
@@ -235,7 +244,8 @@ class Deployment:
 
         Returns (instance, wait_s): wait_s > 0 models the activator buffering
         the request across a cold start and, at the ``max_instances`` cap,
-        the queue delay implied by the chosen instance's excess depth.
+        the queue delay implied by the chosen instance's residual work
+        (modeled completion times of the in-flight requests ahead of it).
         """
         now = self.clock()
         self._reap_expired(now)
@@ -250,19 +260,28 @@ class Deployment:
             self.stats["buffered"] += 1
         else:
             # cap reached: queue on the least-loaded instance.  The request
-            # waits out any residual boot plus the modeled queue drain — its
-            # position beyond the concurrency target times the deployment's
-            # observed per-request holding time (EWMA), per concurrency slot.
+            # waits until a concurrency slot frees — modeled per instance
+            # from its residual work: each in-flight request's occupancy
+            # start (queue wait already folded in at its own steer) plus one
+            # estimated holding time is its modeled completion; the new
+            # request's slot opens at the k-th earliest of those, where k is
+            # its queue position beyond the concurrency target.  Unlike the
+            # old deployment-wide excess*EWMA model, elapsed service on the
+            # requests ahead shortens the wait.
             inst = self._pop_least_loaded()
             wait = 0.0
             if pol.queue_wait_model:
                 wait = max(0.0, inst.ready_at - now)
-                excess = inst.in_flight - pol.target_concurrency + 1
-                if excess > 0 and self._service_ewma > 0.0:
-                    wait += (
-                        excess * self._service_ewma
-                        / max(1, pol.target_concurrency)
-                    )
+                # degenerate target_concurrency=0 makes every request excess;
+                # clamp the position to the requests actually in flight
+                k = min(inst.in_flight - pol.target_concurrency + 1,
+                        len(inst.starts))
+                if k > 0:
+                    hold = inst.service_ewma or self._service_ewma
+                    if hold > 0.0:
+                        # starts is FIFO with a shared holding estimate, so
+                        # the k-th earliest completion is starts[k-1] + hold
+                        wait = max(wait, inst.starts[k - 1] + hold - now, 0.0)
                 self.stats["queued"] += 1
         inst.in_flight += 1
         inst.version += 1
@@ -289,6 +308,10 @@ class Deployment:
                 self._service_ewma = (
                     held if self._service_ewma == 0.0
                     else 0.8 * self._service_ewma + 0.2 * held
+                )
+                inst.service_ewma = (
+                    held if inst.service_ewma == 0.0
+                    else 0.8 * inst.service_ewma + 0.2 * held
                 )
         if inst.in_flight > 0:
             inst.in_flight -= 1

@@ -38,6 +38,12 @@ and benchmarks report latency and $ per transfer without real AWS.  All
 accounting timestamps go through the injected :class:`~repro.core.clock`
 clock, so an engine owned by a virtual-time workflow engine integrates
 GB-seconds in simulated time.
+
+Per-object routing: ``put(obj, backend="s3")`` overrides the engine default
+for one object (the DAG layer's per-edge policies resolve the medium at send
+time); the chosen medium is sealed inside the ref so ``get`` dispatches to
+it directly, and per-medium op counts accumulate in ``media_acct`` so
+:func:`repro.core.cost.routed_workflow_cost` can price a mixed-backend run.
 """
 from __future__ import annotations
 
@@ -273,8 +279,11 @@ class _ServiceBackend(TransferBackend):
     def put(self, obj, n_retrievals, nbytes, block, timeout):
         host = _to_host(obj)
         key = self.engine.service.put(host, n_retrievals, nbytes)
-        self.engine.acct.n_storage_puts += 1
-        self.engine.acct.store(self.engine.clock(), nbytes / 1e9)
+        now = self.engine.clock()
+        gb = nbytes / 1e9
+        for acct in (self.engine.acct, self.engine._acct_for(self.name)):
+            acct.n_storage_puts += 1
+            acct.store(now, gb)
         return key, 0
 
     def get(self, payload):
@@ -286,11 +295,12 @@ class _ServiceBackend(TransferBackend):
         # jax op, or an explicit ``sharding=`` on ``TransferEngine.get``).
         obj = _to_host(host)
         freed = service.consume(payload.buffer_id)
-        self.engine.acct.n_storage_gets += 1
-        if freed:
-            self.engine.acct.free(
-                self.engine.clock(), payload.desc.nbytes / 1e9
-            )
+        now = self.engine.clock()
+        gb = payload.desc.nbytes / 1e9
+        for acct in (self.engine.acct, self.engine._acct_for(self.name)):
+            acct.n_storage_gets += 1
+            if freed:
+                acct.free(now, gb)
         return obj
 
 
@@ -404,13 +414,39 @@ class TransferEngine:
         )
         self.stats = TransferStats()
         self.acct = TransferAccounting()
+        #: per-medium accounting for through-storage ops, so a mixed-backend
+        #: (per-edge routed) run can be priced by each medium's fee structure
+        #: (:func:`repro.core.cost.routed_workflow_cost`).  Only media that
+        #: actually performed storage ops appear here.
+        self.media_acct: Dict[str, TransferAccounting] = {}
         # the simulated external service; pass one in to share it cluster-wide
         self.service = service if service is not None else ServiceStore(self.clock)
         self._backend = _BACKEND_REGISTRY[backend](self)
-        # nbytes -> modeled seconds: net constants are fixed per engine and
-        # workloads reuse a handful of object sizes, so the per-get model
-        # evaluation collapses to a dict hit
-        self._modeled_cache: Dict[int, float] = {}
+        # per-engine strategy instances: the default plus any media used via
+        # the per-call ``backend=`` override (all share registry/service/acct)
+        self._strategies: Dict[str, TransferBackend] = {backend: self._backend}
+        # (medium, nbytes) -> modeled seconds: net constants are fixed per
+        # engine and workloads reuse a handful of object sizes, so the
+        # per-get model evaluation collapses to a dict hit
+        self._modeled_cache: Dict[Tuple[str, int], float] = {}
+
+    # ----------------------------------------------------- medium dispatch
+    def _acct_for(self, medium: str) -> TransferAccounting:
+        acct = self.media_acct.get(medium)
+        if acct is None:
+            acct = self.media_acct[medium] = TransferAccounting()
+        return acct
+
+    def _strategy(self, medium: str) -> TransferBackend:
+        strat = self._strategies.get(medium)
+        if strat is None:
+            cls = _BACKEND_REGISTRY.get(medium)
+            if cls is None:
+                raise ValueError(
+                    f"backend must be one of {available_backends()}, got {medium!r}"
+                )
+            strat = self._strategies[medium] = cls(self)
+        return strat
 
     # ------------------------------------------------------------------ put
     def put(
@@ -420,14 +456,19 @@ class TransferEngine:
         *,
         block: bool = True,
         timeout: Optional[float] = None,
+        backend: Optional[str] = None,
     ) -> XDTRef:
         """Buffer ``obj`` (array or pytree) and mint a reference permitting
-        ``n_retrievals`` pulls."""
+        ``n_retrievals`` pulls.
+
+        ``backend`` overrides the engine's default medium for this one object
+        (per-edge routing): the chosen medium is sealed inside the ref, so
+        ``get`` dispatches to the same medium with no side-channel state.
+        """
+        strat = self._backend if backend is None else self._strategy(backend)
         nbytes = _nbytes(obj)
         t0 = time.perf_counter()
-        buffer_id, epoch = self._backend.put(
-            obj, n_retrievals, nbytes, block, timeout
-        )
+        buffer_id, epoch = strat.put(obj, n_retrievals, nbytes, block, timeout)
         self.stats.wall_seconds += time.perf_counter() - t0
         shape, dtype = _describe(obj)
         desc = ObjectDescriptor(
@@ -442,6 +483,7 @@ class TransferEngine:
                 buffer_id=buffer_id,
                 epoch=epoch,
                 desc=desc,
+                medium=strat.name,
             )
         )
 
@@ -450,8 +492,12 @@ class TransferEngine:
         """One retrieval.  Moves the object directly to the consumer sharding."""
         payload = self.minter.open(ref)  # raises XDTRefInvalid on forgery
         nbytes = payload.desc.nbytes
+        medium = payload.medium or self.backend
+        strat = (
+            self._backend if medium == self.backend else self._strategy(medium)
+        )
         t0 = time.perf_counter()
-        obj = self._backend.get(payload)
+        obj = strat.get(payload)
 
         if sharding is not None:
             obj = (
@@ -464,10 +510,11 @@ class TransferEngine:
         stats.transfers += 1
         stats.bytes_moved += nbytes
         stats.wall_seconds += time.perf_counter() - t0
-        modeled = self._modeled_cache.get(nbytes)
+        key = (medium, nbytes)
+        modeled = self._modeled_cache.get(key)
         if modeled is None:
-            modeled = self._modeled_cache[nbytes] = (
-                self._backend.modeled_seconds(nbytes, self.net)
+            modeled = self._modeled_cache[key] = (
+                strat.modeled_seconds(nbytes, self.net)
             )
         stats.modeled_seconds += modeled
         return obj
@@ -496,5 +543,6 @@ class TransferEngine:
         Objects in durable through-storage services (s3/elasticache/hybrid)
         survive by design — only instance-resident XDT/inline buffers die.
         """
-        self._backend.on_producer_death()
+        for strat in self._strategies.values():
+            strat.on_producer_death()
         return self.registry.kill_instance()

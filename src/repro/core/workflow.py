@@ -235,8 +235,13 @@ class Context:
         handle (or a list of handles) to fan-in."""
         return self._engine._spawn_invocation(fn_name, obj)
 
-    def put(self, obj: Any, n_retrievals: int = 1) -> XDTRef:
-        return self._engine.transfer.put(obj, n_retrievals)
+    def put(
+        self, obj: Any, n_retrievals: int = 1, backend: Optional[str] = None
+    ) -> XDTRef:
+        """Buffer ``obj``; ``backend`` overrides the engine's default medium
+        for this one object (per-edge routing — the ref remembers its
+        medium, so the consumer's ``get`` needs no extra argument)."""
+        return self._engine.transfer.put(obj, n_retrievals, backend=backend)
 
     def get(self, ref: XDTRef) -> Any:
         stats = self._engine.transfer.stats

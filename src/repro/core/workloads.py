@@ -1,22 +1,32 @@
-"""The paper's three real-world workloads (§6.5) on the calibrated simulator.
+"""The paper's three real-world workloads (§6.5), declared as WorkflowDAGs.
 
-Each workload is a blocking-invocation DAG (vSwarm-style: "a caller function
-waits for the callee to respond"), so a function's *billed* duration spans
-its whole subtree — which is why slow transfers inflate the compute bill too
+Each workload is a :class:`~repro.core.dag.WorkflowDAG` — stages with
+compute times, edges with per-object sizes and transfer policies — executed
+on the calibrated simulator by :func:`repro.core.dag.execute_on_cluster`.
+For a fixed single backend the DAG interpreter reproduces the legacy
+hand-rolled generators bit-for-bit (guarded differentially in
+``tests/test_dag.py``); the ``"hybrid"`` backend routes every ``"default"``
+edge through :data:`HYBRID_ROUTE` (inline under the activator payload cap,
+XDT otherwise, S3 for evictable producers), and the run is priced per
+medium via :func:`repro.core.cost.routed_workflow_cost`.
+
+Billing is vSwarm-style where declared blocking ("a caller function waits
+for the callee to respond"), so a function's *billed* duration spans its
+whole subtree — which is why slow transfers inflate the compute bill too
 (paper §6.5.1) and why Table 2's compute column differs per backend.
 
 Workload structure and the communication patterns they exercise:
 
 * **VID** (Video Analytics): streaming --fragment--> decoder --scatter
-  frames--> N recognizers.  1-1 + scatter.
+  frames--> N recognizers.  1-1 + scatter, blocking chain.
 * **SET** (Stacking Ensemble Training): driver broadcasts the training set
   (many small chunks — the S3-hostile access pattern) to K trainers, gathers
-  models + fold predictions.  broadcast + gather.
+  models + fold predictions.  broadcast + gather, orchestrated.
 * **MR** (MapReduce, AMPLab aggregation query): M mappers read input from S3
-  (never optimized — original data), shuffle M x R ephemeral slices through
-  the backend, R reducers aggregate.  The shuffle IS the gather pattern at
-  scale, and the reason MR's ephemeral bill dominates (Table 2: EC costs
-  772x XDT here).
+  (never optimized — original data; the ``input`` edge is pinned
+  ``route="s3"``), shuffle M x R ephemeral slices through the backend, R
+  reducers aggregate.  The shuffle IS the gather pattern at scale, and the
+  reason MR's ephemeral bill dominates (Table 2: EC costs 772x XDT here).
 
 Parameters are calibrated so the per-backend speedups and cost ratios land
 on the paper's Fig. 7 / Table 2 anchors (see tests/test_workloads.py).
@@ -24,12 +34,29 @@ on the paper's Fig. 7 / Table 2 anchors (see tests/test_workloads.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Generator, List, Tuple
+from typing import Any, Callable, Dict, Optional, Union
 
-from .cluster import DEFAULT_NET, NetConstants, ServerlessCluster
-from .cost import CostBreakdown, WorkflowCostInputs, workflow_cost
+from .cluster import DEFAULT_NET, NetConstants
+from .cost import CostBreakdown, WorkflowCostInputs
+from .dag import (
+    Edge,
+    RoutePolicy,
+    SizeRoute,
+    Stage,
+    WorkflowDAG,
+    execute_on_cluster,
+)
 
+#: the paper's single-backend configurations
 BACKENDS = ("s3", "elasticache", "xdt")
+#: ... plus the per-edge-routed configuration (Fig 7 / Table 2 extra column)
+ROUTED_BACKENDS = BACKENDS + ("hybrid",)
+
+#: The default per-edge policy behind ``backend="hybrid"``: objects that fit
+#: the activator's inline payload cap ride the control message (no storage
+#: bill, one fewer hop), bulk objects move producer->consumer over XDT, and
+#: edges whose producer is marked evictable fall back to durable S3.
+HYBRID_ROUTE = SizeRoute(inline_under=DEFAULT_NET.inline_limit)
 
 
 @dataclasses.dataclass
@@ -39,84 +66,11 @@ class WorkloadResult:
     breakdown: Dict[str, float]          # phase -> seconds (critical path)
     cost: CostBreakdown
     inputs: WorkflowCostInputs
-
-
-class _Billing:
-    """Tracks per-invocation billed spans (blocking-chain semantics)."""
-
-    def __init__(self, sim):
-        self.sim = sim
-        self.spans: List[Tuple[str, float, float]] = []
-        self._open: Dict[int, Tuple[str, float]] = {}
-        self._next = 0
-
-    def start(self, name: str) -> int:
-        self._next += 1
-        self._open[self._next] = (name, self.sim.now)
-        return self._next
-
-    def stop(self, token: int) -> None:
-        name, t0 = self._open.pop(token)
-        self.spans.append((name, t0, self.sim.now))
-
-    @property
-    def n_invocations(self) -> int:
-        return len(self.spans) + len(self._open)
-
-    @property
-    def billed_s(self) -> float:
-        return sum(t1 - t0 for _, t0, t1 in self.spans)
-
-
-def _mk(backend: str, n_nodes: int, net, seed, deterministic):
-    cluster = ServerlessCluster(n_nodes, net, seed=seed, deterministic=deterministic)
-    return cluster, cluster.sim, _Billing(cluster.sim)
-
-
-def _put_get(cluster, backend, src, dst, nbytes) -> Generator:
-    """One ephemeral object src -> dst through the chosen backend."""
-    if backend in ("s3", "elasticache"):
-        yield cluster.storage_put(backend, src, nbytes)
-        yield cluster.invoke_ctrl()
-        yield cluster.storage_get(backend, dst, nbytes)
-    else:  # xdt: invoke carries the ref, consumer pulls
-        yield cluster.invoke_ctrl()
-        yield cluster.xdt_pull(src, nbytes)
-
-
-def _chunked_get(cluster, backend, src, dst, n_chunks, chunk_bytes, concurrency):
-    """Fetch ``n_chunks`` small objects with bounded client concurrency —
-    the op-latency-bound access pattern of chunked datasets (SET)."""
-    per_wave = max(1, concurrency)
-    waves = (n_chunks + per_wave - 1) // per_wave
-
-    def one_wave(k):
-        evs = []
-        for _ in range(min(per_wave, n_chunks - k * per_wave)):
-            if backend in ("s3", "elasticache"):
-                evs.append(cluster.storage_get(backend, dst, chunk_bytes))
-            else:
-                evs.append(cluster.xdt_pull(src, chunk_bytes))
-        return cluster.sim.all_of(evs)
-
-    for k in range(waves):
-        yield one_wave(k)
-
-
-def _seq_puts(cluster, backend, src, n, nbytes):
-    """n sequential storage puts (sync SDK loop, the vSwarm access pattern)."""
-    for _ in range(n):
-        yield cluster.storage_put(backend, src, nbytes)
-
-
-def _seq_gets(cluster, backend, dst, n, nbytes):
-    for _ in range(n):
-        yield cluster.storage_get(backend, dst, nbytes)
-
-
-def _seq_pulls(cluster, producers, nbytes):
-    for p in producers:
-        yield cluster.xdt_pull(p, nbytes)
+    #: per-edge attribution: medium, objects/bytes moved, transfer seconds,
+    #: and this edge's share of the storage bill (micro-USD)
+    edges: Optional[Dict[str, Dict[str, Any]]] = None
+    #: edge label -> medium summary ("s3", "xdt", "inline+xdt", ...)
+    edge_media: Optional[Dict[str, str]] = None
 
 
 # ---------------------------------------------------------------------------
@@ -128,48 +82,30 @@ VID_FRAME_BATCH = 3 << 20        # decoded frames, decoder -> each recognizer
 VID_FAN = 4
 VID_COMPUTE = {"streaming": 0.05, "decoder": 0.35, "recognition": 0.40}
 
+VID_DAG = WorkflowDAG(
+    "vid",
+    stages=[
+        Stage("streaming", compute_s=VID_COMPUTE["streaming"]),
+        Stage("decoder", compute_s=VID_COMPUTE["decoder"]),
+        Stage("recognition", fan=VID_FAN, compute_s=VID_COMPUTE["recognition"]),
+    ],
+    edges=[
+        Edge("streaming", "decoder", VID_FRAGMENT, label="fragment",
+             handoff="sync"),
+        Edge("decoder", "recognition", VID_FRAME_BATCH, label="frames",
+             handoff="sync"),
+    ],
+)
 
-def run_vid(backend: str, net: NetConstants = DEFAULT_NET, seed: int = 0,
-            deterministic: bool = False) -> WorkloadResult:
-    # nodes: 0 streaming, 1 decoder, 2.. recognizers
-    cluster, sim, bill = _mk(backend, 2 + VID_FAN, net, seed, deterministic)
-    marks: Dict[str, float] = {}
 
-    def recognition(i):
-        tok = bill.start("recognition")
-        yield from _put_get(cluster, backend, 1, 2 + i, VID_FRAME_BATCH)
-        marks.setdefault("frames_done", sim.now)
-        marks["frames_done"] = max(marks["frames_done"], sim.now)
-        yield sim.timeout(VID_COMPUTE["recognition"])
-        bill.stop(tok)
-
-    def decoder():
-        tok = bill.start("decoder")
-        yield from _put_get(cluster, backend, 0, 1, VID_FRAGMENT)
-        marks["fragment_done"] = sim.now
-        yield sim.timeout(VID_COMPUTE["decoder"])
-        marks["decode_done"] = sim.now
-        procs = [sim.spawn(recognition(i)).done for i in range(VID_FAN)]
-        yield sim.all_of(procs)          # blocking scatter
-        bill.stop(tok)
-
-    def streaming():
-        tok = bill.start("streaming")
-        yield sim.timeout(VID_COMPUTE["streaming"])
-        yield sim.spawn(decoder()).done  # blocking call
-        bill.stop(tok)
-
-    root = sim.spawn(streaming())
-    sim.run()
-    assert root.done.fired
-    breakdown = {
+def _vid_breakdown(marks: Dict[str, float], total: float) -> Dict[str, float]:
+    return {
         "streaming_compute": VID_COMPUTE["streaming"],
-        "fragment_transfer": marks["fragment_done"] - VID_COMPUTE["streaming"],
+        "fragment_transfer": marks["edge:fragment"] - VID_COMPUTE["streaming"],
         "decode_compute": VID_COMPUTE["decoder"],
-        "frames_transfer": marks["frames_done"] - marks["decode_done"],
-        "recognition_compute": sim.now - marks["frames_done"],
+        "frames_transfer": marks["edge:frames"] - marks["compute:decoder"],
+        "recognition_compute": total - marks["edge:frames"],
     }
-    return _result(backend, cluster, sim, bill, breakdown)
 
 
 # ---------------------------------------------------------------------------
@@ -183,61 +119,32 @@ SET_MODEL_BYTES = 1 << 20         # trained model + fold predictions
 SET_CONCURRENCY = 1               # sync SDK: sequential gets per trainer
 SET_COMPUTE = {"driver": 0.05, "trainer": 0.10, "reconcile": 0.10}
 
+SET_DAG = WorkflowDAG(
+    "set",
+    stages=[
+        Stage("driver", compute_s=SET_COMPUTE["driver"],
+              gather_compute_s=SET_COMPUTE["reconcile"]),
+        Stage("trainer", fan=SET_K, compute_s=SET_COMPUTE["trainer"],
+              blocking=False),
+    ],
+    edges=[
+        Edge("driver", "trainer", SET_CHUNK_BYTES, label="dataset",
+             handoff="staged", fanout="broadcast", n_objects=SET_CHUNKS,
+             concurrency=SET_CONCURRENCY),
+        Edge("trainer", "driver", SET_MODEL_BYTES, label="models",
+             handoff="staged", fanout="partition", concurrency=0),
+    ],
+)
 
-def run_set(backend: str, net: NetConstants = DEFAULT_NET, seed: int = 0,
-            deterministic: bool = False) -> WorkloadResult:
-    # nodes: 0 driver, 1.. trainers
-    cluster, sim, bill = _mk(backend, 1 + SET_K, net, seed, deterministic)
-    marks: Dict[str, float] = {"bcast_done": 0.0, "gather_start": 0.0}
 
-    def trainer(i):
-        tok = bill.start("trainer")
-        # broadcast leg: pull the chunked dataset (same objects for all)
-        yield from _chunked_get(
-            cluster, backend, 0, 1 + i, SET_CHUNKS, SET_CHUNK_BYTES,
-            SET_CONCURRENCY,
-        )
-        marks["bcast_done"] = max(marks["bcast_done"], sim.now)
-        yield sim.timeout(SET_COMPUTE["trainer"])
-        # gather leg: publish model + fold predictions
-        if backend in ("s3", "elasticache"):
-            yield cluster.storage_put(backend, 1 + i, SET_MODEL_BYTES)
-        bill.stop(tok)
-
-    def driver():
-        # Orchestrated (Step-Functions-style) workflow: the driver bills its
-        # own compute + transfers, NOT the children's training time.
-        tok = bill.start("driver")
-        yield sim.timeout(SET_COMPUTE["driver"])
-        if backend in ("s3", "elasticache"):
-            # dataset staged into the service once (chunk by chunk)
-            yield from _seq_puts(cluster, backend, 0, SET_CHUNKS, SET_CHUNK_BYTES)
-        bill.stop(tok)
-        done = [sim.spawn(trainer(i)).done for i in range(SET_K)]
-        yield sim.all_of(done)           # orchestrator wait (not billed)
-        tok = bill.start("driver_gather")
-        marks["gather_start"] = sim.now
-        # gather the K models/predictions
-        if backend in ("s3", "elasticache"):
-            evs = [cluster.storage_get(backend, 0, SET_MODEL_BYTES) for _ in range(SET_K)]
-        else:
-            evs = [cluster.xdt_pull(1 + i, SET_MODEL_BYTES) for i in range(SET_K)]
-        yield sim.all_of(evs)
-        marks["gather_done"] = sim.now
-        yield sim.timeout(SET_COMPUTE["reconcile"])
-        bill.stop(tok)
-
-    root = sim.spawn(driver())
-    sim.run()
-    assert root.done.fired
-    breakdown = {
+def _set_breakdown(marks: Dict[str, float], total: float) -> Dict[str, float]:
+    return {
         "driver_compute": SET_COMPUTE["driver"],
-        "broadcast_dataset": marks["bcast_done"] - SET_COMPUTE["driver"],
-        "train_compute": marks["gather_start"] - marks["bcast_done"],
+        "broadcast_dataset": marks["edge:dataset"] - SET_COMPUTE["driver"],
+        "train_compute": marks["gather_start"] - marks["edge:dataset"],
         "gather_models": marks["gather_done"] - marks["gather_start"],
         "reconcile_compute": SET_COMPUTE["reconcile"],
     }
-    return _result(backend, cluster, sim, bill, breakdown)
 
 
 # ---------------------------------------------------------------------------
@@ -250,109 +157,96 @@ MR_INPUT_BYTES = 240 << 20        # per-mapper input (always via S3)
 MR_SLICE_BYTES = 8 << 20          # per (mapper, reducer) shuffle slice
 MR_COMPUTE = {"driver": 0.02, "mapper": 0.55, "reducer": 0.55}
 
+MR_DAG = WorkflowDAG(
+    "mr",
+    stages=[
+        Stage("driver", compute_s=MR_COMPUTE["driver"]),
+        Stage("mapper", fan=MR_M, compute_s=MR_COMPUTE["mapper"],
+              blocking=False),
+        Stage("reducer", fan=MR_R, compute_s=MR_COMPUTE["reducer"],
+              blocking=False),
+    ],
+    edges=[
+        # original input is NEVER optimized by XDT: pinned to S3
+        Edge(None, "mapper", MR_INPUT_BYTES, label="input", route="s3",
+             handoff="external"),
+        Edge("mapper", "reducer", MR_SLICE_BYTES, label="shuffle",
+             handoff="staged", fanout="partition", concurrency=1),
+    ],
+)
 
-def run_mr(backend: str, net: NetConstants = DEFAULT_NET, seed: int = 0,
-           deterministic: bool = False) -> WorkloadResult:
-    # nodes: 0 driver, 1..M mappers, M+1..M+R reducers
-    cluster, sim, bill = _mk(backend, 1 + MR_M + MR_R, net, seed, deterministic)
-    marks: Dict[str, float] = {"input_done": 0.0, "map_done": 0.0,
-                               "shuffle_get_done": 0.0}
 
-    def mapper(i):
-        tok = bill.start("mapper")
-        node = 1 + i
-        # original input ALWAYS comes from S3 (paper: not optimized by XDT)
-        yield cluster.storage_get("s3", node, MR_INPUT_BYTES)
-        marks["input_done"] = max(marks["input_done"], sim.now)
-        yield sim.timeout(MR_COMPUTE["mapper"])
-        # shuffle put: R slices for the reducers (sync SDK: sequential)
-        if backend in ("s3", "elasticache"):
-            yield from _seq_puts(cluster, backend, node, MR_R, MR_SLICE_BYTES)
-        marks["map_done"] = max(marks["map_done"], sim.now)
-        bill.stop(tok)
-
-    def reducer(j):
-        tok = bill.start("reducer")
-        node = 1 + MR_M + j
-        # shuffle get: one slice from every mapper (sync SDK: sequential)
-        if backend in ("s3", "elasticache"):
-            yield from _seq_gets(cluster, backend, node, MR_M, MR_SLICE_BYTES)
-        else:
-            yield from _seq_pulls(cluster, [1 + i for i in range(MR_M)],
-                                  MR_SLICE_BYTES)
-        marks["shuffle_get_done"] = max(marks["shuffle_get_done"], sim.now)
-        yield sim.timeout(MR_COMPUTE["reducer"])
-        bill.stop(tok)      # aggregation output is tiny -> inline response
-
-    def driver():
-        # orchestrated workflow: the driver's wait on children is not billed
-        tok = bill.start("driver")
-        yield sim.timeout(MR_COMPUTE["driver"])
-        bill.stop(tok)
-        yield sim.all_of([sim.spawn(mapper(i)).done for i in range(MR_M)])
-        yield sim.all_of([sim.spawn(reducer(j)).done for j in range(MR_R)])
-
-    root = sim.spawn(driver())
-    sim.run()
-    assert root.done.fired
-    breakdown = {
-        "input_read_s3": marks["input_done"] - MR_COMPUTE["driver"],
+def _mr_breakdown(marks: Dict[str, float], total: float) -> Dict[str, float]:
+    return {
+        "input_read_s3": marks["edge:input"] - MR_COMPUTE["driver"],
         "map_compute": MR_COMPUTE["mapper"],
-        "mapper_put": marks["map_done"] - marks["input_done"] - MR_COMPUTE["mapper"],
-        "reducer_get": marks["shuffle_get_done"] - marks["map_done"],
-        "reduce_compute": sim.now - marks["shuffle_get_done"],
+        "mapper_put": (
+            marks["staged:shuffle"] - marks["edge:input"] - MR_COMPUTE["mapper"]
+        ),
+        "reducer_get": marks["edge:shuffle"] - marks["staged:shuffle"],
+        "reduce_compute": total - marks["edge:shuffle"],
     }
-    return _result(backend, cluster, sim, bill, breakdown)
 
 
 # ---------------------------------------------------------------------------
-# shared tail: cost assembly
+# shared tail: DAG execution + result assembly
 # ---------------------------------------------------------------------------
 
 
-def _result(backend, cluster, sim, bill, breakdown) -> WorkloadResult:
-    acct = cluster.accounting(backend if backend != "xdt" else "s3")
-    # MR reads input via S3 regardless of the ephemeral backend; merge both
-    # accountings so the S3 request fees always appear.
-    s3_acct = cluster.accounting("s3")
-    eph_acct = cluster.accounting(backend) if backend != "s3" else s3_acct
-    eph_acct.touch(sim.now)
-    inputs = WorkflowCostInputs(
-        n_function_invocations=bill.n_invocations,
-        billed_duration_s=bill.billed_s,
-        n_storage_puts=eph_acct.n_storage_puts,
-        n_storage_gets=eph_acct.n_storage_gets,
-        storage_gb_seconds=eph_acct.storage_gb_seconds,
-        peak_resident_gb=eph_acct.peak_resident_gb,
+def _run_workload(
+    dag: WorkflowDAG,
+    breakdown_fn: Callable[[Dict[str, float], float], Dict[str, float]],
+    backend: Union[str, RoutePolicy],
+    net: NetConstants,
+    seed: int,
+    deterministic: bool,
+) -> WorkloadResult:
+    if backend == "hybrid":
+        route: Union[str, RoutePolicy] = HYBRID_ROUTE
+        label = "hybrid"
+    elif isinstance(backend, RoutePolicy):
+        route, label = backend, backend.describe()
+    else:
+        route = label = backend
+    run = execute_on_cluster(
+        dag, route, net=net, seed=seed, deterministic=deterministic
     )
-    cost = workflow_cost(inputs, backend)
-    if backend != "s3" and s3_acct is not eph_acct and (
-        s3_acct.n_storage_puts or s3_acct.n_storage_gets
-    ):
-        # add the non-optimizable S3 input/output fees on top
-        from .cost import s3_storage_cost
-
-        s3_acct.touch(sim.now)
-        extra = s3_storage_cost(
-            s3_acct.n_storage_puts, s3_acct.n_storage_gets,
-            s3_acct.storage_gb_seconds,
-        )
-        cost = CostBreakdown(cost.compute, cost.storage + extra)
     return WorkloadResult(
-        backend=backend,
-        latency_s=sim.now,
-        breakdown=breakdown,
-        cost=cost,
-        inputs=inputs,
+        backend=label,
+        latency_s=run.latency_s,
+        breakdown=breakdown_fn(run.marks, run.latency_s),
+        cost=run.cost(),
+        inputs=run.cost_inputs(),
+        edges=run.edge_cost_rows(),
+        edge_media=run.edge_media,
     )
+
+
+def run_vid(backend: Union[str, RoutePolicy], net: NetConstants = DEFAULT_NET,
+            seed: int = 0, deterministic: bool = False) -> WorkloadResult:
+    return _run_workload(VID_DAG, _vid_breakdown, backend, net, seed,
+                         deterministic)
+
+
+def run_set(backend: Union[str, RoutePolicy], net: NetConstants = DEFAULT_NET,
+            seed: int = 0, deterministic: bool = False) -> WorkloadResult:
+    return _run_workload(SET_DAG, _set_breakdown, backend, net, seed,
+                         deterministic)
+
+
+def run_mr(backend: Union[str, RoutePolicy], net: NetConstants = DEFAULT_NET,
+           seed: int = 0, deterministic: bool = False) -> WorkloadResult:
+    return _run_workload(MR_DAG, _mr_breakdown, backend, net, seed,
+                         deterministic)
 
 
 WORKLOADS = {"vid": run_vid, "set": run_set, "mr": run_mr}
+DAGS = {"vid": VID_DAG, "set": SET_DAG, "mr": MR_DAG}
 
 
-def run_all(deterministic: bool = True, seed: int = 0):
+def run_all(deterministic: bool = True, seed: int = 0, backends=BACKENDS):
     """{workload: {backend: WorkloadResult}} across the full matrix."""
     return {
-        name: {b: fn(b, seed=seed, deterministic=deterministic) for b in BACKENDS}
+        name: {b: fn(b, seed=seed, deterministic=deterministic) for b in backends}
         for name, fn in WORKLOADS.items()
     }

@@ -241,6 +241,63 @@ def test_saturated_cap_models_queue_wait_from_depth():
     assert d.stats["queued"] == 2
 
 
+def test_residual_work_shrinks_as_service_elapses():
+    """Per-instance residual-work model: a request queued behind one that is
+    already half-served waits only the REMAINING holding time.  The old
+    deployment-wide excess*EWMA model charged the full holding time no matter
+    how long the request ahead had been running."""
+    clock = FakeClock()
+    d = Deployment("f", ScalingPolicy(min_instances=1, max_instances=1,
+                                      target_concurrency=1, cold_start_s=0.0),
+                   clock=clock)
+    for _ in range(2):                 # train the holding estimate to ~2s
+        inst, _ = d.steer()
+        clock.advance(2.0)
+        d.release(inst.instance_id)
+    a, _ = d.steer()                   # occupies the only instance at t
+    clock.advance(1.5)                 # a has been in service for 1.5s
+    _, wait = d.steer()                # queued behind a
+    assert wait == pytest.approx(0.5)  # only a's residual 2.0 - 1.5 remains
+
+
+def test_cap_queue_wait_prefers_instance_local_holding_estimate():
+    """The chosen instance's own holding-time EWMA drives its queue model;
+    the fleet-wide estimate is only a fallback for fresh instances."""
+    clock = FakeClock()
+    d = Deployment("f", ScalingPolicy(min_instances=2, max_instances=2,
+                                      target_concurrency=1, cold_start_s=0.0),
+                   clock=clock)
+    # distinct service times per instance: 1s on one, 5s on the other
+    (a, _), (b, _) = d.steer(), d.steer()
+    clock.advance(1.0)
+    d.release(a.instance_id)
+    clock.advance(4.0)
+    d.release(b.instance_id)
+    assert a.service_ewma == pytest.approx(1.0)
+    assert b.service_ewma == pytest.approx(5.0)
+    # saturate both, then queue one more: it lands on the least-loaded (tie ->
+    # lowest id = a) and its wait reflects THAT instance's 1s holding time
+    d.steer(), d.steer()
+    inst, wait = d.steer()
+    assert inst.instance_id == a.instance_id
+    assert wait == pytest.approx(1.0)
+
+
+def test_degenerate_zero_target_concurrency_does_not_crash():
+    """target_concurrency=0 makes every request excess; the queue position
+    must clamp to the requests actually in flight instead of indexing past
+    the starts deque."""
+    clock = FakeClock()
+    d = Deployment("f", ScalingPolicy(min_instances=1, max_instances=1,
+                                      target_concurrency=0, cold_start_s=0.0),
+                   clock=clock)
+    inst, _ = d.steer()
+    clock.advance(2.0)
+    d.release(inst.instance_id)
+    waits = [d.steer()[1] for _ in range(3)]
+    assert waits == sorted(waits)      # deeper queue, no shorter wait
+
+
 def test_queue_wait_model_off_restores_legacy_zero_wait():
     clock = FakeClock()
     d = Deployment("f", ScalingPolicy(min_instances=1, max_instances=1,
