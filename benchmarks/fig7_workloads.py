@@ -10,10 +10,15 @@ with every ``route="default"`` edge resolved per object by
 payload cap on sync handoffs, XDT otherwise, S3 for evictable producers) and
 prices each edge by the medium it actually used.
 
+The ``adaptive`` column executes the DAG with a fresh
+:class:`~repro.core.dag.AdaptiveRoute` per run: routing starts on the static
+fallback and converges onto the observed per-medium $/GB + p99 feed as the
+run's own transfers populate the telemetry hub.
+
 ``--smoke`` is the seconds-long CI subset: 2 seeds, and a hard gate that the
-hybrid configuration is never costlier than the best single backend on any
-workload (per-edge routing must dominate, or the router is mis-ranking
-media).
+routed configurations (hybrid AND adaptive) are never costlier than the best
+single backend on any workload (per-edge routing must dominate, or the
+router is mis-ranking media).
 """
 from __future__ import annotations
 
@@ -47,26 +52,34 @@ def run(n_seeds: int = 10, backends=ROUTED_BACKENDS):
     return out
 
 
+#: routed configurations the dominance gate applies to: each must beat the
+#: best fixed single backend on cost (hybrid routes from static edge facts,
+#: adaptive from the observed telemetry feed)
+ROUTED_COLUMNS = ("hybrid", "adaptive")
+
+
 def check_hybrid_dominates(out) -> None:
-    """CI gate: on every workload, hybrid total cost <= the best single
-    backend's, and hybrid latency <= the fastest single backend's + 5%.
-    Raises (not assert: the gate must survive ``python -O``)."""
+    """CI gate: on every workload, each routed configuration's total cost
+    <= the best single backend's, and its latency <= the fastest single
+    backend's + 5%.  Raises (not assert: the gate must survive
+    ``python -O``)."""
     for name, agg in out.items():
         best_cost = min(agg[b]["total_uUSD"] for b in BACKENDS)
-        hybrid = agg["hybrid"]["total_uUSD"]
-        if hybrid > best_cost * (1 + 1e-9):
-            raise RuntimeError(
-                f"{name}: hybrid costs {hybrid:.1f}uUSD > best single "
-                f"backend {best_cost:.1f}uUSD — per-edge routing should "
-                f"dominate"
-            )
         best_lat = min(agg[b]["latency_s"] for b in BACKENDS)
-        hyb_lat = agg["hybrid"]["latency_s"]
-        if hyb_lat > best_lat * 1.05:
-            raise RuntimeError(
-                f"{name}: hybrid latency {hyb_lat:.3f}s > best single "
-                f"{best_lat:.3f}s + 5%"
-            )
+        for col in ROUTED_COLUMNS:
+            routed = agg[col]["total_uUSD"]
+            if routed > best_cost * (1 + 1e-9):
+                raise RuntimeError(
+                    f"{name}: {col} costs {routed:.1f}uUSD > best single "
+                    f"backend {best_cost:.1f}uUSD — per-edge routing should "
+                    f"dominate"
+                )
+            routed_lat = agg[col]["latency_s"]
+            if routed_lat > best_lat * 1.05:
+                raise RuntimeError(
+                    f"{name}: {col} latency {routed_lat:.3f}s > best single "
+                    f"{best_lat:.3f}s + 5%"
+                )
 
 
 def main(argv=None):
@@ -86,7 +99,7 @@ def main(argv=None):
                 note = f"  -> XDT speedup {su:.2f}x (paper {p_s3}x)"
             elif b == "elasticache":
                 note = f"  -> XDT speedup {su:.2f}x (paper {p_ec}x)"
-            elif b == "hybrid":
+            elif b in ROUTED_COLUMNS:
                 media = ", ".join(
                     f"{e}:{m}" for e, m in d["edge_media"].items()
                 )

@@ -6,13 +6,16 @@ benchmark and the roofline.
 Every harness runs through the unified substrate: fig5/fig6/fig2 drive the
 calibrated cluster simulator, fig7/table2 interpret the declarative
 :class:`~repro.core.dag.WorkflowDAG` workloads (including the per-edge-routed
-``hybrid`` column), fig8 sweeps the event-driven engine — ``fig8dag`` compiles
-the same DAGs onto it via ``dag.bind`` — and ``bench`` tracks the substrate's
+``hybrid``/``adaptive`` columns), fig8 sweeps the event-driven engine —
+``fig8dag`` compiles the same DAGs onto it via ``dag.bind`` — fig9 sweeps
+autoscaler policy x offered load, and ``bench`` tracks the substrate's
 events/sec trajectory.
 
 ``--smoke`` swaps each harness for its seconds-long CI subset (fig7's smoke
-additionally gates hybrid-dominates; bench additionally gates events/sec
-regression).  Writes JSON artifacts under results/ and prints each harness's
+additionally gates routed-dominates; fig9 gates predictive-vs-legacy cold
+starts; bench additionally gates events/sec regression).  A harness that
+fails — by raising OR by returning a nonzero exit code — makes run.py exit
+nonzero.  Writes JSON artifacts under results/ and prints each harness's
 table.  The roofline section reads results/dryrun.json (produced by
 ``python -m repro.launch.dryrun``); it is skipped with a notice if the sweep
 has not been recorded yet.  The jax hillclimb harness
@@ -34,6 +37,7 @@ from . import (
     fig6_collectives,
     fig7_workloads,
     fig8_throughput,
+    fig9_autoscaler,
     table2_cost,
 )
 from .common import RESULTS_DIR
@@ -48,6 +52,8 @@ HARNESSES = {
              lambda: fig8_throughput.main(["--quick"])),
     "fig8dag": (lambda: fig8_throughput.main(["--dag"]),
                 lambda: fig8_throughput.main(["--dag", "--quick"])),
+    "fig9": (lambda: fig9_autoscaler.main([]),
+             lambda: fig9_autoscaler.main(["--smoke"])),
     "table2": (table2_cost.main, table2_cost.main),
     "bench": (lambda: bench_engine.main([]),
               lambda: bench_engine.main(["--smoke", "--check"])),
@@ -86,7 +92,13 @@ def main():
                 run_roofline()
             else:
                 full, smoke = HARNESSES[name]
-                (smoke if args.smoke else full)()
+                rc = (smoke if args.smoke else full)()
+                # harnesses that gate via exit code (bench --check) return a
+                # nonzero int instead of raising: treat it as a failure too,
+                # or a tripped gate leaves run.py exiting 0 and CI's --smoke
+                # pass is vacuous
+                if isinstance(rc, int) and rc != 0:
+                    raise RuntimeError(f"harness exited {rc}")
             print(f"[benchmarks.run] {name} done in {time.time()-t0:.1f}s")
         except Exception as e:
             failures.append(name)

@@ -10,8 +10,13 @@ Layers
                      medium (xdt / inline / s3 / elasticache / hybrid) is a
                      TransferBackend strategy class over one ServiceStore.
 * :mod:`patterns`  — 1-1 / scatter / gather / broadcast as mesh collectives.
+* :mod:`telemetry` — shared observe-side substrate: per-deployment arrival/
+                     concurrency/cold-start windows and per-medium
+                     latency/cost/bytes feeds on the injected clock.
 * :mod:`scheduler` — activator/autoscaler control plane (placement first,
-                     data second — the XDT separation).
+                     data second — the XDT separation); scale-up strategies
+                     are pluggable AutoscalerPolicy classes (concurrency /
+                     rps / predictive).
 * :mod:`workflow`  — event-driven function-DAG engine: concurrent requests,
                      overlapping fan-out/fan-in, at-most-once semantics,
                      all on the simulator's virtual clock.
@@ -42,12 +47,15 @@ from .cost import (
     cost_per_1k_requests,
     elasticache_storage_cost,
     lambda_compute_cost,
+    marginal_pull_fee_usd,
+    transfer_fee_usd,
     routed_cost_per_1k_requests,
     routed_workflow_cost,
     s3_storage_cost,
     workflow_cost,
 )
 from .dag import (
+    AdaptiveRoute,
     DagBinding,
     Edge,
     FixedRoute,
@@ -90,7 +98,24 @@ from .workloads import (
     run_set,
     run_vid,
 )
-from .scheduler import ControlPlane, Deployment, Instance, ScalingPolicy
+from .scheduler import (
+    AutoscalerPolicy,
+    ConcurrencyPolicy,
+    ControlPlane,
+    Deployment,
+    Instance,
+    PredictivePolicy,
+    RpsPolicy,
+    ScalingPolicy,
+    available_autoscalers,
+    make_autoscaler,
+    register_autoscaler,
+)
+from .telemetry import (
+    DeploymentTelemetry,
+    MediumTelemetry,
+    TelemetryHub,
+)
 from .transfer import (
     ServiceStore,
     TransferBackend,

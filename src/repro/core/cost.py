@@ -147,6 +147,64 @@ def storage_cost_for(backend: str, ops: StorageOps) -> float:
     raise ValueError(f"unknown backend {backend!r}")
 
 
+#: ElastiCache capacity must exist for ≥ 1 hour: the marginal provisioning
+#: cost of putting one more ephemeral object through the cache.
+_EC_USD_PER_BYTE = EC_GB_HOUR_USD / 1e9
+#: hybrid's cache/object-storage split point mirrors NetConstants — kept as
+#: a plain constant to avoid a cluster import from the pricing layer
+_HYBRID_SMALL_CUTOFF = 1 << 20
+
+
+def transfer_fee_usd(medium: str, nbytes: int, n_gets: int = 1) -> float:
+    """Estimated *marginal* storage fee of moving one object through a medium.
+
+    This is the price-sheet prior the telemetry substrate feeds per-medium
+    $/GB observations with (and :class:`repro.core.dag.AdaptiveRoute` falls
+    back to for media it has not observed yet): S3 pays per-request fees,
+    ElastiCache pays provisioned capacity for the object's bytes (hour
+    granularity), XDT/inline pay nothing.  Aggregate run bills still come
+    from :func:`routed_workflow_cost` — this helper never replaces them.
+    Media without a published fee structure (custom registered backends)
+    are treated as compute-only, like XDT.
+    """
+    if medium == "s3":
+        return S3_PUT_USD + n_gets * S3_GET_USD
+    if medium == "elasticache":
+        return nbytes * _EC_USD_PER_BYTE
+    if medium == "hybrid":
+        if nbytes < _HYBRID_SMALL_CUTOFF:
+            return nbytes * _EC_USD_PER_BYTE
+        return S3_PUT_USD + n_gets * S3_GET_USD
+    return 0.0
+
+
+def marginal_pull_fee_usd(
+    medium: str, nbytes: int, retrievals: int = 1, external: bool = False
+) -> float:
+    """Marginal storage fee of ONE pull of an object permitting
+    ``retrievals`` pulls: the pull's own request fee plus its share of the
+    object's one-time put/capacity fee.  ``external`` marks original input
+    the workflow never put (request fee only).
+
+    This is the single definition of the observed-$/pull the telemetry
+    substrate is fed with — every feed site (``TransferEngine.get``, both
+    DAG lowerings) must price through here so :class:`AdaptiveRoute` scores
+    every medium by one consistent rule.  Request-fee media (S3) attribute
+    exactly what :func:`routed_workflow_cost` bills; capacity-billed media
+    (ElastiCache) are attributed *conservatively* — each object's full
+    bytes, as if every in-flight object were resident at the billing peak —
+    because the run-level peak is not separable per pull.  Sequentially
+    staged EC objects therefore look somewhat pricier to the router than
+    the final bill; the bias is toward under-using the capacity-billed
+    tier, never toward surprise bills.
+    """
+    base = transfer_fee_usd(medium, nbytes, n_gets=0)
+    fee = transfer_fee_usd(medium, nbytes, n_gets=1) - base
+    if not external:
+        fee += base / max(1, retrievals)
+    return fee
+
+
 def workflow_cost(inputs: WorkflowCostInputs, backend: str) -> CostBreakdown:
     """Cost of one workflow invocation under a given transfer backend."""
     compute = lambda_compute_cost(

@@ -10,7 +10,9 @@ first-class, declarative object:
 * :class:`Edge` — one producer->consumer data dependency carrying its own
   transfer policy: a fixed backend name (``"s3"``) or a :class:`RoutePolicy`
   resolved **per object at send time** (e.g. :class:`SizeRoute`: inline under
-  a cutoff, XDT otherwise, S3 when the producer is marked evictable).
+  a cutoff, XDT otherwise, S3 when the producer is marked evictable;
+  :class:`AdaptiveRoute`: cheapest observed medium whose p99 fits the edge's
+  latency budget, fed by the shared telemetry substrate).
 * :class:`WorkflowDAG` — the validated graph.
 
 Two lowerings share the one description:
@@ -46,6 +48,7 @@ from typing import Any, Callable, Dict, Generator, List, Optional, Sequence, Tup
 
 import numpy as np
 
+from .clock import VirtualClock
 from .cluster import DEFAULT_NET, NetConstants, ServerlessCluster
 from .cost import (
     S3_GET_USD,
@@ -53,8 +56,13 @@ from .cost import (
     StorageOps,
     WorkflowCostInputs,
     elasticache_storage_cost,
+    marginal_pull_fee_usd,
     routed_workflow_cost,
+    transfer_fee_usd,
 )
+from .scheduler import ControlPlane, ScalingPolicy
+from .telemetry import TelemetryHub
+from .transfer import modeled_transfer_seconds
 
 #: media whose transfers go through a storage service in the cluster model
 _STORAGE_MEDIA = ("s3", "elasticache")
@@ -118,6 +126,11 @@ class SizeRoute(RoutePolicy):
         self.durable = durable
 
     def resolve(self, edge, nbytes, evictable):
+        if edge.handoff == "external":
+            # original input predates the workflow: only a durable service
+            # can serve it (inlining or instance-resident media are
+            # impossible, not merely slow)
+            return self.durable
         if evictable:
             return self.durable
         if edge.handoff == "sync" and nbytes < self.inline_under:
@@ -129,6 +142,106 @@ class SizeRoute(RoutePolicy):
             f"inline<{self.inline_under}B sync, else {self.default}, "
             f"{self.durable} if evictable"
         )
+
+
+class AdaptiveRoute(RoutePolicy):
+    """Feedback routing: pick the medium from *observed* telemetry.
+
+    Reads the shared :class:`~repro.core.telemetry.TelemetryHub` — observed
+    per-medium $/GB (fee model) and p99 pull latency — and picks, per object
+    at send time, the **cheapest medium whose observed p99 fits the edge's
+    ``latency_budget_s``** (no budget: cheapest overall, latency as the
+    tie-break).  Media the feed has not observed yet are scored with
+    calibrated priors — the price sheet
+    (:func:`repro.core.cost.transfer_fee_usd`) for fees and the latency
+    model (:func:`repro.core.transfer.modeled_transfer_seconds`) for p99 —
+    so cheap or fast untried media keep getting explored instead of the
+    router locking onto its first observed choice.
+
+    Hard constraints always dominate the scores: evictable producers only
+    route to durable media, external (original-input) edges only to
+    through-storage, and inlining only exists on sync handoffs under the
+    activator payload cap.
+
+    Until the hub has *any* samples the policy defers entirely to its
+    ``static`` fallback (default: the paper-motivated :class:`SizeRoute`) —
+    cold-start routing is never guessed from an empty feed.  Both lowerings
+    bind an unbound hub automatically: ``dag.bind`` wires the workflow
+    engine's ``TransferEngine.telemetry`` (real per-pull observations),
+    ``execute_on_cluster`` feeds a run-local hub per resolved edge object.
+    """
+
+    #: media a durable (producer-death-surviving) decision may pick
+    DURABLE = ("s3", "elasticache")
+
+    def __init__(
+        self,
+        telemetry: Optional[TelemetryHub] = None,
+        static: Optional[RoutePolicy] = None,
+        inline_under: Optional[int] = None,
+        net: NetConstants = DEFAULT_NET,
+    ):
+        self.telemetry = telemetry
+        #: True when a lowering (not the user) supplied the hub: the next
+        #: bind/execute re-binds to ITS hub, so one route instance reused
+        #: across runs never keeps feeding off a previous run's dead feed
+        self._auto_bound = False
+        self.net = net
+        self.inline_under = (
+            net.inline_limit if inline_under is None else inline_under
+        )
+        self.static = static or SizeRoute(inline_under=self.inline_under)
+
+    def auto_bind(self, hub: Optional[TelemetryHub]) -> Optional[TelemetryHub]:
+        """Bind a lowering-supplied hub and return the effective one.
+
+        A user-pinned hub (passed to the constructor) is kept; a hub a
+        previous lowering auto-bound is replaced, so one route instance
+        reused across runs never keeps feeding off a dead run's feed.  Both
+        lowerings route every bind through here — the rebind rule lives
+        only on the policy."""
+        if self.telemetry is None or self._auto_bound:
+            self.telemetry = hub
+            self._auto_bound = True
+        return self.telemetry
+
+    def _candidates(self, edge: "Edge", nbytes: int, evictable: bool):
+        if edge.handoff == "external":
+            return list(_STORAGE_MEDIA)
+        if evictable:
+            return list(self.DURABLE)
+        cands = ["xdt", "s3", "elasticache"]
+        if edge.handoff == "sync" and nbytes < self.inline_under:
+            cands.insert(0, "inline")
+        return cands
+
+    def resolve(self, edge, nbytes, evictable):
+        hub = self.telemetry
+        if hub is None or not hub.has_media_samples():
+            return self.static.resolve(edge, nbytes, evictable)
+        budget = edge.latency_budget_s
+        scored = []                      # (medium, fee, p99-or-prior)
+        for m in self._candidates(edge, nbytes, evictable):
+            stats = hub.media.get(m)
+            if stats is not None and stats.n:
+                scored.append((m, stats.predict_fee_usd(nbytes), stats.p99_s()))
+            else:
+                # unobserved medium: calibrated priors keep it explorable
+                # (fee-tied media would otherwise never be tried)
+                scored.append((
+                    m, transfer_fee_usd(m, nbytes),
+                    modeled_transfer_seconds(m, nbytes, self.net),
+                ))
+        if budget > 0.0:
+            feasible = [s for s in scored if s[2] <= budget]
+            if feasible:
+                scored = feasible
+            else:                        # nothing fits the budget: fastest
+                return min(scored, key=lambda s: s[2])[0]
+        return min(scored, key=lambda s: (s[1], s[2]))[0]
+
+    def describe(self):
+        return f"adaptive(telemetry, fallback: {self.static.describe()})"
 
 
 Route = Union[str, RoutePolicy]
@@ -182,6 +295,9 @@ class Edge:
       (producer, consumer) pair exchanges ``n_objects`` private objects.
     * ``concurrency`` bounds one consumer's parallel fetches (0 =
       unbounded; 1 = the sync-SDK sequential loop of the paper's baselines).
+    * ``latency_budget_s`` is the edge's per-object transfer latency budget
+      (0 = none): :class:`AdaptiveRoute` picks the cheapest medium whose
+      observed p99 fits it.
     """
 
     src: Optional[str]
@@ -193,6 +309,7 @@ class Edge:
     fanout: str = "partition"        # partition | broadcast
     n_objects: int = 1
     concurrency: int = 0
+    latency_budget_s: float = 0.0
 
     def __post_init__(self):
         if not self.label:
@@ -374,10 +491,24 @@ class WorkflowDAG:
         default_route: Optional[Route] = None,
         bytes_scale: float = 1.0,
         policy: Optional[Callable[[Stage], Any]] = None,
+        handlers: Optional[Dict[str, Callable]] = None,
+        autoscaler: Any = None,
     ) -> "DagBinding":
         """Compile this DAG onto a :class:`~repro.core.workflow.WorkflowEngine`
-        (see :class:`DagBinding`)."""
-        return DagBinding(self, engine, default_route, bytes_scale, policy)
+        (see :class:`DagBinding`).
+
+        ``handlers`` maps stage names to custom engine handlers replacing
+        the synthetic data movers (the stage keeps its registered name,
+        scaling policy, and service time — used e.g. by the disaggregated
+        server to run real prefill/decode inside the DAG's control flow).
+        ``autoscaler`` selects the scale-up strategy of every stage's
+        default :class:`~repro.core.scheduler.ScalingPolicy` (a registered
+        name or policy instance); an explicit ``policy`` factory wins.
+        """
+        return DagBinding(
+            self, engine, default_route, bytes_scale, policy,
+            handlers=handlers, autoscaler=autoscaler,
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -517,6 +648,9 @@ class ClusterDagRun:
     marks: Dict[str, float]
     edge_usage: Dict[str, EdgeUsage]
     edge_media: Dict[str, str]           # label -> media summary string
+    #: per-stage autoscaled fleets (set when execute_on_cluster ran with an
+    #: autoscaler/scaling selection; None models the pre-provisioned fleet)
+    control: Optional[ControlPlane] = None
 
     @property
     def latency_s(self) -> float:
@@ -557,13 +691,24 @@ def execute_on_cluster(
     net: NetConstants = DEFAULT_NET,
     seed: int = 0,
     deterministic: bool = False,
+    autoscaler: Any = None,
+    scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
 ) -> ClusterDagRun:
     """Interpret ``dag`` on the calibrated discrete-event cluster.
 
     ``backend`` is the run default applied to ``route="default"`` edges: a
     fixed medium name reproduces the legacy single-backend workloads
     bit-for-bit; a :class:`RoutePolicy` yields a per-edge-routed (hybrid)
-    run priced per medium.
+    run priced per medium.  :class:`AdaptiveRoute` policies are fed a
+    run-local telemetry hub (each resolved object's modeled latency and
+    marginal fee), closing the observe->decide loop on this lowering too.
+
+    ``autoscaler`` / ``scaling`` optionally put every stage's instances
+    behind a :class:`~repro.core.scheduler.Deployment` on the run's virtual
+    clock — per-stage fleets then pay cold starts and queue exactly as the
+    selected :class:`~repro.core.scheduler.AutoscalerPolicy` decides.  Both
+    default to off, which models the paper's pre-provisioned measurement
+    fleet (and keeps the legacy runs bit-for-bit).
     """
     n_nodes = sum(s.fan for s in dag.stages)
     cluster = ServerlessCluster(n_nodes, net, seed=seed, deterministic=deterministic)
@@ -572,7 +717,31 @@ def execute_on_cluster(
     marks: Dict[str, float] = {}
     usage: Dict[str, EdgeUsage] = {e.label: EdgeUsage() for e in dag.edges}
     media_seen: Dict[str, set] = {e.label: set() for e in dag.edges}
+    # adaptive routes: ensure every AdaptiveRoute has a hub and feed each
+    # distinct hub with this run's observations (modeled seconds + fee)
+    hubs: List[TelemetryHub] = []
+    adaptive = [
+        r for r in (backend, *(e.route for e in dag.edges))
+        if isinstance(r, AdaptiveRoute)
+    ]
+    if adaptive:
+        # fresh run-local hub (auto_bind replaces a previous run's feed, so
+        # reused route instances start clean; user-pinned hubs are kept)
+        shared_hub = TelemetryHub(VirtualClock(sim))
+        for r in adaptive:
+            hub = r.auto_bind(shared_hub)
+            if hub is not None and hub not in hubs:
+                hubs.append(hub)
     resolve = dag.route_resolver(backend)
+
+    control: Optional[ControlPlane] = None
+    if autoscaler is not None or scaling is not None:
+        control = ControlPlane(clock=VirtualClock(sim))
+        make_policy = scaling or (lambda s: ScalingPolicy(
+            max_instances=s.fan, target_concurrency=1, autoscaler=autoscaler,
+        ))
+        for s in dag.stages:
+            control.register(s.name, make_policy(s))
 
     nodes: Dict[str, List[int]] = {}
     base = 0
@@ -585,10 +754,41 @@ def execute_on_cluster(
         if t > marks.get(key, -1.0):
             marks[key] = t
 
-    def _medium(edge: Edge, nbytes: int) -> str:
+    def _observe(
+        m: str, nbytes: int, retrievals: int = 1, external: bool = False
+    ) -> None:
+        """Feed the adaptive hubs once per PULL with that pull's marginal
+        fee (:func:`repro.core.cost.marginal_pull_fee_usd`), so the
+        router's observed $/object matches what routed_workflow_cost will
+        bill."""
+        if not hubs:
+            return
+        fee = marginal_pull_fee_usd(m, nbytes, retrievals, external)
+        secs = modeled_transfer_seconds(m, nbytes, net)
+        for hub in hubs:
+            hub.record_transfer(m, nbytes, secs, fee)
+
+    def _medium(
+        edge: Edge, nbytes: int,
+        retrievals: int = 1, record: bool = True, external: bool = False,
+    ) -> str:
         m = resolve(edge, nbytes)       # validates against _CLUSTER_MEDIA
         media_seen[edge.label].add(m)
+        if record:
+            _observe(m, nbytes, retrievals, external)
         return m
+
+    # staged edges: the medium is decided ONCE per object, at stage (put)
+    # time, and the consumer's fetch reuses that decision — a stateful
+    # policy whose answer drifts between the producer's put and the
+    # consumer's get must not split one object across media (a GET from a
+    # service the object was never PUT to is physically impossible and
+    # would corrupt the per-edge bill).  label -> src_node -> media in put
+    # order (partition puts are consumer-major: all of consumer 0's
+    # objects, then consumer 1's, ...).
+    staged_media: Dict[str, Dict[int, List[str]]] = {
+        e.label: {} for e in dag.edges if e.handoff == "staged"
+    }
 
     def fetch_objects(edge: Edge) -> List[Optional[int]]:
         """Source node per object one consumer instance retrieves, in the
@@ -627,17 +827,30 @@ def execute_on_cluster(
                 yield cluster.inline_send(src_node, nbytes)
         else:
             srcs = fetch_objects(edge)
+            # broadcast: every consumer instance pulls the one staged copy
+            n_pulls = (
+                dag.by_name[edge.dst].fan if edge.fanout == "broadcast" else 1
+            )
+            # this consumer's index and per-producer object cursor, to look
+            # up the medium each object was staged on
+            j = dst_node - nodes[edge.dst][0]
+            cursor: Dict[int, int] = {}
             per_wave = edge.concurrency if edge.concurrency > 0 else len(srcs)
             for k in range(0, len(srcs), max(1, per_wave)):
                 evs = []
                 for src_node in srcs[k:k + per_wave]:
                     if src_node is None:             # external original input
-                        m = _medium(edge, nbytes)
+                        m = _medium(edge, nbytes, external=True)
                         u.count(m, nbytes)
                         u.n_gets += 1
                         evs.append(cluster.storage_get(m, dst_node, nbytes))
                         continue
-                    m = _medium(edge, nbytes)
+                    i = cursor.get(src_node, 0)
+                    cursor[src_node] = i + 1
+                    puts = staged_media[edge.label][src_node]
+                    m = puts[i if edge.fanout == "broadcast"
+                             else j * edge.n_objects + i]
+                    _observe(m, nbytes, retrievals=n_pulls)
                     u.count(m, nbytes)
                     if m in _STORAGE_MEDIA:
                         u.n_gets += 1
@@ -661,8 +874,13 @@ def execute_on_cluster(
             edge.n_objects if edge.fanout == "broadcast"
             else dag.by_name[edge.dst].fan * edge.n_objects
         )
+        puts = staged_media[edge.label].setdefault(src_node, [])
         for _ in range(n):
-            m = _medium(edge, edge.nbytes)
+            # the object's medium is decided HERE; consumers reuse it (the
+            # consumer-side pull records the telemetry observation, with
+            # this put's fee share folded in)
+            m = _medium(edge, edge.nbytes, record=False)
+            puts.append(m)
             if m in _STORAGE_MEDIA:
                 u.n_puts += 1
                 yield cluster.storage_put(m, src_node, edge.nbytes)
@@ -670,6 +888,13 @@ def execute_on_cluster(
         u.put_s += sim.now - t0
 
     def stage_proc(stage: Stage, i: int) -> Generator:
+        inst = None
+        if control is not None:
+            # placement first: the activator steers this stage instance and
+            # buffers it across any cold start the autoscaler incurs
+            inst, wait = control.steer(stage.name)
+            if wait > 0:
+                yield sim.timeout(wait)
         tok = bill.start(stage.name)
         dst_node = nodes[stage.name][i]
         for edge in dag.in_edges(stage):
@@ -689,10 +914,17 @@ def execute_on_cluster(
             ]
             yield sim.all_of(done)
         bill.stop(tok)
+        if control is not None:
+            control.release(stage.name, inst.instance_id)
 
     def entry_proc() -> Generator:
         entry = dag.entry
         entry_node = nodes[entry.name][0]
+        entry_inst = None
+        if control is not None:
+            entry_inst, wait = control.steer(entry.name)
+            if wait > 0:
+                yield sim.timeout(wait)
         tok = bill.start(entry.name)
         if entry.compute_s > 0:
             yield sim.timeout(entry.compute_s)
@@ -711,6 +943,8 @@ def execute_on_cluster(
             ]
             yield sim.all_of(done)
             bill.stop(tok)
+            if control is not None:
+                control.release(entry.name, entry_inst.instance_id)
             return
         # Orchestrated: the entry's wait on children is NOT billed.
         bill.stop(tok)
@@ -731,6 +965,8 @@ def execute_on_cluster(
             if entry.gather_compute_s > 0:
                 yield sim.timeout(entry.gather_compute_s)
             bill.stop(tok2)
+        if control is not None:
+            control.release(entry.name, entry_inst.instance_id)
 
     root = sim.spawn(entry_proc())
     sim.run()
@@ -741,7 +977,7 @@ def execute_on_cluster(
     }
     return ClusterDagRun(
         dag=dag, cluster=cluster, bill=bill, marks=marks,
-        edge_usage=usage, edge_media=edge_media,
+        edge_usage=usage, edge_media=edge_media, control=control,
     )
 
 
@@ -775,6 +1011,8 @@ class DagBinding:
         default_route: Optional[Route] = None,
         bytes_scale: float = 1.0,
         policy: Optional[Callable[[Stage], Any]] = None,
+        handlers: Optional[Dict[str, Callable]] = None,
+        autoscaler: Any = None,
     ):
         self.dag = dag
         self.engine = engine
@@ -782,6 +1020,18 @@ class DagBinding:
             engine.transfer.backend if default_route is None else default_route
         )
         self.bytes_scale = bytes_scale
+        # adaptive routes observe the engine's transfer telemetry, so
+        # routing decisions feed on THIS engine's real pulls; the feed is
+        # off by default (hot-path cost) and switched on here on demand
+        adaptive = [
+            r for r in (self.default_route, *(e.route for e in dag.edges))
+            if isinstance(r, AdaptiveRoute)
+        ]
+        if adaptive:
+            if engine.transfer.telemetry is None:
+                engine.transfer.telemetry = TelemetryHub(engine.transfer.clock)
+            for r in adaptive:
+                r.auto_bind(engine.transfer.telemetry)
         self._resolve = dag.route_resolver(self.default_route)
         # the graph is immutable: derive per-stage edge lists, blocking
         # children, waves, and gathers ONCE at bind time — handlers run per
@@ -807,17 +1057,21 @@ class DagBinding:
         # the same GETs through the cluster's per-backend accounting.
         self._external_gets: Dict[str, int] = {}
         self.entry = self._fn(dag.entry.name)
-        from .scheduler import ScalingPolicy   # local: avoid import cycles
 
         default_policy = policy or (
             lambda s: ScalingPolicy(
-                max_instances=max(16, 4 * s.fan), target_concurrency=1
+                max_instances=max(16, 4 * s.fan), target_concurrency=1,
+                autoscaler=autoscaler,
             )
         )
+        handlers = handlers or {}
+        unknown = set(handlers) - set(dag.by_name)
+        if unknown:
+            raise ValueError(f"handlers for unknown stages: {sorted(unknown)}")
         for stage in dag.stages:
             engine.register(
                 self._fn(stage.name),
-                self._make_handler(stage),
+                handlers.get(stage.name) or self._make_handler(stage),
                 policy=default_policy(stage),
                 service_time=stage.compute_s,
             )
@@ -870,6 +1124,7 @@ class DagBinding:
 
         medium = self._resolve(edge, edge.nbytes)
         net = self.engine.transfer.net
+        hub = self.engine.transfer.telemetry
         out = []
         u = self.edge_usage[edge.label]
         for _ in range(edge.n_objects):
@@ -880,6 +1135,13 @@ class DagBinding:
             u.n_gets += 1
             u.modeled_s += modeled
             self._external_gets[medium] = self._external_gets.get(medium, 0) + 1
+            if hub is not None:
+                # reads bypass the transfer engine, so feed the observe side
+                # here (external: the input was never put by us)
+                hub.record_transfer(
+                    medium, arr.nbytes, modeled,
+                    marginal_pull_fee_usd(medium, arr.nbytes, external=True),
+                )
             out.append(arr)
         return out
 
@@ -1009,6 +1271,7 @@ class DagBinding:
 
 
 __all__ = [
+    "AdaptiveRoute",
     "Billing",
     "ClusterDagRun",
     "DagBinding",

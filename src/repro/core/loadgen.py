@@ -59,6 +59,16 @@ class LoadReport:
     latencies_s: List[float]
     cost_inputs: WorkflowCostInputs = None  # type: ignore[assignment]
     usd_per_1k_requests: float = 0.0
+    #: which AutoscalerPolicy the engine's deployments ran under (names of
+    #: the distinct policies, "+"-joined)
+    autoscaler: str = ""
+    #: control-plane activity during THIS run (deltas across deployments):
+    #: cold instance boots, proactive pre-warm spawns, requests buffered
+    #: across a cold start, requests queued at the max_instances cap
+    n_cold_starts: int = 0
+    n_prewarmed: int = 0
+    n_buffered: int = 0
+    n_queued: int = 0
 
     def as_row(self) -> Dict[str, Any]:
         return {
@@ -72,6 +82,11 @@ class LoadReport:
             "p99_s": self.p99_s,
             "mean_s": self.mean_s,
             "usd_per_1k_requests": self.usd_per_1k_requests,
+            "autoscaler": self.autoscaler,
+            "n_cold_starts": self.n_cold_starts,
+            "n_prewarmed": self.n_prewarmed,
+            "n_buffered": self.n_buffered,
+            "n_queued": self.n_queued,
         }
 
 
@@ -167,6 +182,17 @@ class LoadGenerator:
         # engines from the retained WorkflowRequest list (legacy behaviour)
         self._collect_objects = engine.request_log is None
 
+    #: Deployment.stats keys surfaced (as run-deltas) on the LoadReport
+    _CONTROL_KEYS = ("cold_starts", "prewarmed", "buffered", "queued")
+
+    def _control_stats(self) -> Dict[str, int]:
+        """Control-plane counters summed across the engine's deployments."""
+        tot = dict.fromkeys(self._CONTROL_KEYS, 0)
+        for dep in self.engine.control.deployments.values():
+            for k in self._CONTROL_KEYS:
+                tot[k] += dep.stats.get(k, 0)
+        return tot
+
     def _baseline(self) -> Dict[str, float]:
         """Snapshot cumulative engine counters so repeated runs on one
         engine report only their own invocations/storage ops."""
@@ -180,6 +206,7 @@ class LoadGenerator:
             "gets": acct.n_storage_gets,
             "gb_seconds": acct.storage_gb_seconds,
             "n_req_log": 0 if eng.request_log is None else len(eng.request_log),
+            "control": self._control_stats(),
         }
         if self.binding is not None:
             base["media"] = self.binding.media_storage_ops()
@@ -278,6 +305,11 @@ class LoadGenerator:
             usd_per_1k = routed_cost_per_1k_requests(
                 inputs, media, max(1, len(lat))
             )
+        ctrl = self._control_stats()
+        ctrl_base = base["control"]
+        scalers = sorted({
+            d.autoscaler.name for d in eng.control.deployments.values()
+        })
         return LoadReport(
             mode=mode,
             backend=backend,
@@ -292,6 +324,11 @@ class LoadGenerator:
             latencies_s=lat,
             cost_inputs=inputs,
             usd_per_1k_requests=usd_per_1k,
+            autoscaler="+".join(scalers),
+            n_cold_starts=ctrl["cold_starts"] - ctrl_base["cold_starts"],
+            n_prewarmed=ctrl["prewarmed"] - ctrl_base["prewarmed"],
+            n_buffered=ctrl["buffered"] - ctrl_base["buffered"],
+            n_queued=ctrl["queued"] - ctrl_base["queued"],
         )
 
 

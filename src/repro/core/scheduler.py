@@ -25,21 +25,209 @@ scheduled expiry times instead of sweeping every instance on every steer.
 Heap entries carry the instance's version counter; any in-flight change bumps
 the version, so stale entries are discarded on pop instead of being searched
 for and removed — the million-steer path never scans the fleet.
+
+Scale-up strategy is pluggable (:class:`AutoscalerPolicy`): the default
+:class:`ConcurrencyPolicy` is the legacy reactive Knative-concurrency
+behaviour bit-for-bit; :class:`RpsPolicy` sizes the fleet from the observed
+arrival-rate window; :class:`PredictivePolicy` pre-warms from the rate trend.
+Rate-driven policies read the deployment's
+:class:`~repro.core.telemetry.DeploymentTelemetry` (arrival/concurrency/
+cold-start windows on the injected clock).  Select per deployment via
+``ScalingPolicy(autoscaler=...)`` — a registered name or a policy instance —
+and register custom strategies with :func:`register_autoscaler`.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from collections import deque
 from heapq import heapify, heappop, heappush
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, ClassVar, Dict, List, Optional, Tuple, Type, Union
 
 from .clock import ensure_clock
+from .telemetry import DeploymentTelemetry
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler policies (strategy layer)
+# ---------------------------------------------------------------------------
+
+
+class AutoscalerPolicy:
+    """Decides *when a deployment adds instances*; steering stays shared.
+
+    The :class:`Deployment` owns the mechanics (heaps, keep-alive reaping,
+    queue-wait modeling) and consults its policy at two points of ``steer``:
+
+    * ``desired_instances(dep, now)`` — a proactive fleet-size floor,
+      evaluated per arrival when ``needs_telemetry`` is set; the deployment
+      spawns (cold) up to it before picking an instance.
+    * ``reactive`` — whether a request that finds no ready instance below
+      the ``max_instances`` cap spawns a cold instance on the spot (the
+      legacy Knative-concurrency behaviour) or queues on the booting /
+      least-loaded fleet the proactive floor provisioned.
+
+    Policies are stateless — all signals live on the deployment (its
+    :class:`~repro.core.telemetry.DeploymentTelemetry`, holding-time EWMAs,
+    in-flight totals) — so one policy instance can serve many deployments.
+    Register new policies with :func:`register_autoscaler`; every
+    ``ScalingPolicy(autoscaler=...)`` site (``WorkflowEngine.register``,
+    ``dag.bind``, ``execute_on_cluster``, the loadgen-driven benchmarks)
+    then selects them by name.
+    """
+
+    name: ClassVar[str] = ""
+    #: maintain a DeploymentTelemetry (arrival/concurrency/cold-start
+    #: windows) on the deployment; False keeps the steer hot path free of
+    #: any telemetry work (the legacy policy pays nothing for this layer)
+    needs_telemetry: ClassVar[bool] = False
+    #: legacy reactive scale-up on a steer miss below the cap
+    reactive: ClassVar[bool] = True
+
+    def desired_instances(self, dep: "Deployment", now: float) -> int:
+        return 0
+
+
+class ConcurrencyPolicy(AutoscalerPolicy):
+    """The legacy Knative-style concurrency autoscaler, bit-for-bit.
+
+    Scale-up is purely reactive: an arrival that finds every instance at
+    ``target_concurrency`` spawns a cold instance (below the cap).  This is
+    the default and reproduces the pre-policy-layer ``Deployment`` exactly —
+    the fixed-seed latency checksums in ``results/BENCH_engine.json`` and
+    the differential-vs-legacy steer test both guard it.
+    """
+
+    name = "concurrency"
+
+
+class RpsPolicy(AutoscalerPolicy):
+    """Knative's requests-per-second autoscaling mode.
+
+    Sizes the fleet from the observed arrival rate instead of instantaneous
+    concurrency: ``desired = ceil(rate / (rps_per_instance * utilization))``.
+    The per-instance capacity defaults to ``target_concurrency /
+    holding_time`` using the deployment's observed (or seeded) holding-time
+    EWMA, derated by the target ``utilization`` (Knative's
+    target-utilization knob: sizing for 100% of capacity queues without
+    bound under Poisson arrivals); until a holding estimate exists it
+    provisions like the concurrency policy would (one slot per in-flight
+    request).  Because scale-up is driven by the rate window rather than
+    per-request misses, a load spike provisions the steady-state fleet
+    instead of one instance per arrival caught mid cold-start — far fewer
+    cold starts at high offered load, at the price of queueing while the
+    right-sized fleet boots.
+    """
+
+    name = "rps"
+    needs_telemetry = True
+    reactive = False
+
+    def __init__(
+        self,
+        target_rps_per_instance: Optional[float] = None,
+        utilization: float = 0.7,
+    ):
+        self.target_rps_per_instance = target_rps_per_instance
+        self.utilization = utilization
+
+    def _capacity_rps(self, dep: "Deployment") -> Optional[float]:
+        """Sustainable requests/sec of one instance, or None if unknown."""
+        if self.target_rps_per_instance is not None:
+            return self.target_rps_per_instance * self.utilization
+        hold = dep._service_ewma
+        if hold <= 0.0:
+            return None
+        return max(1, dep.policy.target_concurrency) / hold * self.utilization
+
+    def _bootstrap(self, dep: "Deployment") -> int:
+        """No holding-time signal yet: provision for observed concurrency."""
+        slots = max(1, dep.policy.target_concurrency)
+        return -(-(dep.in_flight_total + 1) // slots)
+
+    def desired_instances(self, dep: "Deployment", now: float) -> int:
+        per = self._capacity_rps(dep)
+        if per is None:
+            return self._bootstrap(dep)
+        rate = dep.telemetry.arrival_rate(now)
+        return max(1, math.ceil(rate / per))
+
+
+class PredictivePolicy(RpsPolicy):
+    """Pre-warms from the arrival-rate *trend*.
+
+    Extrapolates the rate over the cold-start horizon (``rate + slope *
+    cold_start_s``, never below the current rate) and provisions for the
+    forecast with a small headroom — so a ramping load finds instances
+    already booting when it arrives instead of paying the boot latency per
+    request.  On flat or falling load it degrades to :class:`RpsPolicy`.
+    """
+
+    name = "predictive"
+
+    def __init__(
+        self,
+        target_rps_per_instance: Optional[float] = None,
+        utilization: float = 0.7,
+        horizon_s: Optional[float] = None,
+        headroom: float = 1.2,
+    ):
+        super().__init__(target_rps_per_instance, utilization)
+        self.horizon_s = horizon_s      # None: the deployment's cold_start_s
+        self.headroom = headroom
+
+    def desired_instances(self, dep: "Deployment", now: float) -> int:
+        per = self._capacity_rps(dep)
+        if per is None:
+            return self._bootstrap(dep)
+        rate, slope = dep.telemetry.arrival_trend(now)
+        horizon = dep.policy.cold_start_s if self.horizon_s is None else self.horizon_s
+        forecast = max(rate, rate + slope * horizon) * self.headroom
+        return max(1, math.ceil(forecast / per))
+
+
+_AUTOSCALER_REGISTRY: Dict[str, Type[AutoscalerPolicy]] = {}
+
+
+def register_autoscaler(cls: Type[AutoscalerPolicy]) -> Type[AutoscalerPolicy]:
+    """Register a policy class under ``cls.name`` (idempotent overwrite)."""
+    if not cls.name:
+        raise ValueError("autoscaler class needs a non-empty `name`")
+    _AUTOSCALER_REGISTRY[cls.name] = cls
+    return cls
+
+
+for _cls in (ConcurrencyPolicy, RpsPolicy, PredictivePolicy):
+    register_autoscaler(_cls)
+
+
+def available_autoscalers() -> Tuple[str, ...]:
+    return tuple(_AUTOSCALER_REGISTRY)
+
+
+_DEFAULT_AUTOSCALER = ConcurrencyPolicy()
+
+
+def make_autoscaler(
+    spec: Union[None, str, AutoscalerPolicy]
+) -> AutoscalerPolicy:
+    """Resolve a policy spec: None (legacy default) | name | instance."""
+    if spec is None:
+        return _DEFAULT_AUTOSCALER
+    if isinstance(spec, AutoscalerPolicy):
+        return spec
+    cls = _AUTOSCALER_REGISTRY.get(spec)
+    if cls is None:
+        raise ValueError(
+            f"autoscaler must be one of {available_autoscalers()}, got {spec!r}"
+        )
+    return cls()
 
 
 @dataclasses.dataclass
 class ScalingPolicy:
-    """Knative-style concurrency autoscaling."""
+    """Per-deployment scaling knobs + the autoscaler strategy that uses them."""
 
     target_concurrency: int = 1       # desired in-flight per instance
     min_instances: int = 0
@@ -51,6 +239,10 @@ class ScalingPolicy:
     #: in-flight request whose finish frees this request's concurrency slot
     #: (False restores the legacy wait=0 bug)
     queue_wait_model: bool = True
+    #: scale-up strategy: None (legacy concurrency autoscaler), a registered
+    #: policy name ("concurrency" | "rps" | "predictive" | custom), or an
+    #: AutoscalerPolicy instance
+    autoscaler: Union[None, str, AutoscalerPolicy] = None
 
 
 @dataclasses.dataclass(slots=True)
@@ -92,8 +284,17 @@ class Deployment:
     ):
         self.name = name
         self.policy = policy
+        self.autoscaler = make_autoscaler(policy.autoscaler)
         self.placer = placer or (lambda i: (i,))
         self.clock = ensure_clock(clock)
+        #: arrival/concurrency/cold-start windows, maintained only when the
+        #: autoscaler asks (the legacy policy keeps steer() telemetry-free)
+        self.telemetry: Optional[DeploymentTelemetry] = (
+            DeploymentTelemetry(self.clock)
+            if self.autoscaler.needs_telemetry else None
+        )
+        #: total in-flight requests across the fleet (O(1) concurrency read)
+        self.in_flight_total = 0
         self.instances: Dict[int, Instance] = {}
         self._ids = itertools.count()
         # (load, iid, version): ready instances with spare concurrency
@@ -114,7 +315,7 @@ class Deployment:
         self._service_ewma = 0.0
         self.stats = {
             "cold_starts": 0, "scale_downs": 0, "steered": 0,
-            "buffered": 0, "queued": 0,
+            "buffered": 0, "queued": 0, "prewarmed": 0,
         }
         for _ in range(policy.min_instances):
             self._spawn(cold=False)
@@ -131,6 +332,8 @@ class Deployment:
         )
         if cold:
             self.stats["cold_starts"] += 1
+            if self.telemetry is not None:
+                self.telemetry.record_cold_start(now)
         self.instances[iid] = inst
         if inst.ready_at <= now:
             heappush(self._ready_heap, (0, iid, 0))
@@ -251,10 +454,26 @@ class Deployment:
         self._reap_expired(now)
         self._mature_warming(now)
         pol = self.policy
+        tel = self.telemetry
+        if tel is not None:
+            # rate-driven policies: observe the arrival, then raise the fleet
+            # to the policy's proactive floor before picking an instance
+            tel.record_arrival(now, self.in_flight_total)
+            want = min(
+                self.autoscaler.desired_instances(self, now),
+                pol.max_instances,
+            )
+            n_missing = want - len(self.instances)
+            if n_missing > 0:
+                for _ in range(n_missing):
+                    self._spawn(cold=True)  # ready at once when cold_start_s=0
+                self.stats["prewarmed"] += n_missing
         inst = self._pop_ready()
         if inst is not None:
             wait = 0.0
-        elif len(self.instances) < pol.max_instances:
+        elif (
+            self.autoscaler.reactive and len(self.instances) < pol.max_instances
+        ) or not self.instances:
             inst = self._spawn(cold=True)
             wait = max(0.0, inst.ready_at - now)
             self.stats["buffered"] += 1
@@ -284,6 +503,7 @@ class Deployment:
                         wait = max(wait, inst.starts[k - 1] + hold - now, 0.0)
                 self.stats["queued"] += 1
         inst.in_flight += 1
+        self.in_flight_total += 1
         inst.version += 1
         inst.last_used = now
         # occupancy starts once the modeled wait has elapsed: the holding
@@ -315,6 +535,7 @@ class Deployment:
                 )
         if inst.in_flight > 0:
             inst.in_flight -= 1
+            self.in_flight_total -= 1
         inst.version += 1
         inst.last_used = now
         iid = inst.instance_id
@@ -337,7 +558,23 @@ class Deployment:
             return False
         inst.alive = False
         inst.version += 1
+        self.in_flight_total -= inst.in_flight
         return True
+
+    def seed_holding_estimate(self, seconds: float) -> None:
+        """Seed the holding-time EWMA for rate-driven autoscalers.
+
+        Rate-based fleet sizing needs requests-per-instance capacity before
+        the first completions exist; callers that know a function's
+        intrinsic service time (``WorkflowEngine.register``) seed it here.
+        Only telemetry-backed deployments accept the seed — the legacy
+        concurrency policy's cap-path queue model keeps its
+        learn-from-observation-only behaviour bit-for-bit.
+        """
+        if self.telemetry is None or seconds <= 0.0:
+            return
+        if self._service_ewma == 0.0:
+            self._service_ewma = seconds
 
     @property
     def n_instances(self) -> int:

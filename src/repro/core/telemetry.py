@@ -1,0 +1,337 @@
+"""Shared telemetry substrate for the adaptive control plane.
+
+Both halves of the control plane's observe->decide loop read from this
+module: autoscaler policies (:mod:`repro.core.scheduler`) consume
+per-deployment arrival/concurrency/cold-start signals, and feedback routing
+policies (:class:`repro.core.dag.AdaptiveRoute`) consume per-medium
+latency/cost/bytes observations.  Everything is sampled on the injected
+:mod:`repro.core.clock` clock, so the same estimators behave identically
+under ``MonotonicClock`` (real deployments) and ``VirtualClock``
+(discrete-event sweeps) — a rate window that decays over 2 *virtual*
+seconds is exactly assertable in tests and fast-forwardable in load sweeps.
+
+Estimators (all O(1) per observation — these sit on the steer()/get() hot
+paths):
+
+:class:`DecayRate`
+    Exponentially-decayed event counter: ``record(t)`` bumps a count that
+    decays with time-constant ``tau_s``; ``rate(t)`` is the smoothed
+    events/sec.  Warmup-corrected: before one full ``tau_s`` has elapsed the
+    effective window is the observed span, so a fresh deployment sees its
+    true arrival rate within a few samples instead of ``tau``-lagged.
+
+:class:`DecayGauge`
+    Time-decayed average of a sampled value (e.g. in-flight concurrency).
+
+:class:`DecayedLinear`
+    Sample-decayed least-squares fit ``y ~ a + b*x`` with non-negative
+    coefficients — the per-medium latency and fee models (``x`` in GB), so
+    one estimator serves both per-op-dominated media (S3: intercept) and
+    per-byte-dominated media (ElastiCache capacity, stream time: slope).
+
+Aggregates:
+
+:class:`DeploymentTelemetry`
+    Per-deployment windows: arrival rate + trend (fast/slow ``DecayRate``
+    pair; the spread between them is the rate's slope, which
+    :class:`~repro.core.scheduler.PredictivePolicy` extrapolates over the
+    cold-start horizon), concurrency gauge, and a cold-start window.
+
+:class:`MediumTelemetry`
+    Per-transfer-medium observations: latency model + bounded p99 window,
+    fee model, op/byte totals.  Fed by
+    :meth:`TelemetryHub.record_transfer` — the
+    :class:`~repro.core.transfer.TransferEngine` feeds it on every ``get``
+    and the cluster lowering feeds it per resolved edge object.
+
+:class:`TelemetryHub`
+    The shared registry handed to consumers: ``hub.deployment(name)`` /
+    ``hub.medium(name)`` create-on-first-use, so the scheduler and the
+    router observe one substrate instead of keeping private counters.
+
+Custom autoscaler policies (see :class:`~repro.core.scheduler.AutoscalerPolicy`)
+subclass the policy base, set a class-level ``name``, and are registered
+with :func:`repro.core.scheduler.register_autoscaler`; policies that set
+``needs_telemetry = True`` get a :class:`DeploymentTelemetry` maintained on
+their deployment automatically and read it in ``desired_instances``.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Callable, Dict, Optional
+
+from .clock import ensure_clock
+
+
+class DecayRate:
+    """Exponentially-decayed event rate with warmup correction.
+
+    ``record(t)`` adds one event; the running count decays as
+    ``exp(-dt/tau)``.  For a constant rate ``r`` observed over ``span``
+    seconds the expected count is ``r * tau * (1 - exp(-span/tau))``, so
+    dividing by that normalization (floored at ``warmup_floor_s``) gives an
+    asymptotically unbiased rate at *every* span — including the first
+    milliseconds of a load ramp, where a plain ``count/tau`` EWMA
+    underestimates by ``span/tau``.
+    """
+
+    __slots__ = ("tau_s", "warmup_floor_s", "_n", "_last", "_first")
+
+    def __init__(self, tau_s: float = 2.0, warmup_floor_s: float = 0.05):
+        self.tau_s = tau_s
+        self.warmup_floor_s = warmup_floor_s
+        self._n = 0.0
+        self._last = 0.0
+        self._first: Optional[float] = None
+
+    def record(self, t: float) -> None:
+        if self._first is None:
+            self._first = self._last = t
+        dt = t - self._last
+        if dt > 0.0:
+            self._n *= math.exp(-dt / self.tau_s)
+            self._last = t
+        self._n += 1.0
+
+    def rate(self, t: float) -> float:
+        if self._first is None:
+            return 0.0
+        n = self._n
+        dt = t - self._last
+        if dt > 0.0:
+            n *= math.exp(-dt / self.tau_s)
+        span = t - self._first
+        norm = (
+            self.tau_s * (1.0 - math.exp(-span / self.tau_s))
+            if span > 0.0 else 0.0
+        )
+        return n / max(norm, self.warmup_floor_s)
+
+
+class DecayGauge:
+    """Time-decayed average of a sampled value (holds its level when idle)."""
+
+    __slots__ = ("tau_s", "_value", "_last", "_seen")
+
+    def __init__(self, tau_s: float = 2.0):
+        self.tau_s = tau_s
+        self._value = 0.0
+        self._last = 0.0
+        self._seen = False
+
+    def sample(self, t: float, value: float) -> None:
+        if not self._seen:
+            self._value, self._last, self._seen = float(value), t, True
+            return
+        dt = max(0.0, t - self._last)
+        alpha = 1.0 - math.exp(-dt / self.tau_s) if dt > 0.0 else 0.5
+        self._value += (value - self._value) * alpha
+        self._last = t
+
+    def value(self) -> float:
+        return self._value
+
+
+class DecayedLinear:
+    """Sample-decayed non-negative least squares ``y ~ a + b*x``.
+
+    Old observations fade geometrically (``gamma`` per sample), so the fit
+    tracks drifting behaviour; with a single observed ``x`` the slope
+    collapses to 0 and the intercept to the decayed mean — exactly the
+    right prediction for homogeneous edges.
+    """
+
+    __slots__ = ("gamma", "sw", "sx", "sy", "sxx", "sxy")
+
+    def __init__(self, gamma: float = 0.98):
+        self.gamma = gamma
+        self.sw = self.sx = self.sy = self.sxx = self.sxy = 0.0
+
+    def add(self, x: float, y: float) -> None:
+        g = self.gamma
+        self.sw = self.sw * g + 1.0
+        self.sx = self.sx * g + x
+        self.sy = self.sy * g + y
+        self.sxx = self.sxx * g + x * x
+        self.sxy = self.sxy * g + x * y
+
+    def predict(self, x: float) -> float:
+        if self.sw <= 0.0:
+            return 0.0
+        mean_y = self.sy / self.sw
+        denom = self.sw * self.sxx - self.sx * self.sx
+        if denom <= 1e-18 * max(1.0, self.sxx * self.sw):
+            return mean_y
+        b = (self.sw * self.sxy - self.sx * self.sy) / denom
+        b = max(0.0, b)
+        a = max(0.0, (self.sy - b * self.sx) / self.sw)
+        return a + b * x
+
+
+class DeploymentTelemetry:
+    """Arrival, concurrency, and cold-start windows for one deployment."""
+
+    __slots__ = ("clock", "fast", "slow", "concurrency", "cold_starts",
+                 "n_arrivals")
+
+    def __init__(
+        self,
+        clock: Optional[Callable[[], float]] = None,
+        fast_tau_s: float = 0.5,
+        slow_tau_s: float = 2.0,
+    ):
+        self.clock = ensure_clock(clock)
+        self.fast = DecayRate(fast_tau_s)
+        self.slow = DecayRate(slow_tau_s)
+        self.concurrency = DecayGauge(slow_tau_s)
+        self.cold_starts = DecayRate(slow_tau_s)
+        self.n_arrivals = 0
+
+    def record_arrival(self, t: float, in_flight: int) -> None:
+        self.n_arrivals += 1
+        self.fast.record(t)
+        self.slow.record(t)
+        self.concurrency.sample(t, float(in_flight))
+
+    def record_cold_start(self, t: float) -> None:
+        self.cold_starts.record(t)
+
+    def arrival_rate(self, t: float) -> float:
+        """Smoothed arrivals/sec (the fast, responsive estimate)."""
+        return self.fast.rate(t)
+
+    def arrival_trend(self, t: float) -> tuple:
+        """(rate, slope_per_s): the fast estimate and its drift.
+
+        The fast EWMA lags the true rate by ~``fast.tau_s`` and the slow one
+        by ~``slow.tau_s``; their spread divided by the lag difference is a
+        cheap O(1) slope estimate (positive while load ramps up)."""
+        rf = self.fast.rate(t)
+        rs = self.slow.rate(t)
+        lag = self.slow.tau_s - self.fast.tau_s
+        slope = (rf - rs) / lag if lag > 0.0 else 0.0
+        return rf, slope
+
+    def snapshot(self, t: Optional[float] = None) -> Dict[str, float]:
+        t = self.clock() if t is None else t
+        rate, slope = self.arrival_trend(t)
+        return {
+            "n_arrivals": float(self.n_arrivals),
+            "arrival_rps": rate,
+            "arrival_slope_rps_per_s": slope,
+            "concurrency": self.concurrency.value(),
+            "cold_start_rate": self.cold_starts.rate(t),
+        }
+
+
+class MediumTelemetry:
+    """Observed behaviour of one transfer medium: latency, cost, volume."""
+
+    __slots__ = ("n", "bytes_total", "fee_usd_total", "latency_model",
+                 "fee_model", "_latencies", "_p99", "_p99_dirty")
+
+    #: recent-latency window backing the p99 estimate
+    WINDOW = 256
+    #: the window is re-sorted at most once per REFRESH records, so a
+    #: record/query interleave (every routed pull records, every resolve
+    #: queries) amortizes the O(W log W) quantile to O(W log W / REFRESH)
+    REFRESH = 16
+
+    def __init__(self):
+        self.n = 0
+        self.bytes_total = 0
+        self.fee_usd_total = 0.0
+        self.latency_model = DecayedLinear()
+        self.fee_model = DecayedLinear()
+        self._latencies: deque = deque(maxlen=self.WINDOW)
+        self._p99 = 0.0
+        self._p99_dirty = False
+
+    def record(self, nbytes: int, seconds: float, fee_usd: float) -> None:
+        self.n += 1
+        self.bytes_total += nbytes
+        self.fee_usd_total += fee_usd
+        gb = nbytes / 1e9
+        self.latency_model.add(gb, seconds)
+        self.fee_model.add(gb, fee_usd)
+        self._latencies.append(seconds)
+        # always fresh while the window is small (the sort is trivial),
+        # amortized to every REFRESH-th record once it has filled out
+        if self.n <= self.REFRESH or self.n % self.REFRESH == 0:
+            self._p99_dirty = True
+
+    def predict_seconds(self, nbytes: int) -> float:
+        return self.latency_model.predict(nbytes / 1e9)
+
+    def predict_fee_usd(self, nbytes: int) -> float:
+        return self.fee_model.predict(nbytes / 1e9)
+
+    def usd_per_gb(self) -> float:
+        gb = self.bytes_total / 1e9
+        return self.fee_usd_total / gb if gb > 0.0 else 0.0
+
+    def p99_s(self) -> float:
+        if self._p99_dirty:
+            lat = sorted(self._latencies)
+            self._p99 = lat[min(len(lat) - 1, int(0.99 * len(lat)))]
+            self._p99_dirty = False
+        return self._p99
+
+    def snapshot(self) -> Dict[str, float]:
+        return {
+            "n": float(self.n),
+            "bytes": float(self.bytes_total),
+            "fee_usd": self.fee_usd_total,
+            "usd_per_gb": self.usd_per_gb(),
+            "p99_s": self.p99_s() if self.n else 0.0,
+        }
+
+
+class TelemetryHub:
+    """One shared registry of deployment + medium telemetry.
+
+    Create-on-first-use accessors keep wiring trivial: the scheduler asks
+    for ``hub.deployment(name)``, the transfer engine calls
+    ``hub.record_transfer(...)`` per pull, and a routing policy reads
+    ``hub.media`` — all against one object whose clock is the substrate's
+    injected clock.
+    """
+
+    def __init__(self, clock: Optional[Callable[[], float]] = None):
+        self.clock = ensure_clock(clock)
+        self.media: Dict[str, MediumTelemetry] = {}
+        self.deployments: Dict[str, DeploymentTelemetry] = {}
+
+    def medium(self, name: str) -> MediumTelemetry:
+        tel = self.media.get(name)
+        if tel is None:
+            tel = self.media[name] = MediumTelemetry()
+        return tel
+
+    def deployment(self, name: str, **kw) -> DeploymentTelemetry:
+        tel = self.deployments.get(name)
+        if tel is None:
+            tel = self.deployments[name] = DeploymentTelemetry(self.clock, **kw)
+        return tel
+
+    def record_transfer(
+        self, medium: str, nbytes: int, seconds: float, fee_usd: float = 0.0
+    ) -> None:
+        self.medium(medium).record(nbytes, seconds, fee_usd)
+
+    def has_media_samples(self) -> bool:
+        return any(m.n for m in self.media.values())
+
+    def media_snapshot(self) -> Dict[str, Dict[str, float]]:
+        return {name: m.snapshot() for name, m in self.media.items()}
+
+
+__all__ = [
+    "DecayGauge",
+    "DecayRate",
+    "DecayedLinear",
+    "DeploymentTelemetry",
+    "MediumTelemetry",
+    "TelemetryHub",
+]

@@ -49,7 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, ClassVar, Dict, Optional, Tuple, Type
+from typing import Any, Callable, ClassVar, Dict, Optional, Tuple, Type, Union
 
 import jax
 import jax.numpy as jnp
@@ -58,8 +58,10 @@ import numpy as np
 from .buffers import BufferRegistry
 from .clock import ensure_clock
 from .cluster import DEFAULT_NET, NetConstants, TransferAccounting
+from .cost import marginal_pull_fee_usd
 from .errors import InlineTooLarge, XDTObjectExhausted, XDTRefInvalid
 from .refs import ObjectDescriptor, RefMinter, RefPayload, XDTRef
+from .telemetry import TelemetryHub
 
 Sharding = Any  # jax.sharding.Sharding
 
@@ -396,6 +398,7 @@ class TransferEngine:
         inline_limit: Optional[int] = None,
         service: Optional[ServiceStore] = None,
         clock: Optional[Callable[[], float]] = None,
+        telemetry: Union[TelemetryHub, None, bool] = None,
     ):
         if backend not in _BACKEND_REGISTRY:
             raise ValueError(
@@ -425,10 +428,27 @@ class TransferEngine:
         # per-engine strategy instances: the default plus any media used via
         # the per-call ``backend=`` override (all share registry/service/acct)
         self._strategies: Dict[str, TransferBackend] = {backend: self._backend}
-        # (medium, nbytes) -> modeled seconds: net constants are fixed per
-        # engine and workloads reuse a handful of object sizes, so the
-        # per-get model evaluation collapses to a dict hit
+        # (medium, nbytes) -> modeled seconds and (medium, nbytes,
+        # n_retrievals) -> marginal pull fee: net constants and prices are
+        # fixed per engine and workloads reuse a handful of object shapes,
+        # so the per-get model/fee evaluation collapses to dict hits
         self._modeled_cache: Dict[Tuple[str, int], float] = {}
+        self._fee_cache: Dict[Tuple[str, int, int], float] = {}
+        #: per-medium observed latency/cost/bytes feed — the shared substrate
+        #: AdaptiveRoute (and anything else) reads; when set, every ``get``
+        #: records the pull's modeled seconds and its marginal fee share
+        #: (the one-time put/capacity fee apportioned across the object's
+        #: permitted retrievals, so an N-consumer broadcast object is not
+        #: observed as N puts).  Off by default so the legacy single-backend
+        #: hot path pays nothing for the observe side; pass ``True`` (or a
+        #: hub to share) to opt in — ``dag.bind`` switches it on
+        #: automatically when an :class:`~repro.core.dag.AdaptiveRoute`
+        #: needs the feed.
+        self.telemetry: Optional[TelemetryHub] = (
+            TelemetryHub(self.clock) if telemetry is True
+            else telemetry if isinstance(telemetry, TelemetryHub)
+            else None
+        )
 
     # ----------------------------------------------------- medium dispatch
     def _acct_for(self, medium: str) -> TransferAccounting:
@@ -517,6 +537,15 @@ class TransferEngine:
                 strat.modeled_seconds(nbytes, self.net)
             )
         stats.modeled_seconds += modeled
+        if self.telemetry is not None:
+            n = payload.desc.n_retrievals or 1
+            fkey = (medium, nbytes, n)
+            fee = self._fee_cache.get(fkey)
+            if fee is None:
+                fee = self._fee_cache[fkey] = (
+                    marginal_pull_fee_usd(medium, nbytes, n)
+                )
+            self.telemetry.record_transfer(medium, nbytes, modeled, fee)
         return obj
 
     # --------------------------------------------------------------- invoke

@@ -342,9 +342,14 @@ class WorkflowEngine:
         any ``ctx.sleep``/transfer debt it accrues)."""
         self.functions[name] = handler
         self.service_times[name] = service_time
-        self._deployments[name] = self.control.register(
+        dep = self.control.register(
             name, policy or ScalingPolicy(max_instances=16)
         )
+        # rate-driven autoscalers need requests-per-instance capacity before
+        # the first completions exist; the registered service time is the
+        # natural prior (no-op for telemetry-free legacy deployments)
+        dep.seed_holding_estimate(service_time)
+        self._deployments[name] = dep
 
     # -- orchestrator ------------------------------------------------------------
     def submit(self, entry: str, payload: Any) -> WorkflowRequest:
@@ -520,10 +525,17 @@ class WorkflowEngine:
                     throw = errs[0]
                 else:
                     send = [h.value for h in yielded]
+            elif isinstance(yielded, Event):
+                # raw simulator event: lets handlers wait on external
+                # completion signals (e.g. the disaggregated server bridging
+                # real decode completion into virtual time)
+                yield yielded
+                send = yielded.value
             else:
                 raise TypeError(
                     f"handler {ctx.function!r} yielded {type(yielded).__name__}; "
-                    "yield seconds, an AsyncResult, or a list of AsyncResults"
+                    "yield seconds, an AsyncResult, a list of AsyncResults, "
+                    "or a simulator Event"
                 )
 
     def _invoke_inline(self, fn_name: str, payload: Any, parent: Context) -> Any:

@@ -39,6 +39,7 @@ from typing import Any, Callable, Dict, Optional, Union
 from .cluster import DEFAULT_NET, NetConstants
 from .cost import CostBreakdown, WorkflowCostInputs
 from .dag import (
+    AdaptiveRoute,
     Edge,
     RoutePolicy,
     SizeRoute,
@@ -49,8 +50,10 @@ from .dag import (
 
 #: the paper's single-backend configurations
 BACKENDS = ("s3", "elasticache", "xdt")
-#: ... plus the per-edge-routed configuration (Fig 7 / Table 2 extra column)
-ROUTED_BACKENDS = BACKENDS + ("hybrid",)
+#: ... plus the per-edge-routed configurations (Fig 7 / Table 2 extra
+#: columns): ``hybrid`` routes from static edge facts (SizeRoute),
+#: ``adaptive`` from the telemetry feed (AdaptiveRoute)
+ROUTED_BACKENDS = BACKENDS + ("hybrid", "adaptive")
 
 #: The default per-edge policy behind ``backend="hybrid"``: objects that fit
 #: the activator's inline payload cap ride the control message (no storage
@@ -204,6 +207,10 @@ def _run_workload(
     if backend == "hybrid":
         route: Union[str, RoutePolicy] = HYBRID_ROUTE
         label = "hybrid"
+    elif backend == "adaptive":
+        # fresh policy per run: the telemetry feed starts empty (static
+        # fallback) and adapts within the run as edges are observed
+        route, label = AdaptiveRoute(), "adaptive"
     elif isinstance(backend, RoutePolicy):
         route, label = backend, backend.describe()
     else:

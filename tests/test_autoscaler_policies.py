@@ -1,0 +1,251 @@
+"""Pluggable autoscaler policies: legacy default, rps, predictive, registry."""
+import pytest
+
+from repro.core import LoadGenerator, WorkflowEngine
+from repro.core.scheduler import (
+    AutoscalerPolicy,
+    ConcurrencyPolicy,
+    Deployment,
+    PredictivePolicy,
+    RpsPolicy,
+    ScalingPolicy,
+    available_autoscalers,
+    make_autoscaler,
+    register_autoscaler,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# Registry + defaults
+# ---------------------------------------------------------------------------
+
+
+def test_default_policy_is_legacy_concurrency():
+    d = Deployment("f", ScalingPolicy(), clock=FakeClock())
+    assert isinstance(d.autoscaler, ConcurrencyPolicy)
+    assert d.telemetry is None          # legacy steer path stays bare
+
+
+def test_registry_resolves_names_and_instances():
+    assert set(available_autoscalers()) >= {"concurrency", "rps", "predictive"}
+    assert isinstance(make_autoscaler("rps"), RpsPolicy)
+    pol = PredictivePolicy(headroom=2.0)
+    assert make_autoscaler(pol) is pol
+    with pytest.raises(ValueError, match="autoscaler must be one of"):
+        make_autoscaler("nope")
+
+
+def test_register_custom_autoscaler():
+    class AlwaysTwo(AutoscalerPolicy):
+        name = "always-two"
+        needs_telemetry = True
+        reactive = False
+
+        def desired_instances(self, dep, now):
+            return 2
+
+    register_autoscaler(AlwaysTwo)
+    clock = FakeClock()
+    d = Deployment("f", ScalingPolicy(autoscaler="always-two",
+                                      cold_start_s=0.0), clock=clock)
+    d.steer()
+    assert d.n_instances == 2
+    assert d.stats["prewarmed"] == 2
+
+
+# ---------------------------------------------------------------------------
+# RpsPolicy: fleet sized from the arrival-rate window
+# ---------------------------------------------------------------------------
+
+
+def _drive(dep, clock, rate, seconds, hold_train=None):
+    """Steer at a fixed rate, releasing immediately (holding ~0)."""
+    dt = 1.0 / rate
+    n = int(seconds * rate)
+    for _ in range(n):
+        inst, _ = dep.steer()
+        dep.release(inst.instance_id)
+        clock.advance(dt)
+
+
+def test_rps_policy_sizes_fleet_from_rate_not_misses():
+    clock = FakeClock()
+    d = Deployment(
+        "f",
+        ScalingPolicy(autoscaler=RpsPolicy(target_rps_per_instance=10.0,
+                                           utilization=1.0),
+                      max_instances=64, cold_start_s=0.0),
+        clock=clock,
+    )
+    _drive(d, clock, rate=50.0, seconds=4.0)
+    # ~50 rps / 10 per instance -> ~5 instances, NOT one per steer miss
+    assert 4 <= d.n_instances <= 8
+    assert d.stats["cold_starts"] == d.stats["prewarmed"] == d.n_instances
+
+
+def test_rps_policy_bootstraps_from_concurrency_without_estimate():
+    clock = FakeClock()
+    d = Deployment(
+        "f",
+        ScalingPolicy(autoscaler=RpsPolicy(), max_instances=8,
+                      target_concurrency=2, cold_start_s=0.0),
+        clock=clock,
+    )
+    # no holding estimate, 3 requests held in flight: ceil((n+1)/2) instances
+    insts = [d.steer()[0] for _ in range(3)]
+    assert d.n_instances == 2
+    assert len({i.instance_id for i in insts}) == 2
+
+
+def test_rps_capacity_derived_from_seeded_holding_time():
+    clock = FakeClock()
+    d = Deployment(
+        "f",
+        ScalingPolicy(autoscaler=RpsPolicy(utilization=1.0),
+                      max_instances=64, cold_start_s=0.0),
+        clock=clock,
+    )
+    d.seed_holding_estimate(0.1)        # 10 rps capacity per instance
+    _drive(d, clock, rate=40.0, seconds=4.0)
+    assert 3 <= d.n_instances <= 7      # ~40/10 = 4
+
+
+def test_seed_holding_estimate_is_noop_for_legacy_policy():
+    d = Deployment("f", ScalingPolicy(), clock=FakeClock())
+    d.seed_holding_estimate(3.0)
+    assert d._service_ewma == 0.0       # cap queue model unchanged bit-for-bit
+
+
+# ---------------------------------------------------------------------------
+# PredictivePolicy: pre-warming from the trend
+# ---------------------------------------------------------------------------
+
+
+def test_predictive_prewarms_ahead_of_ramp():
+    clock = FakeClock()
+    pred = Deployment(
+        "f",
+        ScalingPolicy(autoscaler=PredictivePolicy(utilization=1.0),
+                      max_instances=256, cold_start_s=0.5),
+        clock=clock,
+    )
+    rps = Deployment(
+        "f",
+        ScalingPolicy(autoscaler=RpsPolicy(utilization=1.0),
+                      max_instances=256, cold_start_s=0.5),
+        clock=clock,
+    )
+    for d in (pred, rps):
+        d.seed_holding_estimate(0.2)
+    # arrival rate ramps linearly 10 -> 170 rps over 4 s
+    t = 0.0
+    while t < 4.0:
+        pred.steer()
+        rps.steer()
+        dt = 1.0 / (10.0 + 40.0 * t)
+        clock.advance(dt)
+        t += dt
+    # the trend extrapolation provisions ahead of the rate-only policy
+    assert pred.n_instances > rps.n_instances
+
+
+def test_predictive_never_scales_below_current_rate():
+    """On falling load the forecast clamps at the current rate: desired
+    stays positive and the keep-alive reaper (not the forecast) scales
+    down."""
+    clock = FakeClock()
+    d = Deployment(
+        "f",
+        ScalingPolicy(autoscaler=PredictivePolicy(utilization=1.0),
+                      max_instances=64, cold_start_s=0.0),
+        clock=clock,
+    )
+    d.seed_holding_estimate(0.1)
+    _drive(d, clock, rate=50.0, seconds=2.0)
+    _drive(d, clock, rate=5.0, seconds=2.0)   # load falls off
+    inst, wait = d.steer()                    # still at least one instance
+    assert wait == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: policies selectable per deployment, fewer cold starts
+# ---------------------------------------------------------------------------
+
+
+def _burst_engine(autoscaler):
+    eng = WorkflowEngine(records="columnar")
+    eng.register(
+        "f", lambda ctx, x: x,
+        policy=ScalingPolicy(max_instances=64, target_concurrency=1,
+                             autoscaler=autoscaler),
+        service_time=0.05,
+    )
+    return eng
+
+
+@pytest.mark.parametrize("autoscaler", ["rps", "predictive"])
+def test_rate_policies_cold_start_less_than_legacy_under_load(autoscaler):
+    """At high offered load the reactive policy boots one instance per
+    arrival caught mid cold-start; rate-driven policies provision the
+    steady-state fleet."""
+    def cold_starts(policy):
+        eng = _burst_engine(policy)
+        rep = LoadGenerator(eng, "f").run_open(rate_rps=300.0, duration_s=5.0)
+        assert rep.n_requests > 0
+        return rep.n_cold_starts, rep
+
+    legacy, _ = cold_starts(None)
+    rated, rep = cold_starts(autoscaler)
+    assert rated < legacy
+    assert rep.autoscaler == autoscaler
+    assert rep.n_prewarmed > 0          # scale-up was proactive, not reactive
+
+
+def test_loadgen_reports_per_run_control_plane_deltas():
+    eng = _burst_engine("rps")
+    gen = LoadGenerator(eng, "f")
+    first = gen.run_open(rate_rps=100.0, duration_s=2.0)
+    second = gen.run_open(rate_rps=100.0, duration_s=2.0)
+    assert first.n_cold_starts > 0
+    # the fleet from run 1 is still warm: run 2's deltas are much smaller
+    assert second.n_cold_starts <= first.n_cold_starts
+    assert second.n_prewarmed <= first.n_prewarmed
+
+
+def test_dag_bind_selects_autoscaler_for_all_stages():
+    from repro.core.workloads import DAGS
+
+    eng = WorkflowEngine(records="columnar")
+    DAGS["vid"].bind(eng, default_route="xdt", bytes_scale=1e-5,
+                     autoscaler="rps")
+    for dep in eng.control.deployments.values():
+        assert isinstance(dep.autoscaler, RpsPolicy)
+        assert dep.telemetry is not None
+
+
+def test_execute_on_cluster_autoscaled_stages_pay_cold_starts():
+    from repro.core.workloads import VID_DAG
+    from repro.core.dag import execute_on_cluster
+
+    base = execute_on_cluster(VID_DAG, "xdt", seed=0, deterministic=True)
+    assert base.control is None         # default: pre-provisioned fleet
+    run = execute_on_cluster(VID_DAG, "xdt", seed=0, deterministic=True,
+                             autoscaler="concurrency")
+    stats = {n: d.stats for n, d in run.control.deployments.items()}
+    assert sum(s["cold_starts"] for s in stats.values()) > 0
+    # cold-start gates extend the critical path vs the pre-provisioned run
+    assert run.latency_s > base.latency_s
+    # every steered instance was released at stage completion
+    assert all(d.in_flight_total == 0
+               for d in run.control.deployments.values())

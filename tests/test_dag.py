@@ -225,16 +225,16 @@ def test_external_edge_policy_must_resolve_to_storage():
     dag = WorkflowDAG(
         "d", [Stage("a"), Stage("b", blocking=False)],
         [Edge(None, "b", 1 << 20, label="in", handoff="external",
-              route=SizeRoute())],          # bypasses the static str check
+              route=FixedRoute("xdt"))],    # bypasses the static str check
     )
-    # SizeRoute on a non-evictable external edge resolves to xdt -> rejected
+    # a policy landing on an instance-resident medium -> rejected at send
     with pytest.raises(ValueError, match="must resolve to storage"):
         execute_on_cluster(dag, "s3", seed=0, deterministic=True)
-    # a policy that lands on durable storage is fine
+    # SizeRoute understands external edges: durable storage, never inline/xdt
     durable = WorkflowDAG(
         "d", [Stage("a"), Stage("b", blocking=False)],
         [Edge(None, "b", 1 << 20, label="in", handoff="external",
-              route=SizeRoute(default="s3"))],
+              route=SizeRoute())],
     )
     run = execute_on_cluster(durable, "xdt", seed=0, deterministic=True)
     assert run.edge_media["in"] == "s3"

@@ -1,0 +1,276 @@
+"""RoutePolicy edge cases: SizeRoute handoff rules, evictable durability
+across producer-death retries, AdaptiveRoute fallback + feedback routing."""
+import numpy as np
+import pytest
+
+from repro.core import WorkflowEngine
+from repro.core.dag import (
+    AdaptiveRoute,
+    Edge,
+    SizeRoute,
+    Stage,
+    WorkflowDAG,
+    execute_on_cluster,
+)
+from repro.core.cost import transfer_fee_usd
+from repro.core.errors import XDTProducerGone
+from repro.core.scheduler import ScalingPolicy
+from repro.core.telemetry import TelemetryHub
+
+
+def _edge(**kw):
+    kw.setdefault("src", "p")
+    kw.setdefault("dst", "c")
+    kw.setdefault("nbytes", 64)
+    return Edge(**kw)
+
+
+# ---------------------------------------------------------------------------
+# SizeRoute: inline only exists on sync handoffs
+# ---------------------------------------------------------------------------
+
+
+def test_sizeroute_inlines_only_small_sync_objects():
+    r = SizeRoute(inline_under=1 << 10)
+    assert r.resolve(_edge(handoff="sync"), 64, False) == "inline"
+    assert r.resolve(_edge(handoff="sync"), 1 << 20, False) == "xdt"
+
+
+@pytest.mark.parametrize("handoff", ["staged", "external"])
+def test_sizeroute_never_inlines_staged_or_external(handoff):
+    """Inline only exists where an invoke accompanies the payload: staged
+    fan-in/out edges fetch without one, and external input predates the
+    workflow entirely."""
+    r = SizeRoute(inline_under=1 << 30)      # everything is "small enough"
+    src = None if handoff == "external" else "p"
+    medium = r.resolve(_edge(src=src, handoff=handoff), 64, False)
+    assert medium != "inline"
+    if handoff == "external":
+        assert medium == r.durable           # storage only: durable default
+
+
+def test_sizeroute_evictable_producer_goes_durable():
+    r = SizeRoute()
+    for handoff in ("sync", "staged"):
+        src = "p"
+        assert r.resolve(_edge(src=src, handoff=handoff), 64, True) == "s3"
+
+
+# ---------------------------------------------------------------------------
+# Evictable producers stay durable across producer-death retries
+# ---------------------------------------------------------------------------
+
+
+def _death_engine(medium, deaths):
+    """producer puts on `medium`; the producer instance dies before the
+    consumer's get on the first `deaths` attempts."""
+    eng = WorkflowEngine()
+    state = {"left": deaths}
+
+    def flow(ctx, x):
+        ref = ctx.put(np.ones(8, np.float32), n_retrievals=1, backend=medium)
+        if state["left"] > 0:
+            state["left"] -= 1
+            eng.transfer.kill_producer()
+        return float(np.sum(ctx.get(ref)))
+
+    eng.register("flow", flow, policy=ScalingPolicy(max_instances=4))
+    return eng
+
+
+def test_evictable_routing_survives_producer_death_and_retries():
+    """The durable medium an evictable producer's edge resolves to really is
+    durable: the object outlives kill_producer() on every retry attempt."""
+    route = SizeRoute()
+    medium = route.resolve(_edge(handoff="staged"), 2 << 20, True)
+    eng = _death_engine(medium, deaths=3)    # > max_retries: EVERY attempt
+    assert eng.run("flow", 0) == 8.0         # first attempt already survives
+    eng.assert_at_most_once()
+
+
+def test_instance_resident_medium_dies_with_producer_for_contrast():
+    route = SizeRoute()
+    medium = route.resolve(_edge(handoff="staged"), 2 << 20, False)
+    assert medium == "xdt"
+    eng = _death_engine(medium, deaths=3)    # dies on every retry too
+    with pytest.raises(XDTProducerGone):
+        eng.run("flow", 0)
+
+
+def test_engine_retry_recovers_when_death_is_transient():
+    route = SizeRoute()
+    medium = route.resolve(_edge(handoff="staged"), 2 << 20, False)
+    eng = _death_engine(medium, deaths=1)    # only the first attempt dies
+    assert eng.run("flow", 0) == 8.0
+    assert eng.executed_count("flow") == 2   # the orchestrator retried
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveRoute
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_falls_back_to_static_without_samples():
+    hub = TelemetryHub()
+    r = AdaptiveRoute(telemetry=hub)
+    edge_small = _edge(handoff="sync", nbytes=64)
+    edge_big = _edge(handoff="sync", nbytes=64 << 20)
+    assert not hub.has_media_samples()
+    # empty feed: exactly the static SizeRoute decision
+    assert r.resolve(edge_small, 64, False) == "inline"
+    assert r.resolve(edge_big, 64 << 20, False) == "xdt"
+    assert r.resolve(edge_big, 64 << 20, True) == "s3"
+    # unbound hub behaves the same
+    assert AdaptiveRoute().resolve(edge_small, 64, False) == "inline"
+
+
+def test_adaptive_picks_cheapest_observed_medium():
+    hub = TelemetryHub()
+    nb = 8 << 20
+    hub.record_transfer("s3", nb, 0.5, transfer_fee_usd("s3", nb))
+    hub.record_transfer("xdt", nb, 0.05, 0.0)
+    r = AdaptiveRoute(telemetry=hub)
+    assert r.resolve(_edge(handoff="staged", nbytes=nb), nb, False) == "xdt"
+
+
+def test_adaptive_respects_latency_budget():
+    """With a budget only media whose observed p99 fits are eligible; the
+    cheapest of those wins even when a cheaper-but-slower one exists."""
+    hub = TelemetryHub()
+    nb = 8 << 20
+    for _ in range(4):
+        hub.record_transfer("xdt", nb, 0.30, 0.0)   # free but slow (observed)
+        hub.record_transfer("s3", nb, 0.60, transfer_fee_usd("s3", nb))
+        hub.record_transfer("elasticache", nb, 0.02,
+                            transfer_fee_usd("elasticache", nb))
+    r = AdaptiveRoute(telemetry=hub)
+    tight = _edge(handoff="staged", nbytes=nb, latency_budget_s=0.1)
+    loose = _edge(handoff="staged", nbytes=nb, latency_budget_s=1.0)
+    assert r.resolve(tight, nb, False) == "elasticache"
+    assert r.resolve(loose, nb, False) == "xdt"
+
+
+def test_adaptive_hard_constraints_dominate_scores():
+    hub = TelemetryHub()
+    nb = 64
+    hub.record_transfer("xdt", nb, 0.001, 0.0)
+    r = AdaptiveRoute(telemetry=hub)
+    # evictable: only durable media are candidates, however cheap xdt looks
+    assert r.resolve(_edge(handoff="staged"), nb, True) in ("s3", "elasticache")
+    # external: storage only
+    ext = _edge(src=None, handoff="external")
+    assert r.resolve(ext, nb, False) in ("s3", "elasticache")
+
+
+def test_adaptive_on_cluster_lowering_matches_best_medium():
+    """execute_on_cluster feeds the hub per resolved object, so within one
+    run the router converges onto the cheapest feasible media; the adaptive
+    run is never costlier than the best fixed single backend."""
+    dag = WorkflowDAG(
+        "w",
+        [Stage("driver", compute_s=0.01),
+         Stage("worker", fan=4, compute_s=0.02, blocking=False)],
+        [Edge("driver", "worker", 4 << 20, label="d2w", handoff="staged",
+              fanout="broadcast", n_objects=4)],
+    )
+    costs = {}
+    for backend in ("s3", "elasticache", "xdt"):
+        costs[backend] = execute_on_cluster(
+            dag, backend, seed=0, deterministic=True
+        ).cost().total
+    route = AdaptiveRoute()
+    run = execute_on_cluster(dag, route, seed=0, deterministic=True)
+    assert route.telemetry is not None        # hub auto-bound
+    assert route.telemetry.has_media_samples()
+    assert run.cost().total <= min(costs.values()) * (1 + 1e-9)
+
+
+def test_adaptive_route_rebinds_across_runs():
+    """A route instance reused across cluster runs gets a FRESH run-local
+    hub each time (auto-bound hubs are replaced, user-supplied ones kept),
+    so a later cell never routes off an earlier run's dead feed."""
+    dag = WorkflowDAG(
+        "w3",
+        [Stage("a", compute_s=0.0), Stage("b", blocking=True)],
+        [Edge("a", "b", 1 << 20, label="ab", handoff="sync")],
+    )
+    route = AdaptiveRoute()
+    execute_on_cluster(dag, route, seed=0, deterministic=True)
+    first_hub = route.telemetry
+    assert first_hub is not None and first_hub.has_media_samples()
+    execute_on_cluster(dag, route, seed=1, deterministic=True)
+    assert route.telemetry is not first_hub
+    # an explicit user hub survives re-execution
+    mine = TelemetryHub()
+    pinned = AdaptiveRoute(telemetry=mine)
+    execute_on_cluster(dag, pinned, seed=0, deterministic=True)
+    assert pinned.telemetry is mine
+
+
+def test_staged_media_sticky_from_put_to_get():
+    """A stateful route whose answer drifts between the producer's put and
+    the consumer's get must not split one object across media: the medium
+    is decided once at stage time, so a storage GET can never be billed for
+    an object that was never PUT to that service."""
+
+    class Flappy(AdaptiveRoute):
+        def __init__(self):
+            super().__init__(telemetry=TelemetryHub())
+            self.calls = 0
+
+        def resolve(self, edge, nbytes, evictable):
+            self.calls += 1
+            return "s3" if self.calls % 2 else "xdt"   # flips every resolve
+
+    dag = WorkflowDAG(
+        "w4",
+        [Stage("driver", compute_s=0.01),
+         Stage("worker", fan=2, compute_s=0.01, blocking=False)],
+        [Edge("driver", "worker", 1 << 20, label="d2w", handoff="staged",
+              fanout="partition", n_objects=3)],
+    )
+    run = execute_on_cluster(dag, Flappy(), seed=0, deterministic=True)
+    u = run.edge_usage["d2w"]
+    # every object fetched on the exact medium it was staged on: the edge's
+    # S3 get count equals its S3 put count (1 retrieval per object)
+    assert u.n_gets == u.n_puts
+    assert u.media.get("s3", 0) == u.n_gets
+    acct = run.media_storage_ops()["s3"]
+    assert acct.n_gets == acct.n_puts
+
+
+def test_fee_feed_apportions_put_across_retrievals():
+    """A fan-out object's one-time put fee is split across its permitted
+    retrievals in the telemetry feed: the observed per-pull $ matches the
+    real marginal bill instead of overcounting one PUT per consumer."""
+    from repro.core.transfer import TransferEngine
+
+    engine = TransferEngine("s3", telemetry=True)
+    fan = 8
+    ref = engine.put(np.ones(256, np.float32), n_retrievals=fan)
+    for _ in range(fan):
+        engine.get(ref)
+    tel = engine.telemetry.medium("s3")
+    nb = 256 * 4
+    expected = transfer_fee_usd("s3", nb, n_gets=fan)  # PUT + fan GETs
+    assert tel.n == fan
+    assert tel.fee_usd_total == pytest.approx(expected)
+
+
+def test_adaptive_engine_lowering_binds_transfer_telemetry():
+    """dag.bind wires the engine's TransferEngine telemetry into an unbound
+    AdaptiveRoute, so routing feeds on the engine's real pulls."""
+    dag = WorkflowDAG(
+        "w2",
+        [Stage("a", compute_s=0.0), Stage("b", blocking=True)],
+        [Edge("a", "b", 1 << 20, label="ab", handoff="sync")],
+    )
+    eng = WorkflowEngine(backend="xdt")
+    assert eng.transfer.telemetry is None    # off by default (hot-path cost)
+    route = AdaptiveRoute()
+    binding = dag.bind(eng, default_route=route, bytes_scale=1e-3)
+    assert eng.transfer.telemetry is not None  # switched on by the binding
+    assert route.telemetry is eng.transfer.telemetry
+    eng.run(binding.entry, 1.0)
+    assert eng.transfer.telemetry.has_media_samples()
+    assert binding.edge_usage["ab"].n_gets > 0

@@ -1,0 +1,134 @@
+"""Telemetry substrate: rate/trend windows, gauges, medium feeds."""
+import pytest
+
+from repro.core.cluster import Simulator
+from repro.core.clock import VirtualClock
+from repro.core.cost import transfer_fee_usd
+from repro.core.telemetry import (
+    DecayGauge,
+    DecayRate,
+    DecayedLinear,
+    DeploymentTelemetry,
+    MediumTelemetry,
+    TelemetryHub,
+)
+
+
+# ---------------------------------------------------------------------------
+# Estimators
+# ---------------------------------------------------------------------------
+
+
+def test_decay_rate_tracks_steady_rate():
+    r = DecayRate(tau_s=2.0)
+    for k in range(400):
+        r.record(k * 0.01)              # 100 events/s for 4 s
+    assert r.rate(4.0) == pytest.approx(100.0, rel=0.1)
+
+
+def test_decay_rate_warmup_correction_sees_early_ramp():
+    """A plain EWMA underestimates by elapsed/tau during warmup; the
+    corrected estimator reports the true rate within a few samples."""
+    r = DecayRate(tau_s=2.0)
+    for k in range(20):
+        r.record(k * 0.0025)            # 400 events/s, only 50 ms observed
+    assert r.rate(0.05) == pytest.approx(400.0, rel=0.3)
+
+
+def test_decay_rate_decays_when_idle():
+    r = DecayRate(tau_s=1.0)
+    for k in range(100):
+        r.record(k * 0.01)
+    busy = r.rate(1.0)
+    assert r.rate(6.0) < 0.01 * busy    # 5 tau idle: rate nearly gone
+
+
+def test_decay_gauge_converges_to_level():
+    g = DecayGauge(tau_s=1.0)
+    for k in range(200):
+        g.sample(k * 0.05, 8.0)
+    assert g.value() == pytest.approx(8.0)
+
+
+def test_decayed_linear_fits_intercept_and_slope():
+    m = DecayedLinear()
+    for x, y in [(0.0, 1.0), (1.0, 3.0), (2.0, 5.0), (3.0, 7.0)]:
+        m.add(x, y)
+    assert m.predict(10.0) == pytest.approx(21.0, rel=0.05)
+
+
+def test_decayed_linear_single_size_collapses_to_mean():
+    m = DecayedLinear()
+    for _ in range(5):
+        m.add(2.0, 10.0)
+    assert m.predict(2.0) == pytest.approx(10.0)
+    assert m.predict(100.0) == pytest.approx(10.0)  # no slope signal: flat
+
+
+# ---------------------------------------------------------------------------
+# Deployment telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_trend_positive_while_ramping():
+    tel = DeploymentTelemetry(lambda: 0.0)
+    t, dt = 0.0, 0.1
+    while t < 4.0:
+        tel.record_arrival(t, 1)
+        dt = max(0.002, dt * 0.97)      # accelerating arrivals
+        t += dt
+    rate, slope = tel.arrival_trend(t)
+    assert rate > 0
+    assert slope > 0
+
+
+def test_trend_flat_on_steady_load():
+    tel = DeploymentTelemetry(lambda: 0.0)
+    for k in range(500):
+        tel.record_arrival(k * 0.02, 1)  # 50/s steady
+    rate, slope = tel.arrival_trend(10.0)
+    assert rate == pytest.approx(50.0, rel=0.15)
+    assert abs(slope) < 0.2 * rate
+
+
+def test_snapshot_reports_cold_starts_and_concurrency():
+    tel = DeploymentTelemetry(lambda: 0.0)
+    for k in range(100):
+        tel.record_arrival(k * 0.1, 4)
+    tel.record_cold_start(9.9)
+    snap = tel.snapshot(10.0)
+    assert snap["n_arrivals"] == 100
+    assert snap["concurrency"] == pytest.approx(4.0)
+    assert snap["cold_start_rate"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Medium telemetry + hub
+# ---------------------------------------------------------------------------
+
+
+def test_medium_telemetry_latency_and_fee_models():
+    tel = MediumTelemetry()
+    # per-op-dominated medium: fee flat in size, latency grows with size
+    for nbytes, secs in [(1 << 20, 0.05), (8 << 20, 0.12), (32 << 20, 0.40)]:
+        tel.record(nbytes, secs, transfer_fee_usd("s3", nbytes))
+    assert tel.n == 3
+    assert tel.predict_seconds(8 << 20) == pytest.approx(0.12, rel=0.5)
+    # the fee model learns the per-object (intercept) structure
+    assert tel.predict_fee_usd(16 << 20) == pytest.approx(
+        transfer_fee_usd("s3", 16 << 20), rel=0.2
+    )
+    assert tel.p99_s() == pytest.approx(0.40)
+    assert tel.usd_per_gb() > 0
+
+
+def test_hub_create_on_first_use_and_sampling_flag():
+    sim = Simulator()
+    hub = TelemetryHub(VirtualClock(sim))
+    assert not hub.has_media_samples()
+    hub.record_transfer("xdt", 1 << 20, 0.01, 0.0)
+    assert hub.has_media_samples()
+    assert hub.medium("xdt").n == 1
+    assert "xdt" in hub.media_snapshot()
+    dep = hub.deployment("f")
+    assert hub.deployment("f") is dep   # cached, clock shared
