@@ -1,0 +1,84 @@
+"""CI reporting helper: events/sec delta table vs the committed baseline.
+
+Prints a GitHub-flavored-markdown table comparing the *committed*
+``results/BENCH_engine.json`` smoke section (saved aside before the CI run
+overwrites it) against the freshly measured one, per (backend x offered
+load) cell plus the totals row.  CI appends the output to
+``$GITHUB_STEP_SUMMARY`` so every PR shows its engine-throughput delta
+next to the pass/fail tick — the hard gate itself stays in
+``bench_engine --smoke --check`` (>30% regression fails the job); this
+table is the trajectory's human-readable face.
+
+Usage:  PYTHONPATH=src python -m benchmarks.bench_delta BASELINE.json [FRESH.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from .common import RESULTS_DIR
+
+
+def _smoke_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    smoke = doc.get("smoke") or {}
+    rows = {
+        (r["backend"], r["offered_rps"]): r for r in smoke.get("rows", [])
+    }
+    return rows, smoke.get("totals", {})
+
+
+def _fmt_delta(base, fresh):
+    if not base:
+        return "n/a"
+    pct = (fresh - base) / base * 100.0
+    return f"{pct:+.1f}%"
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: python -m benchmarks.bench_delta BASELINE.json [FRESH.json]")
+        return 2
+    baseline_path = argv[0]
+    fresh_path = (
+        argv[1] if len(argv) > 1
+        else os.path.join(RESULTS_DIR, "BENCH_engine.json")
+    )
+    base_rows, base_tot = _smoke_rows(baseline_path)
+    fresh_rows, fresh_tot = _smoke_rows(fresh_path)
+
+    print("### Engine benchmark — smoke events/sec vs committed baseline")
+    print()
+    print("| backend | offered rps | baseline ev/s | fresh ev/s | delta |")
+    print("|---|---:|---:|---:|---:|")
+    for key in sorted(fresh_rows):
+        fresh = fresh_rows[key]
+        base = base_rows.get(key, {})
+        b_eps = base.get("events_per_sec", 0.0)
+        f_eps = fresh["events_per_sec"]
+        print(f"| {key[0]} | {key[1]:.0f} | {b_eps:,.0f} | {f_eps:,.0f} "
+              f"| {_fmt_delta(b_eps, f_eps)} |")
+    b_eps = base_tot.get("events_per_sec", 0.0)
+    f_eps = fresh_tot.get("events_per_sec", 0.0)
+    print(f"| **total** | | **{b_eps:,.0f}** | **{f_eps:,.0f}** "
+          f"| **{_fmt_delta(b_eps, f_eps)}** |")
+    print()
+    checks = [
+        (k, base_rows[k]["latency_checksum"] == r["latency_checksum"])
+        for k, r in fresh_rows.items() if k in base_rows
+    ]
+    if checks and all(ok for _, ok in checks):
+        print("fixed-seed per-request latency checksums: **bit-identical** "
+              "to the committed baseline (semantics unchanged)")
+    elif checks:
+        diff = [f"{k[0]}@{k[1]:.0f}" for k, ok in checks if not ok]
+        print(f"latency checksums CHANGED at: {', '.join(diff)} — the sweep's "
+              "virtual-time semantics differ from the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

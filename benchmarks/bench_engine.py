@@ -239,5 +239,12 @@ def main(argv=None):
     return 0
 
 
+#: benchmarks.run auto-discovery (smoke carries the events/sec regression gate)
+HARNESS = {
+    "name": "bench",
+    "full": lambda: main([]),
+    "smoke": lambda: main(["--smoke", "--check"]),
+}
+
 if __name__ == "__main__":
     sys.exit(main())

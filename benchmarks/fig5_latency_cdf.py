@@ -49,5 +49,8 @@ def main():
     return out
 
 
+#: benchmarks.run auto-discovery
+HARNESS = {"name": "fig5", "full": main, "smoke": lambda: run(20)}
+
 if __name__ == "__main__":
     main()

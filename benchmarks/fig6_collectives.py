@@ -53,5 +53,8 @@ def main():
     return out
 
 
+#: benchmarks.run auto-discovery
+HARNESS = {"name": "fig6", "full": main, "smoke": lambda: run(2)}
+
 if __name__ == "__main__":
     main()

@@ -118,5 +118,8 @@ def main(argv=None):
     return out
 
 
+#: benchmarks.run auto-discovery (smoke carries the routed-dominates gate)
+HARNESS = {"name": "fig7", "full": main, "smoke": lambda: main(["--smoke"])}
+
 if __name__ == "__main__":
     main()

@@ -168,5 +168,14 @@ def main(argv=None):
     return out
 
 
+#: benchmarks.run auto-discovery: one module, two harnesses (engine sweep
+#: and the DAG-compiled sweep)
+HARNESSES = [
+    {"name": "fig8", "full": lambda: main([]),
+     "smoke": lambda: main(["--quick"])},
+    {"name": "fig8dag", "full": lambda: main(["--dag"]),
+     "smoke": lambda: main(["--dag", "--quick"])},
+]
+
 if __name__ == "__main__":
     main()

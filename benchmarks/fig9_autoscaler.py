@@ -159,5 +159,8 @@ def main(argv=None):
     return 0
 
 
+#: benchmarks.run auto-discovery (smoke carries the autoscaler policy gates)
+HARNESS = {"name": "fig9", "full": lambda: main([]), "smoke": lambda: main(["--smoke"])}
+
 if __name__ == "__main__":
     sys.exit(main())

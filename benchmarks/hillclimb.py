@@ -36,8 +36,6 @@ from repro.launch.mesh import make_production_mesh
 from repro.optim import OptConfig
 from repro.train import make_train_step
 
-import jax
-
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9

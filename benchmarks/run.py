@@ -3,61 +3,72 @@ benchmark and the roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,fig7,...] [--smoke]
 
-Every harness runs through the unified substrate: fig5/fig6/fig2 drive the
-calibrated cluster simulator, fig7/table2 interpret the declarative
-:class:`~repro.core.dag.WorkflowDAG` workloads (including the per-edge-routed
-``hybrid``/``adaptive`` columns), fig8 sweeps the event-driven engine —
-``fig8dag`` compiles the same DAGs onto it via ``dag.bind`` — fig9 sweeps
-autoscaler policy x offered load, and ``bench`` tracks the substrate's
-events/sec trajectory.
+Harnesses are **auto-discovered**: every module in this package that
+exports a ``HARNESS`` spec (or a ``HARNESSES`` list) —
+``{"name": ..., "full": callable, "smoke": callable}`` — is picked up and
+CI-gated by default, so a new benchmark is wired the moment its file
+lands (fig10, the graph-optimizer sweep, arrived exactly this way).
+Modules without a spec are simply not driven from here: ``hillclimb``
+needs its XLA host-device flag exported before jax imports and stays a
+separate entry point; ``bench_delta`` is a CI reporting helper; the
+roofline depends on a recorded dryrun sweep and keeps its special-cased
+skip-with-notice behaviour below.
 
-``--smoke`` swaps each harness for its seconds-long CI subset (fig7's smoke
-additionally gates routed-dominates; fig9 gates predictive-vs-legacy cold
-starts; bench additionally gates events/sec regression).  A harness that
-fails — by raising OR by returning a nonzero exit code — makes run.py exit
-nonzero.  Writes JSON artifacts under results/ and prints each harness's
-table.  The roofline section reads results/dryrun.json (produced by
-``python -m repro.launch.dryrun``); it is skipped with a notice if the sweep
-has not been recorded yet.  The jax hillclimb harness
-(``benchmarks.hillclimb``) needs the 512-host-device XLA flag set before jax
-imports, so it stays a separate entry point.
+``--smoke`` swaps each harness for its seconds-long CI subset (fig7's
+smoke additionally gates routed-dominates; fig9 gates the autoscaler
+policies; fig10 gates optimized-dominates; bench gates events/sec
+regression).  A harness that fails — by raising OR by returning a nonzero
+exit code — makes run.py exit nonzero.  Writes JSON artifacts under
+results/ and prints each harness's table.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import os
+import pkgutil
 import sys
 import time
 import traceback
 
-from . import (
-    bench_engine,
-    fig2_single_transfer,
-    fig5_latency_cdf,
-    fig6_collectives,
-    fig7_workloads,
-    fig8_throughput,
-    fig9_autoscaler,
-    table2_cost,
-)
 from .common import RESULTS_DIR
 
-#: name -> (full invocation, seconds-long smoke invocation)
-HARNESSES = {
-    "fig2": (fig2_single_transfer.main, fig2_single_transfer.main),
-    "fig5": (fig5_latency_cdf.main, lambda: fig5_latency_cdf.run(20)),
-    "fig6": (fig6_collectives.main, lambda: fig6_collectives.run(2)),
-    "fig7": (fig7_workloads.main, lambda: fig7_workloads.main(["--smoke"])),
-    "fig8": (lambda: fig8_throughput.main([]),
-             lambda: fig8_throughput.main(["--quick"])),
-    "fig8dag": (lambda: fig8_throughput.main(["--dag"]),
-                lambda: fig8_throughput.main(["--dag", "--quick"])),
-    "fig9": (lambda: fig9_autoscaler.main([]),
-             lambda: fig9_autoscaler.main(["--smoke"])),
-    "table2": (table2_cost.main, table2_cost.main),
-    "bench": (lambda: bench_engine.main([]),
-              lambda: bench_engine.main(["--smoke", "--check"])),
+#: package modules that intentionally carry no HARNESS spec (anything else
+#: without one fails discovery loudly, so a new benchmark cannot land
+#: silently unwired)
+NON_HARNESS_MODULES = {
+    "common",      # shared helpers
+    "run",         # this driver
+    "roofline",    # depends on a recorded dryrun sweep (special-cased below)
+    "hillclimb",   # needs the XLA flag set before jax imports; own entry point
+    "bench_delta", # CI job-summary reporting helper, not a benchmark
 }
+
+
+def discover_harnesses():
+    """name -> (full invocation, seconds-long smoke invocation)."""
+    harnesses = {}
+    pkg_path = os.path.dirname(os.path.abspath(__file__))
+    for info in pkgutil.iter_modules([pkg_path]):
+        if info.name in NON_HARNESS_MODULES or info.name.startswith("_"):
+            continue
+        mod = importlib.import_module(f"{__package__}.{info.name}")
+        specs = getattr(mod, "HARNESSES", None)
+        if specs is None:
+            spec = getattr(mod, "HARNESS", None)
+            specs = [spec] if spec is not None else None
+        if not specs:
+            raise RuntimeError(
+                f"benchmarks.{info.name} exports no HARNESS spec; add one "
+                "(or list the module in NON_HARNESS_MODULES) so it is "
+                "CI-gated instead of silently unwired"
+            )
+        for spec in specs:
+            name = spec["name"]
+            if name in harnesses:
+                raise RuntimeError(f"duplicate harness name {name!r}")
+            harnesses[name] = (spec["full"], spec["smoke"])
+    return harnesses
 
 
 def run_roofline():
@@ -75,13 +86,14 @@ def run_roofline():
 
 
 def main():
+    harnesses = discover_harnesses()
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list from: " + ",".join(HARNESSES) + ",roofline")
+                    help="comma list from: " + ",".join(harnesses) + ",roofline")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-long CI subset of every harness")
     args = ap.parse_args()
-    wanted = args.only.split(",") if args.only else list(HARNESSES) + ["roofline"]
+    wanted = args.only.split(",") if args.only else list(harnesses) + ["roofline"]
 
     failures = []
     for name in wanted:
@@ -91,7 +103,7 @@ def main():
             if name == "roofline":
                 run_roofline()
             else:
-                full, smoke = HARNESSES[name]
+                full, smoke = harnesses[name]
                 rc = (smoke if args.smoke else full)()
                 # harnesses that gate via exit code (bench --check) return a
                 # nonzero int instead of raising: treat it as a failure too,

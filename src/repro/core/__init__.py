@@ -23,6 +23,11 @@ Layers
 * :mod:`dag`       — declarative workflow graphs (Stage/Edge/WorkflowDAG)
                      with per-edge transfer routing; lowered onto the cluster
                      simulator or compiled onto the workflow engine.
+* :mod:`dagopt`    — graph optimizer over the declarative DAG: sync-chain
+                     fusion, producer/consumer co-placement, predictive
+                     spill to durable media; ``dag.optimize()`` returns the
+                     rewritten graph plus a PlacementPlan both lowerings
+                     honor.
 * :mod:`loadgen`   — closed/open-loop request drivers for throughput and
                      tail-latency sweeps under virtual time.
 * :mod:`cluster`   — calibrated discrete-event simulator for the paper's
@@ -64,6 +69,15 @@ from .dag import (
     Stage,
     WorkflowDAG,
     execute_on_cluster,
+)
+from .dagopt import (
+    CoPlacement,
+    GraphPass,
+    PlacementPlan,
+    PredictiveSpill,
+    SyncChainFusion,
+    available_passes,
+    register_pass,
 )
 from .errors import (
     InlineTooLarge,

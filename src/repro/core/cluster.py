@@ -312,6 +312,13 @@ class NetConstants:
     # larger ones to object storage (see transfer.HybridBackend)
     hybrid_small_cutoff: int = 1 << 20
 
+    # co-placed (same-node) consumer pulls: when the graph optimizer's
+    # CoPlacement pass lands a consumer instance on its producer's node, an
+    # XDT pull short-circuits the NIC through shared memory.  Bandwidth is a
+    # conservative single-socket memcpy rate; latency a local IPC round trip.
+    local_bw: float = 12.5e9
+    local_rtt: float = 20e-6
+
 
 # The paper's two testbeds, calibrated separately:
 # Fig. 2 runs on AWS Lambda against real S3/ElastiCache endpoints; Figs 5-7
@@ -384,6 +391,9 @@ class ServerlessCluster:
         self.s3_client = [FifoLink(self.sim, net.s3_client_bw) for _ in range(n_nodes)]
         self.ec_front_in = FifoLink(self.sim, net.ec_agg_bw)
         self.ec_front_out = FifoLink(self.sim, net.ec_agg_bw)
+        # per-node shared-memory channels for co-placed pulls, created lazily
+        # (runs without a PlacementPlan never touch them)
+        self._mem_links: Dict[int, FifoLink] = {}
         self.acct: Dict[str, TransferAccounting] = {}
 
     # -- helpers -------------------------------------------------------------
@@ -463,6 +473,24 @@ class ServerlessCluster:
         front.bytes_moved += nbytes
         finish = max(start + agg_time, self.sim.now + per_stream_time) + lat
         return self.sim.timeout(finish - self.sim.now)
+
+    def local_pull(self, node: int, nbytes: int) -> Event:
+        """Same-node consumer pull: producer -> consumer via shared memory.
+
+        The co-placement locality discount of the graph optimizer: the XDT
+        data plane short-circuits the NIC when producer and consumer share a
+        node.  Concurrent co-placed pulls serialize on the node's memory
+        channel (a FIFO at ``local_bw``), so packing many consumers onto one
+        producer node still pays for the contention it creates.  Draws one
+        jitter sample, like :meth:`xdt_pull`, so optimized and un-optimized
+        runs consume the rng in the same per-pull pattern.
+        """
+        net = self.net
+        lat = self._jit(net.local_rtt, net.xdt_jitter_sigma)
+        link = self._mem_links.get(node)
+        if link is None:
+            link = self._mem_links[node] = FifoLink(self.sim, net.local_bw)
+        return link.transfer(nbytes, extra_latency=lat)
 
     def xdt_pull(self, producer: int, nbytes: int) -> Event:
         """Consumer pulls directly from the producer's memory over its NIC.

@@ -484,6 +484,33 @@ class WorkflowDAG:
 
         return resolve
 
+    # -- optimization ------------------------------------------------------
+    def optimize(
+        self,
+        passes: Optional[Sequence[Any]] = None,
+        telemetry: Optional[TelemetryHub] = None,
+        scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
+    ) -> Tuple["WorkflowDAG", Any]:
+        """Run the graph optimizer; returns (optimized DAG, PlacementPlan).
+
+        Composable passes (see :mod:`repro.core.dagopt`): ``"fuse"`` merges
+        1:1 sync chains so the handoff never leaves the instance,
+        ``"coplace"`` emits producer->consumer affinity hints the
+        scheduler's steering honors, ``"spill"`` rewrites staged edges onto
+        durable media when the telemetry feed predicts the producer's
+        keep-alive expiry beats the consumer's pull.  Hand the returned
+        plan to ``execute_on_cluster(..., plan=plan)`` or
+        ``bind(..., plan=plan)``; this DAG itself is never mutated.
+        """
+        from .dagopt import DEFAULT_PASSES, optimize as _optimize
+
+        return _optimize(
+            self,
+            passes=DEFAULT_PASSES if passes is None else passes,
+            telemetry=telemetry,
+            scaling=scaling,
+        )
+
     # -- engine lowering ---------------------------------------------------
     def bind(
         self,
@@ -493,6 +520,7 @@ class WorkflowDAG:
         policy: Optional[Callable[[Stage], Any]] = None,
         handlers: Optional[Dict[str, Callable]] = None,
         autoscaler: Any = None,
+        plan: Any = None,
     ) -> "DagBinding":
         """Compile this DAG onto a :class:`~repro.core.workflow.WorkflowEngine`
         (see :class:`DagBinding`).
@@ -504,10 +532,14 @@ class WorkflowDAG:
         ``autoscaler`` selects the scale-up strategy of every stage's
         default :class:`~repro.core.scheduler.ScalingPolicy` (a registered
         name or policy instance); an explicit ``policy`` factory wins.
+        ``plan`` is the :class:`~repro.core.dagopt.PlacementPlan` from
+        :meth:`optimize`: co-placement affinity hints are forwarded to the
+        scheduler's steering and honored pulls are modeled at
+        shared-memory speed.
         """
         return DagBinding(
             self, engine, default_route, bytes_scale, policy,
-            handlers=handlers, autoscaler=autoscaler,
+            handlers=handlers, autoscaler=autoscaler, plan=plan,
         )
 
 
@@ -532,6 +564,7 @@ class EdgeUsage:
     bytes_moved: int = 0
     n_puts: int = 0
     n_gets: int = 0
+    n_local: int = 0                 # pulls that took the co-placed memcpy path
     put_s: float = 0.0               # producer-side staging time (summed)
     fetch_s: float = 0.0             # consumer-side retrieval time (summed)
     modeled_s: float = 0.0           # engine lowering: modeled pull seconds
@@ -599,6 +632,7 @@ def _edge_fee_rows(
             "bytes": u.bytes_moved,
             "n_puts": u.n_puts,
             "n_gets": u.n_gets,
+            "n_local": u.n_local,
             **extra(u),
             "storage_uUSD": u.storage_fee_usd(ec_per_byte) * 1e6,
         }
@@ -693,6 +727,7 @@ def execute_on_cluster(
     deterministic: bool = False,
     autoscaler: Any = None,
     scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
+    plan: Any = None,
 ) -> ClusterDagRun:
     """Interpret ``dag`` on the calibrated discrete-event cluster.
 
@@ -709,6 +744,12 @@ def execute_on_cluster(
     selected :class:`~repro.core.scheduler.AutoscalerPolicy` decides.  Both
     default to off, which models the paper's pre-provisioned measurement
     fleet (and keeps the legacy runs bit-for-bit).
+
+    ``plan`` is the :class:`~repro.core.dagopt.PlacementPlan` produced by
+    ``dag.optimize()``: each co-placement affinity entry maps that
+    consumer's instances onto its producer's nodes, and their XDT pulls
+    take the shared-memory path (:meth:`ServerlessCluster.local_pull`)
+    instead of the producer NIC.  Without a plan nothing changes.
     """
     n_nodes = sum(s.fan for s in dag.stages)
     cluster = ServerlessCluster(n_nodes, net, seed=seed, deterministic=deterministic)
@@ -748,6 +789,23 @@ def execute_on_cluster(
     for s in dag.stages:
         nodes[s.name] = list(range(base, base + s.fan))
         base += s.fan
+
+    # co-placement: consumer node -> producer node it shares (the optimizer
+    # bounded the packing, so every affined consumer instance maps onto its
+    # producer's node round-robin).  Pulls between co-resident pairs over
+    # instance-resident media go through shared memory below.
+    colocal: Dict[int, int] = {}
+    if plan is not None and getattr(plan, "affinity", None):
+        for cname, pname in plan.affinity.items():
+            if cname not in dag.by_name or pname not in dag.by_name:
+                raise ValueError(
+                    f"placement plan affines unknown stage {cname!r} -> "
+                    f"{pname!r}; was the plan produced by optimize() on "
+                    "this DAG?"
+                )
+            pn = nodes[pname]
+            for j, dn in enumerate(nodes[cname]):
+                colocal[dn] = pn[j % len(pn)]
 
     def _mark_max(key: str) -> None:
         t = sim.now
@@ -790,6 +848,14 @@ def execute_on_cluster(
         e.label: {} for e in dag.edges if e.handoff == "staged"
     }
 
+    def xdt_pull_ev(u: EdgeUsage, src_node: int, dst_node: int, nbytes: int):
+        """One xdt pull's data-plane event, honoring co-placement: the
+        shared-memory path when consumer and producer share a node."""
+        if colocal.get(dst_node) == src_node:
+            u.n_local += 1
+            return cluster.local_pull(src_node, nbytes)
+        return cluster.xdt_pull(src_node, nbytes)
+
     def fetch_objects(edge: Edge) -> List[Optional[int]]:
         """Source node per object one consumer instance retrieves, in the
         legacy fetch order (chunk-major for broadcast, producer-major for
@@ -822,7 +888,7 @@ def execute_on_cluster(
                 yield cluster.storage_get(m, dst_node, nbytes)
             elif m == "xdt":
                 yield cluster.invoke_ctrl()
-                yield cluster.xdt_pull(src_node, nbytes)
+                yield xdt_pull_ev(u, src_node, dst_node, nbytes)
             else:                       # inline: payload rides the response
                 yield cluster.inline_send(src_node, nbytes)
         else:
@@ -856,7 +922,7 @@ def execute_on_cluster(
                         u.n_gets += 1
                         evs.append(cluster.storage_get(m, dst_node, nbytes))
                     elif m == "xdt":
-                        evs.append(cluster.xdt_pull(src_node, nbytes))
+                        evs.append(xdt_pull_ev(u, src_node, dst_node, nbytes))
                     else:
                         evs.append(cluster.inline_send(src_node, nbytes))
                 if evs:
@@ -1004,6 +1070,10 @@ class DagBinding:
         rep = LoadGenerator(engine, binding).run_open(rate_rps=50, duration_s=20)
     """
 
+    #: reserved inbox key carrying the caller's coords on affined spawns —
+    #: never a valid edge label (labels come from stage names / user strings)
+    _SRC_KEY = "#src"
+
     def __init__(
         self,
         dag: WorkflowDAG,
@@ -1013,9 +1083,33 @@ class DagBinding:
         policy: Optional[Callable[[Stage], Any]] = None,
         handlers: Optional[Dict[str, Callable]] = None,
         autoscaler: Any = None,
+        plan: Any = None,
     ):
         self.dag = dag
         self.engine = engine
+        self.plan = plan
+        # co-placement hints: the spawner forwards the affinity producer's
+        # instance coords to the callee's steer (blocking children are
+        # spawned by their producer; wave stages by the entry, which learns
+        # each fan-1 wave producer's coords from its result).  A consumer
+        # that lands co-resident with those coords models the edge's pulls
+        # at shared-memory speed — mirroring the cluster lowering, which
+        # honors every plan entry.
+        self._affinity: Dict[str, str] = {}
+        if plan is not None and getattr(plan, "affinity", None):
+            for cname, pname in plan.affinity.items():
+                if cname not in dag.by_name or pname not in dag.by_name:
+                    raise ValueError(
+                        f"placement plan affines unknown stage {cname!r} -> "
+                        f"{pname!r}; was the plan produced by optimize() on "
+                        "this DAG?"
+                    )
+                self._affinity[cname] = pname
+            if self._SRC_KEY in {e.label for e in dag.edges}:
+                raise ValueError(
+                    f"edge label {self._SRC_KEY!r} collides with the "
+                    "binding's reserved co-placement key"
+                )
         self.default_route: Route = (
             engine.transfer.backend if default_route is None else default_route
         )
@@ -1094,12 +1188,14 @@ class DagBinding:
         u.n_puts += 1
         return ref
 
-    def _get(self, ctx, edge: Edge, ref):
+    def _get(self, ctx, edge: Edge, ref, local: bool = False):
         stats = self.engine.transfer.stats
         before = stats.modeled_seconds
-        val = ctx.get(ref)
+        before_local = stats.local_pulls
+        val = ctx.get(ref, local=local)
         u = self.edge_usage[edge.label]
         u.n_gets += 1
+        u.n_local += stats.local_pulls - before_local
         u.modeled_s += stats.modeled_seconds - before
         return val
 
@@ -1153,32 +1249,59 @@ class DagBinding:
         in_edges = self._in_edges[stage.name]
         out_edges = self._out_edges[stage.name]
         children = self._children[stage.name]
+        aff_producer = self._affinity.get(stage.name)
+        src_key = self._SRC_KEY
 
         def handler(ctx, payload):
             fill, inbox = payload
+            # the spawner stamped the producer's coords when the plan
+            # affines this stage to it.  Locality is CO-RESIDENCY of
+            # placement coords — the shared node space the default placer
+            # models — which the steering hint biases toward (and a fresh
+            # spawn may land on outright); only then do that producer's
+            # pulls go shared-memory.
+            src_coords = inbox.get(src_key)
+            co_located = (
+                src_coords is not None and ctx.instance is not None
+                and ctx.instance.coords == src_coords
+            )
             values: Dict[str, List[Any]] = {}
             for edge in in_edges:
                 if edge.handoff == "external":
                     values[edge.label] = self._consume_external(ctx, edge, fill)
                 else:
+                    local = co_located and edge.src == aff_producer
                     values[edge.label] = [
-                        self._get(ctx, edge, r) for r in inbox[edge.label]
+                        self._get(ctx, edge, r, local=local)
+                        for r in inbox[edge.label]
                     ]
             out: Dict[str, List[List[Any]]] = {}
             for edge in out_edges:
                 out[edge.label] = self._put_for_consumers(ctx, edge, fill)
             for child in children:
                 edge = self._in_edges[child.name][0]
-                handles = [
-                    ctx.call(self._fn(child.name),
-                             (fill, {edge.label: out[edge.label][j]}))
-                    for j in range(child.fan)
-                ]
+                affine = (
+                    self._affinity.get(child.name) == stage.name
+                    and ctx.instance is not None
+                )
+                handles = []
+                for j in range(child.fan):
+                    box = {edge.label: out[edge.label][j]}
+                    if affine:
+                        box[src_key] = ctx.instance.coords
+                    handles.append(ctx.call(
+                        self._fn(child.name), (fill, box),
+                        affinity=ctx.instance.coords if affine else None,
+                    ))
                 yield handles
             checksum = float(
                 sum(float(np.sum(v)) for vs in values.values() for v in vs)
             )
-            return {"out": out, "sum": checksum}
+            # coords travel with the result so the entry can forward
+            # affinity hints for edges whose producer is a wave stage (the
+            # entry spawns the consumers, not the producer itself)
+            coords = ctx.instance.coords if ctx.instance is not None else None
+            return {"out": out, "sum": checksum, "coords": coords}
 
         return handler
 
@@ -1198,33 +1321,53 @@ class DagBinding:
             if children:
                 for child in children:
                     edge = in_edges[child.name][0]
-                    handles = [
-                        ctx.call(self._fn(child.name),
-                                 (fill, {edge.label: out[edge.label][j]}))
-                        for j in range(child.fan)
-                    ]
+                    affine = (
+                        self._affinity.get(child.name) == entry.name
+                        and ctx.instance is not None
+                    )
+                    handles = []
+                    for j in range(child.fan):
+                        box = {edge.label: out[edge.label][j]}
+                        if affine:
+                            box[self._SRC_KEY] = ctx.instance.coords
+                        handles.append(ctx.call(
+                            self._fn(child.name), (fill, box),
+                            affinity=ctx.instance.coords if affine else None,
+                        ))
                     results = yield handles
                     total += sum(r["sum"] for r in results)
                 return total
             # orchestrated waves: pools[label][consumer_idx] -> refs
             pools: Dict[str, List[List[Any]]] = dict(out)
+            # affinity producers' instance coords, for hints whose producer
+            # is an earlier wave's stage (the plan only affines fan-1
+            # producers, so one coords per stage suffices)
+            stage_coords: Dict[str, Any] = {}
+            if ctx.instance is not None:
+                stage_coords[entry.name] = ctx.instance.coords
             for wave in waves:
                 handles, owners = [], []
                 for s in wave:
+                    prod_coords = stage_coords.get(self._affinity.get(s.name))
                     for j in range(s.fan):
                         inbox = {
                             e.label: pools[e.label][j]
                             for e in in_edges[s.name]
                             if e.handoff != "external"
                         }
-                        handles.append(
-                            ctx.call(self._fn(s.name), (fill, inbox))
-                        )
+                        if prod_coords is not None:
+                            inbox[self._SRC_KEY] = prod_coords
+                        handles.append(ctx.call(
+                            self._fn(s.name), (fill, inbox),
+                            affinity=prod_coords,
+                        ))
                         owners.append(s)
                 results = yield handles
                 # merge returned out-pools: consumer j's refs concatenate
                 # across all producer instances of the wave
                 for s, res in zip(owners, results):
+                    if s.fan == 1:
+                        stage_coords[s.name] = res.get("coords")
                     for label, per_consumer in res["out"].items():
                         pool = pools.setdefault(
                             label, [[] for _ in per_consumer]

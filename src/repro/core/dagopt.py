@@ -1,0 +1,550 @@
+"""Graph optimizer for declarative workflow DAGs.
+
+The paper's cost argument (and Table 2) is about picking the cheapest
+*medium* per edge; DataFlower (arXiv:2304.14629) and "Following the Data,
+Not the Function" (arXiv:2109.13492) show the next rung on that ladder:
+restructure the **graph** around data locality, because the cheapest
+transfer of all is the one that never leaves the instance.  This module is
+that rung — ``dag.optimize(passes=...)`` rewrites a
+:class:`~repro.core.dag.WorkflowDAG` and emits a :class:`PlacementPlan`
+both lowerings honor:
+
+:class:`SyncChainFusion` (``"fuse"``)
+    Merges chains of 1:1 sync edges into one fused stage: the handoff's
+    object never crosses a process boundary, so the transfer disappears
+    entirely — zero fee, zero ref, compute summed, one fewer invocation.
+    Fusion is *refused* across evictable, external, and fan boundaries (and
+    across incompatible scaling policies when a policy factory is given):
+    merging those would change semantics, not just cost.
+
+:class:`CoPlacement` (``"coplace"``)
+    Emits producer->consumer affinity hints for edges whose every consumer
+    pulls from a single producer instance.  The scheduler's steering honors
+    the hint (``Deployment.steer(prefer=...)``: land the consumer on the
+    producer's node when slots allow) and both lowerings model the locality
+    discount — a co-placed XDT pull moves through shared memory instead of
+    the producer NIC (:meth:`ServerlessCluster.local_pull`,
+    ``TransferEngine.get(local=True)``).
+
+:class:`PredictiveSpill` (``"spill"``)
+    Closes the ROADMAP loop "feed cold-start/reap telemetry into routing":
+    reads :class:`~repro.core.telemetry.DeploymentTelemetry` reap and
+    cold-start windows and rewrites staged edges onto durable media when
+    the producer's predicted keep-alive expiry precedes the consumer's
+    predicted pull — paying one storage fee up front instead of the
+    producer-death retry penalty (re-running the whole producer subtree).
+    With no telemetry feed the pass is a no-op: spilling is never guessed
+    from an empty window.
+
+The un-optimized path is untouched: ``optimize`` builds *new* ``WorkflowDAG``
+objects (stages and edges are frozen), and a run without a plan executes
+bit-for-bit as before — the sha-fingerprint goldens in ``tests/test_dag.py``
+still hold.
+
+Usage::
+
+    opt_dag, plan = dag.optimize()                 # fuse + coplace (+ spill)
+    run = execute_on_cluster(opt_dag, "xdt", plan=plan)
+    binding = opt_dag.bind(engine, plan=plan)
+
+Custom passes subclass :class:`GraphPass` and register with
+:func:`register_pass`; ``optimize(passes=("fuse", "mypass"))`` then selects
+them by name.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, ClassVar, Dict, List, Optional, Sequence, Tuple, Type, Union
+
+from .dag import Edge, Stage, WorkflowDAG
+from .scheduler import ScalingPolicy
+from .telemetry import TelemetryHub
+
+#: media a spilled edge may be pinned to (survive producer instance death)
+DURABLE_MEDIA = ("s3", "elasticache")
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    """What the optimizer decided, for the lowerings (and humans) to read.
+
+    ``affinity`` maps consumer stage -> producer stage to co-place with;
+    ``fused`` maps each fused stage to the original chain it replaced;
+    ``eliminated`` maps each removed edge label to the fused stage that
+    absorbed it; ``spilled`` maps rewritten edge labels to the durable
+    medium they were pinned to.  ``notes`` is the per-pass provenance —
+    including every *refused* rewrite and why."""
+
+    affinity: Dict[str, str] = dataclasses.field(default_factory=dict)
+    fused: Dict[str, Tuple[str, ...]] = dataclasses.field(default_factory=dict)
+    eliminated: Dict[str, str] = dataclasses.field(default_factory=dict)
+    spilled: Dict[str, str] = dataclasses.field(default_factory=dict)
+    notes: List[str] = dataclasses.field(default_factory=list)
+
+    def is_noop(self) -> bool:
+        return not (self.affinity or self.fused or self.spilled)
+
+    def rename_stage(self, old: str, new: str) -> None:
+        """Keep plan entries coherent when a pass renames/merges stages."""
+        affinity = self.affinity
+        if old in affinity:
+            affinity[new] = affinity.pop(old)
+        for k, v in list(affinity.items()):
+            if v == old:
+                affinity[k] = new
+        # a consumer fused into its own affinity producer needs no hint
+        for k in [k for k, v in affinity.items() if k == v]:
+            del affinity[k]
+        # edges eliminated into a stage that fused again must point at the
+        # stage's final name (chains of 3+ re-fuse their intermediate)
+        for k, v in self.eliminated.items():
+            if v == old:
+                self.eliminated[k] = new
+
+    def describe(self) -> str:
+        parts = []
+        if self.fused:
+            parts.append("fused " + ", ".join(
+                f"{'+'.join(v)}" for v in self.fused.values()
+            ))
+        if self.affinity:
+            parts.append("co-place " + ", ".join(
+                f"{c}@{p}" for c, p in sorted(self.affinity.items())
+            ))
+        if self.spilled:
+            parts.append("spill " + ", ".join(
+                f"{e}->{m}" for e, m in sorted(self.spilled.items())
+            ))
+        return "; ".join(parts) if parts else "no-op"
+
+
+class GraphPass:
+    """One graph-rewriting pass: ``apply`` returns a (new) DAG + the plan."""
+
+    name: ClassVar[str] = ""
+
+    def apply(
+        self, dag: WorkflowDAG, plan: PlacementPlan
+    ) -> Tuple[WorkflowDAG, PlacementPlan]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: sync-chain fusion
+# ---------------------------------------------------------------------------
+
+
+class SyncChainFusion(GraphPass):
+    """Fuse chains of 1:1 sync edges into single stages.
+
+    A sync handoff between two fan-1 blocking stages is the paper's 1-1
+    pattern; fused, the object never leaves the producer's address space —
+    the edge is deleted outright (no put, no ref, no fee, no transfer
+    seconds) and the stages' compute is summed into one invocation.
+
+    Refusal guards (each recorded in ``plan.notes``):
+
+    * **fan boundary** — scatter/gather edges need distinct instances;
+    * **evictable boundary** — an evictable stage's reclamation semantics
+      must not silently extend to the code fused into it;
+    * **external boundary** — original inputs predate the workflow and
+      cannot be fused away (``src=None`` edges are not chains at all);
+    * **side edges** — only true linear chain links fuse: a producer with
+      other out-edges (a sibling consumer, a second sync child) would have
+      that work serialized behind the fused compute — fusion must never
+      *slow* the graph;
+    * **orchestrated consumer / gather epilogue** — fusion targets vSwarm
+      blocking chains, where the producer's billed span already covers the
+      consumer;
+    * **incompatible scaling policies** — when a ``scaling`` factory is
+      supplied, stages that would be deployed with different policies keep
+      their own deployments.
+    """
+
+    name = "fuse"
+
+    def __init__(
+        self,
+        scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
+    ):
+        self.scaling = scaling
+
+    def _refusal(self, dag: WorkflowDAG, e: Edge) -> Optional[str]:
+        if e.dst == dag.entry.name:
+            return "gather edge into the entry"
+        p, c = dag.by_name[e.src], dag.by_name[e.dst]
+        if p.fan != 1 or c.fan != 1:
+            return f"fan boundary ({p.fan}->{c.fan})"
+        if p.evictable or c.evictable:
+            return "evictable boundary"
+        if not c.blocking:
+            return "orchestrated consumer"
+        if c.gather_compute_s > 0:
+            return "consumer has a gather epilogue"
+        ins = dag.in_edges(c)
+        if len(ins) != 1 or ins[0] is not e:
+            return "consumer has other in-edges"
+        outs = dag.out_edges(p)
+        if len(outs) != 1 or outs[0] is not e:
+            # fusing would serialize the producer's other consumers behind
+            # the fused compute (puts happen after compute): only true
+            # linear chain links fuse, or the pass could *slow* the graph
+            return "producer has other out-edges"
+        if self.scaling is not None and self.scaling(p) != self.scaling(c):
+            return "incompatible scaling policies"
+        return None
+
+    def _fuse(
+        self, dag: WorkflowDAG, plan: PlacementPlan, e: Edge
+    ) -> WorkflowDAG:
+        p, c = dag.by_name[e.src], dag.by_name[e.dst]
+        fused_name = f"{p.name}+{c.name}"
+        if fused_name in dag.by_name:
+            raise ValueError(f"fused stage name {fused_name!r} collides")
+        fused = Stage(
+            name=fused_name,
+            fan=1,
+            compute_s=p.compute_s + c.compute_s,
+            gather_compute_s=p.gather_compute_s,
+            blocking=p.blocking,
+            evictable=False,
+        )
+        stages = [
+            fused if s.name == p.name else s
+            for s in dag.stages if s.name != c.name
+        ]
+        edges = []
+        for ed in dag.edges:
+            if ed is e:
+                continue
+            src = fused_name if ed.src in (p.name, c.name) else ed.src
+            dst = fused_name if ed.dst in (p.name, c.name) else ed.dst
+            if src != ed.src or dst != ed.dst:
+                ed = dataclasses.replace(ed, src=src, dst=dst)
+            edges.append(ed)
+        chain = (
+            plan.fused.pop(p.name, (p.name,))
+            + plan.fused.pop(c.name, (c.name,))
+        )
+        plan.fused[fused_name] = chain
+        plan.eliminated[e.label] = fused_name
+        plan.rename_stage(p.name, fused_name)
+        plan.rename_stage(c.name, fused_name)
+        plan.notes.append(
+            f"fuse: {p.name}+{c.name} — edge {e.label!r} eliminated "
+            f"({e.nbytes}B sync handoff never leaves the instance)"
+        )
+        return WorkflowDAG(dag.name, stages, edges)
+
+    def apply(self, dag, plan):
+        while True:
+            refusals = []
+            fused_one = False
+            for e in dag.edges:
+                if e.handoff != "sync" or e.src is None:
+                    continue
+                reason = self._refusal(dag, e)
+                if reason is not None:
+                    refusals.append(f"fuse: {e.label!r} refused ({reason})")
+                    continue
+                dag = self._fuse(dag, plan, e)
+                fused_one = True
+                break
+            if not fused_one:
+                plan.notes.extend(refusals)
+                return dag, plan
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: producer/consumer co-placement
+# ---------------------------------------------------------------------------
+
+
+class CoPlacement(GraphPass):
+    """Emit producer->consumer affinity hints for single-producer edges.
+
+    Steering consumers onto their producer's node turns the edge's XDT
+    pulls into shared-memory copies — the locality discount both lowerings
+    model (:meth:`ServerlessCluster.local_pull`, ``ctx.get(local=True)``).
+    Only edges where every consumer instance pulls from **one** producer
+    instance qualify (producer fan 1: the paper's 1-1, scatter, and
+    broadcast patterns); a shuffle's consumers pull from every producer and
+    cannot sit next to all of them.  ``slots_per_node`` bounds how many
+    consumer instances one producer node is asked to host — beyond it, the
+    hint is withheld ("prefer when slots allow" starts at the plan).
+
+    The DAG itself is unchanged; the decision lands in ``plan.affinity``.
+    """
+
+    name = "coplace"
+
+    def __init__(self, slots_per_node: int = 8):
+        self.slots_per_node = slots_per_node
+
+    def apply(self, dag, plan):
+        # consumer instances already packed onto each producer's node: the
+        # slots bound is per NODE, so every affined consumer stage counts
+        # against its producer's budget, not just the largest one
+        packed: Dict[str, int] = {}
+        for e in dag.edges:
+            if e.src is None:
+                continue                      # external input: no producer
+            if e.dst == dag.entry.name:
+                plan.notes.append(
+                    f"coplace: {e.label!r} skipped (gather into the entry, "
+                    "already placed)"
+                )
+                continue
+            p, c = dag.by_name[e.src], dag.by_name[e.dst]
+            if p.fan != 1:
+                plan.notes.append(
+                    f"coplace: {e.label!r} skipped (consumers pull from "
+                    f"{p.fan} producers)"
+                )
+                continue
+            if p.evictable:
+                plan.notes.append(
+                    f"coplace: {e.label!r} skipped (evictable producer)"
+                )
+                continue
+            prev = plan.affinity.get(c.name)
+            if prev is not None:
+                if prev != p.name:
+                    plan.notes.append(
+                        f"coplace: {e.label!r} skipped ({c.name} already "
+                        f"affined to {prev})"
+                    )
+                continue                      # same pair: already planned
+            if packed.get(p.name, 0) + c.fan > self.slots_per_node:
+                plan.notes.append(
+                    f"coplace: {e.label!r} skipped (fan {c.fan} + "
+                    f"{packed.get(p.name, 0)} already packed exceeds "
+                    f"{self.slots_per_node} slots/node)"
+                )
+                continue
+            packed[p.name] = packed.get(p.name, 0) + c.fan
+            plan.affinity[c.name] = p.name
+            plan.notes.append(
+                f"coplace: {c.name} -> node of {p.name} ({e.label!r} pulls "
+                "go instance-local when slots allow)"
+            )
+        return dag, plan
+
+
+# ---------------------------------------------------------------------------
+# Pass 3: predictive spill to durable media
+# ---------------------------------------------------------------------------
+
+
+class PredictiveSpill(GraphPass):
+    """Spill staged edges to durable media ahead of predicted eviction.
+
+    An object staged on an instance-resident medium dies with its producer;
+    if the producer's keep-alive expires before the consumer pulls, the
+    engine pays the producer-death retry (re-running the whole producer
+    subtree).  This pass predicts both sides from the shared telemetry
+    substrate and rewrites the edge onto a durable medium when the race
+    looks lost:
+
+    * **producer lifetime** — the keep-alive floor, shortened by the
+      deployment's observed reap window
+      (:meth:`DeploymentTelemetry.expected_instance_lifetime_s`,
+      deliberately conservative);
+    * **consumer pull delay** — the observed cold-start fraction times the
+      cold-start latency, plus the structural wait for gather edges (the
+      entry pulls only after every later wave's compute).
+
+    Deployment feeds are looked up under the stage name and the engine
+    binding's ``<dag>.<stage>`` registration name.  No telemetry, no feed,
+    or no predicted race -> no rewrite; the pass never spills on a guess.
+    """
+
+    name = "spill"
+
+    def __init__(
+        self,
+        telemetry: Optional[TelemetryHub] = None,
+        keep_alive_s: float = 60.0,
+        cold_start_s: float = 0.5,
+        durable: str = "s3",
+        safety: float = 1.0,
+    ):
+        if durable not in DURABLE_MEDIA:
+            raise ValueError(
+                f"spill target must be durable {DURABLE_MEDIA}, got {durable!r}"
+            )
+        self.telemetry = telemetry
+        self.keep_alive_s = keep_alive_s
+        self.cold_start_s = cold_start_s
+        self.durable = durable
+        self.safety = safety
+
+    def _feed(self, dag: WorkflowDAG, stage_name: str):
+        hub = self.telemetry
+        return (
+            hub.deployments.get(stage_name)
+            or hub.deployments.get(f"{dag.name}.{stage_name}")
+        )
+
+    def _structural_delay_s(self, dag: WorkflowDAG, e: Edge) -> float:
+        """Compute that must complete between the producer's puts and the
+        consumer's pulls.  Zero for ordinary staged edges (consumers fetch
+        at start-of-wave); for gather edges the entry fetches only after
+        every later wave ran."""
+        if e.dst != dag.entry.name:
+            return 0.0
+        waves = dag.orchestrated_waves()
+        for i, wave in enumerate(waves):
+            if any(s.name == e.src for s in wave):
+                return sum(
+                    max((s.compute_s for s in w), default=0.0)
+                    for w in waves[i + 1:]
+                )
+        return 0.0
+
+    def _predicted_pull_delay_s(self, dag: WorkflowDAG, e: Edge) -> float:
+        delay = self._structural_delay_s(dag, e)
+        feed = self._feed(dag, e.dst)
+        if feed is not None:
+            now = self.telemetry.clock()
+            cold = feed.cold_starts.rate(now)
+            arrivals = feed.arrival_rate(now)
+            if arrivals > 0.0:
+                frac = min(1.0, cold / arrivals)
+            else:
+                frac = 1.0 if cold > 0.0 else 0.0
+            delay += frac * self.cold_start_s
+        return delay
+
+    def _predicted_lifetime_s(self, dag: WorkflowDAG, e: Edge) -> float:
+        life = self.keep_alive_s
+        feed = self._feed(dag, e.src)
+        if feed is not None:
+            life = min(
+                life, feed.expected_instance_lifetime_s(self.telemetry.clock())
+            )
+        return life
+
+    def apply(self, dag, plan):
+        hub = self.telemetry
+        if hub is None or not hub.deployments:
+            plan.notes.append(
+                "spill: no deployment telemetry feed — skipped (spilling is "
+                "never guessed from an empty window)"
+            )
+            return dag, plan
+        new_edges: List[Edge] = []
+        changed = False
+        for e in dag.edges:
+            if e.handoff != "staged" or e.src is None:
+                new_edges.append(e)
+                continue
+            if isinstance(e.route, str) and e.route in DURABLE_MEDIA:
+                plan.notes.append(
+                    f"spill: {e.label!r} already pinned durable ({e.route})"
+                )
+                new_edges.append(e)
+                continue
+            if dag.by_name[e.src].evictable:
+                plan.notes.append(
+                    f"spill: {e.label!r} skipped (evictable producer already "
+                    "routes durable)"
+                )
+                new_edges.append(e)
+                continue
+            life = self._predicted_lifetime_s(dag, e)
+            pull = self._predicted_pull_delay_s(dag, e)
+            if math.isfinite(life) and life < self.safety * pull:
+                new_edges.append(dataclasses.replace(e, route=self.durable))
+                plan.spilled[e.label] = self.durable
+                plan.notes.append(
+                    f"spill: {e.label!r} -> {self.durable} (predicted "
+                    f"producer lifetime {life:.3f}s < predicted pull "
+                    f"{pull:.3f}s: pay one storage fee, not the retry)"
+                )
+                changed = True
+            else:
+                new_edges.append(e)
+        if not changed:
+            return dag, plan
+        return WorkflowDAG(dag.name, dag.stages, new_edges), plan
+
+
+# ---------------------------------------------------------------------------
+# Pass registry + the optimize() entry point
+# ---------------------------------------------------------------------------
+
+
+_PASS_REGISTRY: Dict[str, Type[GraphPass]] = {}
+
+
+def register_pass(cls: Type[GraphPass]) -> Type[GraphPass]:
+    """Register a pass class under ``cls.name`` (idempotent overwrite)."""
+    if not cls.name:
+        raise ValueError("graph pass class needs a non-empty `name`")
+    _PASS_REGISTRY[cls.name] = cls
+    return cls
+
+
+for _cls in (SyncChainFusion, CoPlacement, PredictiveSpill):
+    register_pass(_cls)
+
+
+def available_passes() -> Tuple[str, ...]:
+    return tuple(_PASS_REGISTRY)
+
+
+DEFAULT_PASSES: Tuple[str, ...] = ("fuse", "coplace", "spill")
+
+PassSpec = Union[str, GraphPass]
+
+
+def optimize(
+    dag: WorkflowDAG,
+    passes: Sequence[PassSpec] = DEFAULT_PASSES,
+    telemetry: Optional[TelemetryHub] = None,
+    scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
+) -> Tuple[WorkflowDAG, PlacementPlan]:
+    """Run ``passes`` in order; returns (optimized DAG, placement plan).
+
+    Pass specs are registered names or :class:`GraphPass` instances;
+    ``telemetry`` is handed to a by-name ``"spill"`` pass and ``scaling``
+    (the per-stage policy factory you would bind with) to a by-name
+    ``"fuse"`` pass.  The input DAG is never mutated.
+    """
+    plan = PlacementPlan()
+    for spec in passes:
+        if isinstance(spec, GraphPass):
+            p = spec
+        else:
+            cls = _PASS_REGISTRY.get(spec)
+            if cls is None:
+                raise ValueError(
+                    f"pass must be one of {available_passes()} or a "
+                    f"GraphPass instance, got {spec!r}"
+                )
+            # the stock passes get the convenience kwargs; a class a user
+            # registered over the same name wins and constructs bare
+            if cls is SyncChainFusion:
+                p = SyncChainFusion(scaling=scaling)
+            elif cls is PredictiveSpill:
+                p = PredictiveSpill(telemetry=telemetry)
+            else:
+                p = cls()
+        dag, plan = p.apply(dag, plan)
+    return dag, plan
+
+
+__all__ = [
+    "CoPlacement",
+    "DEFAULT_PASSES",
+    "DURABLE_MEDIA",
+    "GraphPass",
+    "PlacementPlan",
+    "PredictiveSpill",
+    "SyncChainFusion",
+    "available_passes",
+    "optimize",
+    "register_pass",
+]

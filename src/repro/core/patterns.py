@@ -30,7 +30,7 @@ moe dispatch    all-to-all                 s*(n-1)/n per link
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -313,9 +313,13 @@ class Deployment:
         # fleet-wide EWMA of observed request holding time: the cap queue
         # model's fallback estimate for instances with no history of their own
         self._service_ewma = 0.0
+        # coords -> live instance ids at that placement: the affinity lookup
+        # behind steer(prefer=...).  Maintained on spawn/reap/kill only, so
+        # the hint-free steer path pays nothing for it.
+        self._coords_index: Dict[Tuple[int, ...], List[int]] = {}
         self.stats = {
             "cold_starts": 0, "scale_downs": 0, "steered": 0,
-            "buffered": 0, "queued": 0, "prewarmed": 0,
+            "buffered": 0, "queued": 0, "prewarmed": 0, "affine_hits": 0,
         }
         for _ in range(policy.min_instances):
             self._spawn(cold=False)
@@ -335,6 +339,7 @@ class Deployment:
             if self.telemetry is not None:
                 self.telemetry.record_cold_start(now)
         self.instances[iid] = inst
+        self._coords_index.setdefault(inst.coords, []).append(iid)
         if inst.ready_at <= now:
             heappush(self._ready_heap, (0, iid, 0))
         else:
@@ -393,8 +398,14 @@ class Deployment:
             inst = self.instances.pop(iid)
             inst.alive = False
             inst.version += 1
+            self._drop_coords(inst)
             alive -= 1
             self.stats["scale_downs"] += 1
+            if self.telemetry is not None:
+                # the reap window feeds the spill predictor: a producer
+                # deployment whose idle instances keep getting reclaimed is
+                # one whose staged objects should ride durable media
+                self.telemetry.record_reap(now)
 
     # keep the legacy entry point (tests / external callers)
     def _reap_idle(self) -> None:
@@ -403,7 +414,44 @@ class Deployment:
         # expiry entries use last_used + keep_alive < now, the same predicate
         self._reap_expired(now)
 
+    def _drop_coords(self, inst: Instance) -> None:
+        ids = self._coords_index.get(inst.coords)
+        if ids is not None:
+            try:
+                ids.remove(inst.instance_id)
+            except ValueError:
+                pass
+            if not ids:
+                del self._coords_index[inst.coords]
+
     # -- activator -----------------------------------------------------------
+    def _pop_affine(
+        self, prefer: Tuple[int, ...], now: float
+    ) -> Optional[Instance]:
+        """Least-loaded READY instance at the preferred placement, or None.
+
+        The co-placement fast path of ``steer(prefer=...)``: the hint names
+        the producer's coords; an instance there with a spare concurrency
+        slot is taken directly (its stale ready-heap entry is discarded
+        later by the version check).  A cold/booting or saturated match is
+        NOT waited for — "prefer when slots allow", never at the price of
+        queueing behind the co-located node."""
+        ids = self._coords_index.get(prefer)
+        if not ids:
+            return None
+        target = self.policy.target_concurrency
+        best: Optional[Instance] = None
+        for iid in ids:
+            inst = self.instances.get(iid)
+            if (
+                inst is not None
+                and inst.ready_at <= now
+                and inst.in_flight < target
+                and (best is None or inst.in_flight < best.in_flight)
+            ):
+                best = inst
+        return best
+
     def _pop_ready(self) -> Optional[Instance]:
         heap = self._ready_heap
         instances = self.instances
@@ -442,13 +490,21 @@ class Deployment:
             heappop(heap)
             return inst
 
-    def steer(self) -> Tuple[Instance, float]:
+    def steer(
+        self, prefer: Optional[Tuple[int, ...]] = None
+    ) -> Tuple[Instance, float]:
         """Pick an instance for one invocation — O(log n) in fleet size.
 
         Returns (instance, wait_s): wait_s > 0 models the activator buffering
         the request across a cold start and, at the ``max_instances`` cap,
         the queue delay implied by the chosen instance's residual work
         (modeled completion times of the in-flight requests ahead of it).
+
+        ``prefer`` is a placement-affinity hint (the graph optimizer's
+        co-placement pass emits the producer's coords): a ready instance at
+        those coords with a spare slot wins over the least-loaded pick, so
+        the consumer lands next to its data when slots allow.  Without the
+        hint the legacy steering is bit-for-bit unchanged.
         """
         now = self.clock()
         self._reap_expired(now)
@@ -468,7 +524,13 @@ class Deployment:
                 for _ in range(n_missing):
                     self._spawn(cold=True)  # ready at once when cold_start_s=0
                 self.stats["prewarmed"] += n_missing
-        inst = self._pop_ready()
+        inst = None
+        if prefer is not None:
+            inst = self._pop_affine(prefer, now)
+            if inst is not None:
+                self.stats["affine_hits"] += 1
+        if inst is None:
+            inst = self._pop_ready()
         if inst is not None:
             wait = 0.0
         elif (
@@ -558,6 +620,7 @@ class Deployment:
             return False
         inst.alive = False
         inst.version += 1
+        self._drop_coords(inst)
         self.in_flight_total -= inst.in_flight
         return True
 
@@ -598,8 +661,10 @@ class ControlPlane:
         self.deployments[name] = dep
         return dep
 
-    def steer(self, name: str) -> Tuple[Instance, float]:
-        return self.deployments[name].steer()
+    def steer(
+        self, name: str, prefer: Optional[Tuple[int, ...]] = None
+    ) -> Tuple[Instance, float]:
+        return self.deployments[name].steer(prefer)
 
     def release(self, name: str, instance_id: int) -> None:
         self.deployments[name].release(instance_id)

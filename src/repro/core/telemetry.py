@@ -35,7 +35,13 @@ Aggregates:
     Per-deployment windows: arrival rate + trend (fast/slow ``DecayRate``
     pair; the spread between them is the rate's slope, which
     :class:`~repro.core.scheduler.PredictivePolicy` extrapolates over the
-    cold-start horizon), concurrency gauge, and a cold-start window.
+    cold-start horizon), concurrency gauge, a cold-start window, and a
+    keep-alive **reap window** (instances scaled down after idling past
+    keep-alive).  The reap window is what
+    :class:`~repro.core.dagopt.PredictiveSpill` reads to predict whether a
+    producer's instances will outlive their consumers' pulls — a high reap
+    rate means staged objects on instance-resident media are at risk and
+    should spill to durable storage ahead of the eviction.
 
 :class:`MediumTelemetry`
     Per-transfer-medium observations: latency model + bounded p99 window,
@@ -170,10 +176,10 @@ class DecayedLinear:
 
 
 class DeploymentTelemetry:
-    """Arrival, concurrency, and cold-start windows for one deployment."""
+    """Arrival, concurrency, cold-start, and reap windows for one deployment."""
 
     __slots__ = ("clock", "fast", "slow", "concurrency", "cold_starts",
-                 "n_arrivals")
+                 "reaps", "n_arrivals", "n_reaps")
 
     def __init__(
         self,
@@ -186,7 +192,11 @@ class DeploymentTelemetry:
         self.slow = DecayRate(slow_tau_s)
         self.concurrency = DecayGauge(slow_tau_s)
         self.cold_starts = DecayRate(slow_tau_s)
+        # keep-alive reaping is much rarer than arrivals: a longer window so
+        # a few reaps carry signal for the spill predictor
+        self.reaps = DecayRate(slow_tau_s * 8)
         self.n_arrivals = 0
+        self.n_reaps = 0
 
     def record_arrival(self, t: float, in_flight: int) -> None:
         self.n_arrivals += 1
@@ -196,6 +206,29 @@ class DeploymentTelemetry:
 
     def record_cold_start(self, t: float) -> None:
         self.cold_starts.record(t)
+
+    def record_reap(self, t: float) -> None:
+        """One idle instance scaled down past keep-alive (the scheduler's
+        expiry reaper calls this on telemetry-backed deployments)."""
+        self.n_reaps += 1
+        self.reaps.record(t)
+
+    def reap_rate(self, t: float) -> float:
+        """Smoothed instance reaps/sec over the (long) reap window."""
+        return self.reaps.rate(t)
+
+    def expected_instance_lifetime_s(self, t: float) -> float:
+        """Predicted survival of an idle instance, from the reap window.
+
+        With no reaps observed the prediction is unbounded (``inf``) — the
+        keep-alive policy floor is the caller's to apply.  With an observed
+        reap rate ``r`` the mean inter-reap gap ``1/r`` is used as a
+        *conservative* per-instance lifetime: it under-estimates survival on
+        multi-instance fleets (whose per-instance lifetime is ~n/r), so a
+        spill predictor reading it errs toward durable media, never toward
+        losing an object with its producer."""
+        r = self.reaps.rate(t)
+        return math.inf if r <= 0.0 else 1.0 / r
 
     def arrival_rate(self, t: float) -> float:
         """Smoothed arrivals/sec (the fast, responsive estimate)."""
@@ -222,6 +255,8 @@ class DeploymentTelemetry:
             "arrival_slope_rps_per_s": slope,
             "concurrency": self.concurrency.value(),
             "cold_start_rate": self.cold_starts.rate(t),
+            "reap_rate": self.reaps.rate(t),
+            "n_reaps": float(self.n_reaps),
         }
 
 

@@ -59,7 +59,7 @@ from .buffers import BufferRegistry
 from .clock import ensure_clock
 from .cluster import DEFAULT_NET, NetConstants, TransferAccounting
 from .cost import marginal_pull_fee_usd
-from .errors import InlineTooLarge, XDTObjectExhausted, XDTRefInvalid
+from .errors import InlineTooLarge, XDTObjectExhausted
 from .refs import ObjectDescriptor, RefMinter, RefPayload, XDTRef
 from .telemetry import TelemetryHub
 
@@ -113,6 +113,9 @@ class TransferStats:
     bytes_moved: int = 0
     modeled_seconds: float = 0.0
     wall_seconds: float = 0.0
+    #: pulls that took the co-placement shared-memory path (``get(local=True)``
+    #: on an instance-resident medium): modeled at memcpy speed, not the NIC
+    local_pulls: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -376,6 +379,22 @@ def modeled_transfer_seconds(
     return cls.modeled_seconds(nbytes, net)
 
 
+#: media whose buffers live on the producer instance — the only ones a
+#: co-placed consumer can short-circuit through shared memory (a durable
+#: service round-trip is the same whichever node the consumer runs on)
+INSTANCE_RESIDENT_MEDIA = ("xdt", "inline")
+
+
+def local_transfer_seconds(nbytes: int, net: NetConstants = DEFAULT_NET) -> float:
+    """Same-node pull: producer buffer -> consumer via shared memory.
+
+    The engine-side counterpart of :meth:`ServerlessCluster.local_pull` —
+    the modeled latency charged when the graph optimizer co-placed the
+    consumer on its producer's node and the object rides an
+    instance-resident medium."""
+    return net.local_rtt + nbytes / net.local_bw
+
+
 # ---------------------------------------------------------------------------
 # The engine
 # ---------------------------------------------------------------------------
@@ -508,14 +527,27 @@ class TransferEngine:
         )
 
     # ------------------------------------------------------------------ get
-    def get(self, ref: XDTRef, sharding: Optional[Sharding] = None) -> jax.Array:
-        """One retrieval.  Moves the object directly to the consumer sharding."""
+    def get(
+        self,
+        ref: XDTRef,
+        sharding: Optional[Sharding] = None,
+        local: bool = False,
+    ) -> jax.Array:
+        """One retrieval.  Moves the object directly to the consumer sharding.
+
+        ``local=True`` declares that this consumer runs on the producer's
+        node (the graph optimizer's co-placement hint was honored by the
+        scheduler): instance-resident media (xdt/inline) are then modeled at
+        shared-memory speed instead of the NIC path.  Durable service media
+        ignore the hint — the storage round-trip is node-independent.
+        """
         payload = self.minter.open(ref)  # raises XDTRefInvalid on forgery
         nbytes = payload.desc.nbytes
         medium = payload.medium or self.backend
         strat = (
             self._backend if medium == self.backend else self._strategy(medium)
         )
+        local = local and medium in INSTANCE_RESIDENT_MEDIA
         t0 = time.perf_counter()
         obj = strat.get(payload)
 
@@ -530,14 +562,21 @@ class TransferEngine:
         stats.transfers += 1
         stats.bytes_moved += nbytes
         stats.wall_seconds += time.perf_counter() - t0
-        key = (medium, nbytes)
+        key = ("local", nbytes) if local else (medium, nbytes)
         modeled = self._modeled_cache.get(key)
         if modeled is None:
             modeled = self._modeled_cache[key] = (
-                strat.modeled_seconds(nbytes, self.net)
+                local_transfer_seconds(nbytes, self.net) if local
+                else strat.modeled_seconds(nbytes, self.net)
             )
+        if local:
+            stats.local_pulls += 1
         stats.modeled_seconds += modeled
-        if self.telemetry is not None:
+        # co-placed pulls never feed the medium's telemetry: a shared-memory
+        # copy says nothing about the medium's cross-node latency, and one
+        # memcpy sample in the xdt p99 window would let AdaptiveRoute route
+        # NON-co-placed edges against a budget the NIC path cannot meet
+        if self.telemetry is not None and not local:
             n = payload.desc.n_retrievals or 1
             fkey = (medium, nbytes, n)
             fee = self._fee_cache.get(fkey)

@@ -230,10 +230,18 @@ class Context:
         done, and inherits the callee's virtual-time debt."""
         return self._engine._invoke_inline(fn_name, obj, parent=self)
 
-    def call(self, fn_name: str, obj: Any) -> AsyncResult:
+    def call(
+        self, fn_name: str, obj: Any, affinity: Optional[Tuple[int, ...]] = None
+    ) -> AsyncResult:
         """Concurrent sub-invocation.  Generator handlers ``yield`` the
-        handle (or a list of handles) to fan-in."""
-        return self._engine._spawn_invocation(fn_name, obj)
+        handle (or a list of handles) to fan-in.
+
+        ``affinity`` is a placement hint forwarded to the callee's
+        ``Deployment.steer``: pass this invocation's own coords
+        (``ctx.instance.coords``) to ask the activator to land the callee on
+        the caller's node when slots allow — the graph optimizer's
+        co-placement pass rides this to make XDT pulls instance-local."""
+        return self._engine._spawn_invocation(fn_name, obj, affinity=affinity)
 
     def put(
         self, obj: Any, n_retrievals: int = 1, backend: Optional[str] = None
@@ -243,10 +251,13 @@ class Context:
         medium, so the consumer's ``get`` needs no extra argument)."""
         return self._engine.transfer.put(obj, n_retrievals, backend=backend)
 
-    def get(self, ref: XDTRef) -> Any:
+    def get(self, ref: XDTRef, local: bool = False) -> Any:
+        """One retrieval.  ``local=True`` marks this consumer as co-placed
+        with the producer (scheduling honored an affinity hint): pulls of
+        instance-resident media are modeled at shared-memory speed."""
         stats = self._engine.transfer.stats
         before = stats.modeled_seconds
-        obj = self._engine.transfer.get(ref)
+        obj = self._engine.transfer.get(ref, local=local)
         # the modeled pull latency becomes virtual time owed by this function
         self._debt += stats.modeled_seconds - before
         return obj
@@ -441,14 +452,23 @@ class WorkflowEngine:
             )
         )
 
-    def _spawn_invocation(self, fn_name: str, payload: Any) -> AsyncResult:
+    def _spawn_invocation(
+        self,
+        fn_name: str,
+        payload: Any,
+        affinity: Optional[Tuple[int, ...]] = None,
+    ) -> AsyncResult:
         """Start one control-plane-mediated invocation as a sim process."""
         handle = AsyncResult(self.sim, fn_name)
-        self.sim.spawn(self._invocation_proc(handle, fn_name, payload))
+        self.sim.spawn(self._invocation_proc(handle, fn_name, payload, affinity))
         return handle
 
     def _invocation_proc(
-        self, handle: AsyncResult, fn_name: str, payload: Any
+        self,
+        handle: AsyncResult,
+        fn_name: str,
+        payload: Any,
+        affinity: Optional[Tuple[int, ...]] = None,
     ) -> Generator:
         """One control-plane-mediated invocation: steer, pay the cold-start
         and control-plane timeouts, run the handler, pay its debt, record.
@@ -459,7 +479,7 @@ class WorkflowEngine:
                 raise KeyError(f"unknown function {fn_name!r}")
             invocation_id = self._next_invocation_id()
             deployment = self._deployments[fn_name]
-            instance, wait = deployment.steer()
+            instance, wait = deployment.steer(affinity)
             sim = self.sim
             t0 = sim.now
             # separate timeouts for the activator's cold-start buffering and

@@ -31,7 +31,7 @@ from typing import Any, Dict, Optional
 import jax
 
 from ..configs import ARCH_IDS, get_config
-from ..models import make_decode_fn, make_loss_fn, make_prefill_fn
+from ..models import make_decode_fn, make_prefill_fn
 from ..optim import OptConfig
 from ..train import make_train_step
 from .input_specs import SHAPE_CELLS, cell_applicable, input_specs

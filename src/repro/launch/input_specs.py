@@ -21,8 +21,7 @@ for sub-quadratic (SSM/hybrid) archs — skips carry the config's
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -44,7 +44,8 @@ def main():
         srv = DisaggregatedServer(cfg, params, n_decode_pods=args.decode_pods,
                                   max_batch=args.max_batch, max_len=args.max_len,
                                   backend=args.backend)
-        rids = [srv.submit(p, max_new_tokens=args.new_tokens) for p in prompts]
+        for p in prompts:
+            srv.submit(p, max_new_tokens=args.new_tokens)
         done = srv.run_until_drained()
         rep = srv.handoff_report()
         print(f"disagg[{args.backend}]: {len(done)} requests, "
@@ -53,7 +54,8 @@ def main():
     else:
         srv = ServingEngine(cfg, params, max_batch=args.max_batch,
                             max_len=args.max_len)
-        rids = [srv.submit(p, max_new_tokens=args.new_tokens) for p in prompts]
+        for p in prompts:
+            srv.submit(p, max_new_tokens=args.new_tokens)
         done = srv.run_until_drained()
         print(f"single-pod: {len(done)} requests in {srv.steps} engine steps")
     wall = time.time() - t0

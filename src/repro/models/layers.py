@@ -23,13 +23,12 @@ loops for the same math.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..compat import shard_map
 from ..distributed.sharding import ShardingRules

@@ -175,7 +175,6 @@ def _moe_ep_single(x, p, cfg):
 def _moe_ep_sharded(x, p, cfg, mesh: Mesh):
     B, S, D = x.shape
     moe = cfg.moe
-    tp = int(mesh.shape["model"])
     axes = tuple(mesh.shape.keys())
     batch_axes = tuple(a for a in axes if a in ("pod", "data"))
     bspec = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None)

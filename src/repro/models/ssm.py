@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .config import ModelConfig, SSMConfig
+from .config import ModelConfig
 
 
 def _causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array]) -> jax.Array:
@@ -111,7 +111,6 @@ def mamba1_block(
     """Full Mamba-1 block.  ``state`` (decode): {"conv": (B,W-1,d_in),
     "ssm": (B,d_in,ds)}.  Returns (out, new_state)."""
     s = cfg.ssm
-    d_in = s.expand * cfg.d_model
     dtr = s.dt_rank or -(-cfg.d_model // 16)
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
     x_part, z = jnp.split(xz, 2, axis=-1)

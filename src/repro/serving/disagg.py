@@ -38,9 +38,8 @@ modeled latency/cost, reported via ``handoff_report()``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
-import jax
 import numpy as np
 
 from ..core.buffers import BufferRegistry

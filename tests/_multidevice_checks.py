@@ -22,10 +22,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import smoke_config
-from repro.core.patterns import build_pattern_fn, pattern_wire_bytes
+from repro.core.patterns import build_pattern_fn
 from repro.data import ShardedLoader
 from repro.distributed.sharding import ShardingRules
 from repro.launch.mesh import make_host_mesh

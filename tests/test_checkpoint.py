@@ -1,6 +1,5 @@
 """Checkpoint store: atomicity, async, GC, restore fidelity."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

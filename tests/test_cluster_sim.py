@@ -3,12 +3,11 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    DEFAULT_NET,
     InlineTooLarge,
     effective_bandwidth_Bps,
     measure_pattern,
 )
-from repro.core.cluster import LAMBDA_NET, ServerlessCluster, Simulator
+from repro.core.cluster import LAMBDA_NET, Simulator
 
 
 # ---------------------------------------------------------------- event loop

@@ -38,7 +38,6 @@ from repro.core.workloads import (
     DAGS,
     WORKLOADS,
     run_mr,
-    run_set,
     run_vid,
 )
 

@@ -1,0 +1,522 @@
+"""Graph optimizer (core/dagopt.py): fusion, co-placement, predictive spill.
+
+Four families of guarantees:
+
+* **Fusion is guarded** — 1:1 sync chains merge (compute summed, edge
+  deleted outright), but never across evictable, external, fan, or
+  orchestration boundaries, and never when the stages' scaling policies
+  differ.
+* **Optimized dominates** — on fixed seeds the optimized VID/SET/MR runs
+  are never costlier and never slower than the un-optimized ones on any
+  single backend (MR must be a structural no-op).
+* **Co-placement is honored end to end** — the scheduler's
+  ``steer(prefer=...)`` picks the producer's node when slots allow, both
+  lowerings count the edge's pulls as local, and the cluster lowering's
+  shared-memory path is faster than the NIC path it replaces.
+* **Predictive spill closes the retry loop** — with a telemetry feed
+  showing producer reaps + consumer cold starts, the staged edge is
+  rewritten durable and a ``kill_producer`` mid-run no longer forces the
+  producer-death retry (the un-optimized run dies with zero retries
+  allowed; the optimized one completes).
+
+The un-optimized path's bit-for-bit goldens stay in ``tests/test_dag.py``
+— this file only ever hands plans to runs that asked for them.
+"""
+import math
+
+import pytest
+
+from repro.core.dag import Edge, SizeRoute, Stage, WorkflowDAG, execute_on_cluster
+from repro.core.dagopt import (
+    CoPlacement,
+    PlacementPlan,
+    PredictiveSpill,
+    SyncChainFusion,
+    optimize,
+)
+from repro.core.errors import XDTProducerGone
+from repro.core.scheduler import ControlPlane, ScalingPolicy
+from repro.core.telemetry import TelemetryHub
+from repro.core.workflow import WorkflowEngine
+from repro.core.workloads import BACKENDS, DAGS
+
+
+def _chain(**kw):
+    """a --sync--> b --sync--> c, all fan 1 (the maximally fusible chain)."""
+    stages = [
+        Stage("a", compute_s=0.1),
+        Stage("b", compute_s=0.2, **kw),
+        Stage("c", compute_s=0.3),
+    ]
+    edges = [
+        Edge("a", "b", 1 << 20, label="ab", handoff="sync"),
+        Edge("b", "c", 1 << 20, label="bc", handoff="sync"),
+    ]
+    return WorkflowDAG("chain", stages, edges)
+
+
+# ---------------------------------------------------------------------------
+# SyncChainFusion
+# ---------------------------------------------------------------------------
+
+
+def test_fusion_merges_whole_sync_chain():
+    dag = _chain()
+    opt, plan = optimize(dag, passes=("fuse",))
+    assert [s.name for s in opt.stages] == ["a+b+c"]
+    assert opt.edges == ()
+    assert opt.stages[0].compute_s == pytest.approx(0.6)
+    assert plan.fused == {"a+b+c": ("a", "b", "c")}
+    assert set(plan.eliminated) == {"ab", "bc"}
+    # provenance stays resolvable after re-fusion: every eliminated edge
+    # points at the chain's FINAL stage name, not a dangling intermediate
+    for absorbed_into in plan.eliminated.values():
+        assert absorbed_into in plan.fused
+
+
+def test_fusion_refuses_fan_boundary():
+    dag = WorkflowDAG(
+        "d",
+        [Stage("p", compute_s=0.1), Stage("w", fan=4, compute_s=0.1)],
+        [Edge("p", "w", 1 << 20, label="scatter", handoff="sync")],
+    )
+    opt, plan = optimize(dag, passes=("fuse",))
+    assert opt.by_name.keys() == dag.by_name.keys()
+    assert not plan.fused
+    assert any("fan boundary" in n for n in plan.notes)
+
+
+def test_fusion_refuses_evictable_boundary():
+    opt, plan = optimize(_chain(evictable=True), passes=("fuse",))
+    # b is evictable: neither ab nor bc may fuse across it
+    assert "b" in opt.by_name
+    assert not plan.fused or all(
+        "b" not in members for members in plan.fused.values()
+    )
+    assert any("evictable boundary" in n for n in plan.notes)
+
+
+def test_fusion_refuses_external_and_staged_edges():
+    dag = WorkflowDAG(
+        "d",
+        [Stage("driver"), Stage("m", fan=1, blocking=False)],
+        [Edge(None, "m", 1 << 20, label="in", handoff="external", route="s3")],
+    )
+    opt, plan = optimize(dag, passes=("fuse",))
+    assert not plan.fused            # external edges are not chains at all
+    staged = WorkflowDAG(
+        "d",
+        [Stage("driver"), Stage("w", fan=1, blocking=False)],
+        [Edge("driver", "w", 1 << 20, label="bulk", handoff="staged")],
+    )
+    opt, plan = optimize(staged, passes=("fuse",))
+    assert not plan.fused            # only sync handoffs fuse
+
+
+def test_fusion_refuses_producers_with_side_edges():
+    """A producer with any other out-edge must not fuse: the sibling's
+    data would be published after the fused (summed) compute — fusing
+    could SLOW the graph, which the pass's contract forbids."""
+    sibling = WorkflowDAG(
+        "d",
+        [Stage("p", compute_s=0.1), Stage("c", compute_s=0.5),
+         Stage("d", fan=2, compute_s=0.1)],
+        [Edge("p", "c", 1 << 10, label="pc", handoff="sync"),
+         Edge("p", "d", 1 << 20, label="pd", handoff="sync")],
+    )
+    opt, plan = optimize(sibling, passes=("fuse",))
+    assert not plan.fused
+    assert any("other out-edges" in n for n in plan.notes)
+    # two fan-1 sync children previously ran CONCURRENTLY: also refused
+    twins = WorkflowDAG(
+        "d",
+        [Stage("p", compute_s=0.1), Stage("c1", compute_s=0.5),
+         Stage("c2", compute_s=0.5)],
+        [Edge("p", "c1", 1 << 10, label="pc1", handoff="sync"),
+         Edge("p", "c2", 1 << 10, label="pc2", handoff="sync")],
+    )
+    opt, plan = optimize(twins, passes=("fuse",))
+    assert not plan.fused
+
+
+def test_coplacement_slots_bound_is_per_producer_node():
+    """Two consumer stages affined to one producer count against ONE
+    node's slot budget — the bound is per node, not per edge."""
+    dag = WorkflowDAG(
+        "d",
+        [Stage("p", compute_s=0.1),
+         Stage("a", fan=5, compute_s=0.1, blocking=False),
+         Stage("b", fan=5, compute_s=0.1, blocking=False)],
+        [Edge("p", "a", 1 << 20, label="pa", handoff="staged"),
+         Edge("p", "b", 1 << 20, label="pb", handoff="staged")],
+    )
+    _, plan = CoPlacement(slots_per_node=8).apply(dag, PlacementPlan())
+    assert plan.affinity == {"a": "p"}        # b would overflow the node
+    assert any("already packed" in n for n in plan.notes)
+    _, plan2 = CoPlacement(slots_per_node=10).apply(dag, PlacementPlan())
+    assert plan2.affinity == {"a": "p", "b": "p"}
+
+
+def test_fusion_refuses_incompatible_scaling_policies():
+    scaling = lambda s: ScalingPolicy(
+        max_instances=4 if s.name == "b" else 64, target_concurrency=1
+    )
+    opt, plan = optimize(_chain(), passes=("fuse",), scaling=scaling)
+    assert not plan.fused
+    assert any("incompatible scaling" in n for n in plan.notes)
+    # a uniform factory fuses the whole chain again
+    opt, plan = optimize(
+        _chain(), passes=("fuse",), scaling=lambda s: ScalingPolicy()
+    )
+    assert plan.fused == {"a+b+c": ("a", "b", "c")}
+
+
+def test_fused_vid_eliminates_fragment_edge():
+    opt, plan = DAGS["vid"].optimize(passes=("fuse",))
+    assert plan.fused == {"streaming+decoder": ("streaming", "decoder")}
+    assert plan.eliminated == {"fragment": "streaming+decoder"}
+    assert {e.label for e in opt.edges} == {"frames"}
+    run = execute_on_cluster(opt, "s3", seed=0, deterministic=True)
+    # the fused run performs NO storage ops for the dead edge: only frames
+    assert run.edge_usage["frames"].n_puts == 4
+    assert run.bill.n_invocations == 5          # was 6: one fewer function
+
+
+# ---------------------------------------------------------------------------
+# Optimized dominates (the fig10 gate, asserted here on fixed seeds)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wl", list(DAGS))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_optimized_never_costlier_nor_slower(wl, backend):
+    dag = DAGS[wl]
+    opt, plan = dag.optimize()
+    for seed in (0, 1):
+        base = execute_on_cluster(dag, backend, seed=seed, deterministic=True)
+        run = execute_on_cluster(
+            opt, backend, seed=seed, deterministic=True, plan=plan
+        )
+        assert run.cost().total <= base.cost().total * (1 + 1e-12)
+        assert run.latency_s <= base.latency_s * (1 + 1e-12)
+
+
+def test_optimized_vid_strictly_dominates_on_xdt():
+    """VID fuses + co-places: the win must be strict, not a wash."""
+    dag = DAGS["vid"]
+    opt, plan = dag.optimize()
+    base = execute_on_cluster(dag, "xdt", seed=0, deterministic=True)
+    run = execute_on_cluster(opt, "xdt", seed=0, deterministic=True, plan=plan)
+    assert run.latency_s < base.latency_s
+    assert run.cost().total < base.cost().total
+    assert run.edge_usage["frames"].n_local == 4    # every recognizer local
+
+
+def test_mr_is_a_structural_noop():
+    """Nothing in MR fuses or co-places (shuffle pulls from every mapper);
+    the optimizer must leave it bit-identical, not merely 'close'."""
+    dag = DAGS["mr"]
+    opt, plan = dag.optimize()
+    assert plan.is_noop()
+    base = execute_on_cluster(dag, "xdt", seed=3)
+    run = execute_on_cluster(opt, "xdt", seed=3, plan=plan)
+    assert run.latency_s == base.latency_s
+    assert run.cost().total == base.cost().total
+
+
+# ---------------------------------------------------------------------------
+# Co-placement: scheduler + both lowerings
+# ---------------------------------------------------------------------------
+
+
+def test_steer_prefer_picks_affine_instance_when_slots_allow():
+    t = [0.0]
+    cp = ControlPlane(clock=lambda: t[0])
+    dep = cp.register("w", ScalingPolicy(max_instances=8, target_concurrency=1,
+                                         cold_start_s=0.0))
+    a, _ = dep.steer()
+    b, _ = dep.steer()
+    dep.release(a.instance_id)
+    dep.release(b.instance_id)
+    # both idle: prefer b's coords and the affine path must return b, not
+    # the heap's least-loaded tie-break (lowest instance id = a)
+    inst, wait = dep.steer(prefer=b.coords)
+    assert inst.instance_id == b.instance_id
+    assert dep.stats["affine_hits"] == 1
+    # b is now saturated (target_concurrency=1): the hint falls back
+    inst2, _ = dep.steer(prefer=b.coords)
+    assert inst2.instance_id != b.instance_id
+    assert dep.stats["affine_hits"] == 1
+
+
+def test_steer_prefer_ignores_cold_instances():
+    t = [0.0]
+    cp = ControlPlane(clock=lambda: t[0])
+    dep = cp.register("w", ScalingPolicy(max_instances=8, target_concurrency=1,
+                                         cold_start_s=5.0))
+    cold, _ = dep.steer()                 # spawns cold, ready at t=5
+    # the affine hint must not wait on a booting instance
+    inst, _ = dep.steer(prefer=cold.coords)
+    assert inst.instance_id != cold.instance_id
+    assert dep.stats["affine_hits"] == 0
+
+
+def test_coplacement_skips_multi_producer_and_oversized_fans():
+    plan = PlacementPlan()
+    dag = DAGS["mr"]
+    _, plan = CoPlacement().apply(dag, plan)
+    assert not plan.affinity
+    big = WorkflowDAG(
+        "d",
+        [Stage("p", compute_s=0.1),
+         Stage("w", fan=9, compute_s=0.1, blocking=False)],
+        [Edge("p", "w", 1 << 20, label="bulk", handoff="staged")],
+    )
+    _, plan2 = CoPlacement(slots_per_node=8).apply(big, PlacementPlan())
+    assert not plan2.affinity
+    assert any("slots/node" in n for n in plan2.notes)
+    _, plan3 = CoPlacement(slots_per_node=9).apply(big, PlacementPlan())
+    assert plan3.affinity == {"w": "p"}
+
+
+def test_cluster_local_pull_beats_nic_path():
+    """SET on xdt: co-placement must strictly cut the broadcast time."""
+    dag = DAGS["set"]
+    opt, plan = dag.optimize(passes=("coplace",))
+    assert plan.affinity == {"trainer": "driver"}
+    base = execute_on_cluster(dag, "xdt", seed=0, deterministic=True)
+    run = execute_on_cluster(opt, "xdt", seed=0, deterministic=True, plan=plan)
+    assert run.latency_s < base.latency_s * 0.75
+    u = run.edge_usage["dataset"]
+    assert u.n_local == u.media.get("xdt")      # every dataset pull was local
+    # storage-routed runs are untouched by affinity: identical latency
+    s3_base = execute_on_cluster(dag, "s3", seed=0, deterministic=True)
+    s3_run = execute_on_cluster(opt, "s3", seed=0, deterministic=True, plan=plan)
+    assert s3_run.latency_s == s3_base.latency_s
+
+
+def test_engine_binding_honors_affinity_and_counts_local_pulls():
+    dag = DAGS["vid"]
+    opt, plan = dag.optimize()
+    eng = WorkflowEngine(backend="xdt")
+    binding = opt.bind(eng, default_route=SizeRoute(), bytes_scale=1e-4,
+                       plan=plan)
+    for _ in range(4):                   # sequential: fleets stay warm
+        eng.run(binding.entry, 1.0)
+    eng.assert_at_most_once()
+    assert binding.edge_usage["frames"].n_local >= 4
+    dep = eng.control.deployments["vid.recognition"]
+    assert dep.stats["affine_hits"] > 0
+    assert eng.transfer.stats.local_pulls == (
+        sum(u.n_local for u in binding.edge_usage.values())
+    )
+
+
+def test_engine_binding_honors_wave_to_wave_affinity():
+    """Both lowerings must honor the SAME plan: an edge whose producer is a
+    wave stage (not the entry) still gets its affinity hint on the engine —
+    the entry forwards the producer's coords from its result."""
+    dag = WorkflowDAG(
+        "waves",
+        [Stage("e", compute_s=0.0),
+         Stage("a", fan=1, compute_s=0.01, blocking=False),
+         Stage("b", fan=2, compute_s=0.01, blocking=False)],
+        [Edge("e", "a", 1 << 16, label="ea", handoff="staged"),
+         Edge("a", "b", 1 << 16, label="ab", handoff="staged")],
+    )
+    opt, plan = dag.optimize(passes=("coplace",))
+    assert plan.affinity == {"a": "e", "b": "a"}
+    # cluster lowering: b's pulls from a are local
+    run = execute_on_cluster(opt, "xdt", seed=0, deterministic=True, plan=plan)
+    assert run.edge_usage["ab"].n_local == 2
+    # engine lowering: the same edge is local too (coords forwarded)
+    eng = WorkflowEngine(backend="xdt")
+    binding = opt.bind(eng, default_route="xdt", bytes_scale=1e-2, plan=plan)
+    for _ in range(3):
+        eng.run(binding.entry, 1.0)
+    eng.assert_at_most_once()
+    assert binding.edge_usage["ab"].n_local > 0
+
+
+def test_engine_plan_for_wrong_dag_is_rejected():
+    plan = PlacementPlan(affinity={"ghost": "nobody"})
+    eng = WorkflowEngine(backend="xdt")
+    with pytest.raises(ValueError, match="unknown stage"):
+        DAGS["vid"].bind(eng, plan=plan)
+    with pytest.raises(ValueError, match="unknown stage"):
+        execute_on_cluster(DAGS["vid"], "xdt", plan=plan)
+
+
+# ---------------------------------------------------------------------------
+# Predictive spill
+# ---------------------------------------------------------------------------
+
+
+def _spill_scenario():
+    dag = WorkflowDAG(
+        "flaky",
+        [Stage("p", compute_s=0.0),
+         Stage("w", fan=2, compute_s=0.0, blocking=False)],
+        [Edge("p", "w", 1 << 16, label="d", handoff="staged")],
+    )
+    t = [0.0]
+    hub = TelemetryHub(lambda: t[0])
+    for i in range(20):
+        t[0] = i * 0.05
+        # the producer fleet is being reaped hard, consumers cold-start on
+        # every arrival: the keep-alive race is predictably lost
+        hub.deployment("p").record_reap(t[0])
+        hub.deployment("w").record_arrival(t[0], 0)
+        hub.deployment("w").record_cold_start(t[0])
+    return dag, hub
+
+
+def test_reap_window_feeds_lifetime_prediction():
+    t = [0.0]
+    hub = TelemetryHub(lambda: t[0])
+    feed = hub.deployment("p")
+    assert feed.expected_instance_lifetime_s(0.0) == math.inf
+    for i in range(10):
+        t[0] = i * 0.1
+        feed.record_reap(t[0])
+    life = feed.expected_instance_lifetime_s(t[0])
+    assert 0.0 < life < 1.0
+    assert feed.snapshot()["n_reaps"] == 10.0
+
+
+def test_scheduler_records_reaps_into_telemetry():
+    t = [0.0]
+    cp = ControlPlane(clock=lambda: t[0])
+    dep = cp.register("w", ScalingPolicy(
+        max_instances=4, keep_alive_s=1.0, cold_start_s=0.0, autoscaler="rps",
+    ))
+    inst, _ = dep.steer()
+    dep.release(inst.instance_id)
+    t[0] = 5.0                           # idle past keep-alive
+    dep.steer()                          # reaps on entry
+    assert dep.stats["scale_downs"] >= 1
+    assert dep.telemetry.n_reaps == dep.stats["scale_downs"]
+
+
+def test_spill_rewrites_staged_edge_to_durable():
+    dag, hub = _spill_scenario()
+    opt, plan = dag.optimize(telemetry=hub)
+    assert plan.spilled == {"d": "s3"}
+    assert opt.edges[0].route == "s3"
+    # the original declaration is untouched
+    assert dag.edges[0].route == "default"
+
+
+def test_spill_never_guesses_without_telemetry():
+    dag, hub = _spill_scenario()
+    opt, plan = dag.optimize()                    # no hub
+    assert not plan.spilled
+    # a healthy feed (no reaps, no cold starts) also spills nothing
+    t = [0.0]
+    healthy = TelemetryHub(lambda: t[0])
+    healthy.deployment("p")
+    healthy.deployment("w")
+    opt, plan = dag.optimize(telemetry=healthy)
+    assert not plan.spilled
+
+
+def test_spill_respects_pinned_durable_and_evictable_edges():
+    t = [99.0]
+    hub = TelemetryHub(lambda: t[0])
+    hub.deployment("p").record_reap(99.0)
+    pinned = WorkflowDAG(
+        "d", [Stage("p"), Stage("w", blocking=False)],
+        [Edge("p", "w", 1 << 16, label="d", handoff="staged", route="s3")],
+    )
+    _, plan = PredictiveSpill(telemetry=hub).apply(pinned, PlacementPlan())
+    assert not plan.spilled
+    evict = WorkflowDAG(
+        "d", [Stage("p", evictable=True), Stage("w", blocking=False)],
+        [Edge("p", "w", 1 << 16, label="d", handoff="staged")],
+    )
+    _, plan = PredictiveSpill(telemetry=hub).apply(evict, PlacementPlan())
+    assert not plan.spilled
+    assert any("evictable" in n for n in plan.notes)
+
+
+def test_spill_saves_the_producer_death_retry():
+    """The acceptance test: kill the producer after its puts.  Un-optimized
+    (instance-resident medium) the run dies with retries disabled; the
+    spilled edge survives in durable storage and completes first try."""
+    dag, hub = _spill_scenario()
+    opt, plan = dag.optimize(telemetry=hub)
+
+    def run_with_kill(the_dag, the_plan):
+        eng = WorkflowEngine(backend="xdt", max_retries=0)
+        binding = the_dag.bind(
+            eng, default_route="xdt", bytes_scale=1e-1, plan=the_plan
+        )
+        orig = binding._put_for_consumers
+        killed = []
+
+        def sabotage(ctx, edge, fill):
+            out = orig(ctx, edge, fill)
+            if not killed:
+                killed.append(True)
+                eng.transfer.kill_producer()
+            return out
+
+        binding._put_for_consumers = sabotage
+        result = eng.run(binding.entry, 1.0)
+        assert killed
+        eng.assert_at_most_once()
+        return result
+
+    with pytest.raises(XDTProducerGone):
+        run_with_kill(dag, None)
+    run_with_kill(opt, plan)             # spilled: completes, zero retries
+
+
+# ---------------------------------------------------------------------------
+# optimize() plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_optimize_rejects_unknown_pass():
+    with pytest.raises(ValueError, match="pass must be one of"):
+        optimize(DAGS["vid"], passes=("nope",))
+
+
+def test_optimize_accepts_pass_instances_and_preserves_order():
+    opt, plan = optimize(
+        DAGS["vid"], passes=(SyncChainFusion(), CoPlacement(slots_per_node=2)),
+    )
+    assert plan.fused                    # fuse ran
+    assert not plan.affinity             # 4 recognizers > 2 slots: withheld
+    assert any("slots/node" in n for n in plan.notes)
+
+
+def test_registered_pass_overrides_builtin_name():
+    """register_pass documents idempotent overwrite: a class registered
+    over a stock name must actually run in place of the built-in."""
+    from repro.core.dagopt import GraphPass, _PASS_REGISTRY, register_pass
+
+    ran = []
+
+    class NoSpill(GraphPass):
+        name = "spill"
+
+        def apply(self, dag, plan):
+            ran.append(True)
+            return dag, plan
+
+    original = _PASS_REGISTRY["spill"]
+    try:
+        register_pass(NoSpill)
+        optimize(DAGS["set"], passes=("spill",))
+        assert ran
+    finally:
+        register_pass(original)
+        assert _PASS_REGISTRY["spill"] is PredictiveSpill
+
+
+def test_plan_describe_is_human_readable():
+    _, plan = DAGS["vid"].optimize()
+    text = plan.describe()
+    assert "streaming+decoder" in text and "recognition" in text
+    assert PlacementPlan().describe() == "no-op"

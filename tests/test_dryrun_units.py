@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.configs import ARCH_IDS, get_config
 from repro.launch.dryrun import _shape_bytes, parse_collective_bytes
 from repro.launch.input_specs import SHAPE_CELLS, cell_applicable, input_specs
 

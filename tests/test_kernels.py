@@ -193,7 +193,6 @@ def test_mamba_scan_carried_state():
     y_full, h_full = mamba_kernel(x, dt, Bi, Ci, A, D, chunk=32, block_d=64,
                                   interpret=True)
     h = S // 2
-    sl = lambda t: t[:, :h], lambda t: t[:, h:]
     y1, h1 = mamba_kernel(x[:, :h], dt[:, :h], Bi[:, :h], Ci[:, :h], A, D,
                           chunk=32, block_d=64, interpret=True)
     y2, h2 = mamba_kernel(x[:, h:], dt[:, h:], Bi[:, h:], Ci[:, h:], A, D,

@@ -1,5 +1,4 @@
 """Per-architecture smoke tests (reduced configs, CPU) + decode consistency."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

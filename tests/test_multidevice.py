@@ -1,5 +1,4 @@
 """Mesh-level behaviour (8 host devices, subprocess — see conftest)."""
-import pytest
 
 
 def _assert_ok(results, name):

@@ -1,7 +1,6 @@
 """Optimizer, schedule, and gradient-compression unit tests."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -5,7 +5,7 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.models import init_params, make_decode_fn, make_prefill_fn
-from repro.serving import DisaggregatedServer, Request, ServingEngine
+from repro.serving import DisaggregatedServer, ServingEngine
 
 import jax.numpy as jnp
 

@@ -4,7 +4,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    DEFAULT_NET,
     InlineTooLarge,
     TransferEngine,
     XDTObjectExhausted,

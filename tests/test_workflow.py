@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import TransferEngine, WorkflowEngine, XDTProducerGone
+from repro.core import WorkflowEngine, XDTProducerGone
 from repro.core.scheduler import ScalingPolicy
 
 
