@@ -9,7 +9,13 @@ next to the pass/fail tick — the hard gate itself stays in
 ``bench_engine --smoke --check`` (>30% regression fails the job); this
 table is the trajectory's human-readable face.
 
+With ``--fig11-baseline`` the table gains the multi-tenant sweep's cell —
+smoke events/sec over the sharded tenant cells plus the co-resident
+deployment count and the attribution-invariant gap — comparing the saved-
+aside ``results/BENCH_fig11_multitenant.json`` against the fresh one.
+
 Usage:  PYTHONPATH=src python -m benchmarks.bench_delta BASELINE.json [FRESH.json]
+            [--fig11-baseline FIG11_BASELINE.json [--fig11-fresh FIG11_FRESH.json]]
 """
 from __future__ import annotations
 
@@ -37,10 +43,50 @@ def _fmt_delta(base, fresh):
     return f"{pct:+.1f}%"
 
 
+def _fig11_totals(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return (doc.get("smoke") or {}).get("totals", {})
+
+
+def _fig11_section(baseline_path, fresh_path):
+    base = _fig11_totals(baseline_path)
+    fresh = _fig11_totals(fresh_path)
+    if not fresh:
+        return
+    b_eps = base.get("events_per_sec", 0.0)
+    f_eps = fresh.get("events_per_sec", 0.0)
+    print()
+    print("### Multi-tenant sweep — smoke (sharded tenant cells)")
+    print()
+    print("| metric | baseline | fresh | delta |")
+    print("|---|---:|---:|---:|")
+    print(f"| events/sec | {b_eps:,.0f} | {f_eps:,.0f} "
+          f"| {_fmt_delta(b_eps, f_eps)} |")
+    print(f"| co-resident deployments | {base.get('max_n_deployments', 0):,} "
+          f"| {fresh.get('max_n_deployments', 0):,} | |")
+    print(f"| attribution gap (rel) "
+          f"| {base.get('max_attribution_gap_rel', 0.0):.1e} "
+          f"| {fresh.get('max_attribution_gap_rel', 0.0):.1e} | |")
+
+
 def main(argv=None):
-    argv = sys.argv[1:] if argv is None else argv
+    argv = list(sys.argv[1:] if argv is None else argv)
+
+    def _flag(name):
+        if name in argv:
+            i = argv.index(name)
+            argv.pop(i)
+            return argv.pop(i)
+        return None
+
+    fig11_baseline = _flag("--fig11-baseline")
+    fig11_fresh = _flag("--fig11-fresh") or os.path.join(
+        RESULTS_DIR, "BENCH_fig11_multitenant.json"
+    )
     if not argv:
-        print("usage: python -m benchmarks.bench_delta BASELINE.json [FRESH.json]")
+        print("usage: python -m benchmarks.bench_delta BASELINE.json [FRESH.json]"
+              " [--fig11-baseline FIG11.json [--fig11-fresh FIG11.json]]")
         return 2
     baseline_path = argv[0]
     fresh_path = (
@@ -77,6 +123,8 @@ def main(argv=None):
         diff = [f"{k[0]}@{k[1]:.0f}" for k, ok in checks if not ok]
         print(f"latency checksums CHANGED at: {', '.join(diff)} — the sweep's "
               "virtual-time semantics differ from the committed baseline")
+    if fig11_baseline and os.path.exists(fig11_baseline):
+        _fig11_section(fig11_baseline, fig11_fresh)
     return 0
 
 

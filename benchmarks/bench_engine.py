@@ -73,7 +73,12 @@ def build_engine(backend: str, seed: int, records: str = "columnar") -> Workflow
 
     sim = Simulator(seed=seed)
     clock = VirtualClock(sim)
-    registry = BufferRegistry(max_slots=1 << 20, max_bytes=1 << 40, clock=clock)
+    try:
+        registry = BufferRegistry(
+            max_slots=1 << 20, max_bytes=1 << 40, clock=clock, threadsafe=False
+        )
+    except TypeError:               # pre-optimization registry: always locked
+        registry = BufferRegistry(max_slots=1 << 20, max_bytes=1 << 40, clock=clock)
     transfer = TransferEngine(backend, registry=registry, clock=clock)
     try:
         eng = WorkflowEngine(transfer=transfer, simulator=sim, records=records)

@@ -1,0 +1,338 @@
+"""Fig 11: trace-driven multi-tenant sweeps on the sharded simulator.
+
+Sweeps tenant count x arrival shape over the deployment-sharded substrate:
+every tenant is one :class:`~repro.core.shard.GroupSpec` (a private cell —
+no shared media, no cross-tenant calls) registering the paper's three
+workflow DAGs (VID / SET / MR, §6.5) with byte-scaled payloads, driven by a
+synthetic Azure-Functions-shaped arrival trace
+(:func:`~repro.core.loadgen.synthesize_trace`) replayed as batched
+same-timestamp buckets.  :class:`~repro.core.shard.ShardRunner` advances the
+tenant cells on epoch barriers and merges the columnar logs
+deterministically, so the sweep's results are independent of the shard
+count (pinned by ``tests/test_shard.py``).
+
+Reported per sweep point:
+
+* substrate throughput — wall-clock events/sec across all tenant cells;
+* per-tenant $-per-1k-requests (mean/min/max) from each cell's exact
+  accounting (one tenant per cell: no proportional splitting), priced per
+  medium via :func:`~repro.core.cost.routed_workflow_cost`;
+* the **attribution invariant**: per-tenant bills sum to the untenanted
+  global bill (linearity of the fee structures — see
+  :func:`~repro.core.cost.combine_cost_inputs`);
+* per-tenant and global p99 latency.
+
+Results go to ``results/BENCH_fig11_multitenant.json``.  The smoke section
+carries the CI gates: >=1000 co-resident deployments, the attribution
+invariant at fp tolerance, and <=30% events/sec regression vs the committed
+baseline (the same convention as ``bench_engine``).
+
+Run:  PYTHONPATH=src python -m benchmarks.fig11_multitenant [--smoke] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import (
+    FixedRoute,
+    GroupSpec,
+    ShardPlan,
+    ShardRunner,
+    StorageOps,
+    TraceConfig,
+    TraceReplayDriver,
+    WorkflowCostInputs,
+    combine_cost_inputs,
+    routed_workflow_cost,
+    synthesize_trace,
+)
+from repro.core.workloads import DAGS
+
+from .common import RESULTS_DIR, save_json
+
+RESULT_NAME = "BENCH_fig11_multitenant.json"
+
+#: the three paper workloads every tenant deploys (8 deployments/tenant)
+DAG_NAMES = ("vid", "set", "mr")
+#: ephemeral edges ride one priced medium; MR's original input stays pinned
+#: to S3 by the DAG itself, so runs are mixed-media and priced per medium
+BACKEND = "s3"
+#: down-scale moved arrays so the sweep times the substrate, not numpy
+#: (routing still sees the DECLARED edge sizes)
+BYTES_SCALE = 1e-6
+
+REFERENCE = {
+    "tenants": [24, 48, 96],
+    "shapes": ["steady", "diurnal", "bursty"],
+    "duration_s": 10.0,
+    "base_rps": 0.5,                  # per tenant, spread over the 3 DAGs
+    "seed": 2024,
+    "n_shards": 4,
+    "epoch_s": 2.0,
+}
+#: one point, sized to cross the >=1000 co-resident deployments gate
+#: (128 tenants x 8 deployments) with a mixed shape population
+SMOKE = {
+    "tenants": [128],
+    "shapes": ["mixed"],
+    "duration_s": 4.0,
+    "base_rps": 0.35,
+    "seed": 2024,
+    "n_shards": 4,
+    "epoch_s": 2.0,
+}
+
+
+def tenant_spec(tid: int, shape: str, cfg: dict) -> GroupSpec:
+    """One tenant: a private cell deploying VID+SET+MR, driven by its trace.
+
+    ``shape="mixed"`` cycles the population through the three arrival
+    shapes; the golden-ratio phase de-synchronizes tenants' diurnal peaks.
+    """
+    name = f"tenant-{tid:04d}"
+    tenant_shape = (
+        TraceConfig.SHAPES[tid % len(TraceConfig.SHAPES)]
+        if shape == "mixed" else shape
+    )
+
+    def build(engine, spec):
+        entries = tuple(
+            DAGS[dag].bind(
+                engine,
+                default_route=FixedRoute(BACKEND),
+                bytes_scale=BYTES_SCALE,
+            ).entry
+            for dag in DAG_NAMES
+        )
+        driver = TraceReplayDriver(engine, payload_fn=lambda nb: nb % 7)
+        trace = synthesize_trace(
+            np.random.default_rng(cfg["seed"] * 100_003 + tid),
+            TraceConfig(
+                duration_s=cfg["duration_s"],
+                base_rps=cfg["base_rps"],
+                shape=tenant_shape,
+            ),
+            phase=0.618034 * tid,
+        )
+        return lambda: driver.schedule(spec.name, entries, trace)
+
+    return GroupSpec(name=name, build=build, seed=cfg["seed"] + tid)
+
+
+def _tenant_accounting(cell):
+    """Exact per-tenant cost inputs + per-medium ops from its cell result."""
+    media_ops = {
+        medium: StorageOps(
+            n_puts=int(tot["n_puts"]),
+            n_gets=int(tot["n_gets"]),
+            gb_seconds=tot["gb_seconds"],
+            peak_resident_gb=tot["peak_resident_gb"],
+        )
+        for medium, tot in cell.media.items()
+    }
+    inputs = WorkflowCostInputs(
+        n_function_invocations=len(cell.invocation_ids),
+        billed_duration_s=cell.billed_s,
+        n_storage_puts=sum(o.n_puts for o in media_ops.values()),
+        n_storage_gets=sum(o.n_gets for o in media_ops.values()),
+        storage_gb_seconds=sum(o.gb_seconds for o in media_ops.values()),
+        peak_resident_gb=sum(o.peak_resident_gb for o in media_ops.values()),
+    )
+    return inputs, media_ops
+
+
+def run_point(n_tenants: int, shape: str, cfg: dict, quiet: bool = False):
+    specs = [tenant_spec(tid, shape, cfg) for tid in range(n_tenants)]
+    plan = ShardPlan.plan(specs, n_shards=cfg["n_shards"])
+    runner = ShardRunner(plan, epoch_s=cfg["epoch_s"])
+    t0 = time.perf_counter()
+    run = runner.run(duration_s=cfg["duration_s"])
+    wall = time.perf_counter() - t0
+
+    # exact per-tenant attribution: one tenant per cell
+    parts, per_tenant_usd, p99s = {}, [], []
+    media_global: dict = {}
+    for name, cell in sorted(run.per_cell.items()):
+        if not len(cell.request_ids):
+            continue
+        inputs, media_ops = _tenant_accounting(cell)
+        parts[name] = inputs
+        bill = routed_workflow_cost(inputs, media_ops)
+        per_tenant_usd.append(
+            bill.total / len(cell.request_ids) * 1000.0
+        )
+        p99s.append(float(np.percentile(cell.latencies_s, 99)))
+        for medium, ops in media_ops.items():
+            agg = media_global.setdefault(
+                medium, dict(n_puts=0, n_gets=0, gb_seconds=0.0,
+                             peak_resident_gb=0.0)
+            )
+            agg["n_puts"] += ops.n_puts
+            agg["n_gets"] += ops.n_gets
+            agg["gb_seconds"] += ops.gb_seconds
+            agg["peak_resident_gb"] += ops.peak_resident_gb
+
+    # the attribution invariant: tenant bills sum to the untenanted bill
+    combined = combine_cost_inputs(parts.values())
+    global_bill = routed_workflow_cost(
+        combined, {m: StorageOps(**a) for m, a in media_global.items()}
+    )
+    sum_tenant_usd = sum(
+        routed_workflow_cost(*_tenant_accounting(cell)).total
+        for cell in run.per_cell.values() if len(cell.request_ids)
+    )
+    gap = abs(sum_tenant_usd - global_bill.total) / max(
+        global_bill.total, 1e-30
+    )
+
+    lat = np.asarray(run.request_log.latencies_s)
+    row = {
+        "n_tenants": n_tenants,
+        "shape": shape,
+        "n_deployments": run.n_deployments,
+        "n_cells": run.n_cells,
+        "n_shards": run.n_shards,
+        "n_requests": len(run.request_log),
+        "n_invocations": combined.n_function_invocations,
+        "events": run.events_processed,
+        "wall_s": wall,
+        "events_per_sec": run.events_processed / wall,
+        "p99_s": float(np.percentile(lat, 99)) if len(lat) else 0.0,
+        "tenant_p99_s_max": max(p99s) if p99s else 0.0,
+        "tenant_usd_per_1k": {
+            "mean": float(np.mean(per_tenant_usd)),
+            "min": float(np.min(per_tenant_usd)),
+            "max": float(np.max(per_tenant_usd)),
+        } if per_tenant_usd else None,
+        "global_usd": global_bill.total,
+        "sum_tenant_usd": sum_tenant_usd,
+        "attribution_gap_rel": gap,
+    }
+    if not quiet:
+        print(
+            f"{n_tenants:>5} tenants x {shape:<8}  "
+            f"{row['n_deployments']:>5d} deps  {row['n_requests']:>6d} req  "
+            f"{row['events']:>8d} ev  {wall:6.2f}s wall  "
+            f"{row['events_per_sec']:>9.0f} ev/s  "
+            f"p99 {row['p99_s']*1e3:7.1f} ms  "
+            f"${row['global_usd']:.4f} (gap {gap:.1e})"
+        )
+    return row
+
+
+def run_sweep(cfg, quiet: bool = False):
+    rows = [
+        run_point(n, shape, cfg, quiet=quiet)
+        for n in cfg["tenants"]
+        for shape in cfg["shapes"]
+    ]
+    total_events = sum(r["events"] for r in rows)
+    total_wall = sum(r["wall_s"] for r in rows)
+    return {
+        "rows": rows,
+        "config": {**cfg, "backend": BACKEND, "dags": list(DAG_NAMES),
+                   "bytes_scale": BYTES_SCALE},
+        "totals": {
+            "n_requests": sum(r["n_requests"] for r in rows),
+            "events": total_events,
+            "wall_s": total_wall,
+            "events_per_sec": total_events / total_wall,
+            "max_attribution_gap_rel": max(
+                r["attribution_gap_rel"] for r in rows
+            ),
+            "max_n_deployments": max(r["n_deployments"] for r in rows),
+        },
+    }
+
+
+def _load_existing():
+    path = os.path.join(RESULTS_DIR, RESULT_NAME)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def _check(out, baseline_eps) -> int:
+    """CI gates on the smoke section; returns a process exit code."""
+    tot = out["smoke"]["totals"]
+    failures = []
+    if tot["max_n_deployments"] < 1000:
+        failures.append(
+            f"co-resident deployments {tot['max_n_deployments']} < 1000"
+        )
+    if tot["max_attribution_gap_rel"] > 1e-9:
+        failures.append(
+            "per-tenant bills do not sum to the global bill "
+            f"(rel gap {tot['max_attribution_gap_rel']:.3e})"
+        )
+    if baseline_eps is None:
+        print("# --check: no committed baseline; recorded this run")
+    elif tot["events_per_sec"] < 0.7 * baseline_eps:
+        failures.append(
+            f"smoke {tot['events_per_sec']:.0f} ev/s < 70% of committed "
+            f"baseline {baseline_eps:.0f} ev/s"
+        )
+    else:
+        print(
+            f"# --check ok: smoke {tot['events_per_sec']:.0f} ev/s vs "
+            f"committed baseline {baseline_eps:.0f} ev/s"
+        )
+    for f in failures:
+        print(f"# GATE FAILED: {f}")
+    return 1 if failures else 0
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--smoke", action="store_true",
+                   help="single-point CI subset (>=1000 deployments); "
+                        "preserves the committed reference section")
+    p.add_argument("--check", action="store_true",
+                   help="fail on gate violations (deployment floor, "
+                        "attribution invariant, events/sec regression)")
+    args = p.parse_args(sys.argv[1:] if argv is None else argv)
+
+    existing = _load_existing()
+    baseline_eps = (existing.get("smoke") or {}).get("totals", {}).get(
+        "events_per_sec"
+    )
+
+    out = dict(existing)
+    if args.smoke:
+        print("# fig11 --smoke: 128 tenants, mixed arrival shapes")
+        out["smoke"] = run_sweep(SMOKE)
+    else:
+        print("# fig11 reference sweep: tenant count x arrival shape")
+        out["reference"] = run_sweep(REFERENCE)
+        print("# smoke subset (CI baseline)")
+        out["smoke"] = run_sweep(SMOKE)
+    out["schema"] = 1
+
+    tot = out["smoke"]["totals"] if args.smoke else out["reference"]["totals"]
+    print(f"# totals: {tot['n_requests']} requests, "
+          f"{tot['events_per_sec']:.0f} events/s, "
+          f"max attribution gap {tot['max_attribution_gap_rel']:.2e}")
+    path = save_json(RESULT_NAME, out)
+    print(f"# wrote {path}")
+
+    if args.check:
+        return _check(out, baseline_eps)
+    return 0
+
+
+#: benchmarks.run auto-discovery (smoke carries the multi-tenant CI gates)
+HARNESS = {
+    "name": "fig11",
+    "full": lambda: main([]),
+    "smoke": lambda: main(["--smoke", "--check"]),
+}
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,7 +29,15 @@ Layers
                      rewritten graph plus a PlacementPlan both lowerings
                      honor.
 * :mod:`loadgen`   — closed/open-loop request drivers for throughput and
-                     tail-latency sweeps under virtual time.
+                     tail-latency sweeps under virtual time, plus the
+                     trace-driven multi-tenant frontend (synthetic
+                     Azure-shaped arrival traces replayed as batched
+                     same-timestamp buckets with per-tenant attribution).
+* :mod:`shard`     — deployment-sharded simulation: independent deployment
+                     cells (connected components of the shared-media /
+                     cross-call interaction graph) advanced on clock-synced
+                     epoch barriers across in-process lanes or forked
+                     workers, with a deterministic columnar merge.
 * :mod:`cluster`   — calibrated discrete-event simulator for the paper's
                      latency/bandwidth/cost evaluation.
 * :mod:`cost`      — AWS cost model (Table 2).
@@ -49,6 +57,7 @@ from .cost import (
     CostBreakdown,
     StorageOps,
     WorkflowCostInputs,
+    combine_cost_inputs,
     cost_per_1k_requests,
     elasticache_storage_cost,
     lambda_compute_cost,
@@ -57,6 +66,7 @@ from .cost import (
     routed_cost_per_1k_requests,
     routed_workflow_cost,
     s3_storage_cost,
+    tenant_bills,
     workflow_cost,
 )
 from .dag import (
@@ -99,8 +109,23 @@ from .patterns import (
     pattern_wire_bytes,
     scatter_shard,
 )
-from .loadgen import LoadGenerator, LoadReport
+from .loadgen import (
+    LoadGenerator,
+    LoadReport,
+    TraceConfig,
+    TraceReplayDriver,
+    synthesize_trace,
+)
 from .refs import ObjectDescriptor, RefMinter, RefPayload, XDTRef
+from .shard import (
+    Cell,
+    CellResult,
+    GroupSpec,
+    MergedRun,
+    ShardPlan,
+    ShardRunner,
+    merge_cell_results,
+)
 from .workloads import (
     DAGS,
     HYBRID_ROUTE,

@@ -37,13 +37,16 @@ def _default_nbytes(obj: Any) -> int:
     return 64  # opaque python object: accounting floor
 
 
-@dataclasses.dataclass(slots=True)
-class _Entry:
-    obj: Any
-    nbytes: int
-    remaining: int
-    epoch: int
-    created_at: float
+# Entry layout: a plain list (C-speed construction on the put hot path —
+# a slotted dataclass costs a Python-level __init__ frame per put).  Indexed
+# by the _E_* constants below; private to this module and the fused fast
+# paths in repro.core.transfer.
+_E_OBJ, _E_NBYTES, _E_REMAINING, _E_EPOCH, _E_CREATED = range(5)
+
+
+def _Entry(obj: Any, nbytes: int, remaining: int, epoch: int,
+           created_at: float) -> list:
+    return [obj, nbytes, remaining, epoch, created_at]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,9 +72,16 @@ class BufferRegistry:
         max_slots: int = 256,
         max_bytes: int = 1 << 34,
         clock: Callable[[], float] = time.monotonic,
+        threadsafe: bool = True,
     ):
         self._lock = threading.Lock()
         self._space = threading.Condition(self._lock)
+        #: single-owner mode (``threadsafe=False``): the registry belongs to
+        #: one thread (the virtual-time workflow engine), so ``put``/``get``
+        #: skip the lock/condition protocol entirely.  Blocking flow control
+        #: is meaningless there — the consumer that would free a slot runs on
+        #: the same thread — so a full registry raises instead of waiting.
+        self._threadsafe = threadsafe
         self._entries: Dict[int, _Entry] = {}
         self._next_id = 0
         self._epoch = 0
@@ -98,6 +108,8 @@ class BufferRegistry:
         if n_retrievals < 1:
             raise ValueError("n_retrievals must be >= 1")
         nb = _default_nbytes(obj) if nbytes is None else int(nbytes)
+        if not self._threadsafe:
+            return self._put_unlocked(obj, n_retrievals, nb, block)
         deadline = None if timeout is None else self._clock() + timeout
         with self._space:
             while not self._has_room(nb):
@@ -115,17 +127,39 @@ class BufferRegistry:
                     raise XDTTimeout("put() flow-control wait exceeded timeout")
             buffer_id = self._next_id
             self._next_id += 1
-            self._entries[buffer_id] = _Entry(
-                obj=obj,
-                nbytes=nb,
-                remaining=n_retrievals,
-                epoch=self._epoch,
-                created_at=self._clock(),
-            )
+            self._entries[buffer_id] = [
+                obj, nb, n_retrievals, self._epoch, self._clock(),
+            ]
             self._bytes += nb
             self._high_water = max(self._high_water, self._bytes)
             self._puts += 1
             return buffer_id, self._epoch
+
+    def _put_unlocked(
+        self, obj: Any, n_retrievals: int, nb: int, block: bool
+    ) -> Tuple[int, int]:
+        if not self._has_room(nb):
+            if not block:
+                raise XDTWouldBlock(
+                    f"no buffer slot for {nb}B "
+                    f"({len(self._entries)}/{self._max_slots} slots, "
+                    f"{self._bytes}/{self._max_bytes}B)"
+                )
+            self._blocked_puts += 1
+            raise XDTTimeout(
+                "put() flow control cannot unblock in single-owner mode "
+                "(the consumer that would free a slot runs on this thread)"
+            )
+        buffer_id = self._next_id
+        self._next_id += 1
+        self._entries[buffer_id] = [
+            obj, nb, n_retrievals, self._epoch, self._clock(),
+        ]
+        self._bytes += nb
+        if self._bytes > self._high_water:
+            self._high_water = self._bytes
+        self._puts += 1
+        return buffer_id, self._epoch
 
     def _has_room(self, nb: int) -> bool:
         if len(self._entries) >= self._max_slots:
@@ -140,6 +174,21 @@ class BufferRegistry:
     # ------------------------------------------------------------------ get
     def get(self, buffer_id: int, epoch: int) -> Any:
         """One retrieval.  Decrements the refcount; frees on the Nth pull."""
+        if not self._threadsafe:
+            if epoch != self._epoch:
+                raise XDTProducerGone(
+                    f"producer epoch {epoch} superseded by {self._epoch}"
+                )
+            entry = self._entries.get(buffer_id)
+            if entry is None:
+                raise XDTObjectExhausted(f"buffer {buffer_id} not resident")
+            obj = entry[_E_OBJ]
+            entry[_E_REMAINING] = remaining = entry[_E_REMAINING] - 1
+            self._gets += 1
+            if remaining == 0:
+                self._bytes -= entry[_E_NBYTES]
+                del self._entries[buffer_id]
+            return obj
         with self._space:
             if epoch != self._epoch:
                 raise XDTProducerGone(
@@ -148,21 +197,21 @@ class BufferRegistry:
             entry = self._entries.get(buffer_id)
             if entry is None:
                 raise XDTObjectExhausted(f"buffer {buffer_id} not resident")
-            obj = entry.obj
-            entry.remaining -= 1
+            obj = entry[_E_OBJ]
+            entry[_E_REMAINING] = remaining = entry[_E_REMAINING] - 1
             self._gets += 1
-            if entry.remaining == 0:
+            if remaining == 0:
                 self._release(buffer_id)
             return obj
 
     def peek_remaining(self, buffer_id: int) -> int:
         with self._lock:
             e = self._entries.get(buffer_id)
-            return 0 if e is None else e.remaining
+            return 0 if e is None else e[_E_REMAINING]
 
     def _release(self, buffer_id: int) -> None:
         entry = self._entries.pop(buffer_id)
-        self._bytes -= entry.nbytes
+        self._bytes -= entry[_E_NBYTES]
         self._space.notify_all()
 
     # ----------------------------------------------------- instance lifetime
@@ -190,7 +239,7 @@ class BufferRegistry:
             stale = [
                 bid
                 for bid, e in self._entries.items()
-                if now - e.created_at > age_s
+                if now - e[_E_CREATED] > age_s
             ]
             for bid in stale:
                 self._release(bid)

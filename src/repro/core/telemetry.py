@@ -100,6 +100,18 @@ class DecayRate:
             self._last = t
         self._n += 1.0
 
+    def record_n(self, t: float, n: int) -> None:
+        """``n`` simultaneous events (a batched-arrival bucket): one decay
+        step, one add — identical to ``n`` ``record(t)`` calls at equal
+        ``t``, without the per-event loop."""
+        if self._first is None:
+            self._first = self._last = t
+        dt = t - self._last
+        if dt > 0.0:
+            self._n *= math.exp(-dt / self.tau_s)
+            self._last = t
+        self._n += float(n)
+
     def rate(self, t: float) -> float:
         if self._first is None:
             return 0.0
@@ -202,6 +214,15 @@ class DeploymentTelemetry:
         self.n_arrivals += 1
         self.fast.record(t)
         self.slow.record(t)
+        self.concurrency.sample(t, float(in_flight))
+
+    def record_arrivals(self, t: float, n: int, in_flight: int = 0) -> None:
+        """One quantized same-timestamp bucket of ``n`` arrivals (the trace
+        replay driver's unit of work): equivalent to ``n`` single records
+        at ``t``, amortized to one decay step per window."""
+        self.n_arrivals += n
+        self.fast.record_n(t, n)
+        self.slow.record_n(t, n)
         self.concurrency.sample(t, float(in_flight))
 
     def record_cold_start(self, t: float) -> None:
@@ -337,6 +358,10 @@ class TelemetryHub:
         self.clock = ensure_clock(clock)
         self.media: Dict[str, MediumTelemetry] = {}
         self.deployments: Dict[str, DeploymentTelemetry] = {}
+        #: per-tenant arrival windows, fed by the trace replay driver —
+        #: kept apart from ``deployments`` so a tenant named like a
+        #: function never aliases an autoscaler's window
+        self.tenants: Dict[str, DeploymentTelemetry] = {}
 
     def medium(self, name: str) -> MediumTelemetry:
         tel = self.media.get(name)
@@ -349,6 +374,16 @@ class TelemetryHub:
         if tel is None:
             tel = self.deployments[name] = DeploymentTelemetry(self.clock, **kw)
         return tel
+
+    def tenant(self, name: str, **kw) -> DeploymentTelemetry:
+        tel = self.tenants.get(name)
+        if tel is None:
+            tel = self.tenants[name] = DeploymentTelemetry(self.clock, **kw)
+        return tel
+
+    def tenants_snapshot(self) -> Dict[str, Dict[str, float]]:
+        t = self.clock()
+        return {name: tel.snapshot(t) for name, tel in self.tenants.items()}
 
     def record_transfer(
         self, medium: str, nbytes: int, seconds: float, fee_usd: float = 0.0

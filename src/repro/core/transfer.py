@@ -55,15 +55,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .buffers import BufferRegistry
-from .clock import ensure_clock
+from .buffers import (
+    _E_NBYTES,
+    _E_OBJ,
+    _E_REMAINING,
+    BufferRegistry,
+)
+from .clock import VirtualClock, ensure_clock
 from .cluster import DEFAULT_NET, NetConstants, TransferAccounting
 from .cost import marginal_pull_fee_usd
-from .errors import InlineTooLarge, XDTObjectExhausted
-from .refs import ObjectDescriptor, RefMinter, RefPayload, XDTRef
+from .errors import InlineTooLarge, XDTObjectExhausted, XDTProducerGone
+from .refs import (
+    _NONCE_LEN,
+    ObjectDescriptor,
+    RefMinter,
+    RefPayload,
+    SealedRef,
+    XDTRef,
+)
 from .telemetry import TelemetryHub
 
 Sharding = Any  # jax.sharding.Sharding
+
+_obj_new = object.__new__
 
 
 def _nbytes(x) -> int:
@@ -280,32 +294,80 @@ class _ServiceBackend(TransferBackend):
     exception-safe refcounting."""
 
     durable = True
+    #: this medium's TransferAccounting on the owning engine, bound on first
+    #: op (media_acct only lists media that actually performed storage ops)
+    _macct: Optional[TransferAccounting] = None
 
     def put(self, obj, n_retrievals, nbytes, block, timeout):
-        host = _to_host(obj)
-        key = self.engine.service.put(host, n_retrievals, nbytes)
-        now = self.engine.clock()
+        # Inlined ServiceStore.put + TransferAccounting.store x3: the
+        # through-storage cells of the engine benchmark spend their time in
+        # exactly this op pair, so the store/accounting frames are unrolled
+        # here (semantics identical to the methods they mirror).
+        host = obj if type(obj) is np.ndarray else _to_host(obj)
+        eng = self.engine
+        svc = eng.service
+        svc._next_key = key = svc._next_key + 1
+        svc._objects[key] = host
+        svc._refcount[key] = n_retrievals
+        svc._nbytes[key] = nbytes
+        vs = eng._vsim
+        now = eng.clock() if vs is None else vs.now
         gb = nbytes / 1e9
-        for acct in (self.engine.acct, self.engine._acct_for(self.name)):
+        macct = self._macct
+        if macct is None:
+            macct = self._macct = eng._acct_for(self.name)
+        for acct in (svc.acct, eng.acct, macct):
             acct.n_storage_puts += 1
-            acct.store(now, gb)
+            acct.storage_gb_seconds += acct._resident_gb * (now - acct._last_t)
+            acct._last_t = now
+            resident = acct._resident_gb = acct._resident_gb + gb
+            if resident > acct.peak_resident_gb:
+                acct.peak_resident_gb = resident
         return key, 0
 
     def get(self, payload):
-        service = self.engine.service
-        host = service.fetch(payload.buffer_id)  # raises if gone/exhausted
+        eng = self.engine
+        svc = eng.service
+        key = payload.buffer_id
+        host = svc._objects.get(key)
+        if host is None:
+            raise XDTObjectExhausted(f"service object {key} gone")
         # Materialize BEFORE consuming the retrieval: a corrupt service
         # object must not burn one of the N permitted pulls.  The result
         # stays host-resident; the device copy is lazy (the consumer's first
         # jax op, or an explicit ``sharding=`` on ``TransferEngine.get``).
-        obj = _to_host(host)
-        freed = service.consume(payload.buffer_id)
-        now = self.engine.clock()
+        obj = host if type(host) is np.ndarray else _to_host(host)
+        # inlined ServiceStore.consume + accounting (see put)
+        remaining = svc._refcount[key] = svc._refcount[key] - 1
+        vs = eng._vsim
+        now = eng.clock() if vs is None else vs.now
+        macct = self._macct
+        if macct is None:
+            macct = self._macct = eng._acct_for(self.name)
+        svc.acct.n_storage_gets += 1
+        freed = remaining <= 0
+        if freed:
+            nbytes = svc._nbytes[key]
+            sacct = svc.acct
+            sacct.storage_gb_seconds += (
+                sacct._resident_gb * (now - sacct._last_t)
+            )
+            sacct._last_t = now
+            resident = sacct._resident_gb - nbytes / 1e9
+            sacct._resident_gb = resident if resident > 0.0 else 0.0
+            del svc._objects[key]
+            del svc._refcount[key]
+            del svc._nbytes[key]
         gb = payload.desc.nbytes / 1e9
-        for acct in (self.engine.acct, self.engine._acct_for(self.name)):
+        for acct in (eng.acct, macct):
             acct.n_storage_gets += 1
             if freed:
-                acct.free(now, gb)
+                acct.storage_gb_seconds += (
+                    acct._resident_gb * (now - acct._last_t)
+                )
+                acct._last_t = now
+                resident = acct._resident_gb - gb
+                acct._resident_gb = resident if resident > 0.0 else 0.0
         return obj
 
 
@@ -418,6 +480,7 @@ class TransferEngine:
         service: Optional[ServiceStore] = None,
         clock: Optional[Callable[[], float]] = None,
         telemetry: Union[TelemetryHub, None, bool] = None,
+        wall_timing: bool = False,
     ):
         if backend not in _BACKEND_REGISTRY:
             raise ValueError(
@@ -435,6 +498,9 @@ class TransferEngine:
             net.inline_limit if inline_limit is None else inline_limit
         )
         self.stats = TransferStats()
+        #: wall-clock put/get timing is diagnostic-only and costs two
+        #: ``perf_counter`` calls per op on the hot path; opt in when needed.
+        self._wall_timing = wall_timing
         self.acct = TransferAccounting()
         #: per-medium accounting for through-storage ops, so a mixed-backend
         #: (per-edge routed) run can be priced by each medium's fee structure
@@ -453,6 +519,30 @@ class TransferEngine:
         # so the per-get model/fee evaluation collapses to dict hits
         self._modeled_cache: Dict[Tuple[str, int], float] = {}
         self._fee_cache: Dict[Tuple[str, int, int], float] = {}
+        # (shape, dtype, nbytes, n_retrievals) -> shared ObjectDescriptor:
+        # sweeps reuse a handful of object shapes, so descriptor construction
+        # on the fused put path collapses to a dict hit
+        self._desc_cache: Dict[tuple, ObjectDescriptor] = {}
+        #: fused hot path precondition: the default medium is producer-local
+        #: xdt AND the registry is in single-owner mode — then put/get may
+        #: inline the registry's unlocked bookkeeping (the registry stays the
+        #: owner of the semantics; this is the same code, one frame deep)
+        self._fast_single_owner = (
+            type(self._backend) is XDTBackend and not self.registry._threadsafe
+        )
+        #: fused hot path precondition for through-storage media: the default
+        #: medium is a service backend that did NOT override the shared
+        #: mechanics — put/get may then inline the ServiceStore + accounting
+        #: bookkeeping (same ops, no strategy or describe/mint frames)
+        cls = type(self._backend)
+        self._fast_service = (
+            isinstance(self._backend, _ServiceBackend)
+            and cls.put is _ServiceBackend.put
+            and cls.get is _ServiceBackend.get
+        )
+        #: under a VirtualClock, "read the clock" is one attribute load off
+        #: the simulator — the fused paths skip the ``__call__`` frame
+        self._vsim = self.clock.sim if type(self.clock) is VirtualClock else None
         #: per-medium observed latency/cost/bytes feed — the shared substrate
         #: AdaptiveRoute (and anything else) reads; when set, every ``get``
         #: records the pull's modeled seconds and its marginal fee share
@@ -504,24 +594,137 @@ class TransferEngine:
         (per-edge routing): the chosen medium is sealed inside the ref, so
         ``get`` dispatches to the same medium with no side-channel state.
         """
+        if backend is None and self._fast_single_owner and not self._wall_timing:
+            nb = getattr(obj, "nbytes", None)
+            if nb is not None and n_retrievals >= 1:
+                # fused put: single array -> unlocked registry -> sealed ref,
+                # with no strategy/registry/minter frames in between
+                nbytes = int(nb)
+                reg = self.registry
+                if (
+                    len(reg._entries) < reg._max_slots
+                    and (reg._bytes + nbytes <= reg._max_bytes
+                         or not reg._entries)
+                ):
+                    buffer_id = reg._next_id
+                    reg._next_id = buffer_id + 1
+                    reg._entries[buffer_id] = [
+                        obj, nbytes, n_retrievals, reg._epoch,
+                        vs.now if (vs := self._vsim) is not None
+                        else reg._clock(),
+                    ]
+                    b = reg._bytes = reg._bytes + nbytes
+                    if b > reg._high_water:
+                        reg._high_water = b
+                    reg._puts += 1
+                else:                  # no room: the raising path stays shared
+                    buffer_id, _ = reg._put_unlocked(
+                        obj, n_retrievals, nbytes, block
+                    )
+                dkey = (obj.shape, obj.dtype, nbytes, n_retrievals)
+                desc = self._desc_cache.get(dkey)
+                if desc is None:
+                    desc = self._desc_cache[dkey] = ObjectDescriptor(
+                        shape=tuple(obj.shape),
+                        dtype=_dtype_str(obj.dtype),
+                        nbytes=nbytes,
+                        n_retrievals=n_retrievals,
+                    )
+                m = self.minter
+                m._nonce_counter = nonce = m._nonce_counter + 1
+                # SealedRef via object.__new__ + direct stores: the same four
+                # assignments its __init__ performs, minus the call frame
+                ref = _obj_new(SealedRef)
+                ref._minter = m
+                ref._payload = RefPayload(
+                    self.producer_coords, buffer_id, reg._epoch, desc, "xdt",
+                )
+                ref._nonce = nonce.to_bytes(_NONCE_LEN, "big")
+                ref._sealed = None
+                return ref
+        elif (
+            backend is None and self._fast_service and not self._wall_timing
+        ):
+            nb = getattr(obj, "nbytes", None)
+            if nb is not None and n_retrievals >= 1:
+                # fused through-storage put: inlined ServiceStore.put +
+                # TransferAccounting.store x3 + cached descriptor + sealed
+                # ref, with no strategy/describe/mint frames in between
+                # (semantics identical to _ServiceBackend.put + mint)
+                nbytes = int(nb)
+                host = obj if type(obj) is np.ndarray else _to_host(obj)
+                svc = self.service
+                svc._next_key = bid = svc._next_key + 1
+                svc._objects[bid] = host
+                svc._refcount[bid] = n_retrievals
+                svc._nbytes[bid] = nbytes
+                vs = self._vsim
+                now = self.clock() if vs is None else vs.now
+                gb = nbytes / 1e9
+                b = self._backend
+                macct = b._macct
+                if macct is None:
+                    macct = b._macct = self._acct_for(b.name)
+                a = svc.acct
+                a.n_storage_puts += 1
+                a.storage_gb_seconds += a._resident_gb * (now - a._last_t)
+                a._last_t = now
+                r = a._resident_gb = a._resident_gb + gb
+                if r > a.peak_resident_gb:
+                    a.peak_resident_gb = r
+                a = self.acct
+                a.n_storage_puts += 1
+                a.storage_gb_seconds += a._resident_gb * (now - a._last_t)
+                a._last_t = now
+                r = a._resident_gb = a._resident_gb + gb
+                if r > a.peak_resident_gb:
+                    a.peak_resident_gb = r
+                a = macct
+                a.n_storage_puts += 1
+                a.storage_gb_seconds += a._resident_gb * (now - a._last_t)
+                a._last_t = now
+                r = a._resident_gb = a._resident_gb + gb
+                if r > a.peak_resident_gb:
+                    a.peak_resident_gb = r
+                dkey = (obj.shape, obj.dtype, nbytes, n_retrievals)
+                desc = self._desc_cache.get(dkey)
+                if desc is None:
+                    desc = self._desc_cache[dkey] = ObjectDescriptor(
+                        shape=tuple(obj.shape),
+                        dtype=_dtype_str(obj.dtype),
+                        nbytes=nbytes,
+                        n_retrievals=n_retrievals,
+                    )
+                m = self.minter
+                m._nonce_counter = nonce = m._nonce_counter + 1
+                ref = _obj_new(SealedRef)
+                ref._minter = m
+                ref._payload = RefPayload(
+                    self.producer_coords, bid, 0, desc, self.backend,
+                )
+                ref._nonce = nonce.to_bytes(_NONCE_LEN, "big")
+                ref._sealed = None
+                return ref
         strat = self._backend if backend is None else self._strategy(backend)
         nbytes = _nbytes(obj)
-        t0 = time.perf_counter()
-        buffer_id, epoch = strat.put(obj, n_retrievals, nbytes, block, timeout)
-        self.stats.wall_seconds += time.perf_counter() - t0
+        if self._wall_timing:
+            t0 = time.perf_counter()
+            buffer_id, epoch = strat.put(obj, n_retrievals, nbytes, block, timeout)
+            self.stats.wall_seconds += time.perf_counter() - t0
+        else:
+            buffer_id, epoch = strat.put(obj, n_retrievals, nbytes, block, timeout)
         shape, dtype = _describe(obj)
-        desc = ObjectDescriptor(
-            shape=shape,
-            dtype=dtype,
-            nbytes=nbytes,
-            n_retrievals=n_retrievals,
-        )
         return self.minter.mint(
             RefPayload(
                 producer=self.producer_coords,
                 buffer_id=buffer_id,
                 epoch=epoch,
-                desc=desc,
+                desc=ObjectDescriptor(
+                    shape=shape,
+                    dtype=dtype,
+                    nbytes=nbytes,
+                    n_retrievals=n_retrievals,
+                ),
                 medium=strat.name,
             )
         )
@@ -541,15 +744,138 @@ class TransferEngine:
         shared-memory speed instead of the NIC path.  Durable service media
         ignore the hint — the storage round-trip is node-independent.
         """
-        payload = self.minter.open(ref)  # raises XDTRefInvalid on forgery
+        minter = self.minter
+        if type(ref) is SealedRef and ref._minter is minter:
+            payload = ref._payload     # same-domain fast open (no crypto)
+        else:
+            payload = minter.open(ref)  # raises XDTRefInvalid on forgery
         nbytes = payload.desc.nbytes
         medium = payload.medium or self.backend
+        if (
+            medium == "xdt"
+            and self._fast_single_owner
+            and not local
+            and sharding is None
+            and not self._wall_timing
+        ):
+            # fused get: unlocked registry retrieval + cached latency model,
+            # no strategy dispatch (mirrors BufferRegistry.get exactly)
+            reg = self.registry
+            if payload.epoch != reg._epoch:
+                raise XDTProducerGone(
+                    f"producer epoch {payload.epoch} superseded by {reg._epoch}"
+                )
+            entry = reg._entries.get(payload.buffer_id)
+            if entry is None:
+                raise XDTObjectExhausted(
+                    f"buffer {payload.buffer_id} not resident"
+                )
+            obj = entry[_E_OBJ]
+            entry[_E_REMAINING] = remaining = entry[_E_REMAINING] - 1
+            reg._gets += 1
+            if remaining == 0:
+                reg._bytes -= entry[_E_NBYTES]
+                del reg._entries[payload.buffer_id]
+            stats = self.stats
+            stats.transfers += 1
+            stats.bytes_moved += nbytes
+            key = ("xdt", nbytes)
+            modeled = self._modeled_cache.get(key)
+            if modeled is None:
+                modeled = self._modeled_cache[key] = (
+                    XDTBackend.modeled_seconds(nbytes, self.net)
+                )
+            stats.modeled_seconds += modeled
+            if self.telemetry is not None:
+                n = payload.desc.n_retrievals or 1
+                fkey = ("xdt", nbytes, n)
+                fee = self._fee_cache.get(fkey)
+                if fee is None:
+                    fee = self._fee_cache[fkey] = (
+                        marginal_pull_fee_usd("xdt", nbytes, n)
+                    )
+                self.telemetry.record_transfer("xdt", nbytes, modeled, fee)
+            return obj
+        if (
+            self._fast_service
+            and medium == self.backend
+            and sharding is None
+            and not self._wall_timing
+        ):
+            # fused through-storage get: inlined ServiceStore fetch/consume +
+            # accounting + cached latency model — mirrors _ServiceBackend.get
+            # exactly (service media ignore the co-placement hint: the
+            # storage round-trip is node-independent)
+            svc = self.service
+            bid = payload.buffer_id
+            host = svc._objects.get(bid)
+            if host is None:
+                raise XDTObjectExhausted(f"service object {bid} gone")
+            # materialize BEFORE consuming the retrieval (see backend class)
+            obj = host if type(host) is np.ndarray else _to_host(host)
+            remaining = svc._refcount[bid] = svc._refcount[bid] - 1
+            vs = self._vsim
+            now = self.clock() if vs is None else vs.now
+            b = self._backend
+            macct = b._macct
+            if macct is None:
+                macct = b._macct = self._acct_for(b.name)
+            freed = remaining <= 0
+            a = svc.acct
+            a.n_storage_gets += 1
+            if freed:
+                a.storage_gb_seconds += a._resident_gb * (now - a._last_t)
+                a._last_t = now
+                r = a._resident_gb - svc._nbytes[bid] / 1e9
+                a._resident_gb = r if r > 0.0 else 0.0
+                del svc._objects[bid]
+                del svc._refcount[bid]
+                del svc._nbytes[bid]
+            gb = nbytes / 1e9
+            a = self.acct
+            a.n_storage_gets += 1
+            if freed:
+                a.storage_gb_seconds += a._resident_gb * (now - a._last_t)
+                a._last_t = now
+                r = a._resident_gb - gb
+                a._resident_gb = r if r > 0.0 else 0.0
+            a = macct
+            a.n_storage_gets += 1
+            if freed:
+                a.storage_gb_seconds += a._resident_gb * (now - a._last_t)
+                a._last_t = now
+                r = a._resident_gb - gb
+                a._resident_gb = r if r > 0.0 else 0.0
+            stats = self.stats
+            stats.transfers += 1
+            stats.bytes_moved += nbytes
+            mkey = (medium, nbytes)
+            modeled = self._modeled_cache.get(mkey)
+            if modeled is None:
+                modeled = self._modeled_cache[mkey] = (
+                    b.modeled_seconds(nbytes, self.net)
+                )
+            stats.modeled_seconds += modeled
+            if self.telemetry is not None:
+                n = payload.desc.n_retrievals or 1
+                fkey = (medium, nbytes, n)
+                fee = self._fee_cache.get(fkey)
+                if fee is None:
+                    fee = self._fee_cache[fkey] = (
+                        marginal_pull_fee_usd(medium, nbytes, n)
+                    )
+                self.telemetry.record_transfer(medium, nbytes, modeled, fee)
+            return obj
         strat = (
             self._backend if medium == self.backend else self._strategy(medium)
         )
         local = local and medium in INSTANCE_RESIDENT_MEDIA
-        t0 = time.perf_counter()
-        obj = strat.get(payload)
+        if self._wall_timing:
+            t0 = time.perf_counter()
+            obj = strat.get(payload)
+            self.stats.wall_seconds += time.perf_counter() - t0
+        else:
+            obj = strat.get(payload)
 
         if sharding is not None:
             obj = (
@@ -561,7 +887,6 @@ class TransferEngine:
         stats = self.stats
         stats.transfers += 1
         stats.bytes_moved += nbytes
-        stats.wall_seconds += time.perf_counter() - t0
         key = ("local", nbytes) if local else (medium, nbytes)
         modeled = self._modeled_cache.get(key)
         if modeled is None:

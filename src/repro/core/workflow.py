@@ -61,12 +61,16 @@ from array import array
 from types import GeneratorType
 from typing import Any, Callable, Dict, Generator, List, Optional, Sequence, Tuple
 
+from heapq import heappush as _heappush
+
 from .cluster import Event, Simulator
 from .clock import VirtualClock
 from .errors import InvocationReplayed, XDTError, XDTProducerGone
 from .refs import XDTRef
-from .scheduler import ControlPlane, ScalingPolicy
+from .scheduler import ControlPlane, Deployment, ScalingPolicy
 from .transfer import TransferEngine
+
+_obj_new = object.__new__
 
 
 @dataclasses.dataclass(slots=True)
@@ -164,37 +168,191 @@ class RequestLog:
         return len(self.request_ids)
 
 
-@dataclasses.dataclass(slots=True)
 class WorkflowRequest:
-    """One end-to-end workflow execution tracked by the orchestrator."""
+    """One end-to-end workflow execution tracked by the orchestrator.
 
-    request_id: int
-    entry: str
-    payload: Any
-    submitted_at: float
-    status: str = "pending"           # pending | running | ok | error
-    result: Any = None
-    error: Optional[BaseException] = None
-    started_at: float = 0.0
-    finished_at: float = 0.0
-    attempts: int = 0
-    done: Any = None                  # simulator Event, set on completion
+    Doubles as its own retry-driving state machine (formerly a separate
+    ``_RequestTask`` object): it waits on the entry invocation's handle,
+    re-invokes under fresh invocation ids on :class:`XDTProducerGone`
+    (bounded by ``max_retries``), and settles itself on any other outcome —
+    one allocation per request instead of two.
+    """
+
+    __slots__ = (
+        "request_id", "entry", "payload", "submitted_at", "status", "result",
+        "error", "started_at", "finished_at", "attempts",
+        "_sim", "_done", "_eng", "_retries", "_handle",
+    )
+
+    def __init__(
+        self,
+        request_id: int,
+        entry: str,
+        payload: Any,
+        submitted_at: float,
+        sim: Optional[Simulator] = None,
+    ):
+        self.request_id = request_id
+        self.entry = entry
+        self.payload = payload
+        self.submitted_at = submitted_at
+        self.status = "pending"       # pending | running | ok | error
+        self.result: Any = None
+        self.error: Optional[BaseException] = None
+        self.started_at = 0.0
+        self.finished_at = 0.0
+        self.attempts = 0
+        self._sim = sim
+        self._done: Optional[Event] = None
+        self._eng: Any = None
+        self._retries = 0
+        self._handle: Any = None
 
     @property
     def latency_s(self) -> float:
         return self.finished_at - self.submitted_at
 
+    @property
+    def done(self) -> Event:
+        """Completion Event, materialized lazily: open-loop sweeps that poll
+        the request log never allocate one; closed-loop clients that
+        ``yield req.done`` get the exact old semantics."""
+        d = self._done
+        if d is None:
+            d = self._done = Event(self._sim)
+            if self.status in ("ok", "error"):
+                d.set(self)
+        return d
+
+    def __repr__(self) -> str:
+        return (
+            f"WorkflowRequest(request_id={self.request_id}, "
+            f"entry={self.entry!r}, status={self.status!r}, "
+            f"attempts={self.attempts})"
+        )
+
+    # -- orchestration (the retry loop formerly in _RequestTask) ----------
+    def _start(self, eng: "WorkflowEngine", presteered=None) -> None:
+        self._eng = eng
+        self.status = "running"
+        self.started_at = eng.sim.now
+        self._attempt(presteered)
+
+    def _attempt(self, presteered=None) -> None:
+        eng = self._eng
+        while True:
+            handle = _InvocationTask(eng, self.entry, self.payload,
+                                     None, presteered)
+            presteered = None          # retries re-steer at their own instant
+            self.attempts += 1
+            if not handle.fired:
+                self._handle = handle
+                handle._waiters.append(self)
+                return
+            if not self._settle(handle):
+                return
+
+    def __call__(self) -> None:
+        handle, self._handle = self._handle, None
+        if self._settle(handle):
+            self._attempt()
+
+    def _settle(self, handle: "AsyncResult") -> bool:
+        """Consume one attempt's outcome; True means retry from the entry."""
+        eng = self._eng
+        if handle.error is None:
+            self.status, self.result = "ok", handle.value
+        elif (
+            isinstance(handle.error, XDTProducerGone)
+            and self._retries < eng.max_retries
+        ):
+            # The producer instance is gone; its buffered objects died with
+            # it.  Re-invoking from the entry function regenerates them
+            # (paper §4.2.2) under fresh invocation ids.
+            self._retries += 1
+            return True
+        else:
+            self.status, self.error = "error", handle.error
+        self.finished_at = eng.sim.now
+        eng._inflight_requests -= 1
+        if eng._columnar:
+            eng.request_log.append(
+                self.request_id, self.finished_at - self.submitted_at,
+                self.status == "ok",
+            )
+        d = self._done
+        if d is not None:
+            d.set(self)
+        return False
+
 
 class AsyncResult:
-    """Handle for one concurrent sub-invocation (``ctx.call``)."""
+    """Handle for one concurrent sub-invocation (``ctx.call``).
 
-    __slots__ = ("function", "done", "value", "error")
+    Resolution is intrinsic: the handle keeps its own ``fired`` flag and
+    waiter list (state machines and fan-in counters append themselves
+    directly), so the common await path allocates no :class:`Event` at all.
+    ``done`` stays available for code that wants a real simulator event —
+    it is materialized lazily and kept in sync with the handle.
+    """
+
+    __slots__ = ("function", "sim", "fired", "value", "error", "_waiters",
+                 "_done")
 
     def __init__(self, sim: Simulator, function: str):
         self.function = function
-        self.done = Event(sim)
+        self.sim = sim
+        self.fired = False
         self.value: Any = None
         self.error: Optional[BaseException] = None
+        self._waiters: Optional[list] = []
+        self._done: Optional[Event] = None
+
+    @property
+    def done(self) -> Event:
+        """A real simulator :class:`Event` mirroring this handle (lazy)."""
+        d = self._done
+        if d is None:
+            d = self._done = Event(self.sim)
+            if self.fired:
+                d.set(self)
+        return d
+
+    def _resolve(self) -> None:
+        """Fire the handle: wake direct waiters via the run queue (FIFO, at
+        this virtual instant — exactly the old ``done.set(handle)``)."""
+        self.fired = True
+        waiters = self._waiters
+        self._waiters = None
+        if waiters:
+            ready = self.sim._ready
+            for w in waiters:
+                ready.append(w)
+        if self._done is not None:
+            self._done.set(self)
+
+
+class _FanIn:
+    """Countdown waiter for ``yield [handles]`` fan-in.
+
+    One of these sits on every unresolved handle of the group; each firing
+    runs it as its own run-queue event (matching the per-handle ``dec``
+    events of the ``all_of`` it replaced, so ``events_processed`` and event
+    order are unchanged) and the last one re-queues the owning task — which
+    then executes as a separate event, exactly like the old machine wakeup.
+    """
+
+    __slots__ = ("task", "remaining")
+
+    def __init__(self, task: "_InvocationTask", remaining: int):
+        self.task = task
+        self.remaining = remaining
+
+    def __call__(self) -> None:
+        self.remaining -= 1
+        if self.remaining == 0:
+            task = self.task
+            task.sim._ready.append(task)
 
 
 class Context:
@@ -241,7 +399,7 @@ class Context:
         (``ctx.instance.coords``) to ask the activator to land the callee on
         the caller's node when slots allow — the graph optimizer's
         co-placement pass rides this to make XDT pulls instance-local."""
-        return self._engine._spawn_invocation(fn_name, obj, affinity=affinity)
+        return _InvocationTask(self._engine, fn_name, obj, affinity)
 
     def put(
         self, obj: Any, n_retrievals: int = 1, backend: Optional[str] = None
@@ -278,6 +436,323 @@ class Context:
         return [self.get(r) for r in refs]
 
 
+class _InvocationTask(AsyncResult):
+    """One control-plane-mediated invocation as a callable state machine.
+
+    Replaces the per-invocation generator frame (steer -> cold-start wait ->
+    control-plane hop -> handler -> debt -> record) on the hot path.  It
+    produces the *exact* heap-entry sequence of the generator it replaced —
+    the same pushes, at the same timestamps, taking the same ``seq`` numbers,
+    with the separate wait/ctrl/debt timeouts kept separate (merging them
+    would re-associate the float sums and shift timestamps by ulps) — so
+    fixed-seed per-request latencies are bit-identical while each event costs
+    no generator resume, no Process/Event wrapper, and no StopIteration.
+
+    The task *is* its own :class:`AsyncResult`: ``ctx.call`` returns the task
+    object directly, so an invocation costs one allocation, not a
+    task + handle pair.  Resolution/waiter semantics are inherited unchanged.
+
+    Generator *handlers* still interleave at every yield: the drive loop that
+    used to live in ``WorkflowEngine._drive`` is inlined as phases 3-7.
+    """
+
+    __slots__ = (
+        "eng", "payload", "fn", "svc_time", "invocation_id",
+        "deployment", "instance", "ctx", "t0", "phase", "gen", "send",
+        "throw_", "pending",
+    )
+
+    # phases: what to do when the simulator calls us back
+    # 0 cold-start wait elapsed -> push the ctrl hop
+    # 1 ctrl hop elapsed        -> run the handler
+    # 2 final debt elapsed      -> record + release + resolve the handle
+    # 3 drive-loop debt elapsed -> dispatch the pending yielded value
+    # 4 numeric yield elapsed   -> resume the generator handler
+    # 5 awaited AsyncResult set -> resume with its value/error
+    # 6 awaited fan-in group set-> resume with values/first error
+    # 7 awaited raw Event set   -> resume with its value
+
+    def __init__(self, eng: "WorkflowEngine", fn_name: str, payload: Any,
+                 affinity=None, presteered=None):
+        # intrinsic handle state (AsyncResult fields, inlined — no super())
+        self.function = fn_name
+        sim = self.sim = eng.sim
+        self.fired = False
+        self.value = None
+        self.error = None
+        self._waiters = []
+        self._done = None
+        # task state
+        self.eng = eng
+        self.payload = payload
+        self.gen = None
+        self.send = None
+        self.throw_ = None
+        self.pending = None
+        try:
+            entry = eng._dispatch.get(fn_name)
+            if entry is None:
+                raise KeyError(f"unknown function {fn_name!r}")
+            self.fn, dep, self.svc_time = entry
+            self.deployment = dep
+            eng._invocation_watermark = iid = eng._invocation_watermark + 1
+            self.invocation_id = iid
+            if presteered is not None:   # batch-submitted: already steered
+                self.instance, wait = presteered
+            elif type(dep) is Deployment:
+                # inlined Deployment.steer: one clock read + due-guarded
+                # reap/mature + one pick — bit-identical to dep.steer(),
+                # one frame cheaper per invocation
+                vs = dep._vsim
+                now = dep.clock() if vs is None else vs.now
+                exp = dep._expiry
+                if exp and exp[0][0] < now:
+                    dep._reap_expired(now)
+                warm = dep._warming
+                if warm and warm[0][0] <= now:
+                    dep._mature_warming(now)
+                self.instance, wait = dep._steer_one(now, affinity)
+            else:                        # custom deployment: keep the API
+                self.instance, wait = dep.steer(affinity)
+            self.t0 = sim.now
+            if wait > 0:               # activator buffers across cold start
+                self.phase = 0
+                sim._seq = seq = sim._seq + 1
+                _heappush(sim._heap, (sim.now + wait, seq, self))
+                return
+            ctrl = eng._ctrl_latency   # inlined _push_ctrl (warm common case)
+            if ctrl > 0:
+                self.phase = 1
+                sim._seq = seq = sim._seq + 1
+                _heappush(sim._heap, (sim.now + ctrl, seq, self))
+            else:
+                self._run_handler()
+        except BaseException as e:     # pre-steer failure: nothing to record
+            self.error = e
+            self._resolve()
+
+    def __call__(self) -> None:
+        ph = self.phase                # ordered by observed frequency
+        if ph == 1:
+            self._run_handler()
+        elif ph == 2:
+            self._finish()
+        elif ph == 5:
+            h, self.pending = self.pending, None
+            if h.error is not None:
+                self.throw_ = h.error
+            else:
+                self.send = h.value
+            self._drive_loop()
+        elif ph == 6:
+            hs, self.pending = self.pending, None
+            errs = [h.error for h in hs if h.error is not None]
+            if errs:
+                self.throw_ = errs[0]
+            else:
+                self.send = [h.value for h in hs]
+            self._drive_loop()
+        elif ph == 3:
+            y, self.pending = self.pending, None
+            try:
+                if not self._dispatch_yield(y):
+                    return
+            except BaseException as e:
+                self._fail(e)
+                return
+            self._drive_loop()
+        elif ph == 4:
+            self._drive_loop()
+        elif ph == 0:
+            self._push_ctrl()
+        else:
+            ev, self.pending = self.pending, None
+            self.send = ev.value
+            self._drive_loop()
+
+    def _push_ctrl(self) -> None:
+        ctrl = self.eng._ctrl_latency
+        if ctrl > 0:
+            self.phase = 1
+            sim = self.sim
+            sim._seq = seq = sim._seq + 1
+            _heappush(sim._heap, (sim.now + ctrl, seq, self))
+        else:
+            self._run_handler()
+
+    def _run_handler(self) -> None:
+        eng = self.eng
+        # Context constructed via object.__new__ + direct stores: same five
+        # assignments its __init__ would do, minus the call frame
+        ctx = self.ctx = _obj_new(Context)
+        ctx._engine = eng
+        ctx._debt = 0.0
+        ctx.function = self.function
+        ctx.attempt = 0
+        ctx.instance = self.instance
+        try:
+            out = self.fn(ctx, self.payload)
+        except BaseException as e:
+            self._fail(e)
+            return
+        if type(out) is GeneratorType:
+            self.gen = out
+            self._drive_loop()
+            return
+        self.pending = out
+        debt = ctx._debt + self.svc_time
+        ctx._debt = 0.0
+        if debt > 0:
+            self.phase = 2
+            sim = self.sim
+            sim._seq = seq = sim._seq + 1
+            _heappush(sim._heap, (sim.now + debt, seq, self))
+        else:
+            self._finish()
+
+    def _drive_loop(self) -> None:
+        """Step the generator handler, paying debt at every yield boundary."""
+        gen = self.gen
+        while True:
+            try:
+                if self.throw_ is not None:
+                    t, self.throw_ = self.throw_, None
+                    yielded = gen.throw(t)
+                else:
+                    s, self.send = self.send, None
+                    yielded = gen.send(s)
+            except StopIteration as stop:
+                ctx = self.ctx
+                debt = ctx._debt + self.svc_time
+                ctx._debt = 0.0
+                self.pending = stop.value
+                if debt > 0:
+                    self.phase = 2
+                    sim = self.sim
+                    sim._seq = seq = sim._seq + 1
+                    _heappush(sim._heap, (sim.now + debt, seq, self))
+                else:
+                    self._finish()
+                return
+            except BaseException as e:
+                self._fail(e)
+                return
+            ctx = self.ctx
+            debt = ctx._debt
+            if debt > 0:
+                ctx._debt = 0.0
+                self.pending = yielded
+                self.phase = 3
+                sim = self.sim
+                sim._seq = seq = sim._seq + 1
+                _heappush(sim._heap, (sim.now + debt, seq, self))
+                return
+            try:
+                if not self._dispatch_yield(yielded):
+                    return             # suspended on a heap entry or event
+            except BaseException as e:
+                self._fail(e)
+                return
+
+    def _dispatch_yield(self, yielded) -> bool:
+        """Act on one value yielded by a generator handler.
+
+        Returns True when the drive loop can continue immediately (the
+        awaited event had already fired — the trampoline case of the old
+        ``Simulator._step``), False when this task suspended.
+        """
+        sim = self.sim
+        if isinstance(yielded, AsyncResult):   # most common: await a call
+            if yielded.fired:
+                if yielded.error is not None:
+                    self.throw_ = yielded.error
+                else:
+                    self.send = yielded.value
+                return True
+            self.pending = yielded
+            self.phase = 5
+            yielded._waiters.append(self)
+            return False
+        if isinstance(yielded, (int, float)):
+            v = float(yielded)
+            self.phase = 4
+            sim._seq = seq = sim._seq + 1
+            _heappush(sim._heap, (sim.now + (v if v > 0.0 else 0.0), seq, self))
+            return False
+        if isinstance(yielded, (list, tuple)) and all(
+            isinstance(h, AsyncResult) for h in yielded
+        ):
+            n_pending = 0
+            for h in yielded:
+                if not h.fired:
+                    n_pending += 1
+            if n_pending == 0:
+                errs = [h.error for h in yielded if h.error is not None]
+                if errs:
+                    self.throw_ = errs[0]
+                else:
+                    self.send = [h.value for h in yielded]
+                return True
+            self.pending = yielded
+            self.phase = 6
+            fan = _FanIn(self, n_pending)
+            for h in yielded:
+                if not h.fired:
+                    h._waiters.append(fan)
+            return False
+        if isinstance(yielded, Event):
+            # raw simulator event: lets handlers wait on external completion
+            # signals (e.g. the disaggregated server bridging real decode
+            # completion into virtual time)
+            if yielded.fired:
+                self.send = yielded.value
+                return True
+            self.pending = yielded
+            self.phase = 7
+            yielded._waiters.append(self)
+            return False
+        raise TypeError(
+            f"handler {self.ctx.function!r} yielded {type(yielded).__name__}; "
+            "yield seconds, an AsyncResult, a list of AsyncResults, "
+            "or a simulator Event"
+        )
+
+    def _finish(self) -> None:
+        eng = self.eng
+        self.value, self.pending = self.pending, None
+        t1 = self.sim.now
+        log = eng._ilog
+        if log is not None:
+            # inlined InvocationLog.append for the ok/no-error-code case:
+            # same column order, no method frame or status-string compare
+            log.invocation_ids.append(self.invocation_id)
+            log.functions.append(self.function)
+            log.instance_ids.append(self.instance.instance_id)
+            log.statuses.append(1)
+            log.t_starts.append(self.t0)
+            log.t_ends.append(t1)
+            log.billed_s += t1 - self.t0
+        else:
+            eng._record(
+                self.invocation_id, self.function, self.instance.instance_id,
+                "ok", None, self.t0, t1,
+            )
+        self.deployment.release(self.instance.instance_id)
+        self._resolve()
+
+    def _fail(self, e: BaseException) -> None:
+        """Handler raised after steer: record the error, then surface it."""
+        code = e.code if isinstance(e, XDTError) else None
+        eng = self.eng
+        eng._record(
+            self.invocation_id, self.function, self.instance.instance_id,
+            "error", code, self.t0, self.sim.now,
+        )
+        self.deployment.release(self.instance.instance_id)
+        self.error = e
+        self._resolve()
+
+
 class WorkflowEngine:
     """Executes function DAGs concurrently with at-most-once semantics."""
 
@@ -309,7 +784,8 @@ class WorkflowEngine:
             from .buffers import BufferRegistry
 
             registry = BufferRegistry(
-                max_slots=1 << 20, max_bytes=1 << 40, clock=self.clock
+                max_slots=1 << 20, max_bytes=1 << 40, clock=self.clock,
+                threadsafe=False,
             )
             self.transfer = TransferEngine(
                 backend, registry=registry, clock=self.clock
@@ -321,6 +797,9 @@ class WorkflowEngine:
         self.functions: Dict[str, Callable[[Context, Any], Any]] = {}
         self.service_times: Dict[str, float] = {}
         self._deployments: Dict[str, Any] = {}   # per-function direct dispatch
+        # one-hit dispatch cache: name -> (handler, deployment, service_time)
+        # — the invocation hot path pays one dict probe instead of three
+        self._dispatch: Dict[str, Tuple[Any, Any, float]] = {}
         self.max_retries = max_retries
         # high-watermark at-most-once: ids are issued monotonically; every id
         # <= the watermark is spent and can never be executed again
@@ -337,6 +816,8 @@ class WorkflowEngine:
         # dispatch frame in between (the signatures match by construction)
         if self._columnar:
             self._record = self.records.append
+        # the columnar log, or None: _finish inlines the append when set
+        self._ilog = self.records if self._columnar else None
         # net constants are frozen per engine: cache the control-plane hop
         self._ctrl_latency = self.transfer.net.ctrl_plane_latency
 
@@ -361,27 +842,51 @@ class WorkflowEngine:
         # natural prior (no-op for telemetry-free legacy deployments)
         dep.seed_holding_estimate(service_time)
         self._deployments[name] = dep
+        self._dispatch[name] = (handler, dep, service_time)
 
     # -- orchestrator ------------------------------------------------------------
     def submit(self, entry: str, payload: Any) -> WorkflowRequest:
         """Enqueue one workflow request; drive with ``drain()``/``run()``."""
         if entry not in self.functions:
             raise KeyError(f"unknown function {entry!r}")
-        self._request_counter += 1
-        req = WorkflowRequest(
-            request_id=self._request_counter,
-            entry=entry,
-            payload=payload,
-            submitted_at=self.sim.now,
-            done=Event(self.sim),
-        )
+        self._request_counter = rid = self._request_counter + 1
+        req = WorkflowRequest(rid, entry, payload, self.sim.now, self.sim)
         self._inflight_requests += 1
         if not self._columnar:
             # columnar mode does not retain completed request shells; the
             # outcome lands in `request_log` instead
             self.requests.append(req)
-        self.sim.spawn(self._request_proc(req))
+        req._start(self)
         return req
+
+    def submit_batch(self, entry: str, payloads: Sequence[Any]) -> List[WorkflowRequest]:
+        """Submit many same-entry requests arriving at this virtual instant.
+
+        The batched-arrival kernel behind the trace replay driver: one
+        same-timestamp bucket of arrivals becomes one ``steer_batch`` against
+        the deployment (a single reap/mature pass amortized over the bucket)
+        followed by the per-request state machines.  Equivalent to calling
+        :meth:`submit` once per payload — the per-request heap entries are
+        identical — just cheaper per arrival.
+        """
+        if entry not in self.functions:
+            raise KeyError(f"unknown function {entry!r}")
+        # Batch-steer the whole bucket first: every request in the bucket
+        # would have steered at this same instant anyway (steering happens at
+        # submit time; the entry deployment is untouched in between), so one
+        # reap/mature pass serves all of them and the per-arrival picks are
+        # bit-identical to sequential submits.
+        steers = self._deployments[entry].steer_batch(len(payloads))
+        out = []
+        for payload, presteered in zip(payloads, steers):
+            self._request_counter = rid = self._request_counter + 1
+            req = WorkflowRequest(rid, entry, payload, self.sim.now, self.sim)
+            self._inflight_requests += 1
+            if not self._columnar:
+                self.requests.append(req)
+            req._start(self, presteered)
+            out.append(req)
+        return out
 
     def drain(self) -> List[WorkflowRequest]:
         """Run the simulator until every submitted request completed."""
@@ -402,34 +907,6 @@ class WorkflowEngine:
         if req.status == "error":
             raise req.error
         return req.result
-
-    def _request_proc(self, req: WorkflowRequest) -> Generator:
-        req.status = "running"
-        req.started_at = self.sim.now
-        retries = 0
-        while True:
-            handle = self._spawn_invocation(req.entry, req.payload)
-            req.attempts += 1
-            yield handle.done
-            if handle.error is None:
-                req.status, req.result = "ok", handle.value
-                break
-            if isinstance(handle.error, XDTProducerGone) and retries < self.max_retries:
-                # The producer instance is gone; its buffered objects died
-                # with it.  Re-invoking from the entry function regenerates
-                # them (paper §4.2.2) under fresh invocation ids.
-                retries += 1
-                continue
-            req.status, req.error = "error", handle.error
-            break
-        req.finished_at = self.sim.now
-        self._inflight_requests -= 1
-        if self._columnar:
-            self.request_log.append(
-                req.request_id, req.finished_at - req.submitted_at,
-                req.status == "ok",
-            )
-        req.done.set(req)
 
     # -- execution ---------------------------------------------------------------
     def _next_invocation_id(self) -> int:
@@ -457,106 +934,13 @@ class WorkflowEngine:
         fn_name: str,
         payload: Any,
         affinity: Optional[Tuple[int, ...]] = None,
+        presteered: Optional[Tuple[Any, float]] = None,
     ) -> AsyncResult:
-        """Start one control-plane-mediated invocation as a sim process."""
-        handle = AsyncResult(self.sim, fn_name)
-        self.sim.spawn(self._invocation_proc(handle, fn_name, payload, affinity))
-        return handle
+        """Start one control-plane-mediated invocation (state-machine task).
 
-    def _invocation_proc(
-        self,
-        handle: AsyncResult,
-        fn_name: str,
-        payload: Any,
-        affinity: Optional[Tuple[int, ...]] = None,
-    ) -> Generator:
-        """One control-plane-mediated invocation: steer, pay the cold-start
-        and control-plane timeouts, run the handler, pay its debt, record.
-        (Single generator frame per invocation — this is the hot path.)"""
-        try:
-            fn = self.functions.get(fn_name)
-            if fn is None:
-                raise KeyError(f"unknown function {fn_name!r}")
-            invocation_id = self._next_invocation_id()
-            deployment = self._deployments[fn_name]
-            instance, wait = deployment.steer(affinity)
-            sim = self.sim
-            t0 = sim.now
-            # separate timeouts for the activator's cold-start buffering and
-            # the control-plane hop: merging them would re-associate the
-            # float sums and shift timestamps by ulps vs the legacy engine
-            if wait > 0:                   # activator buffers across cold start
-                yield wait
-            ctrl = self._ctrl_latency
-            if ctrl > 0:
-                yield ctrl
-            ctx = Context(self, fn_name, attempt=0, instance=instance)
-            status, code = "ok", None
-            try:
-                out = fn(ctx, payload)
-                if type(out) is GeneratorType:
-                    out = yield from self._drive(ctx, out)
-                debt = ctx._take_debt() + self.service_times[fn_name]
-                if debt > 0:
-                    yield debt
-                handle.value = out
-            except XDTError as e:
-                status, code = "error", e.code
-                raise
-            except BaseException:
-                status = "error"           # foreign errors: no stable code
-                raise
-            finally:
-                self._record(
-                    invocation_id, fn_name, instance.instance_id,
-                    status, code, t0, sim.now,
-                )
-                deployment.release(instance.instance_id)
-        except BaseException as e:  # captured; surfaced at the waiter
-            handle.error = e
-        handle.done.set(handle)
-
-    def _drive(self, ctx: Context, gen: Generator) -> Generator:
-        """Step a generator handler, paying debt at every yield boundary."""
-        send, throw = None, None
-        while True:
-            try:
-                yielded = gen.throw(throw) if throw is not None else gen.send(send)
-            except StopIteration as stop:
-                return stop.value
-            send, throw = None, None
-            debt = ctx._take_debt()
-            if debt > 0:
-                yield debt
-            if isinstance(yielded, (int, float)):
-                yield float(yielded)
-            elif isinstance(yielded, AsyncResult):
-                yield yielded.done
-                if yielded.error is not None:
-                    throw = yielded.error
-                else:
-                    send = yielded.value
-            elif isinstance(yielded, (list, tuple)) and all(
-                isinstance(h, AsyncResult) for h in yielded
-            ):
-                yield self.sim.all_of([h.done for h in yielded])
-                errs = [h.error for h in yielded if h.error is not None]
-                if errs:
-                    throw = errs[0]
-                else:
-                    send = [h.value for h in yielded]
-            elif isinstance(yielded, Event):
-                # raw simulator event: lets handlers wait on external
-                # completion signals (e.g. the disaggregated server bridging
-                # real decode completion into virtual time)
-                yield yielded
-                send = yielded.value
-            else:
-                raise TypeError(
-                    f"handler {ctx.function!r} yielded {type(yielded).__name__}; "
-                    "yield seconds, an AsyncResult, a list of AsyncResults, "
-                    "or a simulator Event"
-                )
+        The returned handle *is* the task object (an :class:`AsyncResult`
+        subclass) — one allocation per invocation."""
+        return _InvocationTask(self, fn_name, payload, affinity, presteered)
 
     def _invoke_inline(self, fn_name: str, payload: Any, parent: Context) -> Any:
         """Blocking sub-invocation from inside a running handler.

@@ -162,8 +162,7 @@ def test_predictive_prewarms_ahead_of_ramp():
 
 def test_predictive_never_scales_below_current_rate():
     """On falling load the forecast clamps at the current rate: desired
-    stays positive and the keep-alive reaper (not the forecast) scales
-    down."""
+    stays positive, so the proactive trim never empties the fleet."""
     clock = FakeClock()
     d = Deployment(
         "f",
@@ -176,6 +175,70 @@ def test_predictive_never_scales_below_current_rate():
     _drive(d, clock, rate=5.0, seconds=2.0)   # load falls off
     inst, wait = d.steer()                    # still at least one instance
     assert wait == 0.0
+
+
+def test_predictive_prewarm_decays_on_falling_load():
+    """Virtual-time prewarm decay: when a burst subsides, the predictive
+    policy retires its surplus idle instances long before the keep-alive
+    reaper would — the fleet follows the forecast down, keeping only the
+    slack buffer, and every policy trim feeds the telemetry reap window."""
+    clock = FakeClock()
+    d = Deployment(
+        "f",
+        ScalingPolicy(autoscaler=PredictivePolicy(utilization=1.0),
+                      max_instances=256, cold_start_s=0.0,
+                      keep_alive_s=300.0),
+        clock=clock,
+    )
+    d.seed_holding_estimate(0.2)
+    _drive(d, clock, rate=100.0, seconds=2.0)     # burst provisions a fleet
+    peak = d.n_instances
+    assert peak >= 10
+    _drive(d, clock, rate=2.0, seconds=5.0)       # trickle: forecast falls
+    assert d.n_instances < peak // 2              # decayed, not reaped:
+    assert d.stats["scale_downs"] > 0             # keep-alive is 300 s and
+    assert clock.t < 10.0                         # only ~7 s have elapsed
+    # the spill predictor sees policy trims exactly like keep-alive reaps
+    assert d.telemetry.n_reaps == d.stats["scale_downs"]
+
+
+def test_predictive_scale_down_opt_out_keeps_reap_only():
+    """scale_down=False restores the legacy behaviour: inside keep-alive
+    the fleet only ever grows, however far the forecast falls."""
+    clock = FakeClock()
+    d = Deployment(
+        "f",
+        ScalingPolicy(
+            autoscaler=PredictivePolicy(utilization=1.0, scale_down=False),
+            max_instances=256, cold_start_s=0.0, keep_alive_s=300.0,
+        ),
+        clock=clock,
+    )
+    d.seed_holding_estimate(0.2)
+    _drive(d, clock, rate=100.0, seconds=2.0)
+    peak = d.n_instances
+    _drive(d, clock, rate=2.0, seconds=5.0)
+    assert d.n_instances >= peak
+    assert d.stats["scale_downs"] == 0
+
+
+def test_retire_surplus_skips_busy_instances():
+    """Only idle instances are eligible: a busy fleet at peak load never
+    loses an in-flight request to the trim."""
+    clock = FakeClock()
+    d = Deployment(
+        "f",
+        ScalingPolicy(autoscaler=PredictivePolicy(utilization=1.0),
+                      max_instances=64, cold_start_s=0.0,
+                      target_concurrency=4),
+        clock=clock,
+    )
+    d.seed_holding_estimate(0.2)
+    # occupy a few instances and never release them
+    busy = [d.steer()[0] for _ in range(3)]
+    d._retire_surplus(clock(), want=0)
+    alive = set(d.instances)
+    assert {i.instance_id for i in busy} <= alive
 
 
 # ---------------------------------------------------------------------------

@@ -5,9 +5,11 @@ from hypothesis import given, settings, strategies as st
 from repro.core.cost import (
     CostBreakdown,
     WorkflowCostInputs,
+    combine_cost_inputs,
     elasticache_storage_cost,
     lambda_compute_cost,
     s3_storage_cost,
+    tenant_bills,
     workflow_cost,
     xdt_storage_cost,
 )
@@ -95,3 +97,46 @@ def test_breakdown_micro_usd():
     c = CostBreakdown(compute=17e-6, storage=0.0)
     m = c.as_micro_usd()
     assert m["total_uUSD"] == pytest.approx(17.0)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant attribution: linearity of the fee structures
+# ---------------------------------------------------------------------------
+
+
+def test_combine_cost_inputs_sums_every_field():
+    a = WorkflowCostInputs(10, 5.0, 3, 6, 2.0, 0.5)
+    b = WorkflowCostInputs(20, 1.5, 1, 2, 4.0, 1.5)
+    tot = combine_cost_inputs([a, b])
+    assert tot == WorkflowCostInputs(30, 6.5, 4, 8, 6.0, 2.0)
+
+
+@given(
+    rows=st.lists(
+        st.tuples(
+            st.integers(0, 50_000),
+            st.floats(0, 1e4, allow_nan=False),
+            st.integers(0, 50_000),
+            st.integers(0, 50_000),
+            st.floats(0, 1e3, allow_nan=False),
+            st.floats(0, 50, allow_nan=False),
+        ),
+        min_size=1,
+        max_size=8,
+    )
+)
+@settings(max_examples=60, deadline=None)
+def test_tenant_bills_sum_to_combined_bill(rows):
+    """The attribution invariant the multi-tenant benchmark gates on:
+    per-tenant bills under any backend sum exactly (fp tolerance) to the
+    bill of the combined accounting — every fee structure is linear in the
+    inputs once peaks are summed as co-resident worst case."""
+    parts = {
+        f"t{i}": WorkflowCostInputs(*row) for i, row in enumerate(rows)
+    }
+    combined = combine_cost_inputs(parts.values())
+    for backend in ("s3", "elasticache", "xdt", "hybrid"):
+        bills = tenant_bills(parts, backend)
+        assert sum(b.total for b in bills.values()) == pytest.approx(
+            workflow_cost(combined, backend).total, rel=1e-12, abs=1e-15
+        )

@@ -150,6 +150,63 @@ def test_adaptive_respects_latency_budget():
     assert r.resolve(loose, nb, False) == "xdt"
 
 
+def test_adaptive_probe_recovers_mispriced_medium():
+    """The decaying exploration probe: one freak observation must not lock
+    a medium out forever.  A pure-observed router (explore_every=0) never
+    re-tries the loser; the probing router steers occasional traffic back
+    to it, the honest samples wash the freak out of the fee model, and the
+    medium recovers the traffic on its own merits."""
+    nb = 64 << 10
+    honest_ec = transfer_fee_usd("elasticache", nb)      # ~1.3e-6: cheapest
+    honest_s3 = transfer_fee_usd("s3", nb)
+    freak = 4.0 * honest_s3            # one mispriced pull made EC look dear
+
+    def feed(hub, m):
+        fee = honest_ec if m == "elasticache" else honest_s3
+        hub.record_transfer(m, nb, 0.02, fee)
+
+    def run(route, hub, n):
+        picks = []
+        for _ in range(n):
+            m = route.resolve(_edge(handoff="staged", nbytes=nb), nb, True)
+            picks.append(m)
+            feed(hub, m)               # the steered pull feeds the hub
+        return picks
+
+    hub = TelemetryHub()
+    hub.record_transfer("elasticache", nb, 2.0, freak)
+    for _ in range(8):
+        feed(hub, "s3")
+    locked = AdaptiveRoute(telemetry=hub, explore_every=0)
+    assert set(run(locked, hub, 48)) == {"s3"}           # locked out forever
+
+    hub = TelemetryHub()
+    hub.record_transfer("elasticache", nb, 2.0, freak)
+    for _ in range(8):
+        feed(hub, "s3")
+    r = AdaptiveRoute(telemetry=hub, explore_every=4, explore_growth=1.5)
+    picks = run(r, hub, 48)
+    assert "elasticache" in picks                        # a probe re-tried it
+    assert picks[-1] == "elasticache"                    # ...and it won back
+    # with the model recovered, even a probe-free router now agrees
+    again = AdaptiveRoute(telemetry=hub, explore_every=0)
+    assert again.resolve(_edge(handoff="staged", nbytes=nb), nb, True) == \
+        "elasticache"
+
+
+def test_adaptive_probe_never_fires_on_budget_edges():
+    """Learning never risks an SLO: edges with a latency budget always get
+    the scored pick, however skewed the observation counts."""
+    nb = 64 << 10
+    hub = TelemetryHub()
+    hub.record_transfer("elasticache", nb, 2.0, 1.0)     # slow AND dear
+    for _ in range(64):
+        hub.record_transfer("s3", nb, 0.02, transfer_fee_usd("s3", nb))
+    r = AdaptiveRoute(telemetry=hub, explore_every=1, explore_growth=1.0)
+    budgeted = _edge(handoff="staged", nbytes=nb, latency_budget_s=0.1)
+    assert all(r.resolve(budgeted, nb, True) == "s3" for _ in range(32))
+
+
 def test_adaptive_hard_constraints_dominate_scores():
     hub = TelemetryHub()
     nb = 64

@@ -1,0 +1,182 @@
+"""Deployment-sharded simulation: planning, epoch barriers, and the
+differential identity guarantee (sharded == single-shard, byte for byte)."""
+import numpy as np
+import pytest
+
+from repro.core import LoadGenerator, ScalingPolicy, WorkflowEngine
+from repro.core.shard import GroupSpec, ShardPlan, ShardRunner
+
+
+# ---------------------------------------------------------------------------
+# A small self-contained deployment group: fan-out workflow + open-loop load
+# ---------------------------------------------------------------------------
+
+
+def _build_group(engine: WorkflowEngine, spec: GroupSpec):
+    prefix = spec.name
+
+    def worker(ctx, x):
+        ref = ctx.put(np.full((32,), float(x % 5), dtype=np.float32),
+                      n_retrievals=1)
+        return float(ctx.get(ref)[0])
+
+    def driver(ctx, x):
+        a, b = yield [ctx.call(f"{prefix}/worker", x),
+                      ctx.call(f"{prefix}/worker", x + 1)]
+        return a + b
+
+    pol = ScalingPolicy(max_instances=32, target_concurrency=1)
+    engine.register(f"{prefix}/worker", worker, policy=pol,
+                    service_time=0.004)
+    engine.register(f"{prefix}/driver", driver, policy=pol,
+                    service_time=0.002)
+    gen = LoadGenerator(engine, f"{prefix}/driver")
+
+    def drive():
+        gen.schedule_open(rate_rps=40.0, duration_s=2.0)
+
+    return drive
+
+
+def _specs(n=4):
+    return [
+        GroupSpec(name=f"g{i}", build=_build_group, seed=100 + i)
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Planning: connected components of the interaction graph
+# ---------------------------------------------------------------------------
+
+
+def test_plan_isolates_independent_groups():
+    plan = ShardPlan.plan(_specs(4), n_shards=2)
+    assert len(plan.cells) == 4                  # no interactions: 4 cells
+    assert plan.n_shards == 2
+    # round-robin lanes cover every cell exactly once
+    covered = sorted(i for shard in plan.shards for i in shard)
+    assert covered == [0, 1, 2, 3]
+
+
+def test_plan_unions_shared_media_and_calls():
+    specs = [
+        GroupSpec("a", _build_group, shared_media=("redis-0",)),
+        GroupSpec("b", _build_group, shared_media=("redis-0",)),
+        GroupSpec("c", _build_group, calls=("d",)),
+        GroupSpec("d", _build_group),
+        GroupSpec("e", _build_group),
+    ]
+    plan = ShardPlan.plan(specs, n_shards=3)
+    names = sorted(tuple(s.name for s in c.specs) for c in plan.cells)
+    assert names == [("a", "b"), ("c", "d"), ("e",)]
+
+
+def test_plan_rejects_unknown_callee_and_duplicates():
+    with pytest.raises(ValueError, match="unknown group"):
+        ShardPlan.plan([GroupSpec("a", _build_group, calls=("ghost",))])
+    with pytest.raises(ValueError, match="duplicate group names"):
+        ShardPlan.plan([GroupSpec("a", _build_group),
+                        GroupSpec("a", _build_group)])
+
+
+# ---------------------------------------------------------------------------
+# Differential identity: sharding must never change the simulation
+# ---------------------------------------------------------------------------
+
+
+def _merged_bytes(run):
+    log = run.request_log
+    return (log.request_ids.tobytes(), log.latencies_s.tobytes(),
+            log.ok_flags.tobytes())
+
+
+def test_sharded_run_is_byte_identical_to_single_shard():
+    """The tentpole guarantee: merged RequestLog columns and per-medium
+    media_acct totals from a 2+-shard run are byte-identical to the
+    single-shard run of the same plan on fixed seeds."""
+    single = ShardRunner(ShardPlan.plan(_specs(), n_shards=1),
+                         epoch_s=0.5).run(duration_s=2.0)
+    sharded = ShardRunner(ShardPlan.plan(_specs(), n_shards=3),
+                          epoch_s=0.5).run(duration_s=2.0)
+    assert single.n_shards == 1 and sharded.n_shards == 3
+    assert len(single.request_log) > 100
+    assert _merged_bytes(single) == _merged_bytes(sharded)
+    assert single.media_totals == sharded.media_totals
+    assert single.events_processed == sharded.events_processed
+    assert single.billed_s == sharded.billed_s
+    # invocation columns merge deterministically too
+    assert (single.invocation_log.invocation_ids.tobytes()
+            == sharded.invocation_log.invocation_ids.tobytes())
+    assert (single.invocation_log.t_ends.tobytes()
+            == sharded.invocation_log.t_ends.tobytes())
+
+
+def test_epoch_barrier_interleaves_lanes():
+    """Every cell reaches barrier k before any cell enters epoch k+1, and
+    the caller observes each barrier in order."""
+    barriers = []
+    runner = ShardRunner(
+        ShardPlan.plan(_specs(3), n_shards=2), epoch_s=0.25,
+        on_epoch=lambda k, t: barriers.append((k, t)),
+    )
+    run = runner.run(duration_s=1.0)
+    assert barriers == [(0, 0.25), (1, 0.5), (2, 0.75), (3, 1.0)]
+    assert run.epochs == 4
+    assert run.n_cells == 3
+
+
+def test_process_workers_match_inline_lanes():
+    """Forked shard workers produce the same merged bytes as in-process
+    lanes (fork-only: skipped where the start method is unavailable)."""
+    import multiprocessing
+
+    if "fork" not in multiprocessing.get_all_start_methods():
+        pytest.skip("fork start method unavailable")
+    inline = ShardRunner(ShardPlan.plan(_specs(), n_shards=2),
+                         epoch_s=1.0).run(duration_s=2.0)
+    procs = ShardRunner(ShardPlan.plan(_specs(), n_shards=2),
+                        epoch_s=1.0, workers="process").run(duration_s=2.0)
+    assert _merged_bytes(inline) == _merged_bytes(procs)
+    assert inline.media_totals == procs.media_totals
+    assert inline.events_processed == procs.events_processed
+
+
+def test_merge_namespaces_ids_per_cell():
+    from repro.core.shard import ID_STRIDE
+
+    runs = ShardRunner(ShardPlan.plan(_specs(2), n_shards=1),
+                       epoch_s=1.0).run(duration_s=1.0)
+    rids = np.asarray(runs.request_log.request_ids)
+    cells = rids // ID_STRIDE
+    assert set(cells.tolist()) == {0, 1}          # both cells contributed
+    # within a cell, local ids restart at 1
+    assert (rids[cells == 1] % ID_STRIDE).min() == 1
+
+
+def test_interacting_groups_co_simulate():
+    """A cross-group ctx.call edge lands both groups on one engine, so the
+    callee's functions are resolvable from the caller's workflows."""
+    def build_callee(engine, spec):
+        engine.register(f"{spec.name}/leaf", lambda ctx, x: x * 2,
+                        service_time=0.001)
+        return None
+
+    def build_caller(engine, spec):
+        def entry(ctx, x):
+            out = yield ctx.call("callee/leaf", x)
+            return out
+
+        engine.register(f"{spec.name}/entry", entry, service_time=0.001)
+        gen = LoadGenerator(engine, f"{spec.name}/entry")
+        return lambda: gen.schedule_open(rate_rps=20.0, duration_s=1.0)
+
+    specs = [
+        GroupSpec("callee", build_callee),
+        GroupSpec("caller", build_caller, calls=("callee",)),
+    ]
+    plan = ShardPlan.plan(specs, n_shards=2)
+    assert len(plan.cells) == 1
+    run = ShardRunner(plan).run(duration_s=1.0)
+    assert len(run.request_log) > 5
+    assert all(run.request_log.ok_flags)

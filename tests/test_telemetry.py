@@ -132,3 +132,45 @@ def test_hub_create_on_first_use_and_sampling_flag():
     assert "xdt" in hub.media_snapshot()
     dep = hub.deployment("f")
     assert hub.deployment("f") is dep   # cached, clock shared
+
+
+# ---------------------------------------------------------------------------
+# Batched arrivals + tenant namespace
+# ---------------------------------------------------------------------------
+
+
+def test_record_n_matches_n_single_records():
+    a, b = DecayRate(tau_s=2.0), DecayRate(tau_s=2.0)
+    for t, n in [(0.1, 3), (0.4, 1), (0.45, 7), (2.0, 2)]:
+        a.record_n(t, n)
+        for _ in range(n):
+            b.record(t)
+    assert a.rate(3.0) == pytest.approx(b.rate(3.0))
+
+
+def test_record_arrivals_matches_loop_of_record_arrival():
+    batched = DeploymentTelemetry(lambda: 0.0)
+    looped = DeploymentTelemetry(lambda: 0.0)
+    for t, n in [(0.0, 5), (0.5, 2), (0.55, 9)]:
+        batched.record_arrivals(t, n, in_flight=n)
+        for _ in range(n):
+            looped.record_arrival(t, n)
+    sa, sb = batched.snapshot(1.0), looped.snapshot(1.0)
+    assert sa["n_arrivals"] == sb["n_arrivals"] == 16
+    assert sa["arrival_rps"] == pytest.approx(sb["arrival_rps"])
+    assert sa["arrival_slope_rps_per_s"] == pytest.approx(
+        sb["arrival_slope_rps_per_s"]
+    )
+
+
+def test_hub_tenant_namespace_is_separate_from_deployments():
+    hub = TelemetryHub(lambda: 0.0)
+    dep = hub.deployment("acme")
+    ten = hub.tenant("acme")
+    assert dep is not ten
+    assert hub.tenant("acme") is ten           # create-on-first-use cache
+    ten.record_arrivals(0.0, 4)
+    snap = hub.tenants_snapshot()
+    assert snap["acme"]["n_arrivals"] == 4
+    # deployment-side counters untouched by tenant-side records
+    assert hub.deployment("acme").n_arrivals == 0
