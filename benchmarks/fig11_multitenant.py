@@ -75,6 +75,9 @@ REFERENCE = {
     "seed": 2024,
     "n_shards": 4,
     "epoch_s": 2.0,
+    # the reference sweep is big enough to amortize fork + pipe overhead;
+    # results are merged columnar so worker count never changes the numbers
+    "workers": "process",
 }
 #: one point, sized to cross the >=1000 co-resident deployments gate
 #: (128 tenants x 8 deployments) with a mixed shape population
@@ -150,7 +153,10 @@ def _tenant_accounting(cell):
 def run_point(n_tenants: int, shape: str, cfg: dict, quiet: bool = False):
     specs = [tenant_spec(tid, shape, cfg) for tid in range(n_tenants)]
     plan = ShardPlan.plan(specs, n_shards=cfg["n_shards"])
-    runner = ShardRunner(plan, epoch_s=cfg["epoch_s"])
+    runner = ShardRunner(
+        plan, epoch_s=cfg["epoch_s"],
+        workers=cfg.get("workers", "inline"),   # smoke/CI stays inline
+    )
     t0 = time.perf_counter()
     run = runner.run(duration_s=cfg["duration_s"])
     wall = time.perf_counter() - t0

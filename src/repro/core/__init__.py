@@ -28,6 +28,11 @@ Layers
                      spill to durable media; ``dag.optimize()`` returns the
                      rewritten graph plus a PlacementPlan both lowerings
                      honor.
+* :mod:`faults`    — chaos harness: declarative FaultPlans (correlated
+                     evictions, per-medium degradation windows, cold-start
+                     storms) injected on the virtual clock, with SLOGuard
+                     guardrails (bounded retries, availability/p99 budgets,
+                     adaptive-beats-static dominance checks).
 * :mod:`loadgen`   — closed/open-loop request drivers for throughput and
                      tail-latency sweeps under virtual time, plus the
                      trace-driven multi-tenant frontend (synthetic
@@ -90,14 +95,26 @@ from .dagopt import (
     register_pass,
 )
 from .errors import (
+    Evicted,
     InlineTooLarge,
     InvocationReplayed,
+    MediumUnavailable,
+    RetriesExhausted,
     XDTError,
     XDTObjectExhausted,
     XDTProducerGone,
     XDTRefInvalid,
     XDTTimeout,
     XDTWouldBlock,
+)
+from .faults import (
+    DegradedBackend,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    SLOGuard,
+    SLOReport,
+    SLOViolation,
 )
 from .patterns import (
     all_to_all_shard,

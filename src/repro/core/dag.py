@@ -535,6 +535,7 @@ class WorkflowDAG:
         passes: Optional[Sequence[Any]] = None,
         telemetry: Optional[TelemetryHub] = None,
         scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
+        fault_plan: Any = None,
     ) -> Tuple["WorkflowDAG", Any]:
         """Run the graph optimizer; returns (optimized DAG, PlacementPlan).
 
@@ -546,6 +547,10 @@ class WorkflowDAG:
         keep-alive expiry beats the consumer's pull.  Hand the returned
         plan to ``execute_on_cluster(..., plan=plan)`` or
         ``bind(..., plan=plan)``; this DAG itself is never mutated.
+
+        ``fault_plan`` makes the spill pass fault-aware: a plan that
+        *schedules* evictions needs no telemetry prediction — staged
+        instance-resident edges are rewritten durable outright.
         """
         from .dagopt import DEFAULT_PASSES, optimize as _optimize
 
@@ -554,6 +559,7 @@ class WorkflowDAG:
             passes=DEFAULT_PASSES if passes is None else passes,
             telemetry=telemetry,
             scaling=scaling,
+            fault_plan=fault_plan,
         )
 
     # -- engine lowering ---------------------------------------------------
@@ -730,6 +736,9 @@ class ClusterDagRun:
     #: per-stage autoscaled fleets (set when execute_on_cluster ran with an
     #: autoscaler/scaling selection; None models the pre-provisioned fleet)
     control: Optional[ControlPlane] = None
+    #: fault-injection bookkeeping (set when execute_on_cluster ran with a
+    #: non-empty fault_plan): retries / re-routes / injected refusals
+    faults: Optional[Any] = None
 
     @property
     def latency_s(self) -> float:
@@ -773,6 +782,7 @@ def execute_on_cluster(
     autoscaler: Any = None,
     scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
     plan: Any = None,
+    fault_plan: Any = None,
 ) -> ClusterDagRun:
     """Interpret ``dag`` on the calibrated discrete-event cluster.
 
@@ -795,10 +805,22 @@ def execute_on_cluster(
     consumer's instances onto its producer's nodes, and their XDT pulls
     take the shared-memory path (:meth:`ServerlessCluster.local_pull`)
     instead of the producer NIC.  Without a plan nothing changes.
+
+    ``fault_plan`` is a :class:`~repro.core.faults.FaultPlan`: evictions
+    mark nodes dead (a staged instance-resident fetch from a dead node pays
+    a billed producer re-run that re-stages durable), degradation windows
+    inject seeded per-get refusals (bounded re-attempts, then a durable
+    re-route) and stretch pulls by the bandwidth-cut multiplier.  An empty
+    or ``None`` plan changes nothing — the run stays bit-identical.
     """
     n_nodes = sum(s.fan for s in dag.stages)
     cluster = ServerlessCluster(n_nodes, net, seed=seed, deterministic=deterministic)
     sim = cluster.sim
+    faults = None
+    if fault_plan is not None and fault_plan:
+        from .faults import _ClusterFaults
+
+        faults = _ClusterFaults(fault_plan, sim, list(range(n_nodes)))
     bill = Billing(sim)
     marks: Dict[str, float] = {}
     usage: Dict[str, EdgeUsage] = {e.label: EdgeUsage() for e in dag.edges}
@@ -868,6 +890,10 @@ def execute_on_cluster(
             return
         fee = marginal_pull_fee_usd(m, nbytes, retrievals, external)
         secs = modeled_transfer_seconds(m, nbytes, net)
+        if faults is not None:
+            # degraded media are observed degraded, so AdaptiveRoute's
+            # window sees the throttle and can route around it
+            secs *= faults.slowdown_at(m)
         for hub in hubs:
             hub.record_transfer(m, nbytes, secs, fee)
 
@@ -900,6 +926,61 @@ def execute_on_cluster(
             u.n_local += 1
             return cluster.local_pull(src_node, nbytes)
         return cluster.xdt_pull(src_node, nbytes)
+
+    def faulted_staged_fetch(
+        edge: Edge, u: EdgeUsage, m: str, src_node: int, dst_node: int,
+        n_pulls: int,
+    ) -> Generator:
+        """One staged object's fetch under an active fault plan: eviction
+        recovery (billed producer re-run -> durable re-stage), bounded
+        refusal draws inside degradation windows (then a durable re-route),
+        and bandwidth-cut stretch on the winning pull."""
+        nbytes = edge.nbytes
+        if m not in _STORAGE_MEDIA and faults.node_dead(src_node):
+            # correlated eviction took the producer's node: the staged
+            # instance-resident object died with it.  At-least-once (paper
+            # §4.2.2): a billed producer re-run regenerates the object,
+            # re-staged durable this time so the next pull cannot die too.
+            m = faults.durable_for(m)
+            faults.retries += 1
+            faults.rerouted += 1
+            media_seen[edge.label].add(m)
+            tok = bill.start(f"{edge.src}:retry")
+            cs = dag.by_name[edge.src].compute_s
+            if cs > 0:
+                yield sim.timeout(cs)
+            u.n_puts += 1
+            yield cluster.storage_put(m, src_node, nbytes)
+            bill.stop(tok)
+        attempts = 0
+        while attempts < faults.max_attempts and faults.error_draw(m):
+            # refused inside a degradation window: the failed round trip
+            # still costs a control-plane hop, then the consumer retries
+            attempts += 1
+            faults.retries += 1
+            faults.errors_injected += 1
+            yield cluster.invoke_ctrl()
+        if attempts >= faults.max_attempts:
+            # retry budget spent on this medium: durable escape hatch
+            m = faults.durable_for(m)
+            faults.rerouted += 1
+            media_seen[edge.label].add(m)
+            u.n_puts += 1
+            yield cluster.storage_put(m, src_node, nbytes)
+        _observe(m, nbytes, retrievals=n_pulls)
+        u.count(m, nbytes)
+        if m in _STORAGE_MEDIA:
+            u.n_gets += 1
+            yield cluster.storage_get(m, dst_node, nbytes)
+        elif m == "xdt":
+            yield xdt_pull_ev(u, src_node, dst_node, nbytes)
+        else:
+            yield cluster.inline_send(src_node, nbytes)
+        extra = faults.extra_seconds(
+            m, modeled_transfer_seconds(m, nbytes, net)
+        )
+        if extra > 0.0:
+            yield sim.timeout(extra)
 
     def fetch_objects(edge: Edge) -> List[Optional[int]]:
         """Source node per object one consumer instance retrieves, in the
@@ -961,6 +1042,11 @@ def execute_on_cluster(
                     puts = staged_media[edge.label][src_node]
                     m = puts[i if edge.fanout == "broadcast"
                              else j * edge.n_objects + i]
+                    if faults is not None:
+                        evs.append(sim.spawn(faulted_staged_fetch(
+                            edge, u, m, src_node, dst_node, n_pulls
+                        )).done)
+                        continue
                     _observe(m, nbytes, retrievals=n_pulls)
                     u.count(m, nbytes)
                     if m in _STORAGE_MEDIA:
@@ -1089,6 +1175,7 @@ def execute_on_cluster(
     return ClusterDagRun(
         dag=dag, cluster=cluster, bill=bill, marks=marks,
         edge_usage=usage, edge_media=edge_media, control=control,
+        faults=faults,
     )
 
 

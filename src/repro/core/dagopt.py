@@ -55,7 +55,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, ClassVar, Dict, List, Optional, Sequence, Tuple, Type, Union
+from typing import Any, Callable, ClassVar, Dict, List, Optional, Sequence, Tuple, Type, Union
 
 from .dag import Edge, Stage, WorkflowDAG
 from .scheduler import ScalingPolicy
@@ -369,6 +369,7 @@ class PredictiveSpill(GraphPass):
         cold_start_s: float = 0.5,
         durable: str = "s3",
         safety: float = 1.0,
+        fault_plan: Any = None,
     ):
         if durable not in DURABLE_MEDIA:
             raise ValueError(
@@ -379,6 +380,10 @@ class PredictiveSpill(GraphPass):
         self.cold_start_s = cold_start_s
         self.durable = durable
         self.safety = safety
+        #: a :class:`~repro.core.faults.FaultPlan` that *schedules* producer
+        #: death: evictions in the plan are certainties, not predictions, so
+        #: staged instance-resident edges spill without any telemetry feed
+        self.fault_plan = fault_plan
 
     def _feed(self, dag: WorkflowDAG, stage_name: str):
         hub = self.telemetry
@@ -428,7 +433,10 @@ class PredictiveSpill(GraphPass):
 
     def apply(self, dag, plan):
         hub = self.telemetry
-        if hub is None or not hub.deployments:
+        storm = self.fault_plan is not None and bool(
+            getattr(self.fault_plan, "has_evictions", lambda: False)()
+        )
+        if not storm and (hub is None or not hub.deployments):
             plan.notes.append(
                 "spill: no deployment telemetry feed — skipped (spilling is "
                 "never guessed from an empty window)"
@@ -452,6 +460,18 @@ class PredictiveSpill(GraphPass):
                     "routes durable)"
                 )
                 new_edges.append(e)
+                continue
+            if storm:
+                # the fault plan *schedules* producer eviction: certainty,
+                # not prediction — every surviving staged edge goes durable
+                new_edges.append(dataclasses.replace(e, route=self.durable))
+                plan.spilled[e.label] = self.durable
+                plan.notes.append(
+                    f"spill: {e.label!r} -> {self.durable} (fault plan "
+                    "schedules an eviction storm: pay one storage fee, "
+                    "not the producer re-run)"
+                )
+                changed = True
                 continue
             life = self._predicted_lifetime_s(dag, e)
             pull = self._predicted_pull_delay_s(dag, e)
@@ -505,6 +525,7 @@ def optimize(
     passes: Sequence[PassSpec] = DEFAULT_PASSES,
     telemetry: Optional[TelemetryHub] = None,
     scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
+    fault_plan: Any = None,
 ) -> Tuple[WorkflowDAG, PlacementPlan]:
     """Run ``passes`` in order; returns (optimized DAG, placement plan).
 
@@ -529,7 +550,7 @@ def optimize(
             if cls is SyncChainFusion:
                 p = SyncChainFusion(scaling=scaling)
             elif cls is PredictiveSpill:
-                p = PredictiveSpill(telemetry=telemetry)
+                p = PredictiveSpill(telemetry=telemetry, fault_plan=fault_plan)
             else:
                 p = cls()
         dag, plan = p.apply(dag, plan)

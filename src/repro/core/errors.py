@@ -68,3 +68,45 @@ class InvocationReplayed(XDTError):
     """
 
     code = "Provider.InvocationReplayed"
+
+
+class Evicted(XDTProducerGone):
+    """A correlated (node-level) eviction killed the producer instance.
+
+    Subclasses :class:`XDTProducerGone` so the orchestrator's bounded-retry
+    recovery applies unchanged; the distinct code lets handlers and the
+    :class:`~repro.core.faults.SLOGuard` attribute the death to a fault-plan
+    eviction rather than an ordinary keep-alive reap.
+    """
+
+    code = "Fault.Evicted"
+
+
+class MediumUnavailable(XDTError):
+    """A transfer medium refused the operation inside a degradation window
+    (S3 throttle, ElastiCache failover blackout).
+
+    Transient by definition — the orchestrator retries it like a producer
+    death (bounded by ``max_retries``); an adaptive route is expected to
+    shift traffic off the medium before the budget runs out.
+    """
+
+    code = "Fault.MediumUnavailable"
+
+
+class RetriesExhausted(XDTError):
+    """A request spent its whole retry budget on transient errors.
+
+    Terminal: the request lands in the log with status ``"failed"`` (priced
+    for the work actually done) instead of crashing the sweep.  ``cause``
+    holds the last transient error, so SLO guards can discriminate what
+    exhausted the budget.
+    """
+
+    code = "Fault.RetriesExhausted"
+
+    def __init__(self, msg: str = "", cause: "XDTError | None" = None):
+        super().__init__(msg)
+        self.cause = cause
+        if cause is not None:
+            self.__cause__ = cause

@@ -1,0 +1,680 @@
+"""Chaos harness: declarative fault injection with SLO guardrails.
+
+Zipline's core bet — buffering payloads in the *sender's* memory instead of
+durable storage — makes producer death, medium degradation, and eviction
+storms the central correctness risks (paper §5 handles them with staged
+fallbacks).  This module makes adversity a first-class scenario axis:
+
+* :class:`FaultPlan` — a declarative list of :class:`FaultEvent`\\ s scheduled
+  on the substrate's injected virtual clock.  Three kinds:
+
+  - ``"evict"`` — a correlated spot-instance eviction: a whole *node* dies at
+    once (every co-resident instance across every deployment, plus the XDT
+    buffers they held), not one producer.
+  - ``"degrade"`` — a per-medium degradation window: an S3 throttle (error
+    rate + bandwidth cut), an ElastiCache failover blackout
+    (``error_rate=1.0``), degraded xdt bandwidth.  Implemented as a
+    :class:`DegradedBackend` decorator swapped over the registered strategy,
+    so every medium composes unchanged.
+  - ``"storm"`` — a cold-start storm: a temporary ``cold_start_s`` multiplier
+    plus an instance-cap squeeze on every deployment.
+
+* :class:`FaultInjector` — arms a plan on a
+  :class:`~repro.core.workflow.WorkflowEngine` (the ``dag.bind`` /
+  loadgen lowering).  An **empty plan installs nothing**: the engine's fused
+  fast paths and bit-identical results are untouched (the fig12 golden gate).
+
+* :class:`_ClusterFaults` — the same plan interpreted by
+  :func:`~repro.core.dag.execute_on_cluster` (the discrete-event lowering),
+  via ``execute_on_cluster(..., fault_plan=plan)``.
+
+* :class:`SLOGuard` — per-run guardrails: bounded-retry completion (failures
+  surface as recorded terminal statuses, never crashes), an availability /
+  p99 budget, and the dominance check that adaptive policies beat static
+  ones under the *same seeded* fault plan.
+
+Determinism: every stochastic choice (which node an eviction takes, each
+error-rate draw) comes from ``random.Random(plan.seed)`` consumed in virtual
+event order, so a (plan, workload, seed) triple replays bit-identically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import random
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .errors import Evicted, MediumUnavailable, XDTError, XDTProducerGone
+from .transfer import TransferBackend, available_backends
+
+__all__ = [
+    "FaultEvent",
+    "FaultPlan",
+    "DegradedBackend",
+    "FaultInjector",
+    "SLOGuard",
+    "SLOReport",
+    "SLOViolation",
+]
+
+
+# ---------------------------------------------------------------------------
+# The declarative plan
+# ---------------------------------------------------------------------------
+
+
+_KINDS = ("evict", "degrade", "storm")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled adversity on the virtual clock.
+
+    ``kind`` selects which fields matter:
+
+    * ``"evict"`` — at ``at_s``, kill every instance on one node.  ``node``
+      pins the victim (an int node index on the cluster lowering, placement
+      coords on the engine lowering); ``None`` picks one from the live set
+      with the plan's seeded RNG.  Instantaneous — ``duration_s`` unused.
+    * ``"degrade"`` — ``[at_s, at_s + duration_s)`` window on ``medium``:
+      each get fails with probability ``error_rate`` (a seeded draw raising
+      :class:`~repro.core.errors.MediumUnavailable`) and modeled transfer
+      seconds are multiplied by ``slowdown`` (the bandwidth cut).
+    * ``"storm"`` — ``[at_s, at_s + duration_s)`` cold-start storm: every
+      deployment's ``cold_start_s`` is multiplied by
+      ``cold_start_multiplier`` and ``max_instances`` clamped to
+      ``max_instances_cap`` (when set), then restored.
+    """
+
+    kind: str
+    at_s: float
+    duration_s: float = 0.0
+    medium: Optional[str] = None
+    node: Any = None
+    slowdown: float = 1.0
+    error_rate: float = 0.0
+    cold_start_multiplier: float = 1.0
+    max_instances_cap: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}, got {self.kind!r}")
+        if self.at_s < 0.0 or self.duration_s < 0.0:
+            raise ValueError("at_s and duration_s must be >= 0")
+        if self.kind == "degrade":
+            if self.medium is None:
+                raise ValueError("degrade events need a medium")
+            if self.medium not in available_backends():
+                raise ValueError(
+                    f"medium must be one of {available_backends()}, "
+                    f"got {self.medium!r}"
+                )
+            if not 0.0 <= self.error_rate <= 1.0:
+                raise ValueError("error_rate must be in [0, 1]")
+            if self.slowdown < 1.0:
+                raise ValueError("slowdown is a multiplier >= 1.0")
+            if self.duration_s <= 0.0:
+                raise ValueError("degrade windows need duration_s > 0")
+        if self.kind == "storm":
+            if self.cold_start_multiplier < 1.0:
+                raise ValueError("cold_start_multiplier must be >= 1.0")
+            if self.duration_s <= 0.0:
+                raise ValueError("storm windows need duration_s > 0")
+
+    @property
+    def end_s(self) -> float:
+        return self.at_s + self.duration_s
+
+
+class FaultPlan:
+    """An ordered, seeded set of :class:`FaultEvent`\\ s.
+
+    Falsy when empty — injectors treat an empty plan as "install nothing",
+    which is what keeps no-fault runs bit-identical to a harness-free build.
+    """
+
+    def __init__(self, events: Sequence[FaultEvent] = (), seed: int = 0):
+        self.events: Tuple[FaultEvent, ...] = tuple(
+            sorted(events, key=lambda e: e.at_s)
+        )
+        self.seed = seed
+
+    def __bool__(self) -> bool:
+        return bool(self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def __repr__(self) -> str:
+        kinds = ", ".join(e.kind for e in self.events)
+        return f"FaultPlan([{kinds}], seed={self.seed})"
+
+    def rng(self) -> random.Random:
+        """A fresh seeded RNG — one per run, so replays are bit-identical."""
+        return random.Random(self.seed)
+
+    # -- queries ----------------------------------------------------------
+    def evictions(self) -> List[FaultEvent]:
+        return [e for e in self.events if e.kind == "evict"]
+
+    def has_evictions(self) -> bool:
+        return any(e.kind == "evict" for e in self.events)
+
+    def slowdown_at(self, medium: str, t: float) -> float:
+        """The worst bandwidth-cut multiplier active on ``medium`` at ``t``."""
+        worst = 1.0
+        for e in self.events:
+            if (
+                e.kind == "degrade" and e.medium == medium
+                and e.at_s <= t < e.end_s and e.slowdown > worst
+            ):
+                worst = e.slowdown
+        return worst
+
+    def error_rate_at(self, medium: str, t: float) -> float:
+        """The worst refusal probability active on ``medium`` at ``t``."""
+        worst = 0.0
+        for e in self.events:
+            if (
+                e.kind == "degrade" and e.medium == medium
+                and e.at_s <= t < e.end_s and e.error_rate > worst
+            ):
+                worst = e.error_rate
+        return worst
+
+    # -- scenario builders (the fig12 axis) -------------------------------
+    @classmethod
+    def eviction_storm(
+        cls, at_s: float = 0.5, n_evictions: int = 1,
+        spacing_s: float = 0.25, seed: int = 0,
+    ) -> "FaultPlan":
+        """Correlated spot reclamations: ``n_evictions`` whole-node kills,
+        ``spacing_s`` apart, victims drawn with the plan RNG."""
+        return cls(
+            [
+                FaultEvent("evict", at_s=at_s + i * spacing_s)
+                for i in range(n_evictions)
+            ],
+            seed=seed,
+        )
+
+    @classmethod
+    def medium_throttle(
+        cls, medium: str = "s3", at_s: float = 0.2, duration_s: float = 30.0,
+        slowdown: float = 4.0, error_rate: float = 0.3, seed: int = 0,
+    ) -> "FaultPlan":
+        """An S3-style throttle window: partial refusals + a bandwidth cut."""
+        return cls(
+            [FaultEvent(
+                "degrade", at_s=at_s, duration_s=duration_s, medium=medium,
+                slowdown=slowdown, error_rate=error_rate,
+            )],
+            seed=seed,
+        )
+
+    @classmethod
+    def medium_blackout(
+        cls, medium: str = "elasticache", at_s: float = 0.2,
+        duration_s: float = 30.0, seed: int = 0,
+    ) -> "FaultPlan":
+        """A failover blackout: every get on ``medium`` refused in-window."""
+        return cls(
+            [FaultEvent(
+                "degrade", at_s=at_s, duration_s=duration_s, medium=medium,
+                error_rate=1.0,
+            )],
+            seed=seed,
+        )
+
+    @classmethod
+    def cold_start_storm(
+        cls, at_s: float = 0.2, duration_s: float = 30.0,
+        multiplier: float = 8.0, max_instances_cap: Optional[int] = None,
+        seed: int = 0,
+    ) -> "FaultPlan":
+        """Boot latency spikes + an instance-cap squeeze on every fleet."""
+        return cls(
+            [FaultEvent(
+                "storm", at_s=at_s, duration_s=duration_s,
+                cold_start_multiplier=multiplier,
+                max_instances_cap=max_instances_cap,
+            )],
+            seed=seed,
+        )
+
+
+# ---------------------------------------------------------------------------
+# The TransferBackend decorator (degradation windows)
+# ---------------------------------------------------------------------------
+
+
+class DegradedBackend(TransferBackend):
+    """Decorator over any registered medium strategy for one degradation
+    window: gets fail with probability ``error_rate`` (a seeded draw raising
+    :class:`~repro.core.errors.MediumUnavailable`); everything else —
+    puts, producer-death propagation, the latency model — delegates to the
+    wrapped strategy, so new media registered via
+    :func:`~repro.core.transfer.register_backend` compose unchanged.
+
+    The bandwidth-cut half of a window lives in
+    :meth:`TransferEngine.degrade_medium` (the modeled-seconds multiplier),
+    not here: injection failures are per-*operation*, slowdowns are
+    per-*model*, and splitting them keeps the engine's modeled cache clean.
+    """
+
+    def __init__(
+        self,
+        inner: TransferBackend,
+        error_rate: float = 0.0,
+        rng: Optional[random.Random] = None,
+    ):
+        self.inner = inner
+        self.engine = inner.engine
+        self.name = inner.name              # shadow the ClassVars: the
+        self.durable = inner.durable        # wrapper *is* the medium
+        self.error_rate = error_rate
+        self._rng = rng if rng is not None else random.Random(0)
+
+    def put(self, obj, n_retrievals, nbytes, block, timeout):
+        return self.inner.put(obj, n_retrievals, nbytes, block, timeout)
+
+    def get(self, payload):
+        if self.error_rate > 0.0 and self._rng.random() < self.error_rate:
+            raise MediumUnavailable(
+                f"{self.name}: injected refusal (degradation window, "
+                f"error_rate={self.error_rate})"
+            )
+        return self.inner.get(payload)
+
+    def on_producer_death(self) -> None:
+        self.inner.on_producer_death()
+
+    def modeled_seconds(self, nbytes, net):  # instance method shadows the
+        return self.inner.modeled_seconds(nbytes, net)  # inner's classmethod
+
+
+# ---------------------------------------------------------------------------
+# Engine-lowering injector (dag.bind / loadgen / raw WorkflowEngine)
+# ---------------------------------------------------------------------------
+
+
+class FaultInjector:
+    """Arms a :class:`FaultPlan` on a :class:`~repro.core.workflow.WorkflowEngine`.
+
+    ``install()`` with an **empty plan is a no-op** — no fast path is
+    suspended, no hook set, no event scheduled; the engine's results stay
+    bit-identical to a run without the harness.  A non-empty plan:
+
+    * suspends the transfer engine's fused fast paths (every get then flows
+      through the strategy dispatch, where the degradation decorator and the
+      penalty hook live) and sets ``_fault_penalty``;
+    * schedules each event's open/close callbacks on the virtual clock via
+      ``sim.schedule_abs``;
+    * records every injection on the telemetry hub's fault timeline
+      (``hub.record_fault``) when the engine has one.
+
+    The penalty hook does double duty: it reclassifies a post-eviction
+    :class:`~repro.core.errors.XDTProducerGone` as
+    :class:`~repro.core.errors.Evicted` (same retry machinery, attributable
+    cause), and it feeds a pessimistic latency sample for the failing medium
+    into the telemetry hub so a budget-constrained
+    :class:`~repro.core.dag.AdaptiveRoute` leaves the medium within its
+    observation window — the route-*around*, not merely survive, behavior
+    fig12 gates on.
+    """
+
+    #: penalty sample fed per injected failure: the medium's base modeled
+    #: seconds times this, plus a floor — far past any sane latency budget
+    PENALTY_FACTOR = 8.0
+    PENALTY_FLOOR_S = 0.05
+
+    def __init__(self, engine: Any, plan: FaultPlan):
+        self.engine = engine
+        self.plan = plan
+        self.installed = False
+        self._rng = plan.rng()
+        self._saved_fast: Optional[Tuple[bool, bool]] = None
+        self._wrapped: Dict[str, TransferBackend] = {}
+        self._saved_policies: Dict[str, Tuple[float, int]] = {}
+        self._evicted = False
+        self.n_evicted_instances = 0
+        self.n_evicted_buffers = 0
+
+    # -- lifecycle --------------------------------------------------------
+    def install(self) -> "FaultInjector":
+        if not self.plan or self.installed:
+            return self
+        eng = self.engine
+        sim = eng.sim
+        self._saved_fast = eng.transfer.suspend_fast_paths()
+        eng.transfer._fault_penalty = self._penalty
+        for ev in self.plan:
+            if ev.kind == "evict":
+                sim.schedule_abs(ev.at_s, lambda e=ev: self._evict(e))
+            elif ev.kind == "degrade":
+                sim.schedule_abs(ev.at_s, lambda e=ev: self._open_window(e))
+                sim.schedule_abs(ev.end_s, lambda e=ev: self._close_window(e))
+            else:  # storm
+                sim.schedule_abs(ev.at_s, lambda e=ev: self._open_storm(e))
+                sim.schedule_abs(ev.end_s, lambda e=ev: self._close_storm(e))
+        self.installed = True
+        return self
+
+    def uninstall(self) -> None:
+        """Restore the engine exactly (fast paths, strategies, policies)."""
+        if not self.installed:
+            return
+        eng = self.engine
+        for medium, inner in list(self._wrapped.items()):
+            eng.transfer.unwrap_medium(medium, inner)
+        self._wrapped.clear()
+        eng.transfer.clear_degraded()
+        if self._saved_policies:
+            self._restore_policies()
+        eng.transfer._fault_penalty = None
+        if self._saved_fast is not None:
+            eng.transfer.resume_fast_paths(self._saved_fast)
+        self.installed = False
+
+    # -- event callbacks --------------------------------------------------
+    def _record(self, kind: str, detail: str) -> None:
+        hub = self.engine.transfer.telemetry
+        if hub is not None:
+            hub.record_fault(kind, detail)
+
+    def _evict(self, ev: FaultEvent) -> None:
+        eng = self.engine
+        coords = ev.node
+        if coords is None:
+            live = eng.control.node_coords()
+            coords = self._rng.choice(live) if live else None
+        killed = eng.control.kill_node(coords) if coords is not None else 0
+        # the node's XDT buffers die with it: in the single-shared-registry
+        # model every instance-resident object is producer-side state
+        buffers = eng.transfer.kill_producer()
+        self._evicted = True
+        self.n_evicted_instances += killed
+        self.n_evicted_buffers += buffers
+        self._record(
+            "evict", f"node={coords} instances={killed} buffers={buffers}"
+        )
+
+    def _open_window(self, ev: FaultEvent) -> None:
+        t = self.engine.transfer
+        if ev.medium not in self._wrapped:  # overlapping windows: first wins
+            self._wrapped[ev.medium] = t.wrap_medium(
+                ev.medium,
+                lambda inner: DegradedBackend(
+                    inner, error_rate=ev.error_rate, rng=self._rng
+                ),
+            )
+        if ev.slowdown > 1.0:
+            t.degrade_medium(ev.medium, ev.slowdown)
+        self._record(
+            "degrade_open",
+            f"{ev.medium} error_rate={ev.error_rate} slowdown={ev.slowdown}",
+        )
+
+    def _close_window(self, ev: FaultEvent) -> None:
+        t = self.engine.transfer
+        inner = self._wrapped.pop(ev.medium, None)
+        if inner is not None:
+            t.unwrap_medium(ev.medium, inner)
+        t.clear_degraded(ev.medium)
+        self._record("degrade_close", ev.medium)
+
+    def _open_storm(self, ev: FaultEvent) -> None:
+        for name, dep in self.engine.control.deployments.items():
+            pol = dep.policy
+            if name not in self._saved_policies:  # overlap: first wins
+                self._saved_policies[name] = (
+                    pol.cold_start_s, pol.max_instances
+                )
+            pol.cold_start_s *= ev.cold_start_multiplier
+            if ev.max_instances_cap is not None:
+                pol.max_instances = min(
+                    pol.max_instances, ev.max_instances_cap
+                )
+        self._record(
+            "storm_open",
+            f"x{ev.cold_start_multiplier} cap={ev.max_instances_cap}",
+        )
+
+    def _close_storm(self, ev: FaultEvent) -> None:
+        self._restore_policies()
+        self._record("storm_close", "")
+
+    def _restore_policies(self) -> None:
+        for name, (cold, cap) in self._saved_policies.items():
+            dep = self.engine.control.deployments.get(name)
+            if dep is not None:
+                dep.policy.cold_start_s = cold
+                dep.policy.max_instances = cap
+        self._saved_policies.clear()
+
+    # -- the transfer-engine penalty hook ---------------------------------
+    def _penalty(
+        self, medium: str, nbytes: int, exc: XDTError
+    ) -> Optional[XDTError]:
+        hub = self.engine.transfer.telemetry
+        if hub is not None:
+            t = self.engine.transfer
+            base = t._strategy(medium).modeled_seconds(nbytes, t.net)
+            hub.record_transfer(
+                medium, nbytes,
+                base * self.PENALTY_FACTOR + self.PENALTY_FLOOR_S, 0.0,
+            )
+        if self._evicted and type(exc) is XDTProducerGone:
+            return Evicted(str(exc))
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Cluster-lowering adapter (execute_on_cluster)
+# ---------------------------------------------------------------------------
+
+
+class _ClusterFaults:
+    """The same :class:`FaultPlan` interpreted by the discrete-event cluster
+    lowering (:func:`~repro.core.dag.execute_on_cluster`).
+
+    There is no live scheduler there — stages run on pre-assigned node
+    indices — so the adapter models the *consequences* directly on staged
+    fetches:
+
+    * an evicted node's instance-resident objects are gone: the consumer's
+      fetch pays a billed producer re-run (at-least-once, paper §4.2.2) that
+      re-stages onto a durable medium, and the retry is counted;
+    * inside a degradation window, each get on the medium draws against the
+      error rate; after ``max_attempts`` refused draws the fetch re-routes
+      to a durable medium (one extra put + the retries counted);
+    * bandwidth cuts stretch the pull by the slowdown multiplier and are
+      fed into the run-local telemetry hubs so AdaptiveRoute sees them.
+    """
+
+    #: refused draws tolerated per fetch before re-routing durable —
+    #: mirrors the engine's default ``max_retries``
+    max_attempts = 2
+
+    def __init__(self, plan: FaultPlan, sim: Any, all_nodes: Sequence[int]):
+        self.plan = plan
+        self.sim = sim
+        self.retries = 0
+        self.rerouted = 0
+        self.errors_injected = 0
+        self.evicted_nodes: set = set()
+        self._rng = plan.rng()
+        pickable = list(all_nodes)
+        for ev in plan.evictions():
+            node = ev.node
+            if node is None:
+                node = self._rng.choice(pickable) if pickable else None
+            if node is not None:
+                sim.schedule_abs(
+                    ev.at_s, lambda n=node: self.evicted_nodes.add(n)
+                )
+
+    def node_dead(self, node: int) -> bool:
+        return node in self.evicted_nodes
+
+    def slowdown_at(self, medium: str) -> float:
+        return self.plan.slowdown_at(medium, self.sim.now)
+
+    def extra_seconds(self, medium: str, base_s: float) -> float:
+        """Added pull latency from any active bandwidth cut."""
+        s = self.plan.slowdown_at(medium, self.sim.now)
+        return base_s * (s - 1.0) if s > 1.0 else 0.0
+
+    def error_draw(self, medium: str) -> bool:
+        rate = self.plan.error_rate_at(medium, self.sim.now)
+        return rate > 0.0 and self._rng.random() < rate
+
+    def durable_for(self, medium: str) -> str:
+        """The durable escape hatch when ``medium`` is failing."""
+        return "elasticache" if medium == "s3" else "s3"
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "retries": self.retries,
+            "rerouted": self.rerouted,
+            "errors_injected": self.errors_injected,
+            "evicted_nodes": sorted(self.evicted_nodes),
+        }
+
+
+# ---------------------------------------------------------------------------
+# SLO guardrails
+# ---------------------------------------------------------------------------
+
+
+class SLOViolation(RuntimeError):
+    """An SLO guardrail failed (raise, not assert: survives ``python -O``)."""
+
+
+@dataclasses.dataclass
+class SLOReport:
+    """One run's guardrail verdict."""
+
+    label: str
+    n_requests: int
+    n_ok: int
+    n_failed: int
+    n_error: int
+    availability: float
+    p99_s: float
+    retry_total: int
+    retry_max: int
+    violations: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def _p99(latencies: Sequence[float]) -> float:
+    if not latencies:
+        return 0.0
+    xs = sorted(latencies)
+    return xs[min(len(xs) - 1, int(math.ceil(0.99 * len(xs))) - 1)]
+
+
+class SLOGuard:
+    """Per-run SLO guardrails over a :class:`~repro.core.workflow.WorkflowEngine`.
+
+    Asserts (via :meth:`assert_ok`) that:
+
+    * **bounded-retry completion** — no request retried past the engine's
+      ``max_retries``, and every submitted request reached a *recorded*
+      terminal status (``ok`` / ``error`` / ``failed``) instead of crashing
+      the sweep;
+    * **availability** — the ok fraction meets ``availability_min``;
+    * **p99 latency** — end-to-end p99 stays under ``p99_budget_s``.
+
+    :meth:`require_dominates` is the headline adaptive-beats-static check:
+    under the same seeded fault plan, the adaptive cell must be no worse
+    than the static cell on every compared metric.
+    """
+
+    def __init__(
+        self,
+        availability_min: float = 1.0,
+        p99_budget_s: float = math.inf,
+    ):
+        if not 0.0 <= availability_min <= 1.0:
+            raise ValueError("availability_min must be in [0, 1]")
+        self.availability_min = availability_min
+        self.p99_budget_s = p99_budget_s
+
+    def check(self, engine: Any, label: str = "run") -> SLOReport:
+        if getattr(engine, "_columnar", False):
+            log = engine.request_log
+            n = len(log)
+            n_ok = sum(log.ok_flags)
+            latencies = list(log.latencies_s)
+        else:
+            done = [
+                r for r in engine.requests
+                if r.status in ("ok", "error", "failed")
+            ]
+            n = len(done)
+            n_ok = sum(1 for r in done if r.status == "ok")
+            latencies = [r.latency_s for r in done]
+        n_failed = engine.failed_requests
+        n_error = n - n_ok - n_failed
+        availability = n_ok / n if n else 1.0
+        p99 = _p99(latencies)
+        violations: List[str] = []
+        if engine.retry_max > engine.max_retries:
+            violations.append(
+                f"{label}: a request retried {engine.retry_max}x, past "
+                f"max_retries={engine.max_retries} (unbounded retry)"
+            )
+        if engine._inflight_requests:
+            violations.append(
+                f"{label}: {engine._inflight_requests} request(s) never "
+                "reached a terminal status"
+            )
+        if availability < self.availability_min:
+            violations.append(
+                f"{label}: availability {availability:.4f} < "
+                f"budget {self.availability_min:.4f}"
+            )
+        if p99 > self.p99_budget_s:
+            violations.append(
+                f"{label}: p99 {p99:.4f}s > budget {self.p99_budget_s:.4f}s"
+            )
+        return SLOReport(
+            label=label, n_requests=n, n_ok=n_ok, n_failed=n_failed,
+            n_error=n_error, availability=availability, p99_s=p99,
+            retry_total=engine.retry_total, retry_max=engine.retry_max,
+            violations=violations,
+        )
+
+    def assert_ok(self, engine: Any, label: str = "run") -> SLOReport:
+        report = self.check(engine, label)
+        if report.violations:
+            raise SLOViolation("; ".join(report.violations))
+        return report
+
+    @staticmethod
+    def require_dominates(
+        adaptive: Dict[str, float],
+        static: Dict[str, float],
+        keys: Sequence[str] = ("cost_usd", "p99_s"),
+        tol: float = 1 + 1e-9,
+        label: str = "",
+    ) -> None:
+        """The headline gate: adaptive must be <= static on every key
+        (equality legal — under some faults the best route IS the static
+        one; the tolerance only absorbs float noise)."""
+        for k in keys:
+            a, s = adaptive[k], static[k]
+            if a > s * tol:
+                raise SLOViolation(
+                    f"{label + ': ' if label else ''}adaptive {k}={a:.6g} > "
+                    f"static {k}={s:.6g} — adaptive policies must never lose "
+                    "under the same seeded fault plan"
+                )

@@ -271,7 +271,7 @@ class LoadGenerator:
         if self._collect_objects:
             reqs = self._requests
             self._requests = []
-            done = [r for r in reqs if r.status in ("ok", "error")]
+            done = [r for r in reqs if r.status in ("ok", "error", "failed")]
             lat = [r.latency_s for r in done]
             n_ok = sum(1 for r in done if r.status == "ok")
             return lat, n_ok

@@ -788,6 +788,24 @@ class Deployment:
         self.in_flight_total -= inst.in_flight
         return True
 
+    def instances_at(self, coords: Tuple[int, ...]) -> List[int]:
+        """Live instance ids placed at ``coords`` (a node, in the default
+        placement model)."""
+        return list(self._coords_index.get(coords, ()))
+
+    def kill_node(self, coords: Tuple[int, ...]) -> int:
+        """Correlated eviction: every instance at ``coords`` dies at once.
+
+        The spot-market failure mode — reclamation takes the *node*, not one
+        instance — so all co-resident instances (and, at the transfer layer,
+        every XDT buffer they held) go together.  Returns how many died.
+        """
+        killed = 0
+        for iid in self.instances_at(coords):
+            if self.kill(iid):
+                killed += 1
+        return killed
+
     def seed_holding_estimate(self, seconds: float) -> None:
         """Seed the holding-time EWMA for rate-driven autoscalers.
 
@@ -832,3 +850,25 @@ class ControlPlane:
 
     def release(self, name: str, instance_id: int) -> None:
         self.deployments[name].release(instance_id)
+
+    def node_coords(self) -> List[Tuple[int, ...]]:
+        """Every node (placement coords) currently hosting a live instance,
+        across all deployments, in deterministic order."""
+        seen = set()
+        for dep in self.deployments.values():
+            for inst in dep.instances.values():
+                if inst.alive and inst.coords is not None:
+                    seen.add(inst.coords)
+        return sorted(seen)
+
+    def kill_node(self, coords: Tuple[int, ...]) -> int:
+        """Correlated eviction across every deployment sharing ``coords``.
+
+        Spot reclamation is a *machine* event: all instances co-resident on
+        the node die together regardless of which deployment owns them.
+        Returns the total number of instances killed.
+        """
+        killed = 0
+        for dep in self.deployments.values():
+            killed += dep.kill_node(coords)
+        return killed

@@ -65,7 +65,7 @@ from __future__ import annotations
 
 import math
 from collections import deque
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .clock import ensure_clock
 
@@ -362,6 +362,13 @@ class TelemetryHub:
         #: kept apart from ``deployments`` so a tenant named like a
         #: function never aliases an autoscaler's window
         self.tenants: Dict[str, DeploymentTelemetry] = {}
+        #: injected-fault timeline, fed by :class:`repro.core.faults`'s
+        #: injectors as each armed :class:`~repro.core.faults.FaultEvent`
+        #: fires/ends — ``(virtual time, kind, detail)`` — so resilience
+        #: reports and SLO guards can correlate tail-latency excursions with
+        #: the adversity that caused them.  Empty (and never touched) when
+        #: no fault plan is installed.
+        self.faults: List[Tuple[float, str, str]] = []
 
     def medium(self, name: str) -> MediumTelemetry:
         tel = self.media.get(name)
@@ -389,6 +396,10 @@ class TelemetryHub:
         self, medium: str, nbytes: int, seconds: float, fee_usd: float = 0.0
     ) -> None:
         self.medium(medium).record(nbytes, seconds, fee_usd)
+
+    def record_fault(self, kind: str, detail: str = "") -> None:
+        """One injected-fault timeline entry at the current virtual time."""
+        self.faults.append((self.clock(), kind, detail))
 
     def has_media_samples(self) -> bool:
         return any(m.n for m in self.media.values())

@@ -64,7 +64,12 @@ from .buffers import (
 from .clock import VirtualClock, ensure_clock
 from .cluster import DEFAULT_NET, NetConstants, TransferAccounting
 from .cost import marginal_pull_fee_usd
-from .errors import InlineTooLarge, XDTObjectExhausted, XDTProducerGone
+from .errors import (
+    InlineTooLarge,
+    XDTError,
+    XDTObjectExhausted,
+    XDTProducerGone,
+)
 from .refs import (
     _NONCE_LEN,
     ObjectDescriptor,
@@ -558,6 +563,21 @@ class TransferEngine:
             else telemetry if isinstance(telemetry, TelemetryHub)
             else None
         )
+        #: fault-injection hooks (``core.faults``).  Both stay falsy/None
+        #: unless a non-empty FaultPlan is installed, so the no-fault paths
+        #: below reduce to one dict truthiness test / one ``is None`` test
+        #: and results stay bit-identical to a build without the harness.
+        #: ``_degraded`` maps medium -> bandwidth-cut slowdown multiplier
+        #: (>= 1.0) applied OUTSIDE ``_modeled_cache`` (the cache keeps base
+        #: values, so closing a degradation window needs no cache flush).
+        self._degraded: Dict[str, float] = {}
+        #: called as ``penalty(medium, nbytes, exc)`` when a strategy get
+        #: raises; may return a replacement ``XDTError`` (e.g. reclassify
+        #: :class:`~repro.core.errors.XDTProducerGone` as ``Evicted`` during
+        #: an eviction storm) or ``None`` to re-raise the original.
+        self._fault_penalty: Optional[
+            Callable[[str, int, XDTError], Optional[XDTError]]
+        ] = None
 
     # ----------------------------------------------------- medium dispatch
     def _acct_for(self, medium: str) -> TransferAccounting:
@@ -870,7 +890,18 @@ class TransferEngine:
             self._backend if medium == self.backend else self._strategy(medium)
         )
         local = local and medium in INSTANCE_RESIDENT_MEDIA
-        if self._wall_timing:
+        if self._fault_penalty is not None:
+            # fault plan installed: give the injector a chance to reclassify
+            # the failure (wall timing is diagnostic-only and moot under
+            # injected faults, so this branch skips it)
+            try:
+                obj = strat.get(payload)
+            except XDTError as e:
+                repl = self._fault_penalty(medium, nbytes, e)
+                if repl is not None and repl is not e:
+                    raise repl from e
+                raise
+        elif self._wall_timing:
             t0 = time.perf_counter()
             obj = strat.get(payload)
             self.stats.wall_seconds += time.perf_counter() - t0
@@ -894,6 +925,11 @@ class TransferEngine:
                 local_transfer_seconds(nbytes, self.net) if local
                 else strat.modeled_seconds(nbytes, self.net)
             )
+        if self._degraded and not local:
+            # degradation window: bandwidth cut inflates the modeled pull
+            # (co-placed shared-memory copies are unaffected by a NIC/medium
+            # throttle, hence the ``not local`` guard)
+            modeled *= self._degraded.get(medium, 1.0)
         if local:
             stats.local_pulls += 1
         stats.modeled_seconds += modeled
@@ -939,3 +975,56 @@ class TransferEngine:
         for strat in self._strategies.values():
             strat.on_producer_death()
         return self.registry.kill_instance()
+
+    # ------------------------------------------------- fault-injection hooks
+    # Used by core.faults.FaultInjector; all are exact inverses so closing a
+    # degradation window restores the engine bit-for-bit.
+
+    def degrade_medium(self, medium: str, slowdown: float) -> None:
+        """Open a bandwidth-cut window: modeled pulls on ``medium`` are
+        multiplied by ``slowdown`` (>= 1.0) until :meth:`clear_degraded`."""
+        if slowdown > 1.0:
+            self._degraded[medium] = float(slowdown)
+        else:
+            self._degraded.pop(medium, None)
+
+    def clear_degraded(self, medium: Optional[str] = None) -> None:
+        """Close a degradation window (all windows when ``medium=None``)."""
+        if medium is None:
+            self._degraded.clear()
+        else:
+            self._degraded.pop(medium, None)
+
+    def wrap_medium(
+        self, medium: str, wrapper: Callable[["TransferBackend"], "TransferBackend"]
+    ) -> "TransferBackend":
+        """Swap ``medium``'s strategy for ``wrapper(inner)``; returns the
+        inner strategy so the caller can :meth:`unwrap_medium` later.
+
+        This is how a decorator like ``faults.DegradedBackend`` composes
+        over *any* registered medium without that medium opting in.
+        """
+        inner = self._strategy(medium)
+        wrapped = wrapper(inner)
+        self._strategies[medium] = wrapped
+        if medium == self.backend:
+            self._backend = wrapped
+        return inner
+
+    def unwrap_medium(self, medium: str, inner: "TransferBackend") -> None:
+        """Undo :meth:`wrap_medium`: reinstall the saved inner strategy."""
+        self._strategies[medium] = inner
+        if medium == self.backend:
+            self._backend = inner
+
+    def suspend_fast_paths(self) -> Tuple[bool, bool]:
+        """Force every get through the strategy dispatch (where the fault
+        hooks live) for the duration of an installed plan; returns the saved
+        flags for :meth:`resume_fast_paths`."""
+        saved = (self._fast_single_owner, self._fast_service)
+        self._fast_single_owner = False
+        self._fast_service = False
+        return saved
+
+    def resume_fast_paths(self, saved: Tuple[bool, bool]) -> None:
+        self._fast_single_owner, self._fast_service = saved

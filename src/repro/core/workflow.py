@@ -65,7 +65,13 @@ from heapq import heappush as _heappush
 
 from .cluster import Event, Simulator
 from .clock import VirtualClock
-from .errors import InvocationReplayed, XDTError, XDTProducerGone
+from .errors import (
+    InvocationReplayed,
+    MediumUnavailable,
+    RetriesExhausted,
+    XDTError,
+    XDTProducerGone,
+)
 from .refs import XDTRef
 from .scheduler import ControlPlane, Deployment, ScalingPolicy
 from .transfer import TransferEngine
@@ -196,7 +202,7 @@ class WorkflowRequest:
         self.entry = entry
         self.payload = payload
         self.submitted_at = submitted_at
-        self.status = "pending"       # pending | running | ok | error
+        self.status = "pending"   # pending | running | ok | error | failed
         self.result: Any = None
         self.error: Optional[BaseException] = None
         self.started_at = 0.0
@@ -220,7 +226,7 @@ class WorkflowRequest:
         d = self._done
         if d is None:
             d = self._done = Event(self._sim)
-            if self.status in ("ok", "error"):
+            if self.status in ("ok", "error", "failed"):
                 d.set(self)
         return d
 
@@ -260,19 +266,33 @@ class WorkflowRequest:
     def _settle(self, handle: "AsyncResult") -> bool:
         """Consume one attempt's outcome; True means retry from the entry."""
         eng = self._eng
-        if handle.error is None:
+        err = handle.error
+        if err is None:
             self.status, self.result = "ok", handle.value
-        elif (
-            isinstance(handle.error, XDTProducerGone)
-            and self._retries < eng.max_retries
-        ):
-            # The producer instance is gone; its buffered objects died with
-            # it.  Re-invoking from the entry function regenerates them
-            # (paper §4.2.2) under fresh invocation ids.
-            self._retries += 1
-            return True
+        elif isinstance(err, (XDTProducerGone, MediumUnavailable)):
+            if self._retries < eng.max_retries:
+                # The producer instance is gone (its buffered objects died
+                # with it) or the medium refused inside a degradation window.
+                # Re-invoking from the entry function regenerates the objects
+                # (paper §4.2.2) under fresh invocation ids.
+                self._retries += 1
+                eng.retry_total += 1
+                if self._retries > eng.retry_max:
+                    eng.retry_max = self._retries
+                return True
+            # Retry budget spent on transient errors: terminal *failed*
+            # status in the log — priced for the work actually done — rather
+            # than a raw exception aborting the whole sweep.
+            self.status = "failed"
+            self.error = RetriesExhausted(
+                f"request {self.request_id}: retry budget "
+                f"({eng.max_retries}) exhausted on {err.code}",
+                cause=err,
+            )
+            eng.failed_requests += 1
+            eng.failed_codes[err.code] = eng.failed_codes.get(err.code, 0) + 1
         else:
-            self.status, self.error = "error", handle.error
+            self.status, self.error = "error", err
         self.finished_at = eng.sim.now
         eng._inflight_requests -= 1
         if eng._columnar:
@@ -801,6 +821,13 @@ class WorkflowEngine:
         # — the invocation hot path pays one dict probe instead of three
         self._dispatch: Dict[str, Tuple[Any, Any, float]] = {}
         self.max_retries = max_retries
+        # fault/SLO observability (read by faults.SLOGuard): total retry
+        # re-invocations, the worst per-request retry count, and terminal
+        # failures bucketed by the transient error code that exhausted them
+        self.retry_total = 0
+        self.retry_max = 0
+        self.failed_requests = 0
+        self.failed_codes: Dict[str, int] = {}
         # high-watermark at-most-once: ids are issued monotonically; every id
         # <= the watermark is spent and can never be executed again
         self._invocation_watermark = 0
@@ -904,7 +931,7 @@ class WorkflowEngine:
         with the original arguments, up to ``max_retries`` times."""
         req = self.submit(entry, payload)
         self.sim.run()
-        if req.status == "error":
+        if req.error is not None:    # "error" and terminal "failed" alike
             raise req.error
         return req.result
 
@@ -1016,5 +1043,5 @@ class WorkflowEngine:
         return [
             (r.request_id, r.latency_s)
             for r in self.requests
-            if r.status in ("ok", "error")
+            if r.status in ("ok", "error", "failed")
         ]

@@ -34,7 +34,7 @@ from repro.core.dagopt import (
     SyncChainFusion,
     optimize,
 )
-from repro.core.errors import XDTProducerGone
+from repro.core.errors import RetriesExhausted
 from repro.core.scheduler import ControlPlane, ScalingPolicy
 from repro.core.telemetry import TelemetryHub
 from repro.core.workflow import WorkflowEngine
@@ -467,7 +467,7 @@ def test_spill_saves_the_producer_death_retry():
         eng.assert_at_most_once()
         return result
 
-    with pytest.raises(XDTProducerGone):
+    with pytest.raises(RetriesExhausted):
         run_with_kill(dag, None)
     run_with_kill(opt, plan)             # spilled: completes, zero retries
 

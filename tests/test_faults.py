@@ -1,0 +1,432 @@
+"""Chaos harness: fault plans, injectors, SLO guardrails, both lowerings."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AdaptiveRoute,
+    DegradedBackend,
+    Edge,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    FixedRoute,
+    LoadGenerator,
+    MediumUnavailable,
+    RetriesExhausted,
+    SLOGuard,
+    SLOViolation,
+    SizeRoute,
+    Stage,
+    WorkflowDAG,
+    WorkflowEngine,
+)
+from repro.core.cost import (
+    WorkflowCostInputs,
+    combine_cost_inputs,
+    tenant_bills,
+    workflow_cost,
+)
+from repro.core.dag import execute_on_cluster
+from repro.core.workloads import DAGS
+
+BYTES_SCALE = 1e-2
+
+
+def _dag() -> WorkflowDAG:
+    """The fig12 probe shape: expensive producers, tiny staged objects."""
+    return WorkflowDAG(
+        "res",
+        [
+            Stage("driver", compute_s=0.01),
+            Stage("producer", fan=2, compute_s=0.5, blocking=False),
+            Stage("consumer", fan=2, compute_s=0.02, blocking=False),
+        ],
+        [
+            Edge("driver", "producer", 16 << 10, label="task",
+                 handoff="staged", fanout="broadcast",
+                 latency_budget_s=0.06),
+            Edge("producer", "consumer", 64 << 10, label="data",
+                 handoff="staged", fanout="partition",
+                 latency_budget_s=0.06),
+        ],
+    )
+
+
+def _run_staggered(eng, binding, n, gap_s):
+    for i in range(n):
+        eng.sim.schedule_abs(i * gap_s, lambda: eng.submit(binding.entry, 1.0))
+    eng.drain()
+
+
+# --------------------------------------------------------------- plan shape
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent("meteor", at_s=0.0)
+    with pytest.raises(ValueError, match=">= 0"):
+        FaultEvent("evict", at_s=-1.0)
+    with pytest.raises(ValueError, match="medium"):
+        FaultEvent("degrade", at_s=0.0, duration_s=1.0)
+    with pytest.raises(ValueError, match="medium"):
+        FaultEvent("degrade", at_s=0.0, duration_s=1.0, medium="floppy")
+    with pytest.raises(ValueError, match="error_rate"):
+        FaultEvent("degrade", at_s=0.0, duration_s=1.0, medium="s3",
+                   error_rate=1.5)
+    with pytest.raises(ValueError, match="slowdown"):
+        FaultEvent("degrade", at_s=0.0, duration_s=1.0, medium="s3",
+                   slowdown=0.5)
+    with pytest.raises(ValueError, match="duration_s"):
+        FaultEvent("degrade", at_s=0.0, medium="s3")
+    with pytest.raises(ValueError, match="cold_start_multiplier"):
+        FaultEvent("storm", at_s=0.0, duration_s=1.0,
+                   cold_start_multiplier=0.1)
+
+
+def test_fault_plan_sorts_queries_and_is_falsy_when_empty():
+    assert not FaultPlan()
+    assert len(FaultPlan()) == 0
+    plan = FaultPlan(
+        [
+            FaultEvent("degrade", at_s=2.0, duration_s=1.0, medium="s3",
+                       slowdown=4.0, error_rate=0.25),
+            FaultEvent("evict", at_s=0.5),
+        ],
+        seed=3,
+    )
+    assert plan and len(plan) == 2
+    assert [e.kind for e in plan] == ["evict", "degrade"]  # sorted by at_s
+    assert plan.has_evictions()
+    assert plan.slowdown_at("s3", 2.5) == 4.0
+    assert plan.slowdown_at("s3", 3.0) == 1.0        # window is half-open
+    assert plan.slowdown_at("xdt", 2.5) == 1.0       # other media untouched
+    assert plan.error_rate_at("s3", 2.5) == 0.25
+    assert plan.error_rate_at("s3", 1.0) == 0.0
+    # replays draw from a fresh seeded RNG every time
+    assert plan.rng().random() == plan.rng().random()
+
+
+def test_scenario_builders_cover_the_fig12_axis():
+    storm = FaultPlan.eviction_storm(at_s=1.0, n_evictions=3, spacing_s=0.5)
+    assert [e.at_s for e in storm] == [1.0, 1.5, 2.0]
+    assert all(e.kind == "evict" for e in storm)
+    throttle = FaultPlan.medium_throttle(medium="s3", slowdown=4.0,
+                                         error_rate=0.3)
+    assert throttle.events[0].error_rate == 0.3
+    blackout = FaultPlan.medium_blackout(medium="elasticache")
+    assert blackout.events[0].error_rate == 1.0
+    cold = FaultPlan.cold_start_storm(multiplier=8.0, max_instances_cap=2)
+    assert cold.events[0].cold_start_multiplier == 8.0
+
+
+# --------------------------------------------------- zero-cost when unused
+
+
+def test_empty_plan_installs_nothing_and_is_bit_identical():
+    def run(with_harness: bool):
+        eng = WorkflowEngine(backend="xdt", max_retries=2)
+        binding = _dag().bind(eng, default_route=SizeRoute(),
+                              bytes_scale=BYTES_SCALE)
+        if with_harness:
+            inj = FaultInjector(eng, FaultPlan()).install()
+            assert not inj.installed
+            assert eng.transfer._fault_penalty is None
+            assert eng.transfer._fast_single_owner  # fused paths untouched
+        _run_staggered(eng, binding, 3, 0.5)
+        return (
+            sum(lat for _, lat in eng.latency_records()),
+            binding.cost().total,
+        )
+
+    assert run(False) == run(True)      # exact equality, no tolerance
+
+
+def test_empty_plan_cluster_lowering_bit_identical():
+    bare = execute_on_cluster(DAGS["mr"], "xdt", seed=0, deterministic=True)
+    planned = execute_on_cluster(
+        DAGS["mr"], "xdt", seed=0, deterministic=True, fault_plan=FaultPlan()
+    )
+    assert planned.latency_s == bare.latency_s
+    assert planned.cost().total == bare.cost().total
+    assert planned.faults is None       # no adapter even constructed
+
+
+def test_install_uninstall_restores_the_engine_exactly():
+    eng = WorkflowEngine(backend="xdt", max_retries=2)
+    eng.register("f", lambda ctx, x: x)
+    eng.run("f", 0)                     # materialize a deployment
+    orig_strategy = eng.transfer._strategy("s3")  # materialize the lazy slot
+    pol = eng.control.deployments["f"].policy
+    cold0, cap0 = pol.cold_start_s, pol.max_instances
+    plan = FaultPlan(
+        [
+            FaultEvent("degrade", at_s=0.0, duration_s=100.0, medium="s3",
+                       slowdown=4.0, error_rate=0.5),
+            FaultEvent("storm", at_s=0.0, duration_s=100.0,
+                       cold_start_multiplier=8.0, max_instances_cap=1),
+        ],
+        seed=1,
+    )
+    inj = FaultInjector(eng, plan).install()
+    assert inj.installed
+    assert eng.transfer._fault_penalty is not None
+    assert not eng.transfer._fast_single_owner   # dispatch sees every get
+    inj._open_window(plan.events[0])
+    inj._open_storm(plan.events[1])
+    assert isinstance(eng.transfer._strategies["s3"], DegradedBackend)
+    assert eng.transfer._degraded == {"s3": 4.0}
+    assert pol.cold_start_s == cold0 * 8.0 and pol.max_instances == 1
+    inj.uninstall()
+    assert eng.transfer._strategies["s3"] is orig_strategy
+    assert eng.transfer._degraded == {}
+    assert eng.transfer._fault_penalty is None
+    assert eng.transfer._fast_single_owner
+    assert pol.cold_start_s == cold0 and pol.max_instances == cap0
+
+
+# ----------------------------------------------- engine-lowering injection
+
+
+def test_blackout_fails_terminally_with_recorded_statuses():
+    """A full blackout on the only route exhausts the retry budget: every
+    request lands in the log as terminal ``failed`` (never a crash), the
+    wrapper names the injected cause, and retries stay bounded."""
+    eng = WorkflowEngine(backend="xdt", max_retries=2)
+    binding = _dag().bind(eng, default_route=FixedRoute("s3"),
+                          bytes_scale=BYTES_SCALE)
+    plan = FaultPlan.medium_blackout(medium="s3", at_s=0.0, duration_s=1e4)
+    FaultInjector(eng, plan).install()
+    _run_staggered(eng, binding, 4, 0.5)
+    assert [r.status for r in eng.requests] == ["failed"] * 4
+    assert all(isinstance(r.error, RetriesExhausted) for r in eng.requests)
+    assert all(
+        isinstance(r.error.cause, MediumUnavailable) for r in eng.requests
+    )
+    assert eng.failed_requests == 4
+    assert eng.failed_codes == {"Fault.MediumUnavailable": 4}
+    assert eng.retry_max <= eng.max_retries
+    assert eng._inflight_requests == 0
+    report = SLOGuard(availability_min=0.0).check(eng, "blackout")
+    assert report.ok and report.n_failed == 4 and report.availability == 0.0
+
+
+def test_eviction_storm_recovers_within_retry_budget():
+    """Correlated node kills mid-flight: in-flight staged pulls die, the
+    orchestrator retries, and every request still completes."""
+    eng = WorkflowEngine(backend="xdt", max_retries=2)
+    binding = _dag().bind(eng, default_route=FixedRoute("xdt"),
+                          bytes_scale=BYTES_SCALE)
+    plan = FaultPlan.eviction_storm(
+        at_s=1.0, n_evictions=4, spacing_s=2.0, seed=7
+    )
+    inj = FaultInjector(eng, plan).install()
+    _run_staggered(eng, binding, 12, 0.75)
+    assert inj.n_evicted_instances > 0
+    assert inj.n_evicted_buffers > 0
+    assert eng.retry_total > 0                  # the storm actually hit
+    assert eng.retry_max <= eng.max_retries
+    assert all(r.status == "ok" for r in eng.requests)
+    SLOGuard(availability_min=1.0).assert_ok(eng, "evictions")
+
+
+def test_kill_racing_degraded_window_reroutes_durable_engine():
+    """Satellite: an eviction *inside* an xdt degradation window.  The
+    staged edge dies mid-throttle; the adaptive retry must land on a
+    durable medium (penalty samples push xdt out of budget) and the retry
+    count stays bounded."""
+    eng = WorkflowEngine(backend="xdt", max_retries=2)
+    binding = _dag().bind(
+        eng,
+        default_route=AdaptiveRoute(static=FixedRoute("xdt"),
+                                    explore_every=0),
+        bytes_scale=BYTES_SCALE,
+    )
+    plan = FaultPlan(
+        [
+            FaultEvent("degrade", at_s=0.5, duration_s=8.0, medium="xdt",
+                       slowdown=10.0, error_rate=0.3),
+            FaultEvent("evict", at_s=1.0),
+        ],
+        seed=5,
+    )
+    FaultInjector(eng, plan).install()
+    _run_staggered(eng, binding, 8, 0.5)
+    assert eng._inflight_requests == 0          # every request terminal
+    assert eng.retry_max <= eng.max_retries     # bounded, not a retry loop
+    assert all(r.status in ("ok", "failed") for r in eng.requests)
+    data_media = set(binding.edge_usage["data"].media)
+    assert data_media & {"s3", "elasticache"}   # rerouted durable
+    # the fault timeline recorded the race (hub exists: adaptive route)
+    kinds = {k for _, k, _ in eng.transfer.telemetry.faults}
+    assert {"degrade_open", "evict", "degrade_close"} <= kinds
+
+
+def test_kill_racing_degraded_window_cluster_lowering():
+    """Same race on the discrete-event lowering: the staged edge's producer
+    node is evicted inside a throttle window; fetches re-route durable with
+    bounded refusal draws and the run still completes."""
+    plan = FaultPlan(
+        [
+            FaultEvent("degrade", at_s=0.0, duration_s=5.0, medium="xdt",
+                       slowdown=5.0, error_rate=0.5),
+            FaultEvent("evict", at_s=0.05),
+        ],
+        seed=3,
+    )
+    clean = execute_on_cluster(DAGS["mr"], "xdt", seed=0, deterministic=True)
+    run = execute_on_cluster(
+        DAGS["mr"], "xdt", seed=0, deterministic=True, fault_plan=plan
+    )
+    s = run.faults.summary()
+    assert s["retries"] > 0 and s["rerouted"] > 0
+    assert s["evicted_nodes"]
+    # refusal draws are bounded per fetch (then the durable escape hatch),
+    # so total retries stay under (max_attempts + 1 eviction re-run) per
+    # completed pull — bounded, not a retry loop
+    n_pulls = sum(
+        sum(u.media.values()) for u in run.edge_usage.values()
+    )
+    assert s["retries"] <= (run.faults.max_attempts + 1) * n_pulls
+    # the adversity costs time; it never deadlocks or crashes the run
+    assert run.latency_s > clean.latency_s
+    assert run.cost().total > 0
+
+
+def test_fault_aware_spill_beats_raw_dag_under_eviction_storm():
+    """PredictiveSpill given the plan spills staged edges durable up front:
+    strictly fewer eviction retries than the raw DAG under the same plan."""
+    plan = FaultPlan.eviction_storm(
+        at_s=0.05, n_evictions=2, spacing_s=0.1, seed=3
+    )
+    base = execute_on_cluster(
+        DAGS["mr"], "xdt", seed=0, deterministic=True, fault_plan=plan
+    )
+    opt_dag, pplan = DAGS["mr"].optimize(fault_plan=plan)
+    assert pplan.spilled                        # the storm forced a spill
+    opt = execute_on_cluster(
+        opt_dag, "xdt", seed=0, deterministic=True, plan=pplan,
+        fault_plan=plan,
+    )
+    assert opt.faults.retries < base.faults.retries
+
+
+def test_load_generator_survives_blackout():
+    """Satellite: exhausted-retry requests land in the load report as
+    terminal failures — the sweep completes instead of crashing."""
+    import jax.numpy as jnp
+
+    eng = WorkflowEngine(backend="s3", max_retries=1)
+    eng.register("worker", lambda ctx, ref: float(ctx.get(ref).sum()))
+
+    def entry(ctx, i):
+        ref = ctx.put(jnp.full((64,), float(i), jnp.float32), n_retrievals=1)
+        return ctx.invoke("worker", ref)
+
+    eng.register("entry", entry)
+    plan = FaultPlan.medium_blackout(medium="s3", at_s=0.0, duration_s=1e4)
+    FaultInjector(eng, plan).install()
+    rep = LoadGenerator(eng, "entry").run_closed(
+        n_clients=2, requests_per_client=2
+    )
+    assert rep.n_requests == 4 and rep.n_ok == 0
+    assert eng.failed_requests == 4
+    assert eng.retry_max <= eng.max_retries
+
+
+# ------------------------------------------------------------- SLO guard
+
+
+def _tiny_engine(n_ok=3):
+    eng = WorkflowEngine()
+    eng.register("f", lambda ctx, x: x, service_time=0.1)
+    for i in range(n_ok):
+        eng.run("f", i)
+    return eng
+
+
+def test_slo_guard_clean_run_passes():
+    eng = _tiny_engine()
+    report = SLOGuard(availability_min=1.0).assert_ok(eng, "clean")
+    assert report.ok and report.n_ok == report.n_requests == 3
+    assert report.availability == 1.0
+    assert report.retry_total == 0
+
+
+def test_slo_guard_p99_budget_violation():
+    eng = _tiny_engine()
+    with pytest.raises(SLOViolation, match="p99"):
+        SLOGuard(p99_budget_s=1e-6).assert_ok(eng, "tight")
+    report = SLOGuard(p99_budget_s=1e-6).check(eng, "tight")
+    assert not report.ok and any("p99" in v for v in report.violations)
+
+
+def test_slo_guard_availability_violation():
+    eng = WorkflowEngine(backend="xdt", max_retries=0)
+    binding = _dag().bind(eng, default_route=FixedRoute("elasticache"),
+                          bytes_scale=BYTES_SCALE)
+    FaultInjector(
+        eng, FaultPlan.medium_blackout(
+            medium="elasticache", at_s=0.0, duration_s=1e4
+        )
+    ).install()
+    _run_staggered(eng, binding, 2, 0.5)
+    with pytest.raises(SLOViolation, match="availability"):
+        SLOGuard(availability_min=1.0).assert_ok(eng, "blackout")
+
+
+def test_require_dominates():
+    SLOGuard.require_dominates(
+        {"cost_usd": 1.0, "p99_s": 2.0}, {"cost_usd": 1.0, "p99_s": 2.5}
+    )  # equal-or-better passes
+    with pytest.raises(SLOViolation, match="must never lose"):
+        SLOGuard.require_dominates(
+            {"cost_usd": 1.1, "p99_s": 2.0}, {"cost_usd": 1.0, "p99_s": 2.5}
+        )
+
+
+# ------------------------------------- attribution exactness under faults
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    error_rate=st.floats(0.0, 1.0, allow_nan=False),
+    at_s=st.floats(0.0, 1.0, allow_nan=False),
+    n_tenants=st.integers(2, 3),
+)
+@settings(max_examples=8, deadline=None)
+def test_tenant_bills_exact_under_injected_faults(
+    seed, error_rate, at_s, n_tenants
+):
+    """Satellite: failed and retried requests must not break the linear-fee
+    decomposition — per-tenant bills sum exactly to the combined bill no
+    matter what the fault plan did to each tenant's accounting."""
+    parts = {}
+    for tid in range(n_tenants):
+        eng = WorkflowEngine(backend="xdt", max_retries=1)
+        binding = _dag().bind(eng, default_route=FixedRoute("s3"),
+                              bytes_scale=BYTES_SCALE)
+        plan = FaultPlan(
+            [
+                FaultEvent("degrade", at_s=at_s, duration_s=2.0,
+                           medium="s3", slowdown=3.0,
+                           error_rate=error_rate),
+                FaultEvent("evict", at_s=at_s + 0.5),
+            ],
+            seed=seed + tid,
+        )
+        FaultInjector(eng, plan).install()
+        _run_staggered(eng, binding, 2, 0.4)
+        assert eng._inflight_requests == 0      # terminal either way
+        ops = binding.media_storage_ops()
+        parts[f"t{tid}"] = WorkflowCostInputs(
+            n_function_invocations=len(eng.records),
+            billed_duration_s=eng.billed_virtual_seconds(),
+            n_storage_puts=sum(o.n_puts for o in ops.values()),
+            n_storage_gets=sum(o.n_gets for o in ops.values()),
+            storage_gb_seconds=sum(o.gb_seconds for o in ops.values()),
+            peak_resident_gb=sum(o.peak_resident_gb for o in ops.values()),
+        )
+    combined = workflow_cost(combine_cost_inputs(parts.values()), "s3")
+    bills = tenant_bills(parts, "s3")
+    gap = abs(sum(b.total for b in bills.values()) - combined.total)
+    assert gap <= 1e-9

@@ -13,7 +13,7 @@ from repro.core.dag import (
     execute_on_cluster,
 )
 from repro.core.cost import transfer_fee_usd
-from repro.core.errors import XDTProducerGone
+from repro.core.errors import RetriesExhausted
 from repro.core.scheduler import ScalingPolicy
 from repro.core.telemetry import TelemetryHub
 
@@ -93,7 +93,7 @@ def test_instance_resident_medium_dies_with_producer_for_contrast():
     medium = route.resolve(_edge(handoff="staged"), 2 << 20, False)
     assert medium == "xdt"
     eng = _death_engine(medium, deaths=3)    # dies on every retry too
-    with pytest.raises(XDTProducerGone):
+    with pytest.raises(RetriesExhausted):
         eng.run("flow", 0)
 
 

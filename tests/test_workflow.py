@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import WorkflowEngine, XDTProducerGone
+from repro.core import RetriesExhausted, WorkflowEngine, XDTProducerGone
 from repro.core.scheduler import ScalingPolicy
 
 
@@ -94,8 +94,13 @@ def test_retry_budget_exhaustion():
 
     eng.register("producer", producer)
     eng.register("consumer", lambda ctx, ref: ctx.get(ref))
-    with pytest.raises(XDTProducerGone):
+    with pytest.raises(RetriesExhausted) as ei:
         eng.run("producer", 0)
+    # the terminal error names the transient cause that spent the budget
+    assert isinstance(ei.value.cause, XDTProducerGone)
+    assert eng.requests[-1].status == "failed"
+    assert eng.failed_requests == 1
+    assert eng.failed_codes == {"XDT.ProducerGone": 1}
 
 
 def test_error_records():
@@ -107,8 +112,10 @@ def test_error_records():
         return ctx.get(ref)
 
     eng.register("failing", failing)
-    with pytest.raises(XDTProducerGone):
+    with pytest.raises(RetriesExhausted):
         eng.run("failing", 0)
+    # invocation records keep the raw transient code; the request-level
+    # terminal status is "failed" with the budget-exhaustion wrapper
     errs = [r for r in eng.records if r.status == "error"]
     assert errs and errs[0].error_code == "XDT.ProducerGone"
 

@@ -3,7 +3,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import LoadGenerator, WorkflowEngine, XDTProducerGone
+from repro.core import (
+    LoadGenerator,
+    RetriesExhausted,
+    WorkflowEngine,
+)
 from repro.core.scheduler import ScalingPolicy
 
 
@@ -123,9 +127,9 @@ def test_retry_budget_exhaustion_concurrent():
 
     eng.register("producer", producer)
     eng.register("consumer", lambda ctx, ref: ctx.get(ref))
-    with pytest.raises(XDTProducerGone):
+    with pytest.raises(RetriesExhausted):
         eng.run("producer", 0)
-    assert eng.requests[-1].status == "error"
+    assert eng.requests[-1].status == "failed"
 
 
 # ------------------------------------------------------------ virtual timing
