@@ -14,8 +14,15 @@ smoke events/sec over the sharded tenant cells plus the co-resident
 deployment count and the attribution-invariant gap — comparing the saved-
 aside ``results/BENCH_fig11_multitenant.json`` against the fresh one.
 
+With ``--fig13-baseline`` it gains the streaming sweep's makespan-vs-bound
+table: per workload x backend, the best streaming makespan's ratio to the
+critical-path lower bound (1.0 = perfect overlap), fresh vs the committed
+``results/fig13_streaming.json`` — so a PR that moves the streaming model
+shows its distance-to-bound drift next to the throughput delta.
+
 Usage:  PYTHONPATH=src python -m benchmarks.bench_delta BASELINE.json [FRESH.json]
             [--fig11-baseline FIG11_BASELINE.json [--fig11-fresh FIG11_FRESH.json]]
+            [--fig13-baseline FIG13_BASELINE.json [--fig13-fresh FIG13_FRESH.json]]
 """
 from __future__ import annotations
 
@@ -70,6 +77,52 @@ def _fig11_section(baseline_path, fresh_path):
           f"| {fresh.get('max_attribution_gap_rel', 0.0):.1e} | |")
 
 
+def _fig13_best_ratios(path):
+    """(workload, backend) -> best (makespan/bound) across chunk sizes."""
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for wl, rows in (doc.get("cluster") or {}).items():
+        for backend, row in rows.items():
+            cells = row.get("cells") or {}
+            if cells:
+                out[(wl, backend)] = {
+                    "bound_s": row["bound_s"],
+                    "base_ratio": row["base_ratio_vs_bound"],
+                    "best_ratio": min(
+                        c["ratio_vs_bound"] for c in cells.values()
+                    ),
+                }
+    return out
+
+
+def _fig13_section(baseline_path, fresh_path):
+    base = _fig13_best_ratios(baseline_path)
+    fresh = _fig13_best_ratios(fresh_path)
+    if not fresh:
+        return
+    print()
+    print("### Streaming edges — makespan vs critical-path bound "
+          "(cluster lowering)")
+    print()
+    print("| workload / backend | bound | store-then-fetch "
+          "| best stream (fresh) | baseline | drift |")
+    print("|---|---:|---:|---:|---:|---:|")
+    for key in sorted(fresh):
+        f = fresh[key]
+        b = base.get(key, {})
+        b_ratio = b.get("best_ratio", 0.0)
+        print(
+            f"| {key[0]}/{key[1]} | {f['bound_s']:.3f}s "
+            f"| {f['base_ratio']:.3f}x | {f['best_ratio']:.3f}x "
+            f"| {b_ratio:.3f}x "
+            f"| {_fmt_delta(b_ratio, f['best_ratio'])} |"
+        )
+    print()
+    print("ratios are makespan / critical-path lower bound; 1.000x is "
+          "perfect transfer/compute overlap, drift is fresh vs committed")
+
+
 def main(argv=None):
     argv = list(sys.argv[1:] if argv is None else argv)
 
@@ -83,6 +136,10 @@ def main(argv=None):
     fig11_baseline = _flag("--fig11-baseline")
     fig11_fresh = _flag("--fig11-fresh") or os.path.join(
         RESULTS_DIR, "BENCH_fig11_multitenant.json"
+    )
+    fig13_baseline = _flag("--fig13-baseline")
+    fig13_fresh = _flag("--fig13-fresh") or os.path.join(
+        RESULTS_DIR, "fig13_streaming.json"
     )
     if not argv:
         print("usage: python -m benchmarks.bench_delta BASELINE.json [FRESH.json]"
@@ -125,6 +182,8 @@ def main(argv=None):
               "virtual-time semantics differ from the committed baseline")
     if fig11_baseline and os.path.exists(fig11_baseline):
         _fig11_section(fig11_baseline, fig11_fresh)
+    if fig13_baseline and os.path.exists(fig13_baseline):
+        _fig13_section(fig13_baseline, fig13_fresh)
     return 0
 
 

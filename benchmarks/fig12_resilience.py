@@ -45,6 +45,7 @@ from repro.core import (
     FixedRoute,
     SizeRoute,
     Stage,
+    TelemetryHub,
     WorkflowDAG,
     WorkflowEngine,
 )
@@ -173,6 +174,13 @@ def run_cell(
         eng, default_route=_route(route_kind, backend),
         bytes_scale=BYTES_SCALE,
     )
+    # every cell gets a hub BEFORE the injector installs: adaptive cells
+    # already have one (dag.bind wires it for AdaptiveRoute), but static
+    # cells would otherwise drop the injector's fault-timeline records
+    # (TelemetryHub recording is purely observational — it never changes
+    # modeled latency or cost, so the static baselines are unaffected)
+    if eng.transfer.telemetry is None:
+        eng.transfer.telemetry = TelemetryHub(eng.transfer.clock)
     FaultInjector(eng, plan).install()
     for i in range(n_requests):
         eng.sim.schedule_abs(
@@ -202,6 +210,10 @@ def run_cell(
         "edge_media": {
             label: dict(u.media) for label, u in binding.edge_usage.items()
         },
+        "fault_timeline": [
+            {"t_s": t, "kind": kind, "detail": detail}
+            for t, kind, detail in eng.transfer.telemetry.faults
+        ],
     }
 
 
@@ -284,9 +296,20 @@ def run_sweep(n_requests: int, gap_s: float, seed: int, quiet: bool = False):
             cells[kind] = run_cell(
                 plan_spec["plan"], kind, spec["backend"], n_requests, gap_s
             )
+        # the injector replays the same seeded plan in both cells, so the
+        # (time, kind) schedule is cell-independent — hoist the timeline to
+        # a per-scenario section.  The detail column IS cell-dependent for
+        # evictions (instances/buffers killed depend on what the cell had
+        # running), so the replay claim compares the schedule only.
+        timelines = {k: c.pop("fault_timeline") for k, c in cells.items()}
+        schedule = lambda tl: [(e["t_s"], e["kind"]) for e in tl]  # noqa: E731
         out[name] = {
             "backend": spec["backend"],
             "adaptive_availability_min": spec["adaptive_availability_min"],
+            "fault_timeline": timelines["adaptive"],
+            "fault_timeline_replay_identical": (
+                schedule(timelines["static"]) == schedule(timelines["adaptive"])
+            ),
             "cells": cells,
         }
         if not quiet:
@@ -299,6 +322,18 @@ def run_sweep(n_requests: int, gap_s: float, seed: int, quiet: bool = False):
                 f"${a['cost_usd']*1e6:8.2f}u "
                 f"retries {a['retry_total']:>3} fail {a['n_failed']:>2}"
             )
+            replay = (
+                "schedule replayed identically in both cells"
+                if out[name]["fault_timeline_replay_identical"]
+                else "SCHEDULES DIVERGED ACROSS CELLS"
+            )
+            print(f"    fault timeline ({replay}; detail from the "
+                  "adaptive cell):")
+            for entry in timelines["adaptive"]:
+                print(
+                    f"      {entry['t_s']:9.3f}s  {entry['kind']:<14} "
+                    f"{entry['detail']}"
+                )
     return out
 
 

@@ -133,7 +133,10 @@ class SizeRoute(RoutePolicy):
             return self.durable
         if evictable:
             return self.durable
-        if edge.handoff == "sync" and nbytes < self.inline_under:
+        if (
+            edge.handoff == "sync" and nbytes < self.inline_under
+            and not edge.streaming
+        ):
             return "inline"
         return self.default
 
@@ -183,6 +186,22 @@ class AdaptiveRoute(RoutePolicy):
     traffic re-checking its losers.  Probes never fire on edges with a
     latency budget (learning must not risk an SLO) and never override the
     hard constraints.  ``explore_every=0`` disables probing.
+
+    **Time-decayed re-probe (blacklist recovery).**  Sample-count probing
+    cannot recover a medium a *fault window* poisoned: with
+    ``explore_every=0`` (or on budgeted edges, where count probes never
+    fire) a candidate whose windowed p99 was inflated by penalty samples
+    is filtered out of the feasible set on every resolve, gets no
+    traffic, and its latency window never refills with healthy samples —
+    the blackout outlives the fault.  ``reprobe_after_s > 0`` adds a
+    wall-clock escape hatch: a candidate the router has not picked for at
+    least that long is routed one probe object regardless of its score,
+    and the interval until its next probe grows by ``reprobe_growth`` per
+    consecutive timed probe (reset whenever the medium wins on merit
+    again).  Unlike the count probe this *deliberately* fires on budgeted
+    edges — a poisoned p99 keeps the medium infeasible forever otherwise,
+    so the timed probe is the only path back into the feasible set.
+    ``reprobe_after_s=0`` (default) disables it.
     """
 
     #: media a durable (producer-death-surviving) decision may pick
@@ -196,11 +215,19 @@ class AdaptiveRoute(RoutePolicy):
         net: NetConstants = DEFAULT_NET,
         explore_every: int = 256,
         explore_growth: float = 4.0,
+        reprobe_after_s: float = 0.0,
+        reprobe_growth: float = 2.0,
     ):
         self.telemetry = telemetry
         self.explore_every = explore_every
         self.explore_growth = explore_growth
         self._probe_countdown = explore_every
+        self.reprobe_after_s = reprobe_after_s
+        self.reprobe_growth = reprobe_growth
+        #: medium -> clock time it was last routed an object (merit or probe)
+        self._last_pick: Dict[str, float] = {}
+        #: medium -> consecutive timed probes since its last merit win
+        self._reprobe_n: Dict[str, int] = {}
         #: True when a lowering (not the user) supplied the hub: the next
         #: bind/execute re-binds to ITS hub, so one route instance reused
         #: across runs never keeps feeding off a previous run's dead feed
@@ -230,7 +257,10 @@ class AdaptiveRoute(RoutePolicy):
         if evictable:
             return list(self.DURABLE)
         cands = ["xdt", "s3", "elasticache"]
-        if edge.handoff == "sync" and nbytes < self.inline_under:
+        if (
+            edge.handoff == "sync" and nbytes < self.inline_under
+            and not edge.streaming
+        ):
             cands.insert(0, "inline")
         return cands
 
@@ -255,12 +285,36 @@ class AdaptiveRoute(RoutePolicy):
         )
         return m_min if n_min < max(counts)[0] else None
 
+    def _timed_reprobe(self, cands, now: float) -> Optional[str]:
+        """The wall-clock blacklist-recovery probe: the first candidate the
+        router has not routed to for ``reprobe_after_s`` (backed off by
+        ``reprobe_growth`` per consecutive probe).  A candidate never seen
+        before just starts its timer.  Fires on budgeted edges too — a
+        p99 poisoned by fault-penalty samples keeps a medium out of the
+        feasible set forever, so this is its only way back in."""
+        for m in cands:
+            last = self._last_pick.get(m)
+            if last is None:
+                self._last_pick[m] = now
+                continue
+            n = self._reprobe_n.get(m, 0)
+            if now - last >= self.reprobe_after_s * self.reprobe_growth ** n:
+                self._last_pick[m] = now
+                self._reprobe_n[m] = n + 1
+                return m
+        return None
+
     def resolve(self, edge, nbytes, evictable):
         hub = self.telemetry
         if hub is None or not hub.has_media_samples():
             return self.static.resolve(edge, nbytes, evictable)
         budget = edge.latency_budget_s
         cands = self._candidates(edge, nbytes, evictable)
+        now = hub.clock() if self.reprobe_after_s > 0.0 else 0.0
+        if self.reprobe_after_s > 0.0:
+            probe = self._timed_reprobe(cands, now)
+            if probe is not None:
+                return probe
         if self.explore_every and budget <= 0.0:
             probe = self._maybe_probe(cands, hub)
             if probe is not None:
@@ -282,8 +336,17 @@ class AdaptiveRoute(RoutePolicy):
             if feasible:
                 scored = feasible
             else:                        # nothing fits the budget: fastest
-                return min(scored, key=lambda s: s[2])[0]
-        return min(scored, key=lambda s: (s[1], s[2]))[0]
+                chosen = min(scored, key=lambda s: s[2])[0]
+                if self.reprobe_after_s > 0.0:
+                    self._last_pick[chosen] = now
+                    self._reprobe_n[chosen] = 0
+                return chosen
+        chosen = min(scored, key=lambda s: (s[1], s[2]))[0]
+        if self.reprobe_after_s > 0.0:
+            # a merit win resets the medium's probe backoff and timer
+            self._last_pick[chosen] = now
+            self._reprobe_n[chosen] = 0
+        return chosen
 
     def describe(self):
         return f"adaptive(telemetry, fallback: {self.static.describe()})"
@@ -343,6 +406,12 @@ class Edge:
     * ``latency_budget_s`` is the edge's per-object transfer latency budget
       (0 = none): :class:`AdaptiveRoute` picks the cheapest medium whose
       observed p99 fits it.
+    * ``streaming=True`` chunks every object into ``chunk_bytes`` pieces the
+      producer publishes *while still computing* and the consumer pulls as
+      they land (DataFlower-style overlap).  Route policies resolve **per
+      chunk**, so one logical object may split across media; ``inline`` is
+      refused outright — chunks outlive the sync handoff message, exactly
+      like staged/external objects outlive an invoke.
     """
 
     src: Optional[str]
@@ -355,6 +424,8 @@ class Edge:
     n_objects: int = 1
     concurrency: int = 0
     latency_budget_s: float = 0.0
+    streaming: bool = False
+    chunk_bytes: int = 0
 
     def __post_init__(self):
         if not self.label:
@@ -369,6 +440,39 @@ class Edge:
             raise ValueError("src=None (original input) requires handoff='external'")
         if self.handoff == "external" and self.src is not None:
             raise ValueError("external edges have src=None")
+        if self.streaming:
+            if self.chunk_bytes <= 0:
+                raise ValueError(
+                    f"streaming edge {self.label!r} needs chunk_bytes > 0"
+                )
+            if self.handoff == "external":
+                raise ValueError(
+                    f"streaming edge {self.label!r}: original (external) "
+                    "input predates the workflow, there is no producer to "
+                    "stream from"
+                )
+            if self.route == "inline":
+                # mirrors the staged/external refusal: a chunk outlives the
+                # sync handoff message it would have to ride
+                raise ValueError(
+                    f"streaming edge {self.label!r} cannot route 'inline': "
+                    "chunks outlive the sync handoff message"
+                )
+        elif self.chunk_bytes:
+            raise ValueError(
+                f"edge {self.label!r}: chunk_bytes requires streaming=True"
+            )
+
+    def chunk_sizes(self) -> Tuple[int, ...]:
+        """Per-chunk byte sizes of ONE logical object of this edge: full
+        ``chunk_bytes`` pieces plus the remainder tail (never empty)."""
+        if not self.streaming or self.nbytes <= self.chunk_bytes:
+            return (self.nbytes,)
+        n_full, tail = divmod(self.nbytes, self.chunk_bytes)
+        sizes = [self.chunk_bytes] * n_full
+        if tail:
+            sizes.append(tail)
+        return tuple(sizes)
 
 
 class WorkflowDAG:
@@ -525,6 +629,12 @@ class WorkflowDAG:
                     f"external edge {edge.label!r} must resolve to storage "
                     f"({_STORAGE_MEDIA}), got {medium!r}"
                 )
+            if edge.streaming and medium == "inline":
+                raise ValueError(
+                    f"streaming edge {edge.label!r} resolved to 'inline': "
+                    "chunks outlive the sync handoff message (route policies "
+                    "must skip inline when edge.streaming)"
+                )
             return medium
 
         return resolve
@@ -572,6 +682,7 @@ class WorkflowDAG:
         handlers: Optional[Dict[str, Callable]] = None,
         autoscaler: Any = None,
         plan: Any = None,
+        online_spill: Any = None,
     ) -> "DagBinding":
         """Compile this DAG onto a :class:`~repro.core.workflow.WorkflowEngine`
         (see :class:`DagBinding`).
@@ -587,10 +698,13 @@ class WorkflowDAG:
         :meth:`optimize`: co-placement affinity hints are forwarded to the
         scheduler's steering and honored pulls are modeled at
         shared-memory speed.
+        ``online_spill`` is a :class:`~repro.core.dagopt.OnlineSpill`
+        consulted per streamed chunk (mid-stream staged->durable spill).
         """
         return DagBinding(
             self, engine, default_route, bytes_scale, policy,
             handlers=handlers, autoscaler=autoscaler, plan=plan,
+            online_spill=online_spill,
         )
 
 
@@ -692,6 +806,151 @@ def _edge_fee_rows(
 
 
 # ---------------------------------------------------------------------------
+# Streaming-edge analytics (shared by the cluster lowering and fig13's bound)
+# ---------------------------------------------------------------------------
+
+
+def _chunk_ready_offsets(compute_s: float, sizes: Sequence[int]) -> List[float]:
+    """Byte-proportional production offsets of one object's chunks relative
+    to the producer's compute start: chunk ``k`` is published once the first
+    ``sum(sizes[:k+1]) / sum(sizes)`` fraction of the compute has run (the
+    last chunk lands exactly at compute end)."""
+    total = sum(sizes)
+    if total <= 0 or compute_s <= 0.0:
+        return [0.0] * len(sizes)
+    acc, out = 0, []
+    for s in sizes:
+        acc += s
+        out.append(compute_s * acc / total)
+    return out
+
+
+def _staged_get_seconds(m: str, nbytes: int, net: NetConstants) -> float:
+    """Consumer-side pull time of one staged object/chunk already resident
+    on medium ``m`` — the get half only (the producer's put happened in its
+    own span), mirroring ``ServerlessCluster.storage_get`` / ``xdt_pull``
+    contention-free."""
+    if m == "s3":
+        return net.s3_op_latency + nbytes / min(net.s3_stream_bw, net.nic_bw)
+    if m == "elasticache":
+        return net.ec_op_latency + nbytes / min(net.ec_stream_bw, net.nic_bw)
+    if m == "xdt":
+        return net.xdt_pull_rtt + nbytes / min(
+            net.xdt_stream_bw, net.nic_bw * net.xdt_stream_eff
+        )
+    # inline is refused for streaming edges; anything else is a config error
+    raise ValueError(f"no staged-get model for medium {m!r}")
+
+
+def _streamed_finish(
+    start: float,
+    ready: Sequence[float],
+    sizes: Sequence[int],
+    media: Sequence[str],
+    span_of: Callable[[str, int], float],
+) -> float:
+    """Absolute completion time of a single-threaded consumer pulling chunks
+    as they land: beginning at ``start``, every chunk already published is
+    coalesced into one batch (one request per distinct medium — ranged GET /
+    multipart semantics), the batch transfer runs, and the puller then waits
+    for the next publication.  ``span_of(medium, nbytes)`` models one
+    batch-request's transfer seconds on a medium."""
+    order = sorted(range(len(sizes)), key=lambda k: ready[k])
+    t, i, n = start, 0, len(order)
+    while i < n:
+        if ready[order[i]] > t:
+            t = ready[order[i]]
+        batch: Dict[str, int] = {}
+        while i < n and ready[order[i]] <= t:
+            k = order[i]
+            batch[media[k]] = batch.get(media[k], 0) + sizes[k]
+            i += 1
+        for m, b in batch.items():
+            t += span_of(m, b)
+    return t
+
+
+def critical_path_lower_bound(
+    dag: WorkflowDAG,
+    backend: Route = "xdt",
+    net: NetConstants = DEFAULT_NET,
+) -> float:
+    """Makespan lower bound of ``dag`` with *perfect* streaming overlap.
+
+    Models the best any chunking can do: every edge's transfer is pipelined
+    with its producer's compute, so a consumer can start no earlier than
+
+    ``start(producer) + max(compute(producer), marginal_transfer) + overhead``
+
+    — the data must both be produced (compute) and moved (marginal per-byte
+    time, whichever is slower bounds the pipeline) plus one request's fixed
+    overhead for the tail chunk.  Staged edges charge the consumer-side get
+    only (the producer's put overlaps its compute); sync edges charge the
+    full publish+retrieve model.  External original inputs are fetched at
+    consumer start.  Orchestration round-trips, cold starts, and FIFO
+    contention are excluded — that is what makes it a *bound*; fig13
+    measures how close streaming gets.
+    """
+    resolve = dag.route_resolver(backend)
+
+    def edge_rates(e: Edge) -> Tuple[str, float, float]:
+        """(medium, marginal seconds for this consumer's bytes, overhead)."""
+        m = resolve(e, e.nbytes)
+        if e.handoff == "sync":
+            per_consumer = e.nbytes * e.n_objects
+            ovh = modeled_transfer_seconds(m, 0, net)
+            marg = modeled_transfer_seconds(m, per_consumer, net) - ovh
+            return m, marg, ovh
+        if e.handoff == "external":
+            per_consumer = e.nbytes * e.n_objects
+        elif e.fanout == "broadcast":
+            per_consumer = e.nbytes * e.n_objects
+        else:
+            per_consumer = e.nbytes * e.n_objects * dag.by_name[e.src].fan
+        ovh = _staged_get_seconds(m, 0, net)
+        marg = _staged_get_seconds(m, per_consumer, net) - ovh
+        return m, marg, ovh
+
+    cstart: Dict[str, float] = {}        # compute start (after ext fetches)
+    finish: Dict[str, float] = {}
+
+    def avail_via(e: Edge) -> float:
+        """Earliest the consumer of ``e`` has its data: the producer's
+        compute start, plus whichever of production or pipelined transfer
+        is slower, plus one request overhead for the tail."""
+        _, marg, ovh = edge_rates(e)
+        return cstart[e.src] + max(dag.by_name[e.src].compute_s, marg) + ovh
+
+    def visit(name: str) -> None:
+        if name in finish:
+            return
+        s = dag.by_name[name]
+        t = 0.0
+        ext = 0.0
+        for e in dag.in_edges(s):
+            if e.src is None:
+                _, marg, ovh = edge_rates(e)
+                ext += ovh + marg            # fetched at consumer start
+                continue
+            visit(e.src)
+            t = max(t, avail_via(e))
+        cstart[name] = t + ext
+        finish[name] = t + ext + s.compute_s
+
+    cstart[dag.entry.name] = 0.0
+    finish[dag.entry.name] = dag.entry.compute_s
+    for s in dag.stages:
+        if s.name != dag.entry.name:
+            visit(s.name)
+    bound = max(finish.values())
+    gathers = dag.gather_edges()
+    if gathers or dag.entry.gather_compute_s > 0:
+        g = max((avail_via(e) for e in gathers), default=0.0)
+        bound = max(bound, g) + dag.entry.gather_compute_s
+    return bound
+
+
+# ---------------------------------------------------------------------------
 # Lowering 1: the calibrated cluster simulator (Fig 7 / Table 2 path)
 # ---------------------------------------------------------------------------
 
@@ -783,6 +1042,7 @@ def execute_on_cluster(
     scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
     plan: Any = None,
     fault_plan: Any = None,
+    online_spill: Any = None,
 ) -> ClusterDagRun:
     """Interpret ``dag`` on the calibrated discrete-event cluster.
 
@@ -812,6 +1072,26 @@ def execute_on_cluster(
     inject seeded per-get refusals (bounded re-attempts, then a durable
     re-route) and stretch pulls by the bandwidth-cut multiplier.  An empty
     or ``None`` plan changes nothing — the run stays bit-identical.
+
+    **Streaming edges** (``Edge(streaming=True, chunk_bytes=...)``) are
+    modeled analytically: the producer publishes chunks byte-proportionally
+    across its compute (the data-plane push rides the background, so a
+    streaming producer pays no staging tail), the consumer is data-triggered
+    — steered on the first chunk's publication, one control hop, then pulls
+    chunks as they land (:func:`_streamed_finish`) — and only the tail that
+    outlives the producer's compute is waited on the virtual clock.  Route
+    policies resolve **per chunk**, so one logical object may split across
+    media; ``online_spill`` (an :class:`~repro.core.dagopt.OnlineSpill`) is
+    consulted per chunk and may redirect the remaining chunks of a stream to
+    a durable medium mid-flight as the producer's predicted reap closes in.
+    The modeled finish is clamped to never exceed the store-then-fetch
+    equivalent (all chunks moved as one batch at producer completion), so
+    streaming can only help.  Under an active ``fault_plan`` the streamed
+    paths apply each medium's degradation slowdown to every batch but skip
+    per-get refusal draws and eviction recovery (those remain exercised by
+    the engine lowering's real chunk protocol); billing stays exact — one
+    logical PUT/GET per distinct storage medium per object (multipart
+    upload / ranged-GET semantics) with residency integrated on the clock.
     """
     n_nodes = sum(s.fan for s in dag.stages)
     cluster = ServerlessCluster(n_nodes, net, seed=seed, deterministic=deterministic)
@@ -918,6 +1198,48 @@ def execute_on_cluster(
     staged_media: Dict[str, Dict[int, List[str]]] = {
         e.label: {} for e in dag.edges if e.handoff == "staged"
     }
+    # streaming staged edges: label -> src_node -> per-object chunk tuples
+    # (ready_abs, nbytes, medium) in the same consumer-major put order as
+    # staged_media, recorded at the producer's compute end and replayed by
+    # the consumer's merged pull recurrence.
+    streamed_staged: Dict[str, Dict[int, List[List[Tuple[float, int, str]]]]] = {
+        e.label: {}
+        for e in dag.edges if e.handoff == "staged" and e.streaming
+    }
+
+    def chunk_media(
+        edge: Edge, sizes: Sequence[int], ready: Sequence[float],
+        compute_end: float,
+    ) -> List[str]:
+        """Per-chunk route resolution of one streamed object, with the
+        online spill re-check: as the predicted producer-reap window closes
+        in, the remaining chunks of the stream divert to a durable medium
+        mid-flight."""
+        media = []
+        for b, r in zip(sizes, ready):
+            m = _medium(edge, b, record=False)
+            if online_spill is not None and m not in _STORAGE_MEDIA:
+                # remaining production plus the modeled pull of this chunk:
+                # the horizon the producer's instance must survive
+                eta = (compute_end - r) + _staged_get_seconds(m, b, net)
+                m2 = online_spill.medium_for(dag, edge, m, r, eta)
+                if m2 != m:
+                    media_seen[edge.label].add(m2)
+                    m = m2
+            media.append(m)
+        return media
+
+    def streamed_spans(m: str, b: int, staged: bool) -> float:
+        """One batch-request's modeled seconds on ``m`` (get side only for
+        staged chunks — the producer's push overlapped its compute),
+        stretched by any active degradation window."""
+        dt = (
+            _staged_get_seconds(m, b, net) if staged
+            else modeled_transfer_seconds(m, b, net)
+        )
+        if faults is not None:
+            dt *= faults.slowdown_at(m)
+        return dt
 
     def xdt_pull_ev(u: EdgeUsage, src_node: int, dst_node: int, nbytes: int):
         """One xdt pull's data-plane event, honoring co-placement: the
@@ -997,6 +1319,106 @@ def execute_on_cluster(
             for _ in range(edge.n_objects)
         ]
 
+    def streamed_sync_fetch(edge: Edge, u: EdgeUsage) -> Generator:
+        """Streamed sync edge, consumer side: the producer published chunks
+        byte-proportionally across the compute that just ended (data-plane
+        push), the consumer was steered on the first chunk (one control
+        hop) and pulled as chunks landed; only the tail outliving the
+        producer's compute is waited here."""
+        sizes = list(edge.chunk_sizes())
+        compute_s = dag.by_name[edge.src].compute_s
+        offsets = _chunk_ready_offsets(compute_s, sizes)
+        t_end = sim.now                  # producer compute just ended
+        ready = [t_end - compute_s + off for off in offsets]
+        media = chunk_media(edge, sizes, ready, t_end)
+        # data-triggered activation: steered on the first chunk's
+        # publication event instead of the post-compute invoke round-trip
+        start = ready[0] + net.ctrl_plane_latency
+        finish = _streamed_finish(
+            start, ready, sizes, media,
+            lambda m, b: streamed_spans(m, b, False),
+        )
+        per_m: Dict[str, int] = {}
+        for m, b in zip(media, sizes):
+            per_m[m] = per_m.get(m, 0) + b
+        # clamp: one store-then-fetch batch at producer completion — the
+        # per-batch request overhead of chunking can only ever help
+        un = t_end + sum(
+            streamed_spans(m, b, False) for m, b in per_m.items()
+        )
+        if un < finish:
+            finish = un
+        for m, b in per_m.items():
+            u.count(m, b)
+            _observe(m, b)
+            if m in _STORAGE_MEDIA:
+                acct = cluster.accounting(m)
+                acct.n_storage_puts += 1
+                acct.store(sim.now, b / 1e9)
+                u.n_puts += 1
+        if finish > sim.now:
+            yield sim.timeout(finish - sim.now)
+        for m, b in per_m.items():
+            if m in _STORAGE_MEDIA:
+                acct = cluster.accounting(m)
+                acct.n_storage_gets += 1
+                acct.free(sim.now, b / 1e9)
+                u.n_gets += 1
+
+    def streamed_staged_fetch(edge: Edge, u: EdgeUsage, dst_node: int) -> Generator:
+        """Streamed staged edge, consumer side: every chunk of this
+        consumer's objects (media decided at publish time) merges into one
+        pull recurrence — a single-threaded data-plane puller draining
+        chunks in publication order."""
+        srcs = fetch_objects(edge)
+        n_pulls = (
+            dag.by_name[edge.dst].fan if edge.fanout == "broadcast" else 1
+        )
+        j = dst_node - nodes[edge.dst][0]
+        cursor: Dict[int, int] = {}
+        ready: List[float] = []
+        sizes: List[int] = []
+        media: List[str] = []
+        per_obj: List[Dict[str, int]] = []
+        for src_node in srcs:
+            i = cursor.get(src_node, 0)
+            cursor[src_node] = i + 1
+            objs = streamed_staged[edge.label][src_node]
+            chunks = objs[i if edge.fanout == "broadcast"
+                          else j * edge.n_objects + i]
+            om: Dict[str, int] = {}
+            for r, b, m in chunks:
+                ready.append(r)
+                sizes.append(b)
+                media.append(m)
+                om[m] = om.get(m, 0) + b
+            per_obj.append(om)
+        start = min(ready) + net.ctrl_plane_latency   # data-triggered steer
+        finish = _streamed_finish(
+            start, ready, sizes, media,
+            lambda m, b: streamed_spans(m, b, True),
+        )
+        # clamp: the store-then-fetch consumer pulls each object whole once
+        # everything was staged (the sequential sync-SDK loop)
+        un = max(ready) + sum(
+            streamed_spans(m, b, True) for om in per_obj for m, b in om.items()
+        )
+        if un < finish:
+            finish = un
+        for om in per_obj:
+            for m, b in om.items():
+                u.count(m, b)
+                _observe(m, b, retrievals=n_pulls)
+        if finish > sim.now:
+            yield sim.timeout(finish - sim.now)
+        for om in per_obj:
+            for m, b in om.items():
+                if m in _STORAGE_MEDIA:
+                    acct = cluster.accounting(m)
+                    acct.n_storage_gets += 1
+                    acct.free(sim.now, b / 1e9)
+                    u.n_gets += 1
+
     def consumer_fetch(edge: Edge, dst_node: int) -> Generator:
         """Consumer-side ops of one edge for one consumer instance."""
         u = usage[edge.label]
@@ -1004,19 +1426,24 @@ def execute_on_cluster(
         nbytes = edge.nbytes
         if edge.handoff == "sync":
             src_node = nodes[edge.src][0]
-            m = _medium(edge, nbytes)
-            u.count(m, nbytes)
-            if m in _STORAGE_MEDIA:
-                u.n_puts += 1
-                u.n_gets += 1
-                yield cluster.storage_put(m, src_node, nbytes)
-                yield cluster.invoke_ctrl()
-                yield cluster.storage_get(m, dst_node, nbytes)
-            elif m == "xdt":
-                yield cluster.invoke_ctrl()
-                yield xdt_pull_ev(u, src_node, dst_node, nbytes)
-            else:                       # inline: payload rides the response
-                yield cluster.inline_send(src_node, nbytes)
+            if edge.streaming:
+                yield from streamed_sync_fetch(edge, u)
+            else:
+                m = _medium(edge, nbytes)
+                u.count(m, nbytes)
+                if m in _STORAGE_MEDIA:
+                    u.n_puts += 1
+                    u.n_gets += 1
+                    yield cluster.storage_put(m, src_node, nbytes)
+                    yield cluster.invoke_ctrl()
+                    yield cluster.storage_get(m, dst_node, nbytes)
+                elif m == "xdt":
+                    yield cluster.invoke_ctrl()
+                    yield xdt_pull_ev(u, src_node, dst_node, nbytes)
+                else:                   # inline: payload rides the response
+                    yield cluster.inline_send(src_node, nbytes)
+        elif edge.streaming:
+            yield from streamed_staged_fetch(edge, u, dst_node)
         else:
             srcs = fetch_objects(edge)
             # broadcast: every consumer instance pulls the one staged copy
@@ -1071,6 +1498,37 @@ def execute_on_cluster(
             edge.n_objects if edge.fanout == "broadcast"
             else dag.by_name[edge.dst].fan * edge.n_objects
         )
+        if edge.streaming:
+            # Chunks were published byte-proportionally across the compute
+            # that just ended; the data-plane push rides the background, so
+            # a streaming producer pays NO staging tail — only the logical
+            # PUT bills (one per distinct storage medium per object,
+            # multipart-upload semantics) land here.
+            compute_s = dag.by_name[edge.src].compute_s
+            sizes = list(edge.chunk_sizes())
+            objs = streamed_staged[edge.label].setdefault(src_node, [])
+            total = n * edge.nbytes
+            acc = 0
+            for _ in range(n):
+                ready = []
+                for b in sizes:
+                    acc += b
+                    off = compute_s * acc / total if total else 0.0
+                    ready.append(sim.now - compute_s + off)
+                media = chunk_media(edge, sizes, ready, sim.now)
+                objs.append(list(zip(ready, sizes, media)))
+                per_m: Dict[str, int] = {}
+                for m, b in zip(media, sizes):
+                    per_m[m] = per_m.get(m, 0) + b
+                for m, b in per_m.items():
+                    if m in _STORAGE_MEDIA:
+                        acct = cluster.accounting(m)
+                        acct.n_storage_puts += 1
+                        acct.store(sim.now, b / 1e9)
+                        u.n_puts += 1
+            _mark_max(f"staged:{edge.label}")
+            u.put_s += sim.now - t0
+            return
         puts = staged_media[edge.label].setdefault(src_node, [])
         for _ in range(n):
             # the object's medium is decided HERE; consumers reuse it (the
@@ -1205,6 +1663,9 @@ class DagBinding:
     #: reserved inbox key carrying the caller's coords on affined spawns —
     #: never a valid edge label (labels come from stage names / user strings)
     _SRC_KEY = "#src"
+    #: reserved inbox key handing a wave producer its consumers' pre-created
+    #: ChunkStreams (the entry orchestrates streams; producers only push)
+    _STREAMS_KEY = "#streams"
 
     def __init__(
         self,
@@ -1216,10 +1677,15 @@ class DagBinding:
         handlers: Optional[Dict[str, Callable]] = None,
         autoscaler: Any = None,
         plan: Any = None,
+        online_spill: Any = None,
     ):
         self.dag = dag
         self.engine = engine
         self.plan = plan
+        #: optional :class:`~repro.core.dagopt.OnlineSpill` — consulted per
+        #: chunk so remaining chunks of a streamed edge divert to durable
+        #: media when the producer's live reap window closes in
+        self.online_spill = online_spill
         # co-placement hints: the spawner forwards the affinity producer's
         # instance coords to the callee's steer (blocking children are
         # spawned by their producer; wave stages by the entry, which learns
@@ -1273,6 +1739,12 @@ class DagBinding:
         }
         self._waves: List[List[Stage]] = dag.orchestrated_waves()
         self._gathers: List[Edge] = dag.gather_edges()
+        self._streaming: List[Edge] = [e for e in dag.edges if e.streaming]
+        if self._streaming and self._STREAMS_KEY in {e.label for e in dag.edges}:
+            raise ValueError(
+                f"edge label {self._STREAMS_KEY!r} collides with the "
+                "binding's reserved stream-handoff key"
+            )
         self.edge_usage: Dict[str, EdgeUsage] = {
             e.label: EdgeUsage() for e in dag.edges
         }
@@ -1295,11 +1767,23 @@ class DagBinding:
         if unknown:
             raise ValueError(f"handlers for unknown stages: {sorted(unknown)}")
         for stage in dag.stages:
+            svc = stage.compute_s
+            if any(e.streaming for e in self._out_edges[stage.name]):
+                if stage.name in handlers:
+                    raise ValueError(
+                        f"stage {stage.name!r} has streaming out-edges: its "
+                        "handler must pace chunk publication across the "
+                        "compute window, so a custom handler cannot be bound"
+                    )
+                # the streaming handler self-paces compute as numeric yields
+                # interleaved with chunk publication; registering the compute
+                # as service_time on top would double-charge it
+                svc = 0.0
             engine.register(
                 self._fn(stage.name),
                 handlers.get(stage.name) or self._make_handler(stage),
                 policy=default_policy(stage),
-                service_time=stage.compute_s,
+                service_time=svc,
             )
 
     def _fn(self, stage_name: str) -> str:
@@ -1373,6 +1857,116 @@ class DagBinding:
             out.append(arr)
         return out
 
+    # -- streaming edges (chunk protocol) ----------------------------------
+    def _chunk_medium(self, edge: Edge, nbytes: int, remaining_s: float) -> str:
+        """Route one chunk; consult the online spill so chunks published
+        late in the producer's reap window divert to durable media."""
+        medium = self._resolve(edge, nbytes)
+        if self.online_spill is not None and medium not in _STORAGE_MEDIA:
+            eta = remaining_s + modeled_transfer_seconds(
+                medium, nbytes, self.engine.transfer.net
+            )
+            medium = self.online_spill.medium_for(
+                self.dag, edge, medium, self.engine.sim.now, eta
+            )
+        return medium
+
+    def _produce_streams(self, ctx, stage: Stage, edges: List[Edge], streams, fill):
+        """Publish every streaming out-edge's chunks, pacing the stage's
+        compute as numeric yields so each chunk lands at its byte-
+        proportional offset — the cluster lowering's production model.
+        Objects/consumers follow ``_put_for_consumers``'s order; routing is
+        per chunk (one logical object may split across media) and service-
+        backend request fees bill once per (object, medium) — multipart
+        upload semantics.  Streams seal in a ``finally`` so parked consumers
+        always resume, even when production dies mid-flight."""
+        dag = self.dag
+        compute_s = stage.compute_s
+        sched: List[Tuple[float, int, Edge, Optional[int], Any, int]] = []
+        fan_dst: Dict[str, int] = {}
+        n = 0
+        for edge in edges:
+            fd = 1 if edge.dst == dag.entry.name else dag.by_name[edge.dst].fan
+            fan_dst[edge.label] = fd
+            sizes = edge.chunk_sizes()
+            rows = 1 if edge.fanout == "broadcast" else fd
+            total = float(edge.nbytes * edge.n_objects * rows)
+            acc = 0
+            for row in range(rows):
+                for _ in range(edge.n_objects):
+                    tok = object()
+                    for b in sizes:
+                        acc += b
+                        off = compute_s * (acc / total) if total else 0.0
+                        j = None if edge.fanout == "broadcast" else row
+                        sched.append((off, n, edge, j, tok, b))
+                        n += 1
+        sched.sort(key=lambda item: (item[0], item[1]))
+        seen: Dict[Any, set] = {}
+        try:
+            t = 0.0
+            for off, _, edge, j, tok, b in sched:
+                if off > t:
+                    yield off - t
+                    t = off
+                medium = self._chunk_medium(edge, b, compute_s - t)
+                media = seen.setdefault(tok, set())
+                bill = medium not in media
+                media.add(medium)
+                arr = np.full(
+                    (max(1, int(b * self.bytes_scale) // 4),), fill, np.float32
+                )
+                ref = ctx.put_chunk(
+                    arr,
+                    n_retrievals=fan_dst[edge.label] if j is None else 1,
+                    backend=medium,
+                    bill_put=bill,
+                )
+                u = self.edge_usage[edge.label]
+                u.count(medium, arr.nbytes)
+                if bill:
+                    u.n_puts += 1
+                if j is None:        # broadcast: every consumer sees the ref
+                    for s in streams[edge.label]:
+                        s.push(ref, medium, tok)
+                else:
+                    streams[edge.label][j].push(ref, medium, tok)
+            if compute_s > t:
+                yield compute_s - t
+        finally:
+            for edge in edges:
+                for s in streams[edge.label]:
+                    s.seal()
+
+    def _drain_stream(self, ctx, edge: Edge, stream, local: bool = False):
+        """Pull a stream's chunks as they publish, parking on the stream's
+        ``more`` event between publications — the data-triggered consumer's
+        wait-for-data, in virtual time.  Request fees bill once per
+        (object, medium): a ranged multi-GET of each object's chunk run."""
+        stats = self.engine.transfer.stats
+        u = self.edge_usage[edge.label]
+        vals: List[Any] = []
+        seen: set = set()
+        i = 0
+        while True:
+            while i < len(stream.refs):
+                ref = stream.refs[i]
+                medium = stream.media[i]
+                key = (stream.objs[i], medium)
+                bill = key not in seen
+                seen.add(key)
+                before = stats.modeled_seconds
+                before_local = stats.local_pulls
+                vals.append(ctx.get_chunk(ref, local=local, bill_get=bill))
+                if bill:
+                    u.n_gets += 1
+                u.n_local += stats.local_pulls - before_local
+                u.modeled_s += stats.modeled_seconds - before
+                i += 1
+            if stream.sealed:
+                return vals
+            yield stream.more
+
     # -- handlers ----------------------------------------------------------
     def _make_handler(self, stage: Stage):
         dag = self.dag
@@ -1380,6 +1974,10 @@ class DagBinding:
             return self._make_entry_handler(stage)
         in_edges = self._in_edges[stage.name]
         out_edges = self._out_edges[stage.name]
+        if any(e.streaming for e in in_edges) or any(
+            e.streaming for e in out_edges
+        ):
+            return self._make_streaming_handler(stage)
         children = self._children[stage.name]
         aff_producer = self._affinity.get(stage.name)
         src_key = self._SRC_KEY
@@ -1437,7 +2035,120 @@ class DagBinding:
 
         return handler
 
+    def _make_streaming_handler(self, stage: Stage):
+        """Stage-handler variant for stages touched by streaming edges.
+
+        Streaming inputs drain from :class:`~repro.core.workflow.ChunkStream`
+        mailboxes (parking between publications); streaming outputs publish
+        paced chunks; and blocking children fed by a streaming edge spawn
+        BEFORE production — data-triggered activation: the child is steered
+        and pulling on the first chunk's arrival event instead of after this
+        handler's orchestration round-trip.  Wave producers find their
+        consumers' streams pre-created by the entry under ``#streams``.
+        Stages no streaming edge touches keep the stock handler, so
+        ``streaming=False`` runs are bit-identical."""
+        from .workflow import ChunkStream
+
+        dag = self.dag
+        in_edges = self._in_edges[stage.name]
+        out_edges = self._out_edges[stage.name]
+        children = self._children[stage.name]
+        aff_producer = self._affinity.get(stage.name)
+        src_key = self._SRC_KEY
+        streams_key = self._STREAMS_KEY
+        stream_out = [e for e in out_edges if e.streaming]
+        sim = self.engine.sim
+
+        def handler(ctx, payload):
+            fill, inbox = payload
+            src_coords = inbox.get(src_key)
+            co_located = (
+                src_coords is not None and ctx.instance is not None
+                and ctx.instance.coords == src_coords
+            )
+            values: Dict[str, List[Any]] = {}
+            for edge in in_edges:
+                if edge.handoff == "external":
+                    values[edge.label] = self._consume_external(ctx, edge, fill)
+                    continue
+                local = co_located and edge.src == aff_producer
+                if edge.streaming:
+                    values[edge.label] = yield from self._drain_stream(
+                        ctx, edge, inbox[edge.label], local=local
+                    )
+                else:
+                    values[edge.label] = [
+                        self._get(ctx, edge, r, local=local)
+                        for r in inbox[edge.label]
+                    ]
+            out: Dict[str, List[List[Any]]] = {}
+            for edge in out_edges:
+                if not edge.streaming:
+                    out[edge.label] = self._put_for_consumers(ctx, edge, fill)
+            # streaming outputs: wave producers got their consumers' streams
+            # from the entry; streams to blocking children are minted here,
+            # and those children spawn NOW — before production
+            streams = dict(inbox.get(streams_key) or {})
+            spawned: Dict[str, List[Any]] = {}
+            for child in children:
+                edge = self._in_edges[child.name][0]
+                if not edge.streaming:
+                    continue
+                streams[edge.label] = [ChunkStream(sim) for _ in range(child.fan)]
+                affine = (
+                    self._affinity.get(child.name) == stage.name
+                    and ctx.instance is not None
+                )
+                handles = []
+                for j in range(child.fan):
+                    box = {edge.label: streams[edge.label][j]}
+                    if affine:
+                        box[src_key] = ctx.instance.coords
+                    handles.append(ctx.call(
+                        self._fn(child.name), (fill, box),
+                        affinity=ctx.instance.coords if affine else None,
+                    ))
+                spawned[child.name] = handles
+            missing = [e.label for e in stream_out if e.label not in streams]
+            if missing:
+                raise RuntimeError(
+                    f"no ChunkStreams for streaming out-edges {missing}: a "
+                    "streaming consumer must be a blocking child or an "
+                    "orchestrated wave stage"
+                )
+            if stream_out:
+                yield from self._produce_streams(
+                    ctx, stage, stream_out, streams, fill
+                )
+            for child in children:
+                handles = spawned.get(child.name)
+                if handles is None:
+                    edge = self._in_edges[child.name][0]
+                    affine = (
+                        self._affinity.get(child.name) == stage.name
+                        and ctx.instance is not None
+                    )
+                    handles = []
+                    for j in range(child.fan):
+                        box = {edge.label: out[edge.label][j]}
+                        if affine:
+                            box[src_key] = ctx.instance.coords
+                        handles.append(ctx.call(
+                            self._fn(child.name), (fill, box),
+                            affinity=ctx.instance.coords if affine else None,
+                        ))
+                yield handles
+            checksum = float(
+                sum(float(np.sum(v)) for vs in values.values() for v in vs)
+            )
+            coords = ctx.instance.coords if ctx.instance is not None else None
+            return {"out": out, "sum": checksum, "coords": coords}
+
+        return handler
+
     def _make_entry_handler(self, entry: Stage):
+        if self._streaming:
+            return self._make_streaming_entry_handler(entry)
         out_edges = self._out_edges[entry.name]
         children = self._children[entry.name]
         waves = self._waves
@@ -1515,6 +2226,228 @@ class DagBinding:
 
         return handler
 
+    def _make_streaming_entry_handler(self, entry: Stage):
+        """Entry-handler variant used whenever the DAG has streaming edges.
+
+        Blocking-children mode mirrors the stage handler: children fed by a
+        streaming edge spawn before production.  Orchestrated-wave mode is
+        where data-triggered activation pays off: the entry pre-creates one
+        ChunkStream per (edge, consumer instance), hands each wave producer
+        its consumers' streams via the reserved ``#streams`` inbox key, and
+        arms the consumer spawn on each stream's first-chunk event — so
+        while the entry is parked on the producer wave's fan-in barrier,
+        consumers whose inputs all stream are steered and pulling the moment
+        data lands, not after the producer wave returns."""
+        from .workflow import ChunkStream
+
+        dag = self.dag
+        out_edges = self._out_edges[entry.name]
+        children = self._children[entry.name]
+        waves = self._waves
+        gathers = self._gathers
+        in_edges = self._in_edges
+        out_edges_of = self._out_edges
+        streaming = self._streaming
+        src_key = self._SRC_KEY
+        streams_key = self._STREAMS_KEY
+        sim = self.engine.sim
+        entry_stream_out = [e for e in out_edges if e.streaming]
+
+        def handler(ctx, fill):
+            fill = float(fill) if np.isscalar(fill) else 1.0
+            out: Dict[str, List[List[Any]]] = {}
+            for edge in out_edges:
+                if not edge.streaming:
+                    out[edge.label] = self._put_for_consumers(ctx, edge, fill)
+            if children:
+                streams: Dict[str, List[Any]] = {}
+                spawned: Dict[str, List[Any]] = {}
+                for child in children:
+                    edge = in_edges[child.name][0]
+                    if not edge.streaming:
+                        continue
+                    streams[edge.label] = [
+                        ChunkStream(sim) for _ in range(child.fan)
+                    ]
+                    affine = (
+                        self._affinity.get(child.name) == entry.name
+                        and ctx.instance is not None
+                    )
+                    handles = []
+                    for j in range(child.fan):
+                        box = {edge.label: streams[edge.label][j]}
+                        if affine:
+                            box[src_key] = ctx.instance.coords
+                        handles.append(ctx.call(
+                            self._fn(child.name), (fill, box),
+                            affinity=ctx.instance.coords if affine else None,
+                        ))
+                    spawned[child.name] = handles
+                missing = [
+                    e.label for e in entry_stream_out if e.label not in streams
+                ]
+                if missing:
+                    raise RuntimeError(
+                        f"no ChunkStreams for streaming out-edges {missing}: "
+                        "a streaming consumer must be a blocking child or an "
+                        "orchestrated wave stage"
+                    )
+                if entry_stream_out:
+                    yield from self._produce_streams(
+                        ctx, entry, entry_stream_out, streams, fill
+                    )
+                total = 0.0
+                for child in children:
+                    handles = spawned.get(child.name)
+                    if handles is None:
+                        edge = in_edges[child.name][0]
+                        affine = (
+                            self._affinity.get(child.name) == entry.name
+                            and ctx.instance is not None
+                        )
+                        handles = []
+                        for j in range(child.fan):
+                            box = {edge.label: out[edge.label][j]}
+                            if affine:
+                                box[src_key] = ctx.instance.coords
+                            handles.append(ctx.call(
+                                self._fn(child.name), (fill, box),
+                                affinity=(
+                                    ctx.instance.coords if affine else None
+                                ),
+                            ))
+                    results = yield handles
+                    total += sum(r["sum"] for r in results)
+                return total
+            # orchestrated waves: every streaming edge's per-consumer
+            # streams exist before any producer runs
+            pools: Dict[str, List[List[Any]]] = dict(out)
+            streams = {}
+            for e in streaming:
+                fd = 1 if e.dst == entry.name else dag.by_name[e.dst].fan
+                fs = 1 if e.src == entry.name else dag.by_name[e.src].fan
+                streams[e.label] = [
+                    ChunkStream(sim, n_producers=fs) for _ in range(fd)
+                ]
+
+            def out_streams(s: Stage) -> Dict[str, List[Any]]:
+                return {
+                    e.label: streams[e.label]
+                    for e in out_edges_of[s.name] if e.streaming
+                }
+
+            # arm data-triggered spawns: a wave stage whose every
+            # (non-external) input streams spawns instance j on the first
+            # chunk event of any of j's streams
+            early: Dict[str, List[Any]] = {}
+            pending: Dict[str, set] = {}
+
+            def arm(s: Stage) -> None:
+                sedges = [
+                    e for e in in_edges[s.name] if e.handoff != "external"
+                ]
+                outs = out_streams(s)
+                hs: List[Any] = [None] * s.fan
+                todo = set(range(s.fan))
+
+                def mk(j: int):
+                    def trigger():
+                        if j not in todo:
+                            return
+                        todo.discard(j)
+                        box = {e.label: streams[e.label][j] for e in sedges}
+                        if outs:
+                            box[streams_key] = dict(outs)
+                        hs[j] = ctx.call(self._fn(s.name), (fill, box))
+                    return trigger
+
+                for j in range(s.fan):
+                    for e in sedges:
+                        streams[e.label][j].first.add_waiter(mk(j))
+                early[s.name] = hs
+                pending[s.name] = todo
+
+            for wave in waves:
+                for s in wave:
+                    sedges = [
+                        e for e in in_edges[s.name] if e.handoff != "external"
+                    ]
+                    if sedges and all(e.streaming for e in sedges):
+                        arm(s)
+            stage_coords: Dict[str, Any] = {}
+            if ctx.instance is not None:
+                stage_coords[entry.name] = ctx.instance.coords
+            if entry_stream_out:
+                yield from self._produce_streams(
+                    ctx, entry, entry_stream_out, streams, fill
+                )
+            total = 0.0
+            for wave in waves:
+                handles, owners = [], []
+                for s in wave:
+                    if s.name in early:
+                        # producers sealed their streams, so the first-chunk
+                        # triggers have fired; spawn any stragglers (defense)
+                        hs = early[s.name]
+                        for j in sorted(pending[s.name]):
+                            box = {
+                                e.label: streams[e.label][j]
+                                for e in in_edges[s.name]
+                                if e.handoff != "external"
+                            }
+                            outs = out_streams(s)
+                            if outs:
+                                box[streams_key] = outs
+                            hs[j] = ctx.call(self._fn(s.name), (fill, box))
+                        pending[s.name].clear()
+                        handles.extend(hs)
+                        owners.extend(s for _ in hs)
+                        continue
+                    prod_coords = stage_coords.get(self._affinity.get(s.name))
+                    outs = out_streams(s)
+                    for j in range(s.fan):
+                        inbox = {
+                            e.label: (
+                                streams[e.label][j] if e.streaming
+                                else pools[e.label][j]
+                            )
+                            for e in in_edges[s.name]
+                            if e.handoff != "external"
+                        }
+                        if outs:
+                            inbox[streams_key] = dict(outs)
+                        if prod_coords is not None:
+                            inbox[src_key] = prod_coords
+                        handles.append(ctx.call(
+                            self._fn(s.name), (fill, inbox),
+                            affinity=prod_coords,
+                        ))
+                        owners.append(s)
+                results = yield handles
+                for s, res in zip(owners, results):
+                    if s.fan == 1:
+                        stage_coords[s.name] = res.get("coords")
+                    for label, per_consumer in res["out"].items():
+                        pool = pools.setdefault(
+                            label, [[] for _ in per_consumer]
+                        )
+                        for j, refs in enumerate(per_consumer):
+                            pool[j].extend(refs)
+            for edge in gathers:
+                if edge.streaming:
+                    vals = yield from self._drain_stream(
+                        ctx, edge, streams[edge.label][0]
+                    )
+                    total += sum(float(np.sum(v)) for v in vals)
+                else:
+                    for r in pools.get(edge.label, [[]])[0]:
+                        total += float(np.sum(self._get(ctx, edge, r)))
+            if entry.gather_compute_s > 0:
+                ctx.sleep(entry.gather_compute_s)
+            return total
+
+        return handler
+
     # -- reporting ---------------------------------------------------------
     def media_storage_ops(self) -> Dict[str, StorageOps]:
         """Per-medium storage ops of the engine's run so far: the transfer
@@ -1558,5 +2491,6 @@ __all__ = [
     "SizeRoute",
     "Stage",
     "WorkflowDAG",
+    "critical_path_lower_bound",
     "execute_on_cluster",
 ]

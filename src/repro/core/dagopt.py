@@ -491,6 +491,70 @@ class PredictiveSpill(GraphPass):
         return WorkflowDAG(dag.name, dag.stages, new_edges), plan
 
 
+class OnlineSpill:
+    """Per-run, mid-stream staged->durable spill (the *online* half of
+    :class:`PredictiveSpill`).
+
+    PredictiveSpill is a compile-time pass: it rewrites edges once, from the
+    telemetry snapshot at optimize() time.  Streaming edges expose the gap —
+    a producer's reap window can close *between chunks*, long after the plan
+    was cut.  Both lowerings therefore consult an OnlineSpill instance per
+    chunk: :meth:`medium_for` re-reads the producer deployment's live reap
+    window and redirects the *remaining* chunks to durable media when the
+    expected instance lifetime no longer covers the consumer's estimated
+    pull completion (``eta_s``).  Already-published chunks stay where they
+    landed — the object legitimately splits across media, which the chunk
+    protocol's per-chunk route resolution already supports.
+    """
+
+    def __init__(
+        self,
+        telemetry: TelemetryHub,
+        durable: str = "s3",
+        keep_alive_s: float = 60.0,
+        cold_start_s: float = 0.5,
+        safety: float = 1.0,
+    ):
+        if durable not in DURABLE_MEDIA:
+            raise ValueError(
+                f"spill target must be durable {DURABLE_MEDIA}, got {durable!r}"
+            )
+        self.telemetry = telemetry
+        self.durable = durable
+        self.keep_alive_s = keep_alive_s
+        self.cold_start_s = cold_start_s
+        self.safety = safety
+        #: (edge_label, from_medium, now, eta_s) for every redirect issued
+        self.spills: List[Tuple[str, str, float, float]] = []
+
+    def _feed(self, dag: WorkflowDAG, stage_name: str):
+        hub = self.telemetry
+        return (
+            hub.deployments.get(stage_name)
+            or hub.deployments.get(f"{dag.name}.{stage_name}")
+        )
+
+    def medium_for(
+        self, dag: WorkflowDAG, edge: Edge, medium: str, now: float, eta_s: float
+    ) -> str:
+        """Medium the next chunk of ``edge`` should land on.
+
+        ``medium`` is what the route resolved; ``now`` is the chunk's
+        publication time and ``eta_s`` the estimated delay until the
+        consumer has pulled it.  Durable media pass through untouched."""
+        if medium in DURABLE_MEDIA or edge.src is None:
+            return medium
+        life = self.keep_alive_s
+        feed = self._feed(dag, edge.src)
+        if feed is not None:
+            life = min(life, feed.expected_instance_lifetime_s(now))
+        pull = eta_s + self.cold_start_s
+        if math.isfinite(life) and life < self.safety * pull:
+            self.spills.append((edge.label, medium, now, eta_s))
+            return self.durable
+        return medium
+
+
 # ---------------------------------------------------------------------------
 # Pass registry + the optimize() entry point
 # ---------------------------------------------------------------------------
@@ -562,6 +626,7 @@ __all__ = [
     "DEFAULT_PASSES",
     "DURABLE_MEDIA",
     "GraphPass",
+    "OnlineSpill",
     "PlacementPlan",
     "PredictiveSpill",
     "SyncChainFusion",

@@ -948,6 +948,85 @@ class TransferEngine:
             self.telemetry.record_transfer(medium, nbytes, modeled, fee)
         return obj
 
+    # ------------------------------------------------------- chunk protocol
+    def _credit_storage_requests(
+        self, medium: str, *, puts: int = 0, gets: int = 0
+    ) -> None:
+        """Roll back storage *request* counts on the op that just billed
+        them (service store + engine + per-medium accounting): chunks of one
+        streamed logical object share a single multipart-upload PUT and a
+        single ranged GET per medium, so only the first chunk's requests
+        stand.  Residency (gb-seconds) and modeled seconds stay per chunk —
+        bytes really are stored and moved chunk by chunk."""
+        for a in (self.service.acct, self.acct, self._acct_for(medium)):
+            a.n_storage_puts -= puts
+            a.n_storage_gets -= gets
+
+    def put_chunk(
+        self,
+        obj: jax.Array,
+        n_retrievals: int = 1,
+        *,
+        backend: Optional[str] = None,
+        bill_put: bool = True,
+    ) -> XDTRef:
+        """Register one chunk of a streamed logical object.
+
+        A chunk is an ordinary ref on ``backend`` — consumers pull it with
+        :meth:`get_chunk`, producer death drops un-pulled instance-resident
+        chunks exactly like whole objects (:class:`XDTProducerGone` drives
+        the engine's retry path).  ``bill_put=False`` marks a continuation
+        chunk of an object whose first chunk already billed the storage PUT
+        request on this medium (multipart-upload semantics): the request
+        count is credited back while residency stays per chunk.
+
+        ``backend="inline"`` is refused: a chunk outlives the sync handoff
+        message it would have to ride (the same reason staged/external
+        objects can't inline).
+        """
+        medium = self.backend if backend is None else backend
+        if medium == "inline":
+            raise ValueError(
+                "streaming chunks cannot ride 'inline': a chunk outlives "
+                "the sync handoff message"
+            )
+        ref = self.put(obj, n_retrievals, backend=backend)
+        if not bill_put and isinstance(self._strategy(medium), _ServiceBackend):
+            self._credit_storage_requests(medium, puts=1)
+        return ref
+
+    def get_chunk(
+        self,
+        ref: XDTRef,
+        *,
+        local: bool = False,
+        bill_get: bool = False,
+    ) -> jax.Array:
+        """One chunk retrieval (see :meth:`put_chunk`).
+
+        ``bill_get=True`` marks the first chunk a consumer pulls from a
+        given (object, medium) pair — that one keeps its storage GET
+        request; continuation chunks ride the same ranged GET and credit
+        the request count back.  Continuation chunks also shed the
+        per-request latency overhead from the modeled pull time (the
+        connection is already open; only the marginal stream time of the
+        extra bytes remains) — mirroring the cluster lowering, which
+        coalesces a batch of ready chunks into one request per medium."""
+        before = self.stats.modeled_seconds
+        obj = self.get(ref, local=local)
+        if not bill_get:
+            if type(ref) is SealedRef and ref._minter is self.minter:
+                medium = ref._payload.medium or self.backend
+            else:
+                medium = self.minter.open(ref).medium or self.backend
+            if isinstance(self._strategy(medium), _ServiceBackend):
+                self._credit_storage_requests(medium, gets=1)
+            delta = self.stats.modeled_seconds - before
+            overhead = modeled_transfer_seconds(medium, 0, self.net)
+            if overhead > 0.0 and delta > 0.0:
+                self.stats.modeled_seconds -= min(overhead, delta)
+        return obj
+
     # --------------------------------------------------------------- invoke
     def invoke(
         self,

@@ -375,6 +375,64 @@ class _FanIn:
             task.sim._ready.append(task)
 
 
+class ChunkStream:
+    """Producer->consumer chunk mailbox of ONE streamed logical object.
+
+    The producer interleaves compute slices with :meth:`push` (a ref per
+    chunk, already ``put`` on its resolved medium) and :meth:`seal` when the
+    object is complete.  Consumers drain ``refs`` by cursor and ``yield``
+    the :attr:`more` event to park until the next publication; ``first``
+    fires on the very first chunk — the engine lowering registers
+    data-triggered activation on it, so a consumer is steered the moment
+    its input starts landing instead of after the producer's orchestration
+    round-trip.  After ``seal`` the ``more`` event stays fired, so a late
+    consumer drains the backlog without ever parking.
+    """
+
+    __slots__ = ("sim", "refs", "media", "objs", "sealed", "first", "_more",
+                 "_open_producers")
+
+    def __init__(self, sim: Simulator, n_producers: int = 1):
+        self.sim = sim
+        self.refs: List[XDTRef] = []
+        self.media: List[str] = []
+        #: per-chunk logical-object token: chunks sharing a token are ranges
+        #: of ONE object, so storage requests bill once per (token, medium)
+        self.objs: List[Any] = []
+        self.sealed = False
+        self.first = Event(sim)
+        self._more = Event(sim)
+        # fan-in seal: a wave edge's consumer stream is fed by every
+        # producer instance; the stream seals when the LAST producer does
+        self._open_producers = n_producers
+
+    @property
+    def more(self) -> Event:
+        """The event the NEXT push (or seal) fires; permanently fired once
+        sealed, so post-seal waits resume immediately."""
+        return self._more
+
+    def push(self, ref: XDTRef, medium: str, obj: Any) -> None:
+        if self.sealed:
+            raise RuntimeError("push() on a sealed ChunkStream")
+        self.refs.append(ref)
+        self.media.append(medium)
+        self.objs.append(obj)
+        if not self.first.fired:
+            self.first.set()
+        ev, self._more = self._more, Event(self.sim)
+        ev.set()
+
+    def seal(self) -> None:
+        self._open_producers -= 1
+        if self._open_producers > 0:
+            return
+        self.sealed = True
+        if not self.first.fired:
+            self.first.set()
+        self._more.set()                # stays fired for late consumers
+
+
 class Context:
     """Per-invocation SDK handle given to user handlers."""
 
@@ -437,6 +495,33 @@ class Context:
         before = stats.modeled_seconds
         obj = self._engine.transfer.get(ref, local=local)
         # the modeled pull latency becomes virtual time owed by this function
+        self._debt += stats.modeled_seconds - before
+        return obj
+
+    def put_chunk(
+        self,
+        obj: Any,
+        n_retrievals: int = 1,
+        backend: Optional[str] = None,
+        bill_put: bool = True,
+    ) -> XDTRef:
+        """Publish one chunk of a streamed logical object.
+
+        Same medium semantics as :meth:`put`; ``bill_put=False`` suppresses
+        the per-request PUT fee on service backends (multipart upload: one
+        logical PUT per object, the first chunk pays it)."""
+        return self._engine.transfer.put_chunk(
+            obj, n_retrievals, backend=backend, bill_put=bill_put
+        )
+
+    def get_chunk(self, ref: XDTRef, local: bool = False, bill_get: bool = False) -> Any:
+        """Pull one chunk; the modeled latency accrues as debt exactly like
+        :meth:`get`.  ``bill_get=False`` (default) folds the request into the
+        object's single ranged GET per medium — pass ``True`` on the first
+        chunk pulled from each medium."""
+        stats = self._engine.transfer.stats
+        before = stats.modeled_seconds
+        obj = self._engine.transfer.get_chunk(ref, local=local, bill_get=bill_get)
         self._debt += stats.modeled_seconds - before
         return obj
 

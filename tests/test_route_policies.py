@@ -314,6 +314,68 @@ def test_fee_feed_apportions_put_across_retrievals():
     assert tel.fee_usd_total == pytest.approx(expected)
 
 
+def test_adaptive_timed_reprobe_recovers_blacked_out_primary():
+    """Blacklist recovery (the ROADMAP chaos gap): a fig12-style
+    ``medium_blackout`` poisons the primary's windowed p99 with penalty
+    samples, so a probe-free router (``explore_every=0``) filters it out of
+    the budget-feasible set on every resolve — and with no traffic its
+    window never refills, so the blackout outlives the fault.  The
+    time-decayed re-probe routes the primary one object once it has gone
+    unpicked long enough, which is exactly what restores its traffic after
+    the window closes."""
+    from repro.core.dag import FixedRoute
+    from repro.core.faults import FaultInjector, FaultPlan
+
+    nb = 64 << 10
+    at_s, duration_s = 1.0, 6.0
+    window_end = at_s + duration_s
+    edge = _edge(handoff="staged", nbytes=nb, latency_budget_s=0.06)
+
+    def run(reprobe_after_s):
+        eng = WorkflowEngine(backend="xdt", max_retries=2)
+        eng.transfer.telemetry = TelemetryHub(eng.transfer.clock)
+        route = AdaptiveRoute(
+            telemetry=eng.transfer.telemetry,
+            static=FixedRoute("elasticache"),     # the primary under attack
+            explore_every=0,                      # count probes disabled
+            reprobe_after_s=reprobe_after_s,
+        )
+        picks = []
+
+        def flow(ctx, x):
+            medium = route.resolve(edge, nb, True)
+            picks.append((eng.sim.now, medium))
+            ref = ctx.put(np.ones(nb // 4, np.float32), backend=medium)
+            return float(np.sum(ctx.get(ref)))
+
+        eng.register("flow", flow, policy=ScalingPolicy(max_instances=8))
+        plan = FaultPlan.medium_blackout(
+            medium="elasticache", at_s=at_s, duration_s=duration_s, seed=7
+        )
+        FaultInjector(eng, plan).install()
+        for i in range(30):
+            eng.sim.schedule_abs(float(i), lambda: eng.submit("flow", 1.0))
+        eng.drain()
+        assert eng.failed_requests == 0          # route-around still holds
+        assert eng.retry_max <= eng.max_retries
+        return picks
+
+    locked = run(0.0)
+    # pre-fault the primary carries the traffic...
+    assert any(m == "elasticache" for t, m in locked if t < at_s)
+    # ...but once penalty samples poison its p99, a probe-free router never
+    # routes to it again, even long after the window closed
+    assert all(m != "elasticache" for t, m in locked if t >= window_end)
+
+    recovered = run(2.0)
+    healthy_picks = [
+        m for t, m in recovered if t >= window_end and m == "elasticache"
+    ]
+    assert len(healthy_picks) >= 2               # probed again, repeatedly
+    # and the probes really ran: the primary's feed refilled post-window
+    assert recovered[-1][1] in ("s3", "elasticache")
+
+
 def test_adaptive_engine_lowering_binds_transfer_telemetry():
     """dag.bind wires the engine's TransferEngine telemetry into an unbound
     AdaptiveRoute, so routing feeds on the engine's real pulls."""

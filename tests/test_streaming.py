@@ -1,0 +1,255 @@
+"""Streaming edges: chunk protocol, billing equivalence, mid-stream faults.
+
+The tentpole invariants, pinned on both lowerings:
+
+* a FixedRoute streaming edge *bills identically* to the whole-object edge —
+  per-chunk route resolution plus once-per-(object, medium) request billing
+  must coalesce to one PUT + one (ranged) GET per object, on every backend;
+* streaming never loses on makespan (the modeled finish clamps to the
+  store-then-fetch equivalent);
+* a producer killed mid-stream surfaces as a normal bounded retry — chunks
+  already pulled don't exempt the consumer from the producer's death;
+* ``OnlineSpill`` redirects the *remaining* chunks of a live stream to
+  durable media when the producer's reap window closes in.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    Edge,
+    Stage,
+    TelemetryHub,
+    WorkflowDAG,
+    WorkflowEngine,
+)
+from repro.core.dag import (
+    FixedRoute,
+    SizeRoute,
+    critical_path_lower_bound,
+    execute_on_cluster,
+)
+from repro.core.dagopt import OnlineSpill
+from repro.core.workloads import DAGS
+
+BACKENDS = ("s3", "elasticache", "xdt")
+STREAM_EDGES = {"vid": ("fragment", "frames"), "mr": ("shuffle",)}
+CHUNK = 1 << 20
+
+
+def _variant(dag, chunk_bytes=CHUNK):
+    edges = [
+        dataclasses.replace(e, streaming=True, chunk_bytes=chunk_bytes)
+        if e.label in STREAM_EDGES[dag.name] else e
+        for e in dag.edges
+    ]
+    return WorkflowDAG(dag.name, dag.stages, edges)
+
+
+# -- declaration-time validation ---------------------------------------------
+
+
+def test_streaming_edge_validation():
+    with pytest.raises(ValueError, match="chunk_bytes"):
+        Edge("p", "c", 1 << 20, streaming=True)
+    with pytest.raises(ValueError, match="chunk_bytes requires"):
+        Edge("p", "c", 1 << 20, chunk_bytes=4096)
+    with pytest.raises(ValueError, match="external"):
+        Edge(None, "c", 1 << 20, handoff="external", route="s3",
+             streaming=True, chunk_bytes=4096)
+    with pytest.raises(ValueError, match="inline"):
+        Edge("p", "c", 1 << 20, route="inline", streaming=True,
+             chunk_bytes=4096)
+
+
+def test_chunk_sizes_cover_the_object_exactly():
+    e = Edge("p", "c", (3 << 20) + 7, streaming=True, chunk_bytes=1 << 20)
+    sizes = e.chunk_sizes()
+    assert sizes == (1 << 20, 1 << 20, 1 << 20, 7)
+    assert sum(sizes) == e.nbytes
+    # an object smaller than one chunk is a single piece
+    small = Edge("p", "c", 100, streaming=True, chunk_bytes=1 << 20)
+    assert small.chunk_sizes() == (100,)
+
+
+def test_size_route_never_inlines_streaming_edges():
+    # 3 MB rides inline unchunked (under the 6 MB activator cap) but chunks
+    # outlive the sync message, so the same edge streamed must pick storage
+    route = SizeRoute(inline_under=6 << 20)
+    plain = Edge("p", "c", 3 << 20, handoff="sync")
+    streamed = Edge("p", "c", 3 << 20, handoff="sync",
+                    streaming=True, chunk_bytes=1 << 20)
+    assert route.resolve(plain, plain.nbytes, False) == "inline"
+    assert route.resolve(streamed, streamed.nbytes, False) != "inline"
+
+
+# -- billing equivalence (satellite: per-chunk route-decision equivalence) ---
+
+
+@pytest.mark.parametrize("wl", ("vid", "mr"))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_cluster_streaming_bills_like_whole_object(wl, backend):
+    dag = DAGS[wl]
+    base = execute_on_cluster(dag, backend, seed=0, deterministic=True)
+    run = execute_on_cluster(_variant(dag), backend, seed=0,
+                             deterministic=True)
+    for label, u in base.edge_usage.items():
+        su = run.edge_usage[label]
+        assert su.n_puts == u.n_puts, label
+        assert su.n_gets == u.n_gets, label
+        assert su.media == u.media, label
+    # chunking overlaps, it never adds: makespan and cost both clamp
+    assert run.latency_s <= base.latency_s * (1 + 1e-9)
+    assert run.cost().total <= base.cost().total * (1 + 1e-9)
+    assert run.latency_s >= critical_path_lower_bound(dag, backend=backend)
+
+
+@pytest.mark.parametrize("wl", ("vid", "mr"))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_engine_streaming_bills_like_whole_object(wl, backend):
+    def cell(d):
+        eng = WorkflowEngine(backend="xdt")
+        binding = d.bind(eng, default_route=FixedRoute(backend))
+        eng.submit(binding.entry, 1.0)
+        eng.drain()
+        (req,) = eng.requests
+        assert req.status == "ok"
+        return req.latency_s, binding.cost(), binding.edge_usage
+
+    base_lat, base_cost, base_usage = cell(DAGS[wl])
+    lat, cost, usage = cell(_variant(DAGS[wl]))
+    for label, u in base_usage.items():
+        su = usage[label]
+        assert (su.n_puts, su.n_gets) == (u.n_puts, u.n_gets), label
+        assert set(su.media) == set(u.media), label
+    assert lat <= base_lat * (1 + 1e-9)
+    # request fees coalesce exactly; residency-priced media may only shrink
+    assert cost.storage <= base_cost.storage * (1 + 1e-9)
+
+
+def test_streaming_false_is_bit_identical():
+    # the streaming code paths must be invisible when no edge streams:
+    # same DAG object, interpreted twice, before/after a streaming variant
+    # of it was built and run
+    dag = DAGS["vid"]
+    before = execute_on_cluster(dag, "xdt", seed=0, deterministic=True)
+    execute_on_cluster(_variant(dag), "xdt", seed=0, deterministic=True)
+    after = execute_on_cluster(dag, "xdt", seed=0, deterministic=True)
+    assert before.latency_s == after.latency_s
+    assert before.cost().total == after.cost().total
+
+
+# -- mid-stream producer death (satellite: bounded retries) ------------------
+
+
+def test_kill_producer_mid_stream_is_a_bounded_retry():
+    dag = WorkflowDAG(
+        "pipe",
+        [Stage("p", compute_s=1.0), Stage("c", compute_s=0.01)],
+        [Edge("p", "c", 8 << 20, label="feed", handoff="sync",
+              streaming=True, chunk_bytes=1 << 20)],
+    )
+    eng = WorkflowEngine(backend="xdt", max_retries=2)
+    binding = dag.bind(eng, default_route=FixedRoute("xdt"))
+    eng.submit(binding.entry, 1.0)
+    # the producer paces chunks across its 1 s compute; killing the instance
+    # mid-production drops every already-published xdt chunk, so the
+    # partially-drained consumer's next pull dies with the producer
+    eng.sim.schedule_abs(1.0, eng.transfer.kill_producer)
+    eng.drain()
+    (req,) = eng.requests
+    assert req.status == "ok"
+    assert eng.failed_requests == 0
+    assert 1 <= eng.retry_max <= eng.max_retries
+
+
+def test_kill_producer_mid_stream_exhausts_cleanly():
+    # every attempt dies mid-stream -> terminal "failed", never unbounded
+    dag = WorkflowDAG(
+        "pipe",
+        [Stage("p", compute_s=1.0), Stage("c", compute_s=0.01)],
+        [Edge("p", "c", 8 << 20, label="feed", handoff="sync",
+              streaming=True, chunk_bytes=1 << 20)],
+    )
+    eng = WorkflowEngine(backend="xdt", max_retries=1)
+    binding = dag.bind(eng, default_route=FixedRoute("xdt"))
+    eng.submit(binding.entry, 1.0)
+    # kill right after every 3rd chunk lands — published but not yet
+    # pulled, so EVERY attempt dies mid-stream, deterministically
+    orig_put = eng.transfer.put_chunk
+    pushes = [0]
+
+    def dying_put(*a, **kw):
+        ref = orig_put(*a, **kw)
+        pushes[0] += 1
+        if pushes[0] % 3 == 0:
+            eng.transfer.kill_producer()
+        return ref
+
+    eng.transfer.put_chunk = dying_put
+    eng.drain()
+    (req,) = eng.requests
+    assert req.status == "failed"
+    assert eng.retry_max <= eng.max_retries
+    assert eng._inflight_requests == 0           # terminal, not wedged
+
+
+# -- online spill (the carried-over PredictiveSpill gap) ---------------------
+
+
+class _Feed:
+    def __init__(self, life_s):
+        self.life_s = life_s
+
+    def expected_instance_lifetime_s(self, now):
+        return self.life_s
+
+
+def test_online_spill_redirects_when_reap_window_closes():
+    hub = TelemetryHub(lambda: 0.0)
+    hub.deployments["p"] = _Feed(0.05)           # reaped almost immediately
+    dag = WorkflowDAG(
+        "pipe",
+        [Stage("p", compute_s=0.1), Stage("c", compute_s=0.01)],
+        [Edge("p", "c", 2 << 20, label="feed", handoff="sync",
+              streaming=True, chunk_bytes=1 << 20)],
+    )
+    edge = dag.edges[0]
+    sp = OnlineSpill(hub, durable="s3")
+    assert sp.medium_for(dag, edge, "xdt", now=0.0, eta_s=1.0) == "s3"
+    assert sp.spills and sp.spills[0][0] == "feed"
+    # a durable pick passes through untouched (and records nothing)
+    n = len(sp.spills)
+    assert sp.medium_for(dag, edge, "s3", now=0.0, eta_s=1.0) == "s3"
+    assert len(sp.spills) == n
+    # a long-lived producer keeps the fast path
+    hub.deployments["p"] = _Feed(1e9)
+    assert sp.medium_for(dag, edge, "xdt", now=0.0, eta_s=1.0) == "xdt"
+
+
+def test_online_spill_rejects_ephemeral_targets():
+    with pytest.raises(ValueError, match="durable"):
+        OnlineSpill(TelemetryHub(lambda: 0.0), durable="xdt")
+
+
+def test_online_spill_splits_a_live_stream_on_cluster():
+    # eta shrinks chunk by chunk (less of the stream left to pull), so a
+    # reap window between the first and last chunk's eta spills the early,
+    # at-risk chunks durable and leaves the late ones on the fast path —
+    # one logical object, split across media mid-stream
+    hub = TelemetryHub(lambda: 0.0)
+    dag = WorkflowDAG(
+        "pipe",
+        [Stage("p", compute_s=1.0), Stage("c", compute_s=0.01)],
+        [Edge("p", "c", 8 << 20, label="feed", handoff="sync",
+              streaming=True, chunk_bytes=1 << 20)],
+    )
+    hub.deployments["p"] = _Feed(1.0)
+    sp = OnlineSpill(hub, durable="s3")
+    run = execute_on_cluster(dag, "xdt", seed=0, deterministic=True,
+                             online_spill=sp)
+    assert sp.spills and {s[0] for s in sp.spills} == {"feed"}
+    media = run.edge_usage["feed"].media
+    assert media.get("s3") and media.get("xdt"), media
+    # and spilling is strictly partial: fewer spills than chunks
+    assert len(sp.spills) < len(dag.edges[0].chunk_sizes())
