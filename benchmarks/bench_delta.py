@@ -14,6 +14,14 @@ smoke events/sec over the sharded tenant cells plus the co-resident
 deployment count and the attribution-invariant gap — comparing the saved-
 aside ``results/BENCH_fig11_multitenant.json`` against the fresh one.
 
+When the engine results carry a streaming section (``streaming_smoke`` in
+CI, ``streaming`` for full runs) the table gains the streaming fast-path's
+own rows: per (backend x offered load), coalesced events/sec vs the
+committed baseline, the coalesced/legacy speedup with its gate, and the
+peak in-flight chunk bytes (the credit window's observable) — so a PR that
+touches the span kernels or the backpressure path shows both its throughput
+and its buffering footprint next to the scalar-path delta.
+
 With ``--fig13-baseline`` it gains the streaming sweep's makespan-vs-bound
 table: per workload x backend, the best streaming makespan's ratio to the
 critical-path lower bound (1.0 = perfect overlap), fresh vs the committed
@@ -48,6 +56,67 @@ def _fmt_delta(base, fresh):
         return "n/a"
     pct = (fresh - base) / base * 100.0
     return f"{pct:+.1f}%"
+
+
+def _stream_rows(path):
+    """Streaming section rows keyed by (backend, rate); smoke preferred."""
+    with open(path) as f:
+        doc = json.load(f)
+    sec = doc.get("streaming_smoke") or doc.get("streaming") or {}
+    rows = {
+        (r["backend"], r["offered_rps"]): r for r in sec.get("rows", [])
+    }
+    return rows, sec.get("totals", {})
+
+
+def _fmt_bytes(n):
+    if n >= 1 << 20:
+        return f"{n / (1 << 20):.1f} MiB"
+    if n >= 1 << 10:
+        return f"{n / (1 << 10):.0f} KiB"
+    return f"{n:.0f} B"
+
+
+def _streaming_section(baseline_path, fresh_path):
+    base_rows, base_tot = _stream_rows(baseline_path)
+    fresh_rows, fresh_tot = _stream_rows(fresh_path)
+    if not fresh_rows:
+        return
+    print()
+    print("### Streaming fast path — coalesced chunk events vs committed "
+          "baseline")
+    print()
+    print("| backend | offered rps | baseline ev/s | fresh ev/s | delta "
+          "| speedup vs legacy | peak inflight |")
+    print("|---|---:|---:|---:|---:|---:|---:|")
+    for key in sorted(fresh_rows):
+        r = fresh_rows[key]
+        b = base_rows.get(key, {})
+        b_eps = (b.get("coalesced") or {}).get("events_per_sec", 0.0)
+        f_eps = r["coalesced"]["events_per_sec"]
+        peak = r["coalesced"]["peak_inflight_chunk_bytes"]
+        print(f"| {key[0]} | {key[1]:.0f} | {b_eps:,.0f} | {f_eps:,.0f} "
+              f"| {_fmt_delta(b_eps, f_eps)} | x{r['speedup']:.2f} "
+              f"| {_fmt_bytes(peak)} |")
+    b_eps = base_tot.get("events_per_sec_coalesced", 0.0)
+    f_eps = fresh_tot.get("events_per_sec_coalesced", 0.0)
+    gate = fresh_tot.get("speedup_gate", 0.0)
+    print(f"| **total** | | **{b_eps:,.0f}** | **{f_eps:,.0f}** "
+          f"| **{_fmt_delta(b_eps, f_eps)}** "
+          f"| **x{fresh_tot.get('speedup', 0.0):.2f}** (gate x{gate:.1f}) "
+          f"| |")
+    print()
+    if fresh_tot.get("bit_identical"):
+        print("coalesced vs legacy per-request latency checksums: "
+              "**bit-identical** in every cell (the fast path is a pure "
+              "wall-time win)")
+    else:
+        diff = [
+            f"{k[0]}@{k[1]:.0f}" for k, r in sorted(fresh_rows.items())
+            if not r.get("bit_identical")
+        ]
+        print(f"coalesced vs legacy checksums DIVERGE at: {', '.join(diff)} "
+              "— the span kernels changed virtual-time semantics")
 
 
 def _fig11_totals(path):
@@ -180,6 +249,7 @@ def main(argv=None):
         diff = [f"{k[0]}@{k[1]:.0f}" for k, ok in checks if not ok]
         print(f"latency checksums CHANGED at: {', '.join(diff)} — the sweep's "
               "virtual-time semantics differ from the committed baseline")
+    _streaming_section(baseline_path, fresh_path)
     if fig11_baseline and os.path.exists(fig11_baseline):
         _fig11_section(fig11_baseline, fig11_fresh)
     if fig13_baseline and os.path.exists(fig13_baseline):

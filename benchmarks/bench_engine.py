@@ -59,6 +59,20 @@ EDGE_FLOATS = 16                   # tiny payload: time the substrate, not numpy
 SERVICE_TIME = {"driver": 0.010, "worker": 0.030, "reducer": 0.015}
 POLICY = dict(max_instances=1024, target_concurrency=1)
 
+# Streaming-heavy scenario: one streamed edge, many chunks per request, so
+# chunk publish/drain — not orchestration — dominates the event hot path.
+# Every (backend, rate) cell runs twice, with the chunk-span fast path on
+# (STREAM_COALESCE=True) and off (the pre-coalescing per-chunk behavior);
+# per-request latency checksums must match bit-for-bit between the two and
+# the fast path must clear SPEEDUP_GATE on coalesced/legacy events-per-sec.
+STREAM_NBYTES = 32 << 20           # 128 chunks per request at 256 KiB
+STREAM_CHUNK = 256 << 10
+STREAM_SCALE = 1.0 / 1024.0        # 256 KiB chunk -> 64-float array
+STREAM_BACKENDS = ["xdt", "s3"]    # fused single-owner + fused service kernels
+REFERENCE_STREAM = {"offered_rps": [20.0, 50.0], "duration_s": 20.0, "seed": 1234}
+SMOKE_STREAM = {"offered_rps": [20.0], "duration_s": 3.0, "seed": 1234}
+SPEEDUP_GATE = {"reference": 2.0, "smoke": 1.4}
+
 
 def build_engine(backend: str, seed: int, records: str = "columnar") -> WorkflowEngine:
     # Explicit sweep-scale buffer budget: the registry's blocking flow
@@ -187,6 +201,130 @@ def run_sweep(cfg, quiet=False):
     }
 
 
+def build_streaming_engine(backend: str, seed: int):
+    """One streamed edge (src -> sink), bound to a fresh engine."""
+    from repro.core import Simulator
+    from repro.core.buffers import BufferRegistry
+    from repro.core.clock import VirtualClock
+    from repro.core.dag import Edge, FixedRoute, Stage, WorkflowDAG
+    from repro.core.transfer import TransferEngine
+
+    sim = Simulator(seed=seed)
+    clock = VirtualClock(sim)
+    registry = BufferRegistry(
+        max_slots=1 << 20, max_bytes=1 << 40, clock=clock, threadsafe=False
+    )
+    transfer = TransferEngine(backend, registry=registry, clock=clock)
+    eng = WorkflowEngine(transfer=transfer, simulator=sim, records="columnar")
+    dag = WorkflowDAG(
+        "stream",
+        # compute_s=0 producer: the whole object publishes at one virtual
+        # instant — the same-timestamp chunk runs the span kernels coalesce
+        [Stage("src", compute_s=0.0), Stage("sink", compute_s=0.005)],
+        [Edge("src", "sink", STREAM_NBYTES, label="feed", handoff="sync",
+              streaming=True, chunk_bytes=STREAM_CHUNK)],
+    )
+    binding = dag.bind(
+        eng, default_route=FixedRoute(backend), bytes_scale=STREAM_SCALE
+    )
+    return eng, binding
+
+
+def run_stream_sweep(cfg, gate: float, quiet=False):
+    from repro.core import dag as dagmod
+
+    rows = []
+    totals = {"legacy": [0, 0.0], "coalesced": [0, 0.0]}  # events, wall
+    for backend in STREAM_BACKENDS:
+        for rate in cfg["offered_rps"]:
+            per_mode = {}
+            for mode in ("legacy", "coalesced"):
+                prev = dagmod.STREAM_COALESCE
+                dagmod.STREAM_COALESCE = mode == "coalesced"
+                try:
+                    eng, binding = build_streaming_engine(backend, cfg["seed"])
+                    gen = LoadGenerator(eng, binding.entry)
+                    t0 = time.perf_counter()
+                    rep = gen.run_open(
+                        rate_rps=rate, duration_s=cfg["duration_s"]
+                    )
+                    wall = time.perf_counter() - t0
+                finally:
+                    dagmod.STREAM_COALESCE = prev
+                events = _count_events(eng.sim)
+                lat = np.asarray(rep.latencies_s, dtype=np.float64)
+                per_mode[mode] = {
+                    "n_requests": rep.n_requests,
+                    "n_ok": rep.n_ok,
+                    "p50_s": rep.p50_s,
+                    "events": events,
+                    "wall_s": wall,
+                    "events_per_sec": events / wall,
+                    "latency_checksum": hashlib.sha256(
+                        lat.tobytes()
+                    ).hexdigest()[:16],
+                    "peak_inflight_chunk_bytes": float(
+                        eng.transfer.stats.peak_inflight_chunk_bytes
+                    ),
+                }
+                totals[mode][0] += events
+                totals[mode][1] += wall
+            row = {
+                "backend": backend,
+                "offered_rps": rate,
+                "legacy": per_mode["legacy"],
+                "coalesced": per_mode["coalesced"],
+                "speedup": (per_mode["coalesced"]["events_per_sec"]
+                            / per_mode["legacy"]["events_per_sec"]),
+                "bit_identical": (per_mode["coalesced"]["latency_checksum"]
+                                  == per_mode["legacy"]["latency_checksum"]),
+            }
+            rows.append(row)
+            if not quiet:
+                tick = "==" if row["bit_identical"] else "!="
+                print(f"{backend:>12} {rate:>5.0f} rps  "
+                      f"{per_mode['legacy']['events_per_sec']:>9.0f} ev/s legacy  "
+                      f"{per_mode['coalesced']['events_per_sec']:>9.0f} ev/s coalesced  "
+                      f"x{row['speedup']:.2f}  checksums {tick}")
+    speedup = (totals["coalesced"][0] / totals["coalesced"][1]) / (
+        totals["legacy"][0] / totals["legacy"][1]
+    )
+    return {
+        "rows": rows,
+        "config": {**cfg, "backends": STREAM_BACKENDS,
+                   "nbytes": STREAM_NBYTES, "chunk_bytes": STREAM_CHUNK,
+                   "bytes_scale": STREAM_SCALE},
+        "totals": {
+            "events_per_sec_legacy": totals["legacy"][0] / totals["legacy"][1],
+            "events_per_sec_coalesced": (
+                totals["coalesced"][0] / totals["coalesced"][1]
+            ),
+            "speedup": speedup,
+            "speedup_gate": gate,
+            "bit_identical": all(r["bit_identical"] for r in rows),
+        },
+    }
+
+
+def _check_streaming(section) -> int:
+    tot = section["totals"]
+    rc = 0
+    if not tot["bit_identical"]:
+        bad = [f"{r['backend']}@{r['offered_rps']:.0f}"
+               for r in section["rows"] if not r["bit_identical"]]
+        print(f"# STREAMING: latency checksums diverge between coalesced "
+              f"and legacy modes: {bad}")
+        rc = 1
+    if tot["speedup"] < tot["speedup_gate"]:
+        print(f"# STREAMING REGRESSION: coalesced/legacy events/sec "
+              f"x{tot['speedup']:.2f} < gate x{tot['speedup_gate']:.2f}")
+        rc = 1
+    if rc == 0:
+        print(f"# streaming ok: x{tot['speedup']:.2f} coalesced/legacy "
+              f"(gate x{tot['speedup_gate']:.2f}), checksums bit-identical")
+    return rc
+
+
 def _load_existing():
     path = os.path.join(RESULTS_DIR, RESULT_NAME)
     if os.path.exists(path):
@@ -214,14 +352,26 @@ def main(argv=None):
         print("# bench_engine --smoke: 3 backends x 2 load points")
         out = dict(existing)
         out["smoke"] = run_sweep(SMOKE)
+        print("# streaming smoke: coalesced vs legacy chunk path")
+        out["streaming_smoke"] = run_stream_sweep(
+            SMOKE_STREAM, SPEEDUP_GATE["smoke"]
+        )
     else:
         print("# bench_engine reference sweep: 3 backends x 4 load points")
         out = dict(existing)
         out["reference"] = run_sweep(REFERENCE)
         print("# smoke subset (CI baseline)")
         out["smoke"] = run_sweep(SMOKE)
+        print("# streaming scenario: coalesced vs legacy chunk path")
+        out["streaming"] = run_stream_sweep(
+            REFERENCE_STREAM, SPEEDUP_GATE["reference"]
+        )
+        print("# streaming smoke subset (CI baseline)")
+        out["streaming_smoke"] = run_stream_sweep(
+            SMOKE_STREAM, SPEEDUP_GATE["smoke"]
+        )
 
-    out["schema"] = 1
+    out["schema"] = 2
     tot = out["smoke"]["totals"] if args.smoke else out["reference"]["totals"]
     print(f"# totals: {tot['n_requests']} requests, "
           f"{tot['events_per_sec']:.0f} events/s, "
@@ -231,16 +381,20 @@ def main(argv=None):
     print(f"# wrote {path}")
 
     if args.check:
+        rc = 0
         fresh = out["smoke"]["totals"]["events_per_sec"]
         if baseline_eps is None:
             print("# --check: no committed baseline; recorded this run")
         elif fresh < 0.7 * baseline_eps:
             print(f"# REGRESSION: smoke {fresh:.0f} ev/s < 70% of committed "
                   f"baseline {baseline_eps:.0f} ev/s")
-            return 1
+            rc = 1
         else:
             print(f"# --check ok: smoke {fresh:.0f} ev/s vs committed "
                   f"baseline {baseline_eps:.0f} ev/s")
+        section = out.get("streaming") if not args.smoke else None
+        rc |= _check_streaming(section or out["streaming_smoke"])
+        return rc
     return 0
 
 

@@ -78,6 +78,13 @@ CONSUMER_COMPUTE_S = 0.02
 DRIVER_COMPUTE_S = 0.01
 BYTES_SCALE = 1e-2
 MAX_RETRIES = 2
+#: time-decayed re-probe: a medium the adaptive router has not picked for
+#: this long gets one probe object regardless of its (possibly poisoned)
+#: score — the blacklist-recovery escape hatch, now exercised under the
+#: real fault scenarios instead of pinned to 0.  Long enough that the first
+#: probe lands after the router has already diverted off the faulted
+#: medium, short enough that several fire inside every scenario window.
+REPROBE_AFTER_S = 5.0
 
 
 def _dag() -> WorkflowDAG:
@@ -155,13 +162,18 @@ def _scenarios(seed: int):
 def _route(kind: str, backend: str):
     """The policy axis: a static route pinned to the medium under attack,
     and an AdaptiveRoute falling back to that same static pick until the
-    telemetry window has samples (probing disabled: determinism)."""
+    telemetry window has samples.  Count probing stays off (these edges
+    carry latency budgets, where it never fires anyway); the time-decayed
+    re-probe is ON, so a medium the fault window poisoned gets periodic
+    probe traffic and can rejoin the feasible set once healthy."""
     static = (
         SizeRoute() if backend == "size" else FixedRoute(backend)
     )
     if kind == "static":
         return static
-    return AdaptiveRoute(static=static, explore_every=0)
+    return AdaptiveRoute(
+        static=static, explore_every=0, reprobe_after_s=REPROBE_AFTER_S
+    )
 
 
 def run_cell(

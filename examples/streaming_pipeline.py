@@ -109,8 +109,73 @@ def spill_mid_stream():
               f"eta {eta_s:.3f}s outlives the producer -> s3")
 
 
+def backpressured_stream():
+    """Credit-based backpressure: ``Edge(max_inflight_chunks=w)`` caps the
+    producer at ``w`` published-but-undrained instance-resident chunks.
+    A zero-compute producer would otherwise burst the whole object into
+    memory before the consumer pulls once; with credits the peak resident
+    footprint is provably ``<= w x chunk_bytes``.  Add
+    ``OnlineSpill(pressure_patience=k)`` and a persistently empty window
+    diverts the REMAINING stream durable instead of stalling forever."""
+    print("\n== credit backpressure: bounded sender memory ==")
+    dag = WorkflowDAG(
+        "pipe",
+        [Stage("produce", compute_s=0.0), Stage("consume", compute_s=0.05)],
+        [Edge("produce", "consume", 8 * MB, label="feed", handoff="sync")],
+    )
+
+    def cell(label, variant, spill=None):
+        eng = WorkflowEngine(backend="xdt")
+        binding = variant.bind(eng, default_route=FixedRoute("xdt"),
+                               online_spill=spill)
+        eng.run(binding.entry, 1.0)
+        peak = eng.transfer.stats.peak_inflight_chunk_bytes
+        media = dict(binding.edge_usage["feed"].media)
+        print(f"   {label:>22}: peak inflight {peak / MB:4.1f} MB, "
+              f"media {media}")
+
+    cell("unbounded", streamed(dag, ("feed",)))
+    window = dataclasses.replace(
+        streamed(dag, ("feed",)).edges[0], max_inflight_chunks=2)
+    cell("window=2", WorkflowDAG(dag.name, dag.stages, [window]))
+    sp = OnlineSpill(TelemetryHub(lambda: 0.0), durable="s3",
+                     pressure_patience=2)
+    cell("window=2 + pressure", WorkflowDAG(dag.name, dag.stages, [window]),
+         spill=sp)
+    print(f"     pressure spill fired {len(sp.pressure_spills)}x: a "
+          "persistently empty window sends the tail durable")
+
+
+def auto_tuned_chunks():
+    """Telemetry-tuned chunk size: ``chunk_bytes=\"auto\"`` scores the
+    candidate sizes per (edge, medium) with the analytic streamed-pull
+    recurrence as prior — and the TelemetryHub's observed latency-vs-size
+    model once it has enough samples — then re-scores the remaining bytes
+    whenever a mid-stream route decision lands on a new medium."""
+    print("\n== chunk_bytes=\"auto\": telemetry-tuned sizing ==")
+    dag = WorkflowDAG(
+        "pipe",
+        [Stage("produce", compute_s=0.8), Stage("consume", compute_s=0.05)],
+        [Edge("produce", "consume", 8 * MB, label="feed", handoff="sync")],
+    )
+    for backend in ("s3", "xdt"):
+        rows = []
+        for label, variant in (
+            ("1MB", streamed(dag, ("feed",), chunk_bytes=1 * MB)),
+            ("4MB", streamed(dag, ("feed",), chunk_bytes=4 * MB)),
+            ("auto", streamed(dag, ("feed",), chunk_bytes="auto")),
+        ):
+            run = execute_on_cluster(variant, backend, seed=0,
+                                     deterministic=True)
+            rows.append(f"{label} {run.latency_s * 1e3:6.1f}ms")
+        print(f"   {backend:>3}: " + "  ".join(rows)
+              + "   (auto ties or beats the best fixed size)")
+
+
 if __name__ == "__main__":
     overlap_on_the_cluster()
     data_triggered_on_the_engine()
     spill_mid_stream()
+    backpressured_stream()
+    auto_tuned_chunks()
     print("\nstreaming_pipeline OK")

@@ -157,6 +157,17 @@ class Simulator:
         )
         return ev
 
+    def timeout_abs(self, t: float) -> Event:
+        """An event that fires at absolute virtual time ``t`` (clamped to
+        now).  Unlike ``timeout(t - now)`` this is exact in floating point —
+        chunk-event timelines land on their precomputed batch boundaries."""
+        ev = Event(self)
+        self._seq += 1
+        heapq.heappush(
+            self._heap, (t if t > self.now else self.now, self._seq, ev)
+        )
+        return ev
+
     def all_of(self, events: List[Event]) -> Event:
         ev = Event(self)
         pending = sum(1 for e in events if not e.fired)

@@ -69,6 +69,15 @@ _STORAGE_MEDIA = ("s3", "elasticache")
 #: media a cluster-interpreted edge may resolve to
 _CLUSTER_MEDIA = ("s3", "elasticache", "xdt", "inline")
 
+#: engine-lowering kill-switch for the streaming fast path: when True,
+#: same-instant same-(object, medium) chunk runs publish and drain through
+#: the span kernels (one dispatch, one billed request, columnar refs); when
+#: False every chunk is an individual put/pull — the pre-coalescing
+#: behavior, kept reachable so benchmarks can measure the speedup and users
+#: can bisect a suspected fast-path divergence.  Virtual-time results are
+#: bit-identical either way.
+STREAM_COALESCE = True
+
 
 # ---------------------------------------------------------------------------
 # Routing policies
@@ -285,14 +294,21 @@ class AdaptiveRoute(RoutePolicy):
         )
         return m_min if n_min < max(counts)[0] else None
 
-    def _timed_reprobe(self, cands, now: float) -> Optional[str]:
-        """The wall-clock blacklist-recovery probe: the first candidate the
-        router has not routed to for ``reprobe_after_s`` (backed off by
-        ``reprobe_growth`` per consecutive probe).  A candidate never seen
-        before just starts its timer.  Fires on budgeted edges too — a
-        p99 poisoned by fault-penalty samples keeps a medium out of the
-        feasible set forever, so this is its only way back in."""
+    def _timed_reprobe(self, cands, hub, now: float) -> Optional[str]:
+        """The wall-clock blacklist-recovery probe: the first OBSERVED
+        candidate the router has not routed to for ``reprobe_after_s``
+        (backed off by ``reprobe_growth`` per consecutive probe).  Only
+        media with samples qualify — an unobserved candidate is scored by
+        calibrated priors and therefore already explorable, so probing it
+        would spend real objects to learn nothing (and make the adaptive
+        cell strictly worse than static in fault-free runs).  A candidate
+        observed but never timed just starts its timer.  Fires on budgeted
+        edges too — a p99 poisoned by fault-penalty samples keeps a medium
+        out of the feasible set forever, so this is its only way back in."""
         for m in cands:
+            stats = hub.media.get(m)
+            if stats is None or not stats.n:
+                continue
             last = self._last_pick.get(m)
             if last is None:
                 self._last_pick[m] = now
@@ -312,7 +328,7 @@ class AdaptiveRoute(RoutePolicy):
         cands = self._candidates(edge, nbytes, evictable)
         now = hub.clock() if self.reprobe_after_s > 0.0 else 0.0
         if self.reprobe_after_s > 0.0:
-            probe = self._timed_reprobe(cands, now)
+            probe = self._timed_reprobe(cands, hub, now)
             if probe is not None:
                 return probe
         if self.explore_every and budget <= 0.0:
@@ -412,6 +428,19 @@ class Edge:
       chunk**, so one logical object may split across media; ``inline`` is
       refused outright — chunks outlive the sync handoff message, exactly
       like staged/external objects outlive an invoke.
+    * ``chunk_bytes="auto"`` defers the chunk size to the telemetry-tuned
+      resolver (:func:`resolve_auto_chunk_bytes`): scored per (edge, medium)
+      at stream start from the TelemetryHub latency-vs-size models with the
+      analytic streamed-pull recurrence as the prior, and re-scored
+      mid-stream whenever the per-chunk route decision lands on a new
+      medium.
+    * ``max_inflight_chunks`` (streaming only) is the producer's credit
+      window: at most that many instance-resident chunks may be published
+      but not yet fully pulled.  Exhausted credits block the producer's
+      ``put_chunk`` on the virtual clock (engine lowering) or stretch the
+      overlap recurrence (cluster lowering); persistent zero-credit triggers
+      ``OnlineSpill``'s spill-on-pressure, diverting the remaining stream
+      durable.  ``0`` = unbounded (a slow consumer buffers the stream).
     """
 
     src: Optional[str]
@@ -425,7 +454,8 @@ class Edge:
     concurrency: int = 0
     latency_budget_s: float = 0.0
     streaming: bool = False
-    chunk_bytes: int = 0
+    chunk_bytes: Any = 0             # int bytes, or "auto" (telemetry-tuned)
+    max_inflight_chunks: int = 0
 
     def __post_init__(self):
         if not self.label:
@@ -441,9 +471,17 @@ class Edge:
         if self.handoff == "external" and self.src is not None:
             raise ValueError("external edges have src=None")
         if self.streaming:
-            if self.chunk_bytes <= 0:
+            if self.chunk_bytes != "auto" and (
+                not isinstance(self.chunk_bytes, int) or self.chunk_bytes <= 0
+            ):
                 raise ValueError(
-                    f"streaming edge {self.label!r} needs chunk_bytes > 0"
+                    f"streaming edge {self.label!r} needs chunk_bytes > 0 "
+                    "(or 'auto')"
+                )
+            if self.max_inflight_chunks < 0:
+                raise ValueError(
+                    f"streaming edge {self.label!r}: max_inflight_chunks "
+                    "must be >= 0 (0 = unbounded)"
                 )
             if self.handoff == "external":
                 raise ValueError(
@@ -462,14 +500,29 @@ class Edge:
             raise ValueError(
                 f"edge {self.label!r}: chunk_bytes requires streaming=True"
             )
+        elif self.max_inflight_chunks:
+            raise ValueError(
+                f"edge {self.label!r}: max_inflight_chunks requires "
+                "streaming=True"
+            )
 
-    def chunk_sizes(self) -> Tuple[int, ...]:
+    def chunk_sizes(self, chunk_bytes: Optional[int] = None) -> Tuple[int, ...]:
         """Per-chunk byte sizes of ONE logical object of this edge: full
-        ``chunk_bytes`` pieces plus the remainder tail (never empty)."""
-        if not self.streaming or self.nbytes <= self.chunk_bytes:
+        ``chunk_bytes`` pieces plus the remainder tail (never empty).
+
+        ``chunk_bytes`` overrides the declared size — how a resolved
+        ``"auto"`` size (per medium, from :func:`resolve_auto_chunk_bytes`)
+        is applied without mutating the frozen edge."""
+        cb = self.chunk_bytes if chunk_bytes is None else chunk_bytes
+        if cb == "auto":
+            raise ValueError(
+                f"streaming edge {self.label!r}: chunk_bytes='auto' must be "
+                "resolved against a medium first (resolve_auto_chunk_bytes)"
+            )
+        if not self.streaming or self.nbytes <= cb:
             return (self.nbytes,)
-        n_full, tail = divmod(self.nbytes, self.chunk_bytes)
-        sizes = [self.chunk_bytes] * n_full
+        n_full, tail = divmod(self.nbytes, cb)
+        sizes = [cb] * n_full
         if tail:
             sizes.append(tail)
         return tuple(sizes)
@@ -733,6 +786,7 @@ class EdgeUsage:
     put_s: float = 0.0               # producer-side staging time (summed)
     fetch_s: float = 0.0             # consumer-side retrieval time (summed)
     modeled_s: float = 0.0           # engine lowering: modeled pull seconds
+    peak_inflight_chunk_bytes: float = 0.0  # max unconsumed streamed bytes
 
     def count(self, medium: str, nbytes: int) -> None:
         self.media[medium] = self.media.get(medium, 0) + 1
@@ -868,6 +922,195 @@ def _streamed_finish(
         for m, b in batch.items():
             t += span_of(m, b)
     return t
+
+
+#: candidate chunk sizes the auto-tuner scores — a superset of fig13's
+#: committed sweep sizes, so ``chunk_bytes="auto"`` can always at least tie
+#: the best fixed cell
+AUTO_CHUNK_CANDIDATES = (
+    256 << 10, 512 << 10, 1 << 20, 2 << 20, 4 << 20, 8 << 20,
+)
+
+
+def resolve_auto_chunk_bytes(
+    edge: Edge,
+    medium: str,
+    net: NetConstants = DEFAULT_NET,
+    telemetry: Optional[TelemetryHub] = None,
+    compute_s: float = 0.0,
+    nbytes: Optional[int] = None,
+    staged: Optional[bool] = None,
+) -> int:
+    """Telemetry-tuned chunk size for one (edge, medium) stream.
+
+    Scores every :data:`AUTO_CHUNK_CANDIDATES` size with the streamed-pull
+    recurrence (:func:`_streamed_finish`, clamped by the store-then-fetch
+    span exactly like the execution path) — the Fig. 13 analytic bound is
+    the *prior* — swapping in the medium's observed latency-vs-size model
+    once the :class:`TelemetryHub` has enough samples for it.  Near-ties go
+    to the larger candidate: same finish, fewer chunk events and fewer
+    request-overhead sheds.  ``nbytes`` overrides the edge's declared size
+    (mid-stream re-scoring passes the remaining bytes)."""
+    nb = int(edge.nbytes if nbytes is None else nbytes)
+    if nb <= 0:
+        return AUTO_CHUNK_CANDIDATES[0]
+    if staged is None:
+        staged = edge.handoff == "staged"
+    # the hub's trust gate: the observed latency-vs-size model substitutes
+    # for the prior only once it has MIN_MODEL_SAMPLES observations
+    mt = telemetry.medium_model(medium) if telemetry is not None else None
+
+    def span_of(m: str, b: int) -> float:
+        if mt is not None:
+            s = mt.predict_seconds(b)
+            if s > 0.0:
+                return s
+        if staged:
+            return _staged_get_seconds(m, b, net)
+        return modeled_transfer_seconds(m, b, net)
+
+    best = AUTO_CHUNK_CANDIDATES[-1]
+    best_fin = float("inf")
+    clamp = compute_s + span_of(medium, nb)    # store-then-fetch span
+    for cand in reversed(AUTO_CHUNK_CANDIDATES):
+        if cand >= nb:
+            sizes: Sequence[int] = (nb,)
+        else:
+            n_full, tail = divmod(nb, cand)
+            sizes = [cand] * n_full
+            if tail:
+                sizes.append(tail)
+        ready = _chunk_ready_offsets(compute_s, sizes)
+        start = ready[0] + net.ctrl_plane_latency
+        fin = _streamed_finish(
+            start, ready, sizes, [medium] * len(sizes), span_of
+        )
+        if clamp < fin:
+            fin = clamp
+        if fin < best_fin - 1e-15:
+            best, best_fin = cand, fin
+    return best
+
+
+def _chunk_event_timeline(
+    start: float,
+    ready: Sequence[float],
+    sizes: Sequence[int],
+    media: Sequence[str],
+    span_of: Callable[[str, int], float],
+    max_inflight: int = 0,
+    on_pressure: Optional[Callable[[str, float], Optional[str]]] = None,
+    pressure_patience: int = 2,
+) -> Tuple[float, List[float], List[str], float, int]:
+    """Forward-simulate the chunk events of ONE streamed object.
+
+    The same single-threaded coalescing puller as :func:`_streamed_finish`
+    (with ``max_inflight=0`` the finish time is bit-identical), generalized
+    three ways so the cluster lowering can *simulate* chunk events instead
+    of clamping to an analytic overlap model:
+
+    * **batch completion times** come back in ``batch_ends`` — the cluster
+      fetch paths emit one real simulator event per pull batch;
+    * **credit stretching**: with ``max_inflight=k``, an instance-resident
+      chunk cannot publish until the resident chunk ``k`` places back has
+      been fully pulled (its batch completed), so its publication is
+      ``max(ready, freeing completion)`` — the producer blocks on zero
+      credits;
+    * **spill-on-pressure**: after ``pressure_patience`` consecutive
+      credit-delayed publications, ``on_pressure(medium, now)`` is
+      consulted; a returned durable medium rewrites the REMAINING chunks'
+      media — durable puts free the producer's buffer, so those chunks stop
+      occupying credits and publish at their ready offsets.
+
+    Returns ``(finish, batch_ends, media_out, peak_inflight_bytes,
+    n_pressure_spilled)`` where ``peak_inflight_bytes`` is the high-water
+    mark of resident published-but-unpulled chunk bytes (what the credit
+    window provably bounds: <= max_inflight * max(sizes))."""
+    n = len(sizes)
+    order = sorted(range(n), key=lambda k: ready[k])
+    media_out = list(media)
+    resident = [m not in _STORAGE_MEDIA for m in media_out]
+    window = int(max_inflight)
+    res_comp: List[float] = []      # completions of resident chunks, FIFO
+    res_assigned = 0                # resident chunks published so far
+    spans: List[Tuple[float, float, int]] = []   # (pub, completion) spans
+    batch_ends: List[float] = []
+    streak = 0
+    n_spilled = 0
+    t, i = start, 0
+    while i < n:
+        # ---- open a batch at the next publishable chunk
+        k = order[i]
+        p = ready[k]
+        if window > 0 and resident[k] and res_assigned >= window:
+            gate = res_comp[res_assigned - window]
+            if gate > p:
+                p = gate
+        if p > t:
+            t = p
+        batch: Dict[str, int] = {}
+        members: List[int] = []
+        while i < n:
+            k = order[i]
+            p = ready[k]
+            if window > 0 and resident[k]:
+                need = res_assigned - window
+                if need >= 0:
+                    if need >= len(res_comp):
+                        break        # freeing chunk still in this batch
+                    gate = res_comp[need]
+                    if gate > t:
+                        break        # credits exhausted past this instant
+                    if gate > p:
+                        p = gate
+                        streak += 1
+                        if (
+                            on_pressure is not None
+                            and streak >= pressure_patience
+                        ):
+                            durable = on_pressure(media_out[k], p)
+                            if durable is not None:
+                                # remaining stream goes durable: those puts
+                                # free the sender buffer at publish time
+                                for j in order[i:]:
+                                    media_out[j] = durable
+                                    resident[j] = False
+                                n_spilled += n - i
+                                streak = 0
+                                p = ready[k]
+                    else:
+                        streak = 0
+            if p > t:
+                break
+            if resident[k]:
+                res_assigned += 1
+                spans.append((p, 0.0, sizes[k]))
+            batch[media_out[k]] = batch.get(media_out[k], 0) + sizes[k]
+            members.append(k)
+            i += 1
+        for m, b in batch.items():
+            t += span_of(m, b)
+        batch_ends.append(t)
+        for k in members:
+            if resident[k]:
+                idx = len(res_comp)
+                res_comp.append(t)
+                pub, _, sz = spans[idx]
+                spans[idx] = (pub, t, sz)
+    # peak resident inflight bytes: sweep the (pub, completion) spans
+    peak = 0.0
+    if spans:
+        events: List[Tuple[float, float]] = []
+        for pub, comp, sz in spans:
+            events.append((pub, float(sz)))
+            events.append((comp, -float(sz)))
+        events.sort(key=lambda ev: (ev[0], ev[1]))
+        cur = 0.0
+        for _, delta in events:
+            cur += delta
+            if cur > peak:
+                peak = cur
+    return t, batch_ends, media_out, peak, n_spilled
 
 
 def critical_path_lower_bound(
@@ -1229,6 +1472,70 @@ def execute_on_cluster(
             media.append(m)
         return media
 
+    auto_hub = hubs[0] if hubs else None
+
+    def auto_object_chunks(
+        edge: Edge, staged: bool, acc: int, total: int,
+        compute_s: float, t_end: float,
+    ) -> Tuple[List[int], List[float], List[str]]:
+        """(sizes, ready, media) of ONE object of a ``chunk_bytes="auto"``
+        edge.  The chunk size resolves per (edge, medium) from telemetry
+        with the analytic recurrence as prior, and RE-resolves at every
+        route-decision point: when the per-chunk route (policy or online
+        spill) lands on a new medium mid-stream, the remaining bytes
+        re-chunk at that medium's best size.  ``acc``/``total`` share the
+        byte-proportional production clock across a staged producer's
+        objects, exactly like the fixed-size path."""
+        nb = edge.nbytes
+        m_cur = resolve(edge, nb)
+        cb = resolve_auto_chunk_bytes(
+            edge, m_cur, net, auto_hub, compute_s, staged=staged
+        )
+        sizes: List[int] = []
+        ready: List[float] = []
+        media: List[str] = []
+        done = 0
+        while done < nb:
+            b = min(cb, nb - done)
+            off = compute_s * (acc + done + b) / total if total else 0.0
+            r = t_end - compute_s + off
+            m = _medium(edge, b, record=False)
+            if online_spill is not None and m not in _STORAGE_MEDIA:
+                eta = (t_end - r) + _staged_get_seconds(m, b, net)
+                m2 = online_spill.medium_for(dag, edge, m, r, eta)
+                if m2 != m:
+                    media_seen[edge.label].add(m2)
+                    m = m2
+            sizes.append(b)
+            ready.append(r)
+            media.append(m)
+            done += b
+            if m != m_cur and done < nb:
+                # route-decision point: re-score the remaining stream
+                m_cur = m
+                rem = nb - done
+                cb = resolve_auto_chunk_bytes(
+                    edge, m, net, auto_hub,
+                    compute_s * rem / nb if nb else 0.0,
+                    nbytes=rem, staged=staged,
+                )
+        return sizes, ready, media
+
+    def pressure_for(edge: Edge):
+        """Spill-on-pressure hook for the chunk-event timeline: persistent
+        zero-credit hands the remaining stream to OnlineSpill's durable
+        medium (None = no online spill installed, pressure only stretches)."""
+        if online_spill is None:
+            return None
+
+        def cb(medium: str, now: float) -> Optional[str]:
+            m2 = online_spill.on_pressure(dag, edge, medium, now)
+            if m2 is not None:
+                media_seen[edge.label].add(m2)
+            return m2
+
+        return cb
+
     def streamed_spans(m: str, b: int, staged: bool) -> float:
         """One batch-request's modeled seconds on ``m`` (get side only for
         staged chunks — the producer's push overlapped its compute),
@@ -1325,29 +1632,42 @@ def execute_on_cluster(
         push), the consumer was steered on the first chunk (one control
         hop) and pulled as chunks landed; only the tail outliving the
         producer's compute is waited here."""
-        sizes = list(edge.chunk_sizes())
         compute_s = dag.by_name[edge.src].compute_s
-        offsets = _chunk_ready_offsets(compute_s, sizes)
         t_end = sim.now                  # producer compute just ended
-        ready = [t_end - compute_s + off for off in offsets]
-        media = chunk_media(edge, sizes, ready, t_end)
+        if edge.chunk_bytes == "auto":
+            sizes, ready, media = auto_object_chunks(
+                edge, False, 0, edge.nbytes, compute_s, t_end
+            )
+        else:
+            sizes = list(edge.chunk_sizes())
+            offsets = _chunk_ready_offsets(compute_s, sizes)
+            ready = [t_end - compute_s + off for off in offsets]
+            media = chunk_media(edge, sizes, ready, t_end)
         # data-triggered activation: steered on the first chunk's
         # publication event instead of the post-compute invoke round-trip
         start = ready[0] + net.ctrl_plane_latency
-        finish = _streamed_finish(
+        window = edge.max_inflight_chunks
+        finish, batch_ends, media, peak, _ = _chunk_event_timeline(
             start, ready, sizes, media,
             lambda m, b: streamed_spans(m, b, False),
+            max_inflight=window,
+            on_pressure=pressure_for(edge) if window else None,
         )
+        if peak > u.peak_inflight_chunk_bytes:
+            u.peak_inflight_chunk_bytes = peak
         per_m: Dict[str, int] = {}
         for m, b in zip(media, sizes):
             per_m[m] = per_m.get(m, 0) + b
-        # clamp: one store-then-fetch batch at producer completion — the
-        # per-batch request overhead of chunking can only ever help
-        un = t_end + sum(
-            streamed_spans(m, b, False) for m, b in per_m.items()
-        )
-        if un < finish:
-            finish = un
+        if window == 0:
+            # clamp: one store-then-fetch batch at producer completion —
+            # unbounded chunking's per-batch request overhead can only ever
+            # help.  A credit window is exempt: bounded sender memory may
+            # legitimately cost latency, that is the trade it buys.
+            un = t_end + sum(
+                streamed_spans(m, b, False) for m, b in per_m.items()
+            )
+            if un < finish:
+                finish = un
         for m, b in per_m.items():
             u.count(m, b)
             _observe(m, b)
@@ -1356,8 +1676,18 @@ def execute_on_cluster(
                 acct.n_storage_puts += 1
                 acct.store(sim.now, b / 1e9)
                 u.n_puts += 1
+        # simulated chunk events: one timer per coalesced pull batch (the
+        # same virtual events the engine lowering runs), capped at the
+        # clamped finish — absolute timers, so batches land on the
+        # timeline's precomputed boundaries exactly
+        for end in batch_ends:
+            tgt = end if end < finish else finish
+            if tgt > sim.now:
+                yield sim.timeout_abs(tgt)
+            if tgt >= finish:
+                break
         if finish > sim.now:
-            yield sim.timeout(finish - sim.now)
+            yield sim.timeout_abs(finish)
         for m, b in per_m.items():
             if m in _STORAGE_MEDIA:
                 acct = cluster.accounting(m)
@@ -1394,23 +1724,40 @@ def execute_on_cluster(
                 om[m] = om.get(m, 0) + b
             per_obj.append(om)
         start = min(ready) + net.ctrl_plane_latency   # data-triggered steer
-        finish = _streamed_finish(
+        window = edge.max_inflight_chunks
+        # staged chunks were billed per medium at publish time, so the
+        # timeline must not rewrite media here: credits only STRETCH the
+        # producer's publications (no consumer-side pressure spill)
+        finish, batch_ends, _, peak, _ = _chunk_event_timeline(
             start, ready, sizes, media,
             lambda m, b: streamed_spans(m, b, True),
+            max_inflight=window,
         )
-        # clamp: the store-then-fetch consumer pulls each object whole once
-        # everything was staged (the sequential sync-SDK loop)
-        un = max(ready) + sum(
-            streamed_spans(m, b, True) for om in per_obj for m, b in om.items()
-        )
-        if un < finish:
-            finish = un
+        if peak > u.peak_inflight_chunk_bytes:
+            u.peak_inflight_chunk_bytes = peak
+        if window == 0:
+            # clamp: the store-then-fetch consumer pulls each object whole
+            # once everything was staged (the sequential sync-SDK loop);
+            # credit windows are exempt — bounded memory may cost latency
+            un = max(ready) + sum(
+                streamed_spans(m, b, True)
+                for om in per_obj for m, b in om.items()
+            )
+            if un < finish:
+                finish = un
         for om in per_obj:
             for m, b in om.items():
                 u.count(m, b)
                 _observe(m, b, retrievals=n_pulls)
+        # simulated chunk events: one timer per coalesced pull batch
+        for end in batch_ends:
+            tgt = end if end < finish else finish
+            if tgt > sim.now:
+                yield sim.timeout_abs(tgt)
+            if tgt >= finish:
+                break
         if finish > sim.now:
-            yield sim.timeout(finish - sim.now)
+            yield sim.timeout_abs(finish)
         for om in per_obj:
             for m, b in om.items():
                 if m in _STORAGE_MEDIA:
@@ -1505,20 +1852,28 @@ def execute_on_cluster(
             # PUT bills (one per distinct storage medium per object,
             # multipart-upload semantics) land here.
             compute_s = dag.by_name[edge.src].compute_s
-            sizes = list(edge.chunk_sizes())
+            auto = edge.chunk_bytes == "auto"
+            sizes = None if auto else list(edge.chunk_sizes())
             objs = streamed_staged[edge.label].setdefault(src_node, [])
             total = n * edge.nbytes
             acc = 0
             for _ in range(n):
-                ready = []
-                for b in sizes:
-                    acc += b
-                    off = compute_s * acc / total if total else 0.0
-                    ready.append(sim.now - compute_s + off)
-                media = chunk_media(edge, sizes, ready, sim.now)
-                objs.append(list(zip(ready, sizes, media)))
+                if auto:
+                    sizes_o, ready, media = auto_object_chunks(
+                        edge, True, acc, total, compute_s, sim.now
+                    )
+                    acc += edge.nbytes
+                else:
+                    sizes_o = sizes
+                    ready = []
+                    for b in sizes_o:
+                        acc += b
+                        off = compute_s * acc / total if total else 0.0
+                        ready.append(sim.now - compute_s + off)
+                    media = chunk_media(edge, sizes_o, ready, sim.now)
+                objs.append(list(zip(ready, sizes_o, media)))
                 per_m: Dict[str, int] = {}
-                for m, b in zip(media, sizes):
+                for m, b in zip(media, sizes_o):
                     per_m[m] = per_m.get(m, 0) + b
                 for m, b in per_m.items():
                     if m in _STORAGE_MEDIA:
@@ -1740,6 +2095,15 @@ class DagBinding:
         self._waves: List[List[Stage]] = dag.orchestrated_waves()
         self._gathers: List[Edge] = dag.gather_edges()
         self._streaming: List[Edge] = [e for e in dag.edges if e.streaming]
+        if self._waves:
+            for e in self._streaming:
+                if e.max_inflight_chunks and e.dst == dag.entry.name:
+                    raise ValueError(
+                        f"streaming gather edge {e.label!r} cannot use "
+                        "max_inflight_chunks on the engine lowering: the "
+                        "entry drains gathers only after the producer wave "
+                        "returns, so a blocked producer would deadlock"
+                    )
         if self._streaming and self._STREAMS_KEY in {e.label for e in dag.edges}:
             raise ValueError(
                 f"edge label {self._STREAMS_KEY!r} collides with the "
@@ -1876,21 +2240,56 @@ class DagBinding:
         compute as numeric yields so each chunk lands at its byte-
         proportional offset — the cluster lowering's production model.
         Objects/consumers follow ``_put_for_consumers``'s order; routing is
-        per chunk (one logical object may split across media) and service-
-        backend request fees bill once per (object, medium) — multipart
-        upload semantics.  Streams seal in a ``finally`` so parked consumers
-        always resume, even when production dies mid-flight."""
+        per chunk-span (one logical object may split across media) and
+        service-backend request fees bill once per (object, medium) —
+        multipart upload semantics.  Streams seal in a ``finally`` so parked
+        consumers always resume, even when production dies mid-flight.
+
+        Three dynamic behaviors layer on the static schedule:
+
+        * **coalescing** (:data:`STREAM_COALESCE`): a run of same-instant
+          chunks of one object publishes through ``put_chunk_span`` — one
+          shared payload, columnar refs, one billed PUT — and wakes parked
+          consumers once per span via ``push_span``;
+        * **credit backpressure** (``Edge(max_inflight_chunks=w)``): at most
+          ``w`` instance-resident chunks may be published-but-undrained, the
+          producer parking on the gate's credit event when the window fills
+          (spans truncate to the available credits); after
+          ``OnlineSpill.pressure_patience`` consecutive credit-delayed
+          publications the remaining stream spills durable — bounded sender
+          memory without stalling forever behind a structurally slow
+          consumer;
+        * **auto chunk sizing** (``chunk_bytes="auto"``): sizes resolve per
+          (edge, medium) from :func:`resolve_auto_chunk_bytes` at production
+          start, and an object's remaining bytes re-split whenever its route
+          lands on a different medium mid-stream — the route-decision points
+          double as re-scoring points.
+        """
         dag = self.dag
+        sim = self.engine.sim
+        transfer = self.engine.transfer
         compute_s = stage.compute_s
         sched: List[Tuple[float, int, Edge, Optional[int], Any, int]] = []
         fan_dst: Dict[str, int] = {}
+        total_of: Dict[str, float] = {}
+        scored_medium: Dict[str, str] = {}
         n = 0
         for edge in edges:
             fd = 1 if edge.dst == dag.entry.name else dag.by_name[edge.dst].fan
             fan_dst[edge.label] = fd
-            sizes = edge.chunk_sizes()
+            if edge.chunk_bytes == "auto":
+                m0 = self._resolve(edge, edge.nbytes)
+                scored_medium[edge.label] = m0
+                cb = resolve_auto_chunk_bytes(
+                    edge, m0, net=transfer.net, telemetry=transfer.telemetry,
+                    compute_s=compute_s,
+                )
+                sizes = edge.chunk_sizes(cb)
+            else:
+                sizes = edge.chunk_sizes()
             rows = 1 if edge.fanout == "broadcast" else fd
             total = float(edge.nbytes * edge.n_objects * rows)
+            total_of[edge.label] = total
             acc = 0
             for row in range(rows):
                 for _ in range(edge.n_objects):
@@ -1902,35 +2301,130 @@ class DagBinding:
                         sched.append((off, n, edge, j, tok, b))
                         n += 1
         sched.sort(key=lambda item: (item[0], item[1]))
+        gates: Dict[str, Any] = {}
+        for edge in edges:
+            if edge.max_inflight_chunks > 0:
+                from .workflow import CreditGate
+
+                g = CreditGate(sim, edge.max_inflight_chunks)
+                gates[edge.label] = g
+                for s in streams[edge.label]:
+                    prev = s.gate
+                    s.gate = (g,) if prev is None else tuple(prev) + (g,)
         seen: Dict[Any, set] = {}
+        auto_m: Dict[Any, str] = {}       # tok -> medium its split was scored for
+        streak: Dict[str, int] = {}       # consecutive credit-delayed publishes
+        forced: Dict[str, str] = {}       # post-pressure-spill durable target
+        spill = self.online_spill
         try:
             t = 0.0
-            for off, _, edge, j, tok, b in sched:
+            t0 = sim.now
+            idx = 0
+            while idx < len(sched):
+                off, _, edge, j, tok, b = sched[idx]
                 if off > t:
                     yield off - t
                     t = off
-                medium = self._chunk_medium(edge, b, compute_s - t)
+                label = edge.label
+                run = 1
+                if STREAM_COALESCE:
+                    end = len(sched)
+                    while idx + run < end:
+                        o2, _, e2, j2, tok2, b2 = sched[idx + run]
+                        if (o2 != off or e2 is not edge or j2 != j
+                                or tok2 is not tok or b2 != b):
+                            break
+                        run += 1
+                rem_s = compute_s - t
+                if rem_s < 0.0:          # credit waits can outlast compute
+                    rem_s = 0.0
+                medium = forced.get(label)
+                if medium is None:
+                    medium = self._chunk_medium(edge, b, rem_s)
+                gate = gates.get(label)
+                if gate is not None and medium not in _STORAGE_MEDIA:
+                    if gate.full:
+                        hits = streak.get(label, 0) + 1
+                        streak[label] = hits
+                        if spill is not None and hits >= spill.pressure_patience:
+                            # persistent zero-credit: the consumer is
+                            # structurally slower — remaining stream durable
+                            medium = forced[label] = spill.on_pressure(
+                                dag, edge, medium, sim.now
+                            )
+                            gate = None
+                        else:
+                            while gate.full:
+                                yield gate.wait()
+                            t = sim.now - t0
+                    else:
+                        streak[label] = 0
+                    if gate is not None:
+                        avail = gate.window - gate.outstanding
+                        if run > avail:
+                            run = avail
+                else:
+                    gate = None
+                nr = fan_dst[label] if j is None else 1
                 media = seen.setdefault(tok, set())
                 bill = medium not in media
                 media.add(medium)
-                arr = np.full(
-                    (max(1, int(b * self.bytes_scale) // 4),), fill, np.float32
-                )
-                ref = ctx.put_chunk(
-                    arr,
-                    n_retrievals=fan_dst[edge.label] if j is None else 1,
-                    backend=medium,
-                    bill_put=bill,
-                )
-                u = self.edge_usage[edge.label]
-                u.count(medium, arr.nbytes)
-                if bill:
-                    u.n_puts += 1
-                if j is None:        # broadcast: every consumer sees the ref
-                    for s in streams[edge.label]:
-                        s.push(ref, medium, tok)
+                u = self.edge_usage[label]
+                if run > 1:
+                    arr = np.full(
+                        (max(1, int(b * self.bytes_scale) // 4),),
+                        fill, np.float32,
+                    )
+                    refs = ctx.put_chunk_span(
+                        arr, run, n_retrievals=nr, backend=medium,
+                        bill_put=bill,
+                    )
+                    anb = arr.nbytes
+                    u.media[medium] = u.media.get(medium, 0) + run
+                    u.media_bytes[medium] = (
+                        u.media_bytes.get(medium, 0) + anb * run
+                    )
+                    u.bytes_moved += anb * run
+                    if bill:
+                        u.n_puts += 1
+                    if gate is not None:
+                        for r in refs:
+                            gate.publish(r, nr)
+                    if j is None:    # broadcast: every consumer sees the refs
+                        for s in streams[label]:
+                            s.push_span(refs, medium, tok)
+                    else:
+                        streams[label][j].push_span(refs, medium, tok)
                 else:
-                    streams[edge.label][j].push(ref, medium, tok)
+                    arr = np.full(
+                        (max(1, int(b * self.bytes_scale) // 4),),
+                        fill, np.float32,
+                    )
+                    ref = ctx.put_chunk(
+                        arr, n_retrievals=nr, backend=medium, bill_put=bill
+                    )
+                    u.count(medium, arr.nbytes)
+                    if bill:
+                        u.n_puts += 1
+                    if gate is not None:
+                        gate.publish(ref, nr)
+                    if j is None:
+                        for s in streams[label]:
+                            s.push(ref, medium, tok)
+                    else:
+                        streams[label][j].push(ref, medium, tok)
+                idx += run
+                # mid-stream re-score: an auto object's remaining bytes
+                # re-split for the medium the route actually landed on
+                if label in scored_medium:
+                    if medium != auto_m.setdefault(
+                        tok, scored_medium[label]
+                    ):
+                        auto_m[tok] = medium
+                        idx = self._rescore_auto_tail(
+                            sched, idx, edge, tok, medium, compute_s,
+                            total_of[label],
+                        )
             if compute_s > t:
                 yield compute_s - t
         finally:
@@ -1938,31 +2432,95 @@ class DagBinding:
                 for s in streams[edge.label]:
                     s.seal()
 
+    def _rescore_auto_tail(
+        self, sched, idx, edge: Edge, tok, medium: str, compute_s: float,
+        total: float,
+    ) -> int:
+        """Re-split ``tok``'s unpublished chunks for ``medium``.
+
+        Called from :meth:`_produce_streams` when an ``"auto"`` edge's route
+        resolves a chunk onto a medium different from the one the current
+        split was scored against.  The remaining byte range keeps its start
+        and end offsets (byte-proportional pacing is unchanged — only the
+        chunk boundaries inside it move), so other edges' interleaved
+        entries keep their relative order.  Returns ``idx`` (the schedule is
+        rewritten in place from ``idx`` on)."""
+        transfer = self.engine.transfer
+        rest = [s for s in sched[idx:] if s[4] is tok]
+        if not rest:
+            return idx
+        rem_b = sum(s[5] for s in rest)
+        off_hi = rest[-1][0]
+        off_lo = sched[idx - 1][0]
+        window = compute_s * (rem_b / total) if total else 0.0
+        cb = resolve_auto_chunk_bytes(
+            edge, medium, net=transfer.net, telemetry=transfer.telemetry,
+            compute_s=window, nbytes=rem_b,
+        )
+        q, r = divmod(rem_b, cb)
+        new_sizes = [cb] * q + ([r] if r else [])
+        j = next(s[3] for s in rest)
+        new_entries = []
+        done = 0
+        n = sched[-1][1] + 1 if sched else 0
+        for b in new_sizes:
+            done += b
+            o = off_lo + (off_hi - off_lo) * (done / rem_b)
+            new_entries.append((o, n, edge, j, tok, b))
+            n += 1
+        tail = [s for s in sched[idx:] if s[4] is not tok] + new_entries
+        tail.sort(key=lambda item: (item[0], item[1]))
+        sched[idx:] = tail
+        return idx
+
     def _drain_stream(self, ctx, edge: Edge, stream, local: bool = False):
         """Pull a stream's chunks as they publish, parking on the stream's
         ``more`` event between publications — the data-triggered consumer's
         wait-for-data, in virtual time.  Request fees bill once per
-        (object, medium): a ranged multi-GET of each object's chunk run."""
+        (object, medium): a ranged multi-GET of each object's chunk run.
+        Runs of already-published same-(object, medium) chunks drain through
+        ``get_chunk_span`` — one dispatch for the whole backlog run instead
+        of one per chunk event — and every drained chunk is reported to the
+        stream's credit gates so a parked producer's window can release."""
         stats = self.engine.transfer.stats
         u = self.edge_usage[edge.label]
         vals: List[Any] = []
         seen: set = set()
         i = 0
         while True:
-            while i < len(stream.refs):
-                ref = stream.refs[i]
+            avail = len(stream.refs)
+            while i < avail:
                 medium = stream.media[i]
-                key = (stream.objs[i], medium)
+                obj = stream.objs[i]
+                j = i + 1
+                if STREAM_COALESCE:
+                    while (j < avail and stream.media[j] == medium
+                           and stream.objs[j] is obj):
+                        j += 1
+                key = (obj, medium)
                 bill = key not in seen
                 seen.add(key)
                 before = stats.modeled_seconds
                 before_local = stats.local_pulls
-                vals.append(ctx.get_chunk(ref, local=local, bill_get=bill))
+                if j - i > 1:
+                    vals.extend(ctx.get_chunk_span(
+                        stream.refs[i:j], local=local, bill_first=bill
+                    ))
+                else:
+                    vals.append(ctx.get_chunk(
+                        stream.refs[i], local=local, bill_get=bill
+                    ))
                 if bill:
                     u.n_gets += 1
                 u.n_local += stats.local_pulls - before_local
                 u.modeled_s += stats.modeled_seconds - before
-                i += 1
+                gates = stream.gate
+                if gates is not None:
+                    for k in range(i, j):
+                        r = stream.refs[k]
+                        for g in gates:
+                            g.on_pull(r)
+                i = j
             if stream.sealed:
                 return vals
             yield stream.more

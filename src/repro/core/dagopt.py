@@ -514,6 +514,7 @@ class OnlineSpill:
         keep_alive_s: float = 60.0,
         cold_start_s: float = 0.5,
         safety: float = 1.0,
+        pressure_patience: int = 2,
     ):
         if durable not in DURABLE_MEDIA:
             raise ValueError(
@@ -524,8 +525,13 @@ class OnlineSpill:
         self.keep_alive_s = keep_alive_s
         self.cold_start_s = cold_start_s
         self.safety = safety
+        #: consecutive zero-credit publications tolerated before a
+        #: backpressured stream is spilled durable (see :meth:`on_pressure`)
+        self.pressure_patience = pressure_patience
         #: (edge_label, from_medium, now, eta_s) for every redirect issued
         self.spills: List[Tuple[str, str, float, float]] = []
+        #: (edge_label, from_medium, now) for every backpressure spill
+        self.pressure_spills: List[Tuple[str, str, float]] = []
 
     def _feed(self, dag: WorkflowDAG, stage_name: str):
         hub = self.telemetry
@@ -553,6 +559,20 @@ class OnlineSpill:
             self.spills.append((edge.label, medium, now, eta_s))
             return self.durable
         return medium
+
+    def on_pressure(
+        self, dag: WorkflowDAG, edge: Edge, medium: str, now: float
+    ) -> str:
+        """Spill target for a stream under persistent backpressure.
+
+        Called when ``pressure_patience`` consecutive chunk publications on
+        ``edge`` were delayed by an exhausted credit window: the consumer is
+        structurally slower than the producer, so holding the remainder in
+        instance-resident media just pins sender memory.  The remaining
+        chunks go durable — durable chunks bypass the credit window because
+        the store, not the sender, holds them."""
+        self.pressure_spills.append((edge.label, medium, now))
+        return self.durable
 
 
 # ---------------------------------------------------------------------------

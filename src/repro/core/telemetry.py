@@ -289,6 +289,10 @@ class MediumTelemetry:
 
     #: recent-latency window backing the p99 estimate
     WINDOW = 256
+    #: samples before the latency/fee-vs-size models are trusted over an
+    #: analytic prior (chunk-size auto-tuning reads this via
+    #: :meth:`TelemetryHub.medium_model`)
+    MIN_MODEL_SAMPLES = 8
     #: the window is re-sorted at most once per REFRESH records, so a
     #: record/query interleave (every routed pull records, every resolve
     #: queries) amortizes the O(W log W) quantile to O(W log W / REFRESH)
@@ -316,6 +320,11 @@ class MediumTelemetry:
         # amortized to every REFRESH-th record once it has filled out
         if self.n <= self.REFRESH or self.n % self.REFRESH == 0:
             self._p99_dirty = True
+
+    def model_ready(self) -> bool:
+        """Whether the size-conditioned models have enough samples to beat
+        an analytic prior."""
+        return self.n >= self.MIN_MODEL_SAMPLES
 
     def predict_seconds(self, nbytes: int) -> float:
         return self.latency_model.predict(nbytes / 1e9)
@@ -375,6 +384,16 @@ class TelemetryHub:
         if tel is None:
             tel = self.media[name] = MediumTelemetry()
         return tel
+
+    def medium_model(self, name: str) -> Optional[MediumTelemetry]:
+        """The medium's telemetry iff its size-conditioned models are ready
+        (:attr:`MediumTelemetry.MIN_MODEL_SAMPLES` observations), else
+        ``None`` — the chunk-size auto-tuner's trust gate: too few samples
+        and the caller keeps its analytic prior."""
+        tel = self.media.get(name)
+        if tel is not None and tel.model_ready():
+            return tel
+        return None
 
     def deployment(self, name: str, **kw) -> DeploymentTelemetry:
         tel = self.deployments.get(name)

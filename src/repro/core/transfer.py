@@ -135,6 +135,13 @@ class TransferStats:
     #: pulls that took the co-placement shared-memory path (``get(local=True)``
     #: on an instance-resident medium): modeled at memcpy speed, not the NIC
     local_pulls: int = 0
+    #: instance-resident streamed chunk bytes published but not yet fully
+    #: retrieved — the sender-side memory a live stream is holding.  Durable
+    #: chunks never count (a storage put frees the producer's copy).  The
+    #: high-water mark is what credit-based backpressure provably bounds:
+    #: with ``Edge(max_inflight_chunks=k)`` it stays <= k * chunk_bytes.
+    inflight_chunk_bytes: float = 0.0
+    peak_inflight_chunk_bytes: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -962,6 +969,20 @@ class TransferEngine:
             a.n_storage_puts -= puts
             a.n_storage_gets -= gets
 
+    def _track_chunk_published(self, nbytes: int) -> None:
+        """One instance-resident chunk now held by the producer side."""
+        s = self.stats
+        s.inflight_chunk_bytes = f = s.inflight_chunk_bytes + nbytes
+        if f > s.peak_inflight_chunk_bytes:
+            s.peak_inflight_chunk_bytes = f
+
+    def _track_chunk_consumed(self, nbytes: int, n_retrievals: int) -> None:
+        """One retrieval of an instance-resident chunk: a broadcast chunk's
+        bytes release fractionally, fully freed after its last consumer."""
+        s = self.stats
+        f = s.inflight_chunk_bytes - nbytes / (n_retrievals or 1)
+        s.inflight_chunk_bytes = f if f > 0.0 else 0.0
+
     def put_chunk(
         self,
         obj: jax.Array,
@@ -993,6 +1014,12 @@ class TransferEngine:
         ref = self.put(obj, n_retrievals, backend=backend)
         if not bill_put and isinstance(self._strategy(medium), _ServiceBackend):
             self._credit_storage_requests(medium, puts=1)
+        if medium in INSTANCE_RESIDENT_MEDIA:
+            self._track_chunk_published(
+                ref._payload.desc.nbytes
+                if type(ref) is SealedRef and ref._minter is self.minter
+                else self.minter.open(ref).desc.nbytes
+            )
         return ref
 
     def get_chunk(
@@ -1013,19 +1040,368 @@ class TransferEngine:
         extra bytes remains) — mirroring the cluster lowering, which
         coalesces a batch of ready chunks into one request per medium."""
         before = self.stats.modeled_seconds
+        if type(ref) is SealedRef and ref._minter is self.minter:
+            payload = ref._payload
+        else:
+            payload = self.minter.open(ref)
+        medium = payload.medium or self.backend
         obj = self.get(ref, local=local)
         if not bill_get:
-            if type(ref) is SealedRef and ref._minter is self.minter:
-                medium = ref._payload.medium or self.backend
-            else:
-                medium = self.minter.open(ref).medium or self.backend
             if isinstance(self._strategy(medium), _ServiceBackend):
                 self._credit_storage_requests(medium, gets=1)
             delta = self.stats.modeled_seconds - before
             overhead = modeled_transfer_seconds(medium, 0, self.net)
             if overhead > 0.0 and delta > 0.0:
                 self.stats.modeled_seconds -= min(overhead, delta)
+        if medium in INSTANCE_RESIDENT_MEDIA:
+            self._track_chunk_consumed(
+                payload.desc.nbytes, payload.desc.n_retrievals
+            )
         return obj
+
+    def put_chunk_span(
+        self,
+        obj: jax.Array,
+        count: int,
+        n_retrievals: int = 1,
+        *,
+        backend: Optional[str] = None,
+        bill_put: bool = True,
+    ) -> list:
+        """Mint ``count`` chunk refs for one same-instant span of a streamed
+        object — the producer-side half of the coalesced chunk-event path.
+
+        Every chunk of the span carries the same payload ``obj`` (a span is
+        a run of equal-size chunks published at one virtual instant), the
+        descriptor is built once and shared columnar across the refs, and
+        the storage-request crediting happens once for the whole span
+        instead of per chunk.  Accounting, residency, and per-chunk float
+        ops are bit-for-bit what ``count`` scalar :meth:`put_chunk` calls
+        produce; only the first chunk bills the PUT request (and only when
+        ``bill_put=True`` — multipart-upload semantics)."""
+        if count <= 0:
+            return []
+        medium = self.backend if backend is None else backend
+        if medium == "inline":
+            raise ValueError(
+                "streaming chunks cannot ride 'inline': a chunk outlives "
+                "the sync handoff message"
+            )
+        nb = getattr(obj, "nbytes", None)
+        if (
+            medium == "xdt"
+            and self._fast_single_owner
+            and not self._wall_timing
+            and nb is not None
+            and n_retrievals >= 1
+        ):
+            # fused span put: one descriptor, one nonce counter walk, no
+            # strategy/minter frames — mirrors the scalar fused xdt put
+            nbytes = int(nb)
+            reg = self.registry
+            vs = self._vsim
+            dkey = (obj.shape, obj.dtype, nbytes, n_retrievals)
+            desc = self._desc_cache.get(dkey)
+            if desc is None:
+                desc = self._desc_cache[dkey] = ObjectDescriptor(
+                    shape=tuple(obj.shape),
+                    dtype=_dtype_str(obj.dtype),
+                    nbytes=nbytes,
+                    n_retrievals=n_retrievals,
+                )
+            m = self.minter
+            coords = self.producer_coords
+            epoch = reg._epoch
+            entries = reg._entries
+            refs = []
+            for _ in range(count):
+                if (
+                    len(entries) < reg._max_slots
+                    and (reg._bytes + nbytes <= reg._max_bytes
+                         or not entries)
+                ):
+                    buffer_id = reg._next_id
+                    reg._next_id = buffer_id + 1
+                    entries[buffer_id] = [
+                        obj, nbytes, n_retrievals, epoch,
+                        vs.now if vs is not None else reg._clock(),
+                    ]
+                    b = reg._bytes = reg._bytes + nbytes
+                    if b > reg._high_water:
+                        reg._high_water = b
+                    reg._puts += 1
+                else:
+                    buffer_id, _ = reg._put_unlocked(
+                        obj, n_retrievals, nbytes, True
+                    )
+                m._nonce_counter = nonce = m._nonce_counter + 1
+                ref = _obj_new(SealedRef)
+                ref._minter = m
+                ref._payload = RefPayload(coords, buffer_id, epoch, desc, "xdt")
+                ref._nonce = nonce.to_bytes(_NONCE_LEN, "big")
+                ref._sealed = None
+                refs.append(ref)
+                self._track_chunk_published(nbytes)
+            return refs
+        if (
+            medium == self.backend
+            and self._fast_service
+            and not self._wall_timing
+            and nb is not None
+            and n_retrievals >= 1
+        ):
+            # fused through-storage span put: per-chunk residency floats stay
+            # in the loop (bit-identical integration), request billing is
+            # credited once for the span's continuation chunks
+            nbytes = int(nb)
+            host = obj if type(obj) is np.ndarray else _to_host(obj)
+            svc = self.service
+            vs = self._vsim
+            now = self.clock() if vs is None else vs.now
+            gb = nbytes / 1e9
+            b = self._backend
+            macct = b._macct
+            if macct is None:
+                macct = b._macct = self._acct_for(b.name)
+            dkey = (obj.shape, obj.dtype, nbytes, n_retrievals)
+            desc = self._desc_cache.get(dkey)
+            if desc is None:
+                desc = self._desc_cache[dkey] = ObjectDescriptor(
+                    shape=tuple(obj.shape),
+                    dtype=_dtype_str(obj.dtype),
+                    nbytes=nbytes,
+                    n_retrievals=n_retrievals,
+                )
+            m = self.minter
+            coords = self.producer_coords
+            accts = (svc.acct, self.acct, macct)
+            refs = []
+            for _ in range(count):
+                svc._next_key = bid = svc._next_key + 1
+                svc._objects[bid] = host
+                svc._refcount[bid] = n_retrievals
+                svc._nbytes[bid] = nbytes
+                for a in accts:
+                    a.n_storage_puts += 1
+                    a.storage_gb_seconds += a._resident_gb * (now - a._last_t)
+                    a._last_t = now
+                    r = a._resident_gb = a._resident_gb + gb
+                    if r > a.peak_resident_gb:
+                        a.peak_resident_gb = r
+                m._nonce_counter = nonce = m._nonce_counter + 1
+                ref = _obj_new(SealedRef)
+                ref._minter = m
+                ref._payload = RefPayload(coords, bid, 0, desc, self.backend)
+                ref._nonce = nonce.to_bytes(_NONCE_LEN, "big")
+                ref._sealed = None
+                refs.append(ref)
+            credit = count - 1 if bill_put else count
+            if credit:
+                self._credit_storage_requests(medium, puts=credit)
+            return refs
+        # generic media (spilled mid-stream, custom backends, wall timing):
+        # the scalar path already carries the exact semantics per chunk
+        return [
+            self.put_chunk(
+                obj, n_retrievals, backend=backend,
+                bill_put=bill_put and i == 0,
+            )
+            for i in range(count)
+        ]
+
+    def get_chunk_span(
+        self,
+        refs,
+        *,
+        local: bool = False,
+        bill_first: bool = False,
+        marks: Optional[list] = None,
+    ) -> list:
+        """Drain one run of same-(object, medium) chunks in a single kernel
+        call — the consumer-side half of the coalesced chunk-event path.
+
+        Bit-for-bit equivalent to calling :meth:`get_chunk` per ref (same
+        accounting, same float-op order on ``stats.modeled_seconds``, same
+        billing coalescing) with the per-chunk call frames, medium dispatch,
+        and request crediting hoisted out of the loop.  ``bill_first=True``
+        keeps the first ref's storage GET request — the ranged GET for this
+        (object, medium) range; continuation refs always credit theirs back
+        and shed the per-request latency overhead.
+
+        ``marks`` (when given) receives ``stats.modeled_seconds`` after each
+        chunk, letting the caller replay per-chunk debt accrual with the
+        exact float-op sequence of the scalar path."""
+        if not refs:
+            return []
+        minter = self.minter
+        r0 = refs[0]
+        stats = self.stats
+        if not (type(r0) is SealedRef and r0._minter is minter):
+            out = []
+            for i, r in enumerate(refs):
+                out.append(
+                    self.get_chunk(r, local=local,
+                                   bill_get=bill_first and i == 0)
+                )
+                if marks is not None:
+                    marks.append(stats.modeled_seconds)
+            return out
+        medium = r0._payload.medium or self.backend
+        net = self.net
+        if (
+            medium == "xdt"
+            and self._fast_single_owner
+            and not local
+            and not self._wall_timing
+        ):
+            reg = self.registry
+            entries = reg._entries
+            cache = self._modeled_cache
+            fees = self._fee_cache
+            tel = self.telemetry
+            overhead = modeled_transfer_seconds("xdt", 0, net)
+            epoch = reg._epoch
+            billed = bill_first
+            out = []
+            for ref in refs:
+                payload = ref._payload
+                nbytes = payload.desc.nbytes
+                before = stats.modeled_seconds
+                if payload.epoch != epoch:
+                    raise XDTProducerGone(
+                        f"producer epoch {payload.epoch} superseded by "
+                        f"{epoch}"
+                    )
+                entry = entries.get(payload.buffer_id)
+                if entry is None:
+                    raise XDTObjectExhausted(
+                        f"buffer {payload.buffer_id} not resident"
+                    )
+                obj = entry[_E_OBJ]
+                entry[_E_REMAINING] = remaining = entry[_E_REMAINING] - 1
+                reg._gets += 1
+                if remaining == 0:
+                    reg._bytes -= entry[_E_NBYTES]
+                    del entries[payload.buffer_id]
+                stats.transfers += 1
+                stats.bytes_moved += nbytes
+                key = ("xdt", nbytes)
+                modeled = cache.get(key)
+                if modeled is None:
+                    modeled = cache[key] = (
+                        XDTBackend.modeled_seconds(nbytes, net)
+                    )
+                stats.modeled_seconds += modeled
+                if tel is not None:
+                    n = payload.desc.n_retrievals or 1
+                    fkey = ("xdt", nbytes, n)
+                    fee = fees.get(fkey)
+                    if fee is None:
+                        fee = fees[fkey] = (
+                            marginal_pull_fee_usd("xdt", nbytes, n)
+                        )
+                    tel.record_transfer("xdt", nbytes, modeled, fee)
+                if not billed:
+                    delta = stats.modeled_seconds - before
+                    if overhead > 0.0 and delta > 0.0:
+                        stats.modeled_seconds -= min(overhead, delta)
+                billed = False
+                self._track_chunk_consumed(nbytes, payload.desc.n_retrievals)
+                if marks is not None:
+                    marks.append(stats.modeled_seconds)
+                out.append(obj)
+            return out
+        if (
+            self._fast_service
+            and medium == self.backend
+            and not self._wall_timing
+        ):
+            svc = self.service
+            objects = svc._objects
+            refcount = svc._refcount
+            vs = self._vsim
+            now = self.clock() if vs is None else vs.now
+            b = self._backend
+            macct = b._macct
+            if macct is None:
+                macct = b._macct = self._acct_for(b.name)
+            accts = (svc.acct, self.acct, macct)
+            cache = self._modeled_cache
+            fees = self._fee_cache
+            tel = self.telemetry
+            overhead = modeled_transfer_seconds(medium, 0, net)
+            billed = bill_first
+            credit = 0
+            out = []
+            for ref in refs:
+                payload = ref._payload
+                nbytes = payload.desc.nbytes
+                before = stats.modeled_seconds
+                bid = payload.buffer_id
+                host = objects.get(bid)
+                if host is None:
+                    raise XDTObjectExhausted(f"service object {bid} gone")
+                obj = host if type(host) is np.ndarray else _to_host(host)
+                remaining = refcount[bid] = refcount[bid] - 1
+                freed = remaining <= 0
+                gb = nbytes / 1e9
+                a = svc.acct
+                a.n_storage_gets += 1
+                if freed:
+                    a.storage_gb_seconds += (
+                        a._resident_gb * (now - a._last_t)
+                    )
+                    a._last_t = now
+                    r = a._resident_gb - svc._nbytes[bid] / 1e9
+                    a._resident_gb = r if r > 0.0 else 0.0
+                    del objects[bid]
+                    del refcount[bid]
+                    del svc._nbytes[bid]
+                for a in accts[1:]:
+                    a.n_storage_gets += 1
+                    if freed:
+                        a.storage_gb_seconds += (
+                            a._resident_gb * (now - a._last_t)
+                        )
+                        a._last_t = now
+                        r = a._resident_gb - gb
+                        a._resident_gb = r if r > 0.0 else 0.0
+                stats.transfers += 1
+                stats.bytes_moved += nbytes
+                mkey = (medium, nbytes)
+                modeled = cache.get(mkey)
+                if modeled is None:
+                    modeled = cache[mkey] = b.modeled_seconds(nbytes, net)
+                stats.modeled_seconds += modeled
+                if tel is not None:
+                    n = payload.desc.n_retrievals or 1
+                    fkey = (medium, nbytes, n)
+                    fee = fees.get(fkey)
+                    if fee is None:
+                        fee = fees[fkey] = (
+                            marginal_pull_fee_usd(medium, nbytes, n)
+                        )
+                    tel.record_transfer(medium, nbytes, modeled, fee)
+                if not billed:
+                    credit += 1
+                    delta = stats.modeled_seconds - before
+                    if overhead > 0.0 and delta > 0.0:
+                        stats.modeled_seconds -= min(overhead, delta)
+                billed = False
+                if marks is not None:
+                    marks.append(stats.modeled_seconds)
+                out.append(obj)
+            if credit:
+                self._credit_storage_requests(medium, gets=credit)
+            return out
+        out = []
+        for i, r in enumerate(refs):
+            out.append(
+                self.get_chunk(r, local=local, bill_get=bill_first and i == 0)
+            )
+            if marks is not None:
+                marks.append(stats.modeled_seconds)
+        return out
 
     # --------------------------------------------------------------- invoke
     def invoke(

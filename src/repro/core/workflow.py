@@ -390,7 +390,7 @@ class ChunkStream:
     """
 
     __slots__ = ("sim", "refs", "media", "objs", "sealed", "first", "_more",
-                 "_open_producers")
+                 "_open_producers", "gate")
 
     def __init__(self, sim: Simulator, n_producers: int = 1):
         self.sim = sim
@@ -405,6 +405,10 @@ class ChunkStream:
         # fan-in seal: a wave edge's consumer stream is fed by every
         # producer instance; the stream seals when the LAST producer does
         self._open_producers = n_producers
+        #: credit-based backpressure hook (``Edge(max_inflight_chunks=...)``):
+        #: when set, the consumer reports each drained chunk so the producer's
+        #: credit window can release — ``None`` keeps the drain unconditional
+        self.gate = None
 
     @property
     def more(self) -> Event:
@@ -423,6 +427,23 @@ class ChunkStream:
         ev, self._more = self._more, Event(self.sim)
         ev.set()
 
+    def push_span(self, refs: Sequence[XDTRef], medium: str, obj: Any) -> None:
+        """Publish a same-instant run of chunks of ONE object with a single
+        mailbox rotation: the lists extend columnar and waiting consumers
+        wake once for the whole span instead of once per chunk.  Semantics
+        are identical to ``push`` per ref — a parked consumer is appended to
+        the run queue exactly once either way."""
+        if self.sealed:
+            raise RuntimeError("push_span() on a sealed ChunkStream")
+        n = len(refs)
+        self.refs.extend(refs)
+        self.media.extend([medium] * n)
+        self.objs.extend([obj] * n)
+        if not self.first.fired:
+            self.first.set()
+        ev, self._more = self._more, Event(self.sim)
+        ev.set()
+
     def seal(self) -> None:
         self._open_producers -= 1
         if self._open_producers > 0:
@@ -431,6 +452,64 @@ class ChunkStream:
         if not self.first.fired:
             self.first.set()
         self._more.set()                # stays fired for late consumers
+
+
+class CreditGate:
+    """Producer-side credit window for ONE streaming edge's sender.
+
+    ``Edge(max_inflight_chunks=w)`` bounds sender memory: at most ``w``
+    instance-resident chunks may be published-but-undrained at once.  The
+    producer registers each resident chunk via :meth:`publish` and parks on
+    :meth:`wait` while :attr:`full`; consumers report every drained chunk
+    through :meth:`on_pull`, which releases the credit once the chunk's last
+    retrieval lands (broadcast chunks hold their credit until every consumer
+    has pulled).  Durable chunks never register — the store, not the sender,
+    holds them — so a pressure-spilled stream runs credit-free.  Refs the
+    gate never registered are ignored, so consumers can report uncondition-
+    ally.  Deadlock-free: a full window implies undrained chunks, and every
+    streaming consumer is spawned (or data-trigger armed) before production
+    starts, so someone is always able to drain.
+    """
+
+    __slots__ = ("sim", "window", "outstanding", "_event", "_pulls")
+
+    def __init__(self, sim: Simulator, window: int):
+        self.sim = sim
+        self.window = window
+        self.outstanding = 0
+        self._event: Optional[Event] = None
+        # id(ref) -> retrievals still holding the chunk's credit; keyed by
+        # id because refs stay alive in the stream's columnar lists
+        self._pulls: Dict[int, int] = {}
+
+    @property
+    def full(self) -> bool:
+        return self.outstanding >= self.window
+
+    def wait(self) -> Event:
+        """Event firing on the next credit release; yield it while full."""
+        ev = self._event
+        if ev is None or ev.fired:
+            ev = self._event = Event(self.sim)
+        return ev
+
+    def publish(self, ref: Any, n_retrievals: int) -> None:
+        self.outstanding += 1
+        self._pulls[id(ref)] = n_retrievals
+
+    def on_pull(self, ref: Any) -> None:
+        key = id(ref)
+        rem = self._pulls.get(key)
+        if rem is None:
+            return
+        if rem <= 1:
+            del self._pulls[key]
+            self.outstanding -= 1
+            ev = self._event
+            if ev is not None and not ev.fired:
+                ev.set()
+        else:
+            self._pulls[key] = rem - 1
 
 
 class Context:
@@ -524,6 +603,40 @@ class Context:
         obj = self._engine.transfer.get_chunk(ref, local=local, bill_get=bill_get)
         self._debt += stats.modeled_seconds - before
         return obj
+
+    def put_chunk_span(
+        self,
+        obj: Any,
+        count: int,
+        n_retrievals: int = 1,
+        backend: Optional[str] = None,
+        bill_put: bool = True,
+    ) -> List[XDTRef]:
+        """Publish a same-instant span of ``count`` chunks of one streamed
+        object in a single kernel call (see ``TransferEngine.put_chunk_span``
+        — refs built columnar, PUT billing coalesced once per span)."""
+        return self._engine.transfer.put_chunk_span(
+            obj, count, n_retrievals, backend=backend, bill_put=bill_put
+        )
+
+    def get_chunk_span(
+        self, refs: Sequence[XDTRef], local: bool = False,
+        bill_first: bool = False,
+    ) -> List[Any]:
+        """Drain a run of same-(object, medium) chunks in one kernel call;
+        the modeled latency accrues as debt chunk by chunk (replayed from
+        the kernel's per-chunk marks) so the total is bit-identical to the
+        scalar drain's float-op sequence."""
+        stats = self._engine.transfer.stats
+        prev = stats.modeled_seconds
+        marks: List[float] = []
+        out = self._engine.transfer.get_chunk_span(
+            refs, local=local, bill_first=bill_first, marks=marks
+        )
+        for m in marks:
+            self._debt += m - prev
+            prev = m
+        return out
 
     # collective conveniences built from the primitives (paper §7.1)
     def scatter(self, fn_name: str, objs: Sequence[Any]) -> List[Any]:

@@ -1,0 +1,128 @@
+"""Property test: per-chunk billing coalesces exactly to the whole-object
+storage bill.
+
+A streamed object is k chunks, each individually routed — but the billing
+contract is multipart-upload semantics: exactly ONE storage PUT and ONE
+(ranged multi-) GET per (object, medium), regardless of chunk count, chunk
+size, or where in the stream the route switches media.  Under random chunk
+geometries and random mid-stream media splits, on every chunk-legal backend
+and on both lowerings, the op counts must equal what the same object would
+bill if it had been shipped whole (per medium) — never one op per chunk.
+
+Runs under real ``hypothesis`` when installed, or the deterministic
+``tests/_hypothesis_stub.py`` fallback registered by ``conftest.py``.
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import Edge, Stage, WorkflowDAG, WorkflowEngine
+from repro.core.dag import RoutePolicy, execute_on_cluster
+
+BACKENDS = ("s3", "elasticache", "xdt")
+# single-medium streams plus every ordered mid-stream switch between
+# distinct media — the four service/instance backends' chunk-legal subset
+# ("inline" chunks are refused at declaration time, pinned below)
+MEDIA_SPLITS = [(m, m) for m in BACKENDS] + [
+    (a, b) for a in BACKENDS for b in BACKENDS if a != b
+]
+
+
+class SplitRoute(RoutePolicy):
+    """Scripted mid-stream switch: the first ``split`` resolutions go to
+    ``m1``, the rest to ``m2`` — a deterministic stand-in for a stateful
+    policy splitting one logical object across media."""
+
+    def __init__(self, m1, m2, split):
+        self.m1, self.m2, self.split = m1, m2, split
+        self.calls = 0
+
+    def resolve(self, edge, nbytes, evictable):
+        self.calls += 1
+        return self.m1 if self.calls <= self.split else self.m2
+
+
+def _dag(nbytes, chunk_bytes):
+    # compute-paced producer: every chunk publishes at a distinct offset,
+    # so the route policy is consulted once per chunk (the adversarial
+    # case for billing coalescing)
+    return WorkflowDAG(
+        "pipe",
+        [Stage("p", compute_s=0.5), Stage("c", compute_s=0.01)],
+        [Edge("p", "c", nbytes, label="feed", handoff="sync",
+              streaming=True, chunk_bytes=chunk_bytes)],
+    )
+
+
+def _geometry(cb_kb, k, r_kb):
+    """A random chunk geometry: k chunks of cb bytes with a ragged tail."""
+    cb = cb_kb << 10
+    r = min(r_kb, cb_kb) << 10
+    nbytes = cb * (k - 1) + r
+    return nbytes, cb, k
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    cb_kb=st.integers(min_value=64, max_value=4096),
+    k=st.integers(min_value=1, max_value=12),
+    r_kb=st.integers(min_value=1, max_value=4096),
+    split=st.integers(min_value=0, max_value=12),
+    pair=st.integers(min_value=0, max_value=len(MEDIA_SPLITS) - 1),
+)
+def test_engine_chunk_billing_coalesces_to_whole_object(
+    cb_kb, k, r_kb, split, pair
+):
+    nbytes, cb, k = _geometry(cb_kb, k, r_kb)
+    m1, m2 = MEDIA_SPLITS[pair]
+    route = SplitRoute(m1, m2, split)
+    eng = WorkflowEngine(backend="xdt")
+    binding = _dag(nbytes, cb).bind(eng, default_route=route)
+    eng.submit(binding.entry, 1.0)
+    eng.drain()
+    (req,) = eng.requests
+    assert req.status == "ok"
+    u = binding.edge_usage["feed"]
+    expect = {m1 if i < split else m2 for i in range(k)}
+    assert set(u.media) == expect
+    assert sum(u.media.values()) == k              # every chunk accounted
+    assert sum(u.media_bytes.values()) == nbytes   # bytes conserved
+    # THE contract: one PUT + one GET per (object, medium), never per chunk
+    assert u.n_puts == len(expect)
+    assert u.n_gets == len(expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    cb_kb=st.integers(min_value=64, max_value=4096),
+    k=st.integers(min_value=1, max_value=8),
+    r_kb=st.integers(min_value=1, max_value=4096),
+    backend=st.integers(min_value=0, max_value=len(BACKENDS) - 1),
+)
+def test_cluster_chunk_billing_matches_whole_object_run(
+    cb_kb, k, r_kb, backend
+):
+    nbytes, cb, k = _geometry(cb_kb, k, r_kb)
+    m = BACKENDS[backend]
+    plain = WorkflowDAG(
+        "pipe",
+        [Stage("p", compute_s=0.5), Stage("c", compute_s=0.01)],
+        [Edge("p", "c", nbytes, label="feed", handoff="sync")],
+    )
+    base = execute_on_cluster(plain, m, seed=0, deterministic=True)
+    run = execute_on_cluster(_dag(nbytes, cb), m, seed=0, deterministic=True)
+    bu = base.edge_usage["feed"]
+    u = run.edge_usage["feed"]
+    assert (u.n_puts, u.n_gets) == (bu.n_puts, bu.n_gets)
+    assert u.media == bu.media or sum(u.media.values()) == k
+    assert sum(u.media_bytes.values()) == nbytes
+    # k-way chunking never bills more dollars than the whole object
+    assert run.cost().total <= base.cost().total * (1 + 1e-9)
+
+
+def test_inline_chunks_stay_refused():
+    # the fourth transport is not chunk-legal: chunks outlive the sync
+    # message, so declaration-time validation must keep rejecting it
+    with pytest.raises(ValueError, match="inline"):
+        Edge("p", "c", 1 << 20, route="inline", streaming=True,
+             chunk_bytes=4096)

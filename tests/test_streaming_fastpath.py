@@ -1,0 +1,222 @@
+"""Streaming fast path: coalesced span kernels, credit backpressure, auto
+chunk sizing.
+
+The PR's tentpole invariants:
+
+* the coalesced span-kernel path (``STREAM_COALESCE``) is a pure wall-time
+  optimization — virtual-time results are bit-identical to the per-event
+  legacy path on both producer shapes (instant burst and compute-paced);
+* ``Edge(max_inflight_chunks=w)`` provably bounds the producer's resident
+  chunk footprint to ``w * chunk_bytes`` where the unbounded stream buffers
+  the whole object;
+* under persistent zero-credit (a structurally slower consumer),
+  ``OnlineSpill.on_pressure`` diverts the remaining stream durable and the
+  request completes with zero retries;
+* ``chunk_bytes="auto"`` resolves to a concrete split on both lowerings
+  and keeps the once-per-(object, medium) billing contract;
+* a credit window on a wave-mode gather edge is rejected at bind time
+  (the entry drains gathers only after the producer wave returns, so a
+  blocked producer would deadlock).
+"""
+import pytest
+
+import repro.core.dag as dagmod
+from repro.core import Edge, Stage, TelemetryHub, WorkflowDAG, WorkflowEngine
+from repro.core.dag import FixedRoute, execute_on_cluster
+from repro.core.dagopt import OnlineSpill
+
+CHUNK = 1 << 20
+NBYTES = 8 << 20                       # 8 chunks per object
+
+
+def _pipe(chunk=CHUNK, producer_s=0.0, consumer_s=0.01, **edge_kw):
+    return WorkflowDAG(
+        "pipe",
+        [Stage("p", compute_s=producer_s), Stage("c", compute_s=consumer_s)],
+        [Edge("p", "c", NBYTES, label="feed", handoff="sync",
+              streaming=True, chunk_bytes=chunk, **edge_kw)],
+    )
+
+
+def _run_engine(dag, backend="xdt", spill=None, coalesce=True):
+    prev = dagmod.STREAM_COALESCE
+    dagmod.STREAM_COALESCE = coalesce
+    try:
+        eng = WorkflowEngine(backend="xdt")
+        binding = dag.bind(eng, default_route=FixedRoute(backend),
+                           online_spill=spill)
+        eng.submit(binding.entry, 1.0)
+        eng.drain()
+        (req,) = eng.requests
+        return eng, binding, req
+    finally:
+        dagmod.STREAM_COALESCE = prev
+
+
+# -- coalesced span kernels are invisible in virtual time --------------------
+
+
+@pytest.mark.parametrize("producer_s", (0.0, 0.5))
+@pytest.mark.parametrize("backend", ("xdt", "s3"))
+def test_engine_coalesced_is_bit_identical_to_legacy(producer_s, backend):
+    # producer_s=0 publishes every chunk at one instant (maximal span
+    # coalescing); producer_s>0 paces chunks to distinct offsets (scalar
+    # path) — both must match the legacy per-event interpreter exactly
+    results = {}
+    for mode in (True, False):
+        eng, binding, req = _run_engine(
+            _pipe(producer_s=producer_s), backend=backend, coalesce=mode
+        )
+        assert req.status == "ok"
+        results[mode] = (
+            req.latency_s,
+            eng.sim.now,
+            binding.cost().total,
+            binding.edge_usage["feed"].n_puts,
+            binding.edge_usage["feed"].n_gets,
+        )
+    assert results[True] == results[False]
+
+
+def test_engine_coalesced_bounded_stream_matches_legacy():
+    # the credit gate truncates spans to the available window; the
+    # publication schedule (and so all virtual time) must still be
+    # identical to the legacy scalar path under the same window
+    results = {}
+    for mode in (True, False):
+        eng, binding, req = _run_engine(
+            _pipe(max_inflight_chunks=3), coalesce=mode
+        )
+        assert req.status == "ok"
+        results[mode] = (
+            req.latency_s,
+            eng.transfer.stats.peak_inflight_chunk_bytes,
+            binding.cost().total,
+        )
+    assert results[True] == results[False]
+
+
+# -- credit-based backpressure -----------------------------------------------
+
+
+def test_engine_unbounded_stream_buffers_the_whole_object():
+    # a zero-compute producer bursts every chunk before the consumer runs
+    # once: without credits the full object is resident at the producer
+    eng, binding, req = _run_engine(_pipe())
+    assert req.status == "ok"
+    assert eng.transfer.stats.peak_inflight_chunk_bytes == NBYTES
+
+
+def test_engine_credit_window_bounds_peak_inflight():
+    window = 2
+    eng, binding, req = _run_engine(_pipe(max_inflight_chunks=window))
+    assert req.status == "ok"
+    assert eng.failed_requests == 0 and eng.retry_max == 0
+    assert 0 < eng.transfer.stats.peak_inflight_chunk_bytes <= window * CHUNK
+    # no spill configured: every chunk still rode the fast path
+    u = binding.edge_usage["feed"]
+    assert u.media == {"xdt": NBYTES // CHUNK}
+
+
+def test_cluster_credit_window_bounds_peak_inflight():
+    window = 2
+    base = execute_on_cluster(_pipe(), "xdt", seed=0, deterministic=True)
+    run = execute_on_cluster(
+        _pipe(max_inflight_chunks=window), "xdt", seed=0, deterministic=True
+    )
+    bu = base.edge_usage["feed"]
+    u = run.edge_usage["feed"]
+    assert bu.peak_inflight_chunk_bytes == NBYTES       # burst buffers it all
+    assert 0 < u.peak_inflight_chunk_bytes <= window * CHUNK
+    # bounded sender memory may cost latency, never correctness
+    assert u.media == bu.media
+    assert run.latency_s >= base.latency_s
+
+
+def test_storage_routed_chunks_do_not_consume_credits():
+    # durable chunks leave the producer immediately — the credit window
+    # only meters instance-resident media, so an s3 stream never parks
+    eng, binding, req = _run_engine(_pipe(max_inflight_chunks=1),
+                                    backend="s3")
+    assert req.status == "ok"
+    assert eng.transfer.stats.peak_inflight_chunk_bytes == 0.0
+    assert binding.edge_usage["feed"].media == {"s3": NBYTES // CHUNK}
+
+
+def test_pressure_spill_unsticks_a_slow_consumer_with_zero_retries():
+    # window 2, patience 2, zero-compute producer: publishes 2, parks
+    # (streak 1), drains, publishes 2 more, parks again (streak 2) ->
+    # pressure spill diverts the remaining stream durable.  The request
+    # completes first try with the footprint still bounded.
+    hub = TelemetryHub(lambda: 0.0)
+    sp = OnlineSpill(hub, durable="s3", pressure_patience=2)
+    eng, binding, req = _run_engine(_pipe(max_inflight_chunks=2), spill=sp)
+    assert req.status == "ok"
+    assert eng.failed_requests == 0 and eng.retry_max == 0
+    assert sp.pressure_spills
+    label, medium, _now = sp.pressure_spills[0]    # records the pressured medium
+    assert label == "feed" and medium == "xdt"
+    media = binding.edge_usage["feed"].media
+    assert media.get("xdt") and media.get("s3")
+    assert sum(media.values()) == NBYTES // CHUNK
+    assert eng.transfer.stats.peak_inflight_chunk_bytes <= 2 * CHUNK
+    # billing still coalesces: one PUT per (object, medium)
+    assert binding.edge_usage["feed"].n_puts == 2
+
+
+def test_wave_gather_credit_window_is_rejected_at_bind():
+    dag = WorkflowDAG(
+        "gather",
+        [Stage("driver", compute_s=0.0),
+         Stage("m", fan=2, compute_s=0.01, blocking=False)],
+        [Edge("driver", "m", 1 << 16, label="scatter", handoff="staged"),
+         Edge("m", "driver", 4 << 20, label="collect", handoff="staged",
+              streaming=True, chunk_bytes=CHUNK, max_inflight_chunks=2)],
+    )
+    eng = WorkflowEngine(backend="xdt")
+    with pytest.raises(ValueError, match="deadlock"):
+        dag.bind(eng, default_route=FixedRoute("xdt"))
+    # the same edge without credits binds (and runs) fine
+    ok = WorkflowDAG(
+        dag.name, dag.stages,
+        [dag.edges[0],
+         Edge("m", "driver", 4 << 20, label="collect", handoff="staged",
+              streaming=True, chunk_bytes=CHUNK)],
+    )
+    eng2 = WorkflowEngine(backend="xdt")
+    binding = ok.bind(eng2, default_route=FixedRoute("xdt"))
+    eng2.submit(binding.entry, 1.0)
+    eng2.drain()
+    assert eng2.requests[0].status == "ok"
+
+
+# -- telemetry-tuned chunk sizing --------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ("xdt", "s3"))
+def test_auto_chunk_bytes_runs_on_both_lowerings(backend):
+    dag = _pipe(chunk="auto", producer_s=0.3)
+    run = execute_on_cluster(dag, backend, seed=0, deterministic=True)
+    u = run.edge_usage["feed"]
+    assert sum(u.media_bytes.values()) == NBYTES
+    assert u.n_puts <= 1 and u.n_gets <= 1     # billing stays whole-object
+    eng, binding, req = _run_engine(dag, backend=backend)
+    assert req.status == "ok"
+    eu = binding.edge_usage["feed"]
+    assert eu.n_puts == 1 and eu.n_gets == 1
+    assert eu.media == {backend: sum(eu.media.values())}
+
+
+def test_auto_chunk_bytes_never_loses_to_store_then_fetch():
+    # the analytic prior clamps auto streaming to the store-then-fetch
+    # equivalent, exactly like fixed chunk sizes
+    plain = WorkflowDAG(
+        "pipe",
+        [Stage("p", compute_s=0.3), Stage("c", compute_s=0.01)],
+        [Edge("p", "c", NBYTES, label="feed", handoff="sync")],
+    )
+    base = execute_on_cluster(plain, "s3", seed=0, deterministic=True)
+    run = execute_on_cluster(_pipe(chunk="auto", producer_s=0.3), "s3",
+                             seed=0, deterministic=True)
+    assert run.latency_s <= base.latency_s * (1 + 1e-9)
+    assert run.cost().total <= base.cost().total * (1 + 1e-9)
