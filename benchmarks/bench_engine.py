@@ -224,8 +224,9 @@ def build_streaming_engine(backend: str, seed: int):
         [Edge("src", "sink", STREAM_NBYTES, label="feed", handoff="sync",
               streaming=True, chunk_bytes=STREAM_CHUNK)],
     )
-    binding = dag.bind(
-        eng, default_route=FixedRoute(backend), bytes_scale=STREAM_SCALE
+    binding = dag.compile(
+        target="engine", engine=eng, backend=FixedRoute(backend),
+        bytes_scale=STREAM_SCALE,
     )
     return eng, binding
 

@@ -31,7 +31,6 @@ import sys
 
 import numpy as np
 
-from repro.core.dag import execute_on_cluster
 from repro.core.workloads import DAGS
 
 from .common import fmt_s, save_json
@@ -44,11 +43,9 @@ SMOKE_SEEDS = 3
 
 
 def _cell(dag, backend, n_seeds, plan=None):
-    runs = [
-        execute_on_cluster(dag, backend, seed=s, plan=plan)
-        for s in range(n_seeds)
-    ]
-    det = execute_on_cluster(dag, backend, seed=0, deterministic=True, plan=plan)
+    compiled = dag.compile(target="cluster", backend=backend, plan=plan)
+    runs = [compiled.run(seed=s) for s in range(n_seeds)]
+    det = compiled.run(seed=0, deterministic=True)
     return {
         "p50_latency_s": float(np.median([r.latency_s for r in runs])),
         "mean_total_uUSD": float(np.mean([r.cost().total for r in runs])) * 1e6,

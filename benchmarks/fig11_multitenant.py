@@ -106,10 +106,9 @@ def tenant_spec(tid: int, shape: str, cfg: dict) -> GroupSpec:
 
     def build(engine, spec):
         entries = tuple(
-            DAGS[dag].bind(
-                engine,
-                default_route=FixedRoute(BACKEND),
-                bytes_scale=BYTES_SCALE,
+            DAGS[dag].compile(
+                target="engine", engine=engine,
+                backend=FixedRoute(BACKEND), bytes_scale=BYTES_SCALE,
             ).entry
             for dag in DAG_NAMES
         )

@@ -5,10 +5,11 @@ scenario axis: correlated spot evictions (a whole node dies, not one
 producer), per-medium degradation windows (S3 throttle, ElastiCache failover
 blackout, degraded xdt bandwidth), and cold-start storms.  This harness
 sweeps **fault scenario x route policy x backend** on the engine lowering
-(``dag.bind``) — the same seeded :class:`~repro.core.faults.FaultPlan`
-replayed against a static route and an :class:`~repro.core.dag.AdaptiveRoute`
-— plus the fault-aware :class:`~repro.core.dagopt.PredictiveSpill` contrast
-on the cluster lowering (``execute_on_cluster``).
+(``dag.compile(target="engine")``) — the same seeded
+:class:`~repro.core.faults.FaultPlan` replayed against a static route and an
+:class:`~repro.core.dag.AdaptiveRoute` — plus the fault-aware
+:class:`~repro.core.dagopt.PredictiveSpill` contrast on the cluster lowering
+(``dag.compile(target="cluster")``).
 
 ``--smoke`` carries the CI gates (raise, not assert — they must survive
 ``python -O``):
@@ -49,7 +50,6 @@ from repro.core import (
     WorkflowDAG,
     WorkflowEngine,
 )
-from repro.core.dag import execute_on_cluster
 from repro.core.faults import (
     FaultInjector,
     FaultPlan,
@@ -182,12 +182,12 @@ def run_cell(
 ):
     """One (scenario, policy) cell: same seeded plan, same arrival times."""
     eng = WorkflowEngine(backend="xdt", max_retries=MAX_RETRIES)
-    binding = _dag().bind(
-        eng, default_route=_route(route_kind, backend),
-        bytes_scale=BYTES_SCALE,
+    binding = _dag().compile(
+        target="engine", engine=eng,
+        backend=_route(route_kind, backend), bytes_scale=BYTES_SCALE,
     )
     # every cell gets a hub BEFORE the injector installs: adaptive cells
-    # already have one (dag.bind wires it for AdaptiveRoute), but static
+    # already have one (compile wires it for AdaptiveRoute), but static
     # cells would otherwise drop the injector's fault-timeline records
     # (TelemetryHub recording is purely observational — it never changes
     # modeled latency or cost, so the static baselines are unaffected)
@@ -238,14 +238,13 @@ def run_spill_contrast(seed: int):
     plan = FaultPlan.eviction_storm(
         at_s=0.05, n_evictions=2, spacing_s=0.1, seed=seed
     )
-    base = execute_on_cluster(
-        dag, "xdt", seed=0, deterministic=True, fault_plan=plan
+    base = dag.compile(target="cluster", backend="xdt", faults=plan).run(
+        seed=0, deterministic=True
     )
     opt_dag, pplan = dag.optimize(fault_plan=plan)
-    opt = execute_on_cluster(
-        opt_dag, "xdt", seed=0, deterministic=True, plan=pplan,
-        fault_plan=plan,
-    )
+    opt = opt_dag.compile(
+        target="cluster", backend="xdt", plan=pplan, faults=plan
+    ).run(seed=0, deterministic=True)
     return {
         "base_retries": base.faults.retries,
         "opt_retries": opt.faults.retries,
@@ -264,8 +263,9 @@ def run_identity_check():
 
     def engine_run(with_plan: bool):
         eng = WorkflowEngine(backend="xdt", max_retries=MAX_RETRIES)
-        binding = _dag().bind(
-            eng, default_route=SizeRoute(), bytes_scale=BYTES_SCALE
+        binding = _dag().compile(
+            target="engine", engine=eng, backend=SizeRoute(),
+            bytes_scale=BYTES_SCALE,
         )
         if with_plan:
             FaultInjector(eng, empty).install()
@@ -280,10 +280,12 @@ def run_identity_check():
         )
 
     eng_bare, eng_planned = engine_run(False), engine_run(True)
-    bare = execute_on_cluster(DAGS["mr"], "xdt", seed=0, deterministic=True)
-    planned = execute_on_cluster(
-        DAGS["mr"], "xdt", seed=0, deterministic=True, fault_plan=empty
+    bare = DAGS["mr"].compile(target="cluster", backend="xdt").run(
+        seed=0, deterministic=True
     )
+    planned = DAGS["mr"].compile(
+        target="cluster", backend="xdt", faults=empty
+    ).run(seed=0, deterministic=True)
     return {
         "engine_latency_sum": [eng_bare[0], eng_planned[0]],
         "engine_cost_usd": [eng_bare[1], eng_planned[1]],

@@ -12,11 +12,12 @@ lowerings and reports how close streaming gets to
 
 Sections:
 
-* **cluster** — ``execute_on_cluster`` (analytic overlap model) over
-  VID / MR / SET x {s3, elasticache, xdt, hybrid} x chunk sizes, each cell
-  vs the store-then-fetch baseline and the bound.
-* **engine** — ``dag.bind`` on the event-driven engine (real virtual-clock
-  chunk events, per-chunk route resolution) over VID / MR, same axes.
+* **cluster** — ``dag.compile(target="cluster")`` (analytic overlap model)
+  over VID / MR / SET x {s3, elasticache, xdt, hybrid} x chunk sizes, each
+  cell vs the store-then-fetch baseline and the bound.
+* **engine** — ``dag.compile(target="engine")`` on the event-driven engine
+  (real virtual-clock chunk events, per-chunk route resolution) over
+  VID / MR, same axes.
 
 How the bound is computed: per stage, ``start + max(producer compute,
 marginal transfer) + fixed overhead`` along the critical path — data must
@@ -59,7 +60,6 @@ from repro.core import SizeRoute, WorkflowDAG, WorkflowEngine
 from repro.core.dag import (
     FixedRoute,
     critical_path_lower_bound,
-    execute_on_cluster,
 )
 from repro.core.workloads import DAGS, HYBRID_ROUTE
 
@@ -129,28 +129,27 @@ def run_cluster(chunk_sizes, quiet: bool = False):
         rows = {}
         for backend in BACKENDS:
             route = _resolve(backend)
-            base = execute_on_cluster(dag, route, seed=0, deterministic=True)
+            base = dag.compile(target="cluster", backend=route).run(
+                seed=0, deterministic=True)
             bound = critical_path_lower_bound(dag, backend=route)
             cells = {}
             for cb in chunk_sizes:
-                run = execute_on_cluster(
-                    streaming_variant(dag, cb), route,
-                    seed=0, deterministic=True,
-                )
+                run = streaming_variant(dag, cb).compile(
+                    target="cluster", backend=route,
+                ).run(seed=0, deterministic=True)
                 cells[str(cb)] = {
                     "latency_s": run.latency_s,
                     "total_uUSD": run.cost().total * 1e6,
                     "ratio_vs_bound": run.latency_s / bound,
                     "speedup_vs_base": base.latency_s / run.latency_s,
                 }
-            auto_run = execute_on_cluster(
-                streaming_variant(dag, "auto"), route,
-                seed=0, deterministic=True,
-            )
-            bp_run = execute_on_cluster(
-                streaming_variant(dag, BP_CHUNK, max_inflight=BP_WINDOW),
-                route, seed=0, deterministic=True,
-            )
+            auto_run = streaming_variant(dag, "auto").compile(
+                target="cluster", backend=route,
+            ).run(seed=0, deterministic=True)
+            bp_run = streaming_variant(
+                dag, BP_CHUNK, max_inflight=BP_WINDOW,
+            ).compile(target="cluster", backend=route).run(
+                seed=0, deterministic=True)
             rows[backend] = {
                 "base_latency_s": base.latency_s,
                 "base_total_uUSD": base.cost().total * 1e6,
@@ -194,7 +193,7 @@ def run_cluster(chunk_sizes, quiet: bool = False):
 def _engine_cell(dag: WorkflowDAG, route):
     """One single-request run on the event-driven engine."""
     eng = WorkflowEngine(backend="xdt")
-    binding = dag.bind(eng, default_route=route)
+    binding = dag.compile(target="engine", engine=eng, backend=route)
     eng.submit(binding.entry, 1.0)
     eng.drain()
     req = eng.requests[0]

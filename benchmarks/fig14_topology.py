@@ -1,0 +1,173 @@
+"""Fig 14 (extension): placement across the edge-cloud continuum.
+
+The paper's cluster is flat — every node one RTT from every other and
+from the storage services.  :mod:`repro.core.topology` generalizes that
+to a node -> zone -> region (-> edge-site) hierarchy with per-crossing
+bandwidth/RTT (:class:`NetConstants` tier links) and cross-tier egress
+fees (:func:`repro.core.cost.egress_fee_usd`).  This harness sweeps the
+two topology workloads over the paper's three fixed backends and
+compares **flat placement** (the topology is real but unpinned stages
+spread naively round-robin across zones) against **tier-aware
+placement** (``dag.optimize(topology=..., backend=...)`` — CoPlacement's
+greedy zone assignment, service-homed legs priced to the storage home
+zone, resident legs priced producer->consumer).
+
+Workloads (:data:`repro.core.workloads.TOPO_WORKLOADS`):
+
+* **EDGE** — edge-ingest -> cloud-train fan-in.  Ingest pinned
+  one-per-edge-site, trainer pinned to the cloud; naive placement drops
+  the unpinned driver on ``edge-0`` so the model gather crosses the edge
+  uplink.  Tier-aware homes it in the cloud on every backend.
+* **GEO** — geo-sharded fan-in.  Shards pinned across one local and two
+  remote regions; the right home for the unpinned driver depends on the
+  backend — the hub (storage home) for service media, next to the
+  same-region shards for direct media.  Tier-aware picks per backend;
+  the service cells come out *identical* to naive (the gate's equality
+  case is real, not vacuous).
+
+``--smoke`` is the seconds-long CI subset with two hard gates:
+
+1. **tier-aware dominance** — never costlier and never slower (p50)
+   than flat placement on any workload x backend cell;
+2. **flat identity** — a single-zone topology is *bit-identical*
+   (latency and cost) to running with no topology at all, per cell.
+
+Run:  PYTHONPATH=src python -m benchmarks.fig14_topology [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core.topology import Topology
+from repro.core.workloads import DAGS, TOPO_DAGS, TOPO_WORKLOADS, TOPOLOGIES
+
+from .common import fmt_s, save_json
+
+RESULT_NAME = "fig14_topology.json"
+
+BACKENDS = ("s3", "elasticache", "xdt")
+N_SEEDS = 10
+SMOKE_SEEDS = 3
+
+
+def _cell(name, backend, n_seeds, plan=None):
+    fn = TOPO_WORKLOADS[name]
+    runs = [fn(backend, seed=s, plan=plan) for s in range(n_seeds)]
+    det = fn(backend, seed=0, deterministic=True, plan=plan)
+    return {
+        "p50_latency_s": float(np.median([r.latency_s for r in runs])),
+        "mean_total_uUSD": float(np.mean([r.cost.total for r in runs])) * 1e6,
+        "det_latency_s": det.latency_s,
+        "det_total_uUSD": det.cost.total * 1e6,
+        "det_egress_uUSD": det.cost.egress * 1e6,
+    }
+
+
+def run(n_seeds: int = N_SEEDS):
+    out = {}
+    for name, dag in TOPO_DAGS.items():
+        topo = TOPOLOGIES[name]
+        rows = {}
+        for b in BACKENDS:
+            # the tier-aware plan is per backend: service-homed media pull
+            # toward the storage home zone, direct media toward peers
+            _, plan = dag.optimize(topology=topo, backend=b)
+            rows[b] = {
+                "flat": _cell(name, b, n_seeds),
+                "aware": _cell(name, b, n_seeds, plan=plan),
+                "zones": dict(plan.zones),
+            }
+        out[name] = {"topology": topo.describe(), "cells": rows}
+    return out
+
+
+def check_tier_aware_dominates(out) -> None:
+    """CI gate: per cell, tier-aware cost <= flat and p50 <= flat.
+
+    Raises (not assert: the gate must survive ``python -O``).  Equality
+    is legal — GEO's service-homed cells place the driver exactly where
+    naive round-robin does — so the tolerance only absorbs float noise,
+    never a real regression."""
+    tol = 1 + 1e-9
+    for name, data in out.items():
+        for b, cell in data["cells"].items():
+            flat, aware = cell["flat"], cell["aware"]
+            if aware["mean_total_uUSD"] > flat["mean_total_uUSD"] * tol:
+                raise RuntimeError(
+                    f"{name}/{b}: tier-aware costs "
+                    f"{aware['mean_total_uUSD']:.2f}uUSD > flat "
+                    f"{flat['mean_total_uUSD']:.2f}uUSD — tier-aware "
+                    "placement must never lose on cost"
+                )
+            if aware["p50_latency_s"] > flat["p50_latency_s"] * tol:
+                raise RuntimeError(
+                    f"{name}/{b}: tier-aware p50 "
+                    f"{aware['p50_latency_s']:.4f}s > flat "
+                    f"{flat['p50_latency_s']:.4f}s — tier-aware "
+                    "placement must never lose on latency"
+                )
+
+
+def check_flat_identity() -> None:
+    """CI gate: a single-zone topology is bit-identical to no topology.
+
+    Covers the topology workloads AND the paper's flat workloads — the
+    continuum machinery must be invisible when there is nothing to
+    cross (sha goldens and BENCH_engine checksums depend on it)."""
+    single = Topology()
+    for name, dag in {**DAGS, **TOPO_DAGS}.items():
+        for b in BACKENDS:
+            base = dag.compile(target="cluster", backend=b).run(
+                seed=0, deterministic=True)
+            topo = dag.compile(target="cluster", backend=b,
+                               topology=single).run(seed=0, deterministic=True)
+            if (base.latency_s != topo.latency_s
+                    or base.cost().total != topo.cost().total):
+                raise RuntimeError(
+                    f"{name}/{b}: single-zone topology diverges from flat "
+                    f"run ({topo.latency_s!r} vs {base.latency_s!r}) — a "
+                    "degenerate topology must be bit-identical"
+                )
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    out = run(n_seeds=SMOKE_SEEDS if smoke else N_SEEDS)
+    print("# Fig 14 — edge-cloud continuum: flat vs tier-aware placement")
+    for name, data in out.items():
+        print(f"\n  {name.upper()}: {data['topology']}")
+        for b, cell in data["cells"].items():
+            flat, aware = cell["flat"], cell["aware"]
+            speedup = (
+                flat["p50_latency_s"] / aware["p50_latency_s"]
+                if aware["p50_latency_s"] > 0 else 1.0
+            )
+            saved = flat["mean_total_uUSD"] - aware["mean_total_uUSD"]
+            zones = ", ".join(f"{s}->{z}" for s, z in cell["zones"].items())
+            print(
+                f"    {b:12s} p50 {fmt_s(flat['p50_latency_s']):>9} -> "
+                f"{fmt_s(aware['p50_latency_s']):>9} ({speedup:4.2f}x)  "
+                f"cost {flat['mean_total_uUSD']:8.1f} -> "
+                f"{aware['mean_total_uUSD']:8.1f}uUSD (-{saved:.1f})  "
+                f"[{zones or 'all pinned'}]"
+            )
+    if not smoke:
+        save_json(RESULT_NAME, out)      # artifact survives a gate trip
+    check_tier_aware_dominates(out)
+    print("\ntier-aware-dominates gate: never costlier, never slower (p50) "
+          "on any workload x backend OK")
+    check_flat_identity()
+    print("flat-identity gate: single-zone topology bit-identical to flat "
+          "run on every cell OK")
+    return out
+
+
+#: benchmarks.run auto-discovery
+HARNESS = {"name": "fig14", "full": main, "smoke": lambda: main(["--smoke"])}
+
+
+if __name__ == "__main__":
+    main()

@@ -98,9 +98,9 @@ def build_dag_binding(workload: str, route: str, seed: int = 0):
     from repro.core.workloads import DAGS, HYBRID_ROUTE
 
     eng = WorkflowEngine(seed=seed, backend="xdt", records="columnar")
-    binding = DAGS[workload].bind(
-        eng,
-        default_route=HYBRID_ROUTE if route == "hybrid" else route,
+    binding = DAGS[workload].compile(
+        target="engine", engine=eng,
+        backend=HYBRID_ROUTE if route == "hybrid" else route,
         bytes_scale=DAG_BYTES_SCALE,
     )
     return eng, binding

@@ -6,24 +6,25 @@ workflow engine.
 Run:  PYTHONPATH=src python examples/dag_optimize.py
 """
 from repro.core import WorkflowEngine
-from repro.core.dag import SizeRoute, execute_on_cluster
+from repro.core.dag import SizeRoute
 from repro.core.telemetry import TelemetryHub
 from repro.core.workloads import DAGS
 
 
 def optimize_and_compare():
-    """dag.optimize() before execute_on_cluster: fused chains delete their
-    transfer outright, co-placed consumers pull through shared memory."""
-    print("== optimize() -> execute_on_cluster ==")
+    """dag.optimize() before compile: fused chains delete their transfer
+    outright, co-placed consumers pull through shared memory."""
+    print("== optimize() -> compile(target='cluster') ==")
     for name in ("vid", "set", "mr"):
         dag = DAGS[name]
         opt_dag, plan = dag.optimize()          # fuse + coplace (+ spill)
         print(f"   {name}: {plan.describe()}")
         for backend in ("s3", "xdt"):
-            base = execute_on_cluster(dag, backend, seed=0, deterministic=True)
-            run = execute_on_cluster(
-                opt_dag, backend, seed=0, deterministic=True, plan=plan
-            )
+            base = dag.compile(target="cluster", backend=backend).run(
+                seed=0, deterministic=True)
+            run = opt_dag.compile(
+                target="cluster", backend=backend, plan=plan
+            ).run(seed=0, deterministic=True)
             n_local = sum(u.n_local for u in run.edge_usage.values())
             print(f"      {backend:4s} {base.latency_s*1e3:7.1f}ms -> "
                   f"{run.latency_s*1e3:7.1f}ms, "
@@ -35,11 +36,12 @@ def optimize_and_compare():
 def optimize_and_bind():
     """The same plan on the engine lowering: steering honors the affinity
     hints, honored pulls are modeled at shared-memory speed."""
-    print("\n== optimize() -> dag.bind (workflow engine) ==")
+    print("\n== optimize() -> compile(target='engine') ==")
     opt_dag, plan = DAGS["vid"].optimize()
     eng = WorkflowEngine(backend="xdt")
-    binding = opt_dag.bind(eng, default_route=SizeRoute(), bytes_scale=1e-4,
-                           plan=plan)
+    binding = opt_dag.compile(target="engine", engine=eng,
+                              backend=SizeRoute(), bytes_scale=1e-4,
+                              plan=plan)
     for _ in range(4):                          # warm fleets between requests
         eng.run(binding.entry, 1.0)
     eng.assert_at_most_once()

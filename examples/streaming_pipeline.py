@@ -20,7 +20,6 @@ from repro.core.dag import (
     Stage,
     WorkflowDAG,
     critical_path_lower_bound,
-    execute_on_cluster,
 )
 from repro.core.dagopt import OnlineSpill
 from repro.core.workloads import DAGS
@@ -47,10 +46,11 @@ def overlap_on_the_cluster():
                          ("mr", ("shuffle",))):
         dag = DAGS[name]
         for backend in ("s3", "xdt"):
-            base = execute_on_cluster(dag, backend, seed=0,
-                                      deterministic=True)
-            run = execute_on_cluster(streamed(dag, labels), backend,
-                                     seed=0, deterministic=True)
+            base = dag.compile(target="cluster", backend=backend).run(
+                seed=0, deterministic=True)
+            run = streamed(dag, labels).compile(
+                target="cluster", backend=backend,
+            ).run(seed=0, deterministic=True)
             bound = critical_path_lower_bound(dag, backend=backend)
             print(f"   {name}/{backend:>3}: {base.latency_s:6.3f}s -> "
                   f"{run.latency_s:6.3f}s  (bound {bound:6.3f}s, "
@@ -71,7 +71,8 @@ def data_triggered_on_the_engine():
     for variant, d in (("store-then-fetch", dag),
                        ("streaming 1MB", streamed(dag, ("feed",)))):
         eng = WorkflowEngine(backend="xdt")
-        binding = d.bind(eng, default_route=FixedRoute("xdt"))
+        binding = d.compile(target="engine", engine=eng,
+                            backend=FixedRoute("xdt"))
         eng.run(binding.entry, 1.0)
         (req,) = eng.requests
         u = binding.edge_usage["feed"]
@@ -98,8 +99,8 @@ def spill_mid_stream():
         [Edge("produce", "consume", 8 * MB, label="feed", handoff="sync")],
     ), ("feed",))
     sp = OnlineSpill(hub, durable="s3")
-    run = execute_on_cluster(dag, "xdt", seed=0, deterministic=True,
-                             online_spill=sp)
+    run = dag.compile(target="cluster", backend="xdt",
+                      online_spill=sp).run(seed=0, deterministic=True)
     media = run.edge_usage["feed"].media
     print(f"   {len(sp.spills)} of {len(dag.edges[0].chunk_sizes())} chunks "
           f"spilled durable; the object now spans {sorted(media)} "
@@ -126,8 +127,9 @@ def backpressured_stream():
 
     def cell(label, variant, spill=None):
         eng = WorkflowEngine(backend="xdt")
-        binding = variant.bind(eng, default_route=FixedRoute("xdt"),
-                               online_spill=spill)
+        binding = variant.compile(target="engine", engine=eng,
+                                  backend=FixedRoute("xdt"),
+                                  online_spill=spill)
         eng.run(binding.entry, 1.0)
         peak = eng.transfer.stats.peak_inflight_chunk_bytes
         media = dict(binding.edge_usage["feed"].media)
@@ -165,8 +167,8 @@ def auto_tuned_chunks():
             ("4MB", streamed(dag, ("feed",), chunk_bytes=4 * MB)),
             ("auto", streamed(dag, ("feed",), chunk_bytes="auto")),
         ):
-            run = execute_on_cluster(variant, backend, seed=0,
-                                     deterministic=True)
+            run = variant.compile(target="cluster", backend=backend).run(
+                seed=0, deterministic=True)
             rows.append(f"{label} {run.latency_s * 1e3:6.1f}ms")
         print(f"   {backend:>3}: " + "  ".join(rows)
               + "   (auto ties or beats the best fixed size)")

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import LoadGenerator, ScalingPolicy, WorkflowEngine
-from repro.core.dag import Edge, SizeRoute, Stage, WorkflowDAG, execute_on_cluster
+from repro.core.dag import Edge, SizeRoute, Stage, WorkflowDAG
 from repro.core.workloads import run_mr, run_set, run_vid
 
 
@@ -93,7 +93,8 @@ def declarative_dag_routing():
                  handoff="staged", route="s3"),
         ],
     )
-    run = execute_on_cluster(dag, SizeRoute(), seed=0, deterministic=True)
+    run = dag.compile(target="cluster", backend=SizeRoute()).run(
+        seed=0, deterministic=True)
     cost = run.cost()
     print(f"   cluster run: {run.latency_s*1e3:.1f}ms, "
           f"compute {cost.compute*1e6:.1f}u$, storage {cost.storage*1e6:.2f}u$")
@@ -103,7 +104,8 @@ def declarative_dag_routing():
               f"storage {row['storage_uUSD']:.2f}u$")
     # same declaration, lowered onto the engine (submit/drain, autoscaling)
     eng = WorkflowEngine(backend="xdt")
-    binding = dag.bind(eng, default_route=SizeRoute(), bytes_scale=1e-2)
+    binding = dag.compile(target="engine", engine=eng, backend=SizeRoute(),
+                          bytes_scale=1e-2)
     eng.run(binding.entry, 1.0)
     eng.assert_at_most_once()
     ecost = binding.cost()

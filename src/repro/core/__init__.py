@@ -43,6 +43,13 @@ Layers
                      cross-call interaction graph) advanced on clock-synced
                      epoch barriers across in-process lanes or forked
                      workers, with a deterministic columnar merge.
+* :mod:`topology`  — the edge-cloud continuum: node -> zone -> region
+                     (-> edge-site) hierarchy behind ``compile(topology=)``;
+                     tier crossings carry their own bandwidth/RTT and
+                     egress fees, a single-zone topology is bit-identical
+                     to the flat cluster.
+* :mod:`registry`  — the shared name->class Registry behind
+                     register_backend / register_pass / register_autoscaler.
 * :mod:`cluster`   — calibrated discrete-event simulator for the paper's
                      latency/bandwidth/cost evaluation.
 * :mod:`cost`      — AWS cost model (Table 2).
@@ -76,10 +83,12 @@ from .cost import (
 )
 from .dag import (
     AdaptiveRoute,
+    ClusterRunnable,
     DagBinding,
     Edge,
     FixedRoute,
     RoutePolicy,
+    Runnable,
     SizeRoute,
     Stage,
     WorkflowDAG,
@@ -134,6 +143,8 @@ from .loadgen import (
     synthesize_trace,
 )
 from .refs import ObjectDescriptor, RefMinter, RefPayload, XDTRef
+from .registry import Registry
+from .topology import FLAT_TOPOLOGY, Coord, Topology, Zone, as_coord
 from .shard import (
     Cell,
     CellResult,
@@ -147,9 +158,14 @@ from .workloads import (
     DAGS,
     HYBRID_ROUTE,
     ROUTED_BACKENDS,
+    TOPO_DAGS,
+    TOPO_WORKLOADS,
+    TOPOLOGIES,
     WORKLOADS,
     WorkloadResult,
     run_all,
+    run_edge,
+    run_geo,
     run_mr,
     run_set,
     run_vid,

@@ -30,7 +30,9 @@ from typing import Callable, Dict, Generator, List, Optional, Tuple
 
 import numpy as np
 
+from .cost import egress_fee_usd
 from .errors import InlineTooLarge
+from .topology import Topology
 
 # --------------------------------------------------------------------------
 # Event-loop core
@@ -346,6 +348,36 @@ class NetConstants:
     local_bw: float = 12.5e9
     local_rtt: float = 20e-6
 
+    # per-tier-crossing links (edge-cloud continuum, repro.core.topology).
+    # Monotone by construction: same-node (local_bw) >= same-zone (nic_bw)
+    # >= cross-zone >= cross-region >= edge<->cloud uplink.  A transfer whose
+    # producer and consumer share a zone never touches these (flat-cluster
+    # fast path); higher crossings serialize on a shared per-zone-pair FIFO
+    # at the tier bandwidth and pay the tier RTT on top of the intra-zone
+    # segments.
+    cross_zone_bw: float = 1.25e9         # inter-AZ fabric share
+    cross_zone_rtt: float = 1.0e-3
+    cross_region_bw: float = 0.62e9       # WAN between regions / edge sites
+    cross_region_rtt: float = 30e-3
+    edge_bw: float = 0.31e9               # edge <-> cloud uplink
+    edge_rtt: float = 60e-3
+
+    def tier_bw(self, level: int) -> float:
+        """Bandwidth of a tier crossing (level 2..4; >=5 clamps to edge)."""
+        if level <= 2:
+            return self.cross_zone_bw
+        if level == 3:
+            return self.cross_region_bw
+        return self.edge_bw
+
+    def tier_rtt(self, level: int) -> float:
+        """Round-trip latency of a tier crossing (level 2..4)."""
+        if level <= 2:
+            return self.cross_zone_rtt
+        if level == 3:
+            return self.cross_region_rtt
+        return self.edge_rtt
+
 
 # The paper's two testbeds, calibrated separately:
 # Fig. 2 runs on AWS Lambda against real S3/ElastiCache endpoints; Figs 5-7
@@ -408,6 +440,8 @@ class ServerlessCluster:
         net: NetConstants = DEFAULT_NET,
         seed: int = 0,
         deterministic: bool = False,
+        topology: Optional[Topology] = None,
+        node_zones: Optional[List[int]] = None,
     ):
         self.sim = Simulator(seed=seed)
         self.net = net
@@ -422,6 +456,23 @@ class ServerlessCluster:
         # (runs without a PlacementPlan never touch them)
         self._mem_links: Dict[int, FifoLink] = {}
         self.acct: Dict[str, TransferAccounting] = {}
+        # edge-cloud continuum: node -> zone map plus per-directed-zone-pair
+        # FIFO links at the tier-crossing bandwidth.  Storage services are
+        # homed in the topology's service zone, so a put/get from another
+        # zone pays the crossing too.  With no topology (or a single zone)
+        # every guard below short-circuits and the float/rng stream is
+        # bit-identical to the flat cluster.
+        self.topology = topology
+        if topology is not None and node_zones is not None:
+            if len(node_zones) != n_nodes:
+                raise ValueError("node_zones must map every node to a zone")
+            self.node_zones: Optional[List[int]] = list(node_zones)
+            self._svc_zone = topology.service_zone
+        else:
+            self.node_zones = None
+            self._svc_zone = 0
+        self._tier_links: Dict[Tuple[int, int], FifoLink] = {}
+        self.egress_usd = 0.0
 
     # -- helpers -------------------------------------------------------------
     def _jit(self, base: float, sigma: float) -> float:
@@ -434,6 +485,64 @@ class ServerlessCluster:
             self.acct[backend] = TransferAccounting()
         return self.acct[backend]
 
+    # -- edge-cloud continuum ---------------------------------------------
+    def crossing(self, a: int, b: int) -> int:
+        """Crossing level between two nodes (0 same node .. 4 edge<->cloud)."""
+        if a == b:
+            return 0
+        if self.node_zones is None:
+            return 1
+        return self.topology.crossing(self.node_zones[a], self.node_zones[b])
+
+    def _tier_extra(self, za: Optional[int], zb: Optional[int], nbytes: int) -> float:
+        """Extra seconds (queueing + serialization + tier RTT) and egress
+        fee of crossing from zone ``za`` to ``zb``.  Zero — with zero float
+        ops — when the transfer stays inside one zone, so flat runs are
+        bit-identical.  The tier segment is deterministic on purpose: it
+        must not consume rng draws the flat cluster does not."""
+        if za is None or zb is None or za == zb:
+            return 0.0
+        level = self.topology.crossing(za, zb)
+        if level <= 1:
+            return 0.0
+        self.egress_usd += egress_fee_usd(level, nbytes)
+        link = self._tier_links.get((za, zb))
+        if link is None:
+            link = self._tier_links[(za, zb)] = FifoLink(
+                self.sim, self.net.tier_bw(level)
+            )
+        start = max(self.sim.now, link.free_at)
+        dur = nbytes / link.bw
+        link.free_at = start + dur
+        link.busy_s += dur
+        link.bytes_moved += nbytes
+        return (start - self.sim.now) + dur + self.net.tier_rtt(level)
+
+    def _zone_of(self, node: Optional[int]) -> Optional[int]:
+        if node is None or self.node_zones is None:
+            return None
+        return self.node_zones[node]
+
+    def _svc_zone_of(self, node: Optional[int]) -> Optional[int]:
+        """The storage-service home zone, as seen from ``node`` (None when
+        the cluster has no topology, so tier handling short-circuits)."""
+        if node is None or self.node_zones is None:
+            return None
+        return self._svc_zone
+
+    def mem_backlog_s(self, node: int) -> float:
+        """Current backlog of the node's shared-memory FIFO (seconds until
+        free) — what the contention-aware co-placement variant reads before
+        committing a pull to the local channel."""
+        link = self._mem_links.get(node)
+        if link is None:
+            return 0.0
+        return max(0.0, link.free_at - self.sim.now)
+
+    def nic_backlog_s(self, node: int) -> float:
+        """Current backlog of the node's NIC FIFO."""
+        return max(0.0, self.nics[node].free_at - self.sim.now)
+
     # -- control plane --------------------------------------------------------
     def invoke_ctrl(self) -> Event:
         """Control-plane hop: client -> activator -> queue-proxy -> handler."""
@@ -441,13 +550,14 @@ class ServerlessCluster:
         return self.sim.timeout(lat)
 
     # -- data plane, one object ------------------------------------------------
-    def inline_send(self, src: int, nbytes: int) -> Event:
+    def inline_send(self, src: int, nbytes: int, dst: Optional[int] = None) -> Event:
         if nbytes > self.net.inline_limit:
             raise InlineTooLarge(
                 f"{nbytes}B exceeds the {self.net.inline_limit}B inline cap"
             )
         lat = self._jit(self.net.ctrl_plane_latency, self.net.ctrl_jitter_sigma)
-        return self.nics[src].transfer(nbytes, extra_latency=lat)
+        extra = self._tier_extra(self._zone_of(src), self._zone_of(dst), nbytes)
+        return self.nics[src].transfer(nbytes, extra_latency=lat + extra)
 
     def storage_put(self, backend: str, src: int, nbytes: int) -> Event:
         net = self.net
@@ -464,6 +574,9 @@ class ServerlessCluster:
         acct.store(self.sim.now, nbytes / 1e9)
         lat = self._jit(op, sig)
         # Producer NIC then service front-end; stream bw is the per-flow cap.
+        # Services are homed in the topology's service zone: a put from
+        # another zone rides the tier link on top.
+        lat += self._tier_extra(self._zone_of(src), self._svc_zone_of(src), nbytes)
         self.nics[src].transfer(nbytes, 0.0)
         return self._service_flow(front, stream, src, nbytes, lat)
 
@@ -482,6 +595,7 @@ class ServerlessCluster:
         if last:
             acct.free(self.sim.now, nbytes / 1e9)
         lat = self._jit(op, sig)
+        lat += self._tier_extra(self._svc_zone_of(dst), self._zone_of(dst), nbytes)
         self.nics[dst].transfer(nbytes, 0.0)
         return self._service_flow(front, stream, dst, nbytes, lat)
 
@@ -519,15 +633,18 @@ class ServerlessCluster:
             link = self._mem_links[node] = FifoLink(self.sim, net.local_bw)
         return link.transfer(nbytes, extra_latency=lat)
 
-    def xdt_pull(self, producer: int, nbytes: int) -> Event:
+    def xdt_pull(self, producer: int, nbytes: int, consumer: Optional[int] = None) -> Event:
         """Consumer pulls directly from the producer's memory over its NIC.
 
         Concurrent pulls share the producer NIC (FIFO at ``nic_bw *
         xdt_stream_eff`` aggregate); a lone pull is additionally capped by the
-        single-TCP-flow rate ``xdt_stream_bw``.
+        single-TCP-flow rate ``xdt_stream_bw``.  When ``consumer`` is given
+        and lives in another zone, the pull additionally rides (and pays
+        egress on) the producer->consumer tier link.
         """
         net = self.net
         lat = self._jit(net.xdt_pull_rtt, net.xdt_jitter_sigma)
+        lat += self._tier_extra(self._zone_of(producer), self._zone_of(consumer), nbytes)
         front = self.nics[producer]
         agg_bw = net.nic_bw * net.xdt_stream_eff
         start = max(self.sim.now, front.free_at)

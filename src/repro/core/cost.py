@@ -37,27 +37,54 @@ SECONDS_PER_MONTH = 30 * 24 * 3600.0
 
 DEFAULT_FUNCTION_MEM_GB = 0.5               # paper: 512 MB for all functions
 
+# --- cross-tier egress fees (USD/GB, AWS-shaped) -----------------------------
+# A pull's price depends on the lowest common tier of producer and consumer
+# (crossing levels from :mod:`repro.core.topology`): traffic inside a node or
+# a zone is free, inter-AZ traffic pays per GB in each direction, WAN between
+# regions pays more, and the edge<->cloud uplink is priciest (metered cellular
+# / leased-line shaped).  Indexed by crossing level 0..4.
+TIER_EGRESS_USD_PER_GB = (0.0, 0.0, 0.01, 0.02, 0.09)
+
+
+def egress_fee_usd(level: int, nbytes: int) -> float:
+    """Cross-tier egress fee of moving ``nbytes`` across ``level`` — the
+    crossing level of producer and consumer (0 same-node .. 4 edge<->cloud).
+    Levels beyond the table clamp to the top (edge) rate."""
+    if level <= 1:
+        return 0.0
+    rate = TIER_EGRESS_USD_PER_GB[min(level, len(TIER_EGRESS_USD_PER_GB) - 1)]
+    return (nbytes / 1e9) * rate
+
 
 @dataclasses.dataclass(frozen=True)
 class CostBreakdown:
-    """Per-invocation cost, USD."""
+    """Per-invocation cost, USD.
+
+    ``egress`` is the cross-tier transfer column (zero on a flat cluster);
+    it is kept separate from ``storage`` so Table-2 style comparisons stay
+    comparable with the committed flat-topology numbers.
+    """
 
     compute: float
     storage: float
+    egress: float = 0.0
 
     @property
     def total(self) -> float:
-        return self.compute + self.storage
+        return self.compute + self.storage + self.egress
 
     def scaled(self, k: float) -> "CostBreakdown":
-        return CostBreakdown(self.compute * k, self.storage * k)
+        return CostBreakdown(self.compute * k, self.storage * k, self.egress * k)
 
     def as_micro_usd(self) -> Dict[str, float]:
-        return {
+        out = {
             "compute_uUSD": self.compute * 1e6,
             "storage_uUSD": self.storage * 1e6,
             "total_uUSD": self.total * 1e6,
         }
+        if self.egress:
+            out["egress_uUSD"] = self.egress * 1e6
+        return out
 
 
 def lambda_compute_cost(
@@ -271,18 +298,20 @@ def workflow_cost(inputs: WorkflowCostInputs, backend: str) -> CostBreakdown:
 
 
 def routed_workflow_cost(
-    inputs: WorkflowCostInputs, media: Dict[str, StorageOps]
+    inputs: WorkflowCostInputs, media: Dict[str, StorageOps], egress_usd: float = 0.0
 ) -> CostBreakdown:
     """Cost of one workflow invocation whose edges were routed over MIXED
     media (per-edge backend selection): the compute bill is shared, and each
     medium's ops are priced by its own fee structure — S3 per-request fees on
     the S3-routed edges, provisioned cache capacity for the ElastiCache-
-    resident peak, nothing for XDT/inline edges."""
+    resident peak, nothing for XDT/inline edges.  ``egress_usd`` is the run's
+    accumulated cross-tier egress (see :func:`egress_fee_usd`; zero on a flat
+    cluster)."""
     compute = lambda_compute_cost(
         inputs.billed_duration_s, inputs.n_function_invocations
     )
     storage = sum(storage_cost_for(b, ops) for b, ops in media.items())
-    return CostBreakdown(compute=compute, storage=storage)
+    return CostBreakdown(compute=compute, storage=storage, egress=egress_usd)
 
 
 def cost_per_1k_requests(

@@ -44,6 +44,7 @@ provisioned for the run-level peak, which no single edge owns).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, Generator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -55,6 +56,7 @@ from .cost import (
     S3_PUT_USD,
     StorageOps,
     WorkflowCostInputs,
+    egress_fee_usd,
     elasticache_storage_cost,
     marginal_pull_fee_usd,
     routed_workflow_cost,
@@ -62,6 +64,7 @@ from .cost import (
 )
 from .scheduler import ControlPlane, ScalingPolicy
 from .telemetry import TelemetryHub
+from .topology import Topology
 from .transfer import modeled_transfer_seconds
 
 #: media whose transfers go through a storage service in the cluster model
@@ -211,6 +214,23 @@ class AdaptiveRoute(RoutePolicy):
     edges — a poisoned p99 keeps the medium infeasible forever otherwise,
     so the timed probe is the only path back into the feasible set.
     ``reprobe_after_s=0`` (default) disables it.
+
+    **Uncertainty bonus (``explore_bonus``).**  Orthogonal to both probes:
+    an *explicit* optimism-under-uncertainty discount on observed scores.
+    Each observed candidate's (fee, p99) is scaled by
+    ``1 / (1 + explore_bonus / (1 + n_samples))`` — a thinly-observed medium
+    looks a little better than its evidence, so a medium condemned by a few
+    drifted samples keeps winning occasional merit traffic and its model can
+    recover; the bonus vanishes as evidence accumulates.  ``explore_bonus=0``
+    (default) scores exactly the raw observations.
+
+    **Topology-derived priors.**  Under an edge-cloud topology the lowerings
+    install a prior hook (see :meth:`auto_bind`): unobserved media are scored
+    with the flat price-sheet/latency priors *plus* the cross-tier egress fee
+    and tier RTT/bandwidth seconds of the edge's actual producer/consumer
+    zones — so the router never has to burn real objects to learn that an
+    edge-crossing medium is expensive.  Observed media need no hook: the
+    lowerings feed tier-inclusive fees and latencies into the hub.
     """
 
     #: media a durable (producer-death-surviving) decision may pick
@@ -226,10 +246,15 @@ class AdaptiveRoute(RoutePolicy):
         explore_growth: float = 4.0,
         reprobe_after_s: float = 0.0,
         reprobe_growth: float = 2.0,
+        explore_bonus: float = 0.0,
     ):
         self.telemetry = telemetry
         self.explore_every = explore_every
         self.explore_growth = explore_growth
+        self.explore_bonus = explore_bonus
+        #: lowering-installed topology prior: (edge, medium, nbytes) ->
+        #: (extra_fee_usd, extra_seconds) added to unobserved-media priors
+        self._prior_extra = None
         self._probe_countdown = explore_every
         self.reprobe_after_s = reprobe_after_s
         self.reprobe_growth = reprobe_growth
@@ -247,14 +272,19 @@ class AdaptiveRoute(RoutePolicy):
         )
         self.static = static or SizeRoute(inline_under=self.inline_under)
 
-    def auto_bind(self, hub: Optional[TelemetryHub]) -> Optional[TelemetryHub]:
+    def auto_bind(
+        self, hub: Optional[TelemetryHub], prior_extra=None
+    ) -> Optional[TelemetryHub]:
         """Bind a lowering-supplied hub and return the effective one.
 
         A user-pinned hub (passed to the constructor) is kept; a hub a
         previous lowering auto-bound is replaced, so one route instance
         reused across runs never keeps feeding off a dead run's feed.  Both
         lowerings route every bind through here — the rebind rule lives
-        only on the policy."""
+        only on the policy.  ``prior_extra`` installs (or, when None, clears)
+        the run's topology prior hook — it is per-run state like the
+        auto-bound hub, never carried across lowerings."""
+        self._prior_extra = prior_extra
         if self.telemetry is None or self._auto_bound:
             self.telemetry = hub
             self._auto_bound = True
@@ -339,14 +369,24 @@ class AdaptiveRoute(RoutePolicy):
         for m in cands:
             stats = hub.media.get(m)
             if stats is not None and stats.n:
-                scored.append((m, stats.predict_fee_usd(nbytes), stats.p99_s()))
+                fee, lat = stats.predict_fee_usd(nbytes), stats.p99_s()
+                if self.explore_bonus:
+                    # optimism under uncertainty: thin evidence scores a
+                    # little better than it reads, decaying in sample count
+                    w = 1.0 / (1.0 + self.explore_bonus / (1.0 + stats.n))
+                    fee *= w
+                    lat *= w
+                scored.append((m, fee, lat))
             else:
                 # unobserved medium: calibrated priors keep it explorable
                 # (fee-tied media would otherwise never be tried)
-                scored.append((
-                    m, transfer_fee_usd(m, nbytes),
-                    modeled_transfer_seconds(m, nbytes, self.net),
-                ))
+                fee = transfer_fee_usd(m, nbytes)
+                lat = modeled_transfer_seconds(m, nbytes, self.net)
+                if self._prior_extra is not None:
+                    extra_fee, extra_s = self._prior_extra(edge, m, nbytes)
+                    fee += extra_fee
+                    lat += extra_s
+                scored.append((m, fee, lat))
         if budget > 0.0:
             feasible = [s for s in scored if s[2] <= budget]
             if feasible:
@@ -699,6 +739,8 @@ class WorkflowDAG:
         telemetry: Optional[TelemetryHub] = None,
         scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
         fault_plan: Any = None,
+        topology: Optional[Topology] = None,
+        backend: Any = None,
     ) -> Tuple["WorkflowDAG", Any]:
         """Run the graph optimizer; returns (optimized DAG, PlacementPlan).
 
@@ -708,12 +750,20 @@ class WorkflowDAG:
         scheduler's steering honors, ``"spill"`` rewrites staged edges onto
         durable media when the telemetry feed predicts the producer's
         keep-alive expiry beats the consumer's pull.  Hand the returned
-        plan to ``execute_on_cluster(..., plan=plan)`` or
-        ``bind(..., plan=plan)``; this DAG itself is never mutated.
+        plan to ``compile(..., plan=plan)``; this DAG itself is never
+        mutated.
 
         ``fault_plan`` makes the spill pass fault-aware: a plan that
         *schedules* evictions needs no telemetry prediction — staged
         instance-resident edges are rewritten durable outright.
+
+        ``topology`` makes the co-placement pass tier-aware: each stage is
+        greedily assigned the zone minimizing (egress fees, tier seconds)
+        against its already-placed neighbors (workload pins honored), the
+        chosen zones land in ``plan.zones``, and cross-zone affinity hints
+        are refused.  ``backend`` is the run's intended default route — a
+        hint the zone cost model uses to price service-homed vs
+        instance-resident transfers correctly.
         """
         from .dagopt import DEFAULT_PASSES, optimize as _optimize
 
@@ -723,9 +773,108 @@ class WorkflowDAG:
             telemetry=telemetry,
             scaling=scaling,
             fault_plan=fault_plan,
+            topology=topology,
+            backend=backend,
         )
 
-    # -- engine lowering ---------------------------------------------------
+    # -- compilation (the one run API) -------------------------------------
+    def compile(
+        self,
+        target: str = "cluster",
+        backend: Any = None,
+        engine: Any = None,
+        net: NetConstants = DEFAULT_NET,
+        plan: Any = None,
+        faults: Any = None,
+        telemetry: Optional[TelemetryHub] = None,
+        topology: Optional[Topology] = None,
+        autoscaler: Any = None,
+        scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
+        online_spill: Any = None,
+        bytes_scale: float = 1.0,
+        policy: Optional[Callable[[Stage], Any]] = None,
+        handlers: Optional[Dict[str, Callable]] = None,
+    ) -> "Runnable":
+        """Compile this DAG for one of the two lowerings; returns a
+        :class:`Runnable`.
+
+        ``target="cluster"`` (default) compiles onto the calibrated
+        discrete-event cluster: ``backend`` (required) is the default route
+        applied to ``route="default"`` edges, and ``run(seed=...,
+        deterministic=...)`` on the returned :class:`ClusterRunnable`
+        executes one seeded run, returning a :class:`ClusterDagRun`.
+
+        ``target="engine"`` compiles onto a real
+        :class:`~repro.core.workflow.WorkflowEngine` (``engine`` required):
+        the returned :class:`DagBinding` registers one handler per stage;
+        ``backend`` doubles as the binding's default route (``None`` means
+        the engine's transfer backend).  ``bytes_scale`` / ``policy`` /
+        ``handlers`` are engine-only knobs (see :class:`DagBinding`).
+
+        Cross-cutting options mean the same thing on both targets:
+        ``plan`` is the :class:`~repro.core.dagopt.PlacementPlan` from
+        :meth:`optimize`; ``faults`` is a
+        :class:`~repro.core.faults.FaultPlan` (armed via the cluster's
+        fault interpreter or a :class:`~repro.core.faults.FaultInjector`
+        installed on the engine); ``telemetry`` pins the hub adaptive
+        routes feed on; ``topology`` places the run on an edge-cloud
+        continuum (:class:`~repro.core.topology.Topology`).
+        """
+        if target == "cluster":
+            if engine is not None:
+                raise ValueError(
+                    "compile(target='cluster') takes no engine; pass "
+                    "target='engine' to lower onto a WorkflowEngine"
+                )
+            if backend is None:
+                raise ValueError(
+                    "compile(target='cluster') requires a backend (the "
+                    "default route for route='default' edges)"
+                )
+            for arg, name in ((policy, "policy"), (handlers, "handlers")):
+                if arg is not None:
+                    raise ValueError(
+                        f"compile(target='cluster') does not take {name!r} "
+                        "(engine-only option)"
+                    )
+            return ClusterRunnable(
+                self, backend=backend, net=net, plan=plan, faults=faults,
+                telemetry=telemetry, topology=topology,
+                autoscaler=autoscaler, scaling=scaling,
+                online_spill=online_spill,
+            )
+        if target == "engine":
+            if engine is None:
+                raise ValueError(
+                    "compile(target='engine') requires an engine "
+                    "(a repro.core.workflow.WorkflowEngine)"
+                )
+            binding = DagBinding(
+                self, engine, backend, bytes_scale, policy,
+                handlers=handlers, autoscaler=autoscaler, plan=plan,
+                online_spill=online_spill, topology=topology,
+            )
+            if telemetry is not None:
+                # pin the engine's transfer hub so adaptive routes (and the
+                # caller) observe this run's pulls on the supplied hub
+                engine.transfer.telemetry = telemetry
+                for e in (self.edges):
+                    r = e.route
+                    if isinstance(r, AdaptiveRoute):
+                        r.auto_bind(telemetry)
+                if isinstance(binding.default_route, AdaptiveRoute):
+                    binding.default_route.auto_bind(telemetry)
+            if faults is not None:
+                from .faults import FaultInjector
+
+                binding.fault_injector = FaultInjector(engine, faults).install()
+            return binding
+        raise ValueError(
+            f"unknown compile target {target!r}; expected 'cluster' or "
+            "'engine'"
+        )
+
+    # -- engine lowering (deprecated spelling) ------------------------------
     def bind(
         self,
         engine,
@@ -737,23 +886,14 @@ class WorkflowDAG:
         plan: Any = None,
         online_spill: Any = None,
     ) -> "DagBinding":
-        """Compile this DAG onto a :class:`~repro.core.workflow.WorkflowEngine`
-        (see :class:`DagBinding`).
-
-        ``handlers`` maps stage names to custom engine handlers replacing
-        the synthetic data movers (the stage keeps its registered name,
-        scaling policy, and service time — used e.g. by the disaggregated
-        server to run real prefill/decode inside the DAG's control flow).
-        ``autoscaler`` selects the scale-up strategy of every stage's
-        default :class:`~repro.core.scheduler.ScalingPolicy` (a registered
-        name or policy instance); an explicit ``policy`` factory wins.
-        ``plan`` is the :class:`~repro.core.dagopt.PlacementPlan` from
-        :meth:`optimize`: co-placement affinity hints are forwarded to the
-        scheduler's steering and honored pulls are modeled at
-        shared-memory speed.
-        ``online_spill`` is a :class:`~repro.core.dagopt.OnlineSpill`
-        consulted per streamed chunk (mid-stream staged->durable spill).
-        """
+        """Deprecated: use ``compile(target="engine", engine=...,
+        backend=...)``.  Kept as a thin shim — same semantics, same bits."""
+        warnings.warn(
+            "WorkflowDAG.bind() is deprecated; use "
+            "dag.compile(target='engine', engine=..., backend=...).",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         return DagBinding(
             self, engine, default_route, bytes_scale, policy,
             handlers=handlers, autoscaler=autoscaler, plan=plan,
@@ -1265,7 +1405,10 @@ class ClusterDagRun:
         )
 
     def cost(self):
-        return routed_workflow_cost(self.cost_inputs(), self.media_storage_ops())
+        return routed_workflow_cost(
+            self.cost_inputs(), self.media_storage_ops(),
+            egress_usd=self.cluster.egress_usd,
+        )
 
     def edge_cost_rows(self) -> Dict[str, Dict[str, Any]]:
         """Per-edge attribution table: medium, objects, bytes, seconds, $."""
@@ -1275,7 +1418,68 @@ class ClusterDagRun:
         )
 
 
-def execute_on_cluster(
+class Runnable:
+    """A DAG compiled for one lowering — what :meth:`WorkflowDAG.compile`
+    returns.  ``run(...)`` executes it; concrete subclasses are
+    :class:`ClusterRunnable` (calibrated event simulation) and
+    :class:`DagBinding` (real :class:`~repro.core.workflow.WorkflowEngine`).
+    """
+
+    dag: "WorkflowDAG"
+
+    def run(self, *args: Any, **kwargs: Any) -> Any:
+        raise NotImplementedError
+
+    def describe(self) -> str:
+        return f"{type(self).__name__}({self.dag.name})"
+
+
+class ClusterRunnable(Runnable):
+    """``compile(target="cluster")`` product: the DAG plus every run-invariant
+    option, so one compiled object yields many seeded runs.
+
+    ``run(seed=0, deterministic=False)`` executes one run on a fresh
+    :class:`~repro.core.cluster.ServerlessCluster` and returns the
+    :class:`ClusterDagRun`.  Compilation itself is cheap (the cluster
+    lowering interprets the graph), so this object is pure configuration —
+    which is exactly what makes its runs reproducible.
+    """
+
+    def __init__(
+        self,
+        dag: "WorkflowDAG",
+        backend: Route,
+        net: NetConstants = DEFAULT_NET,
+        plan: Any = None,
+        faults: Any = None,
+        telemetry: Optional[TelemetryHub] = None,
+        topology: Optional[Topology] = None,
+        autoscaler: Any = None,
+        scaling: Optional[Callable[["Stage"], ScalingPolicy]] = None,
+        online_spill: Any = None,
+    ):
+        self.dag = dag
+        self.backend = backend
+        self.net = net
+        self.plan = plan
+        self.faults = faults
+        self.telemetry = telemetry
+        self.topology = topology
+        self.autoscaler = autoscaler
+        self.scaling = scaling
+        self.online_spill = online_spill
+
+    def run(self, seed: int = 0, deterministic: bool = False) -> ClusterDagRun:
+        return _execute_on_cluster(
+            self.dag, self.backend, net=self.net, seed=seed,
+            deterministic=deterministic, autoscaler=self.autoscaler,
+            scaling=self.scaling, plan=self.plan, fault_plan=self.faults,
+            online_spill=self.online_spill, topology=self.topology,
+            telemetry=self.telemetry,
+        )
+
+
+def _execute_on_cluster(
     dag: WorkflowDAG,
     backend: Route,
     net: NetConstants = DEFAULT_NET,
@@ -1286,6 +1490,8 @@ def execute_on_cluster(
     plan: Any = None,
     fault_plan: Any = None,
     online_spill: Any = None,
+    topology: Optional[Topology] = None,
+    telemetry: Optional[TelemetryHub] = None,
 ) -> ClusterDagRun:
     """Interpret ``dag`` on the calibrated discrete-event cluster.
 
@@ -1335,9 +1541,46 @@ def execute_on_cluster(
     the engine lowering's real chunk protocol); billing stays exact — one
     logical PUT/GET per distinct storage medium per object (multipart
     upload / ranged-GET semantics) with residency integrated on the clock.
+
+    ``topology`` places the run on an edge-cloud continuum
+    (:class:`~repro.core.topology.Topology`): each stage's nodes land in a
+    zone — workload pins first, then the plan's optimizer-chosen zones,
+    then a naive round-robin spread (the topology-oblivious baseline) —
+    and every tier-crossing transfer rides a shared per-zone-pair FIFO,
+    pays the tier RTT, and accrues cross-tier egress fees into the bill.
+    Storage services are homed in the topology's service zone.  A
+    single-zone topology (or None) is bit-identical to the flat cluster.
+    ``telemetry`` pins the hub adaptive routes are fed with (default: a
+    fresh run-local hub on the run's virtual clock).
     """
     n_nodes = sum(s.fan for s in dag.stages)
-    cluster = ServerlessCluster(n_nodes, net, seed=seed, deterministic=deterministic)
+
+    nodes: Dict[str, List[int]] = {}
+    base = 0
+    for s in dag.stages:
+        nodes[s.name] = list(range(base, base + s.fan))
+        base += s.fan
+
+    # edge-cloud continuum: stage -> zones (pins > plan > naive spread),
+    # then node -> zone.  Flat/absent topologies skip the whole layer.
+    node_zones: Optional[List[int]] = None
+    stage_zones: Optional[Dict[str, Tuple[int, ...]]] = None
+    if topology is not None and not topology.is_flat:
+        stage_zones = topology.assign_stage_zones(
+            [s.name for s in dag.stages],
+            plan_zones=getattr(plan, "zones", None),
+        )
+        node_zones = [0] * n_nodes
+        for s in dag.stages:
+            zs = stage_zones[s.name]
+            for k, nd in enumerate(nodes[s.name]):
+                node_zones[nd] = zs[k % len(zs)]
+
+    cluster = ServerlessCluster(
+        n_nodes, net, seed=seed, deterministic=deterministic,
+        topology=topology if node_zones is not None else None,
+        node_zones=node_zones,
+    )
     sim = cluster.sim
     faults = None
     if fault_plan is not None and fault_plan:
@@ -1348,6 +1591,61 @@ def execute_on_cluster(
     marks: Dict[str, float] = {}
     usage: Dict[str, EdgeUsage] = {e.label: EdgeUsage() for e in dag.edges}
     media_seen: Dict[str, set] = {e.label: set() for e in dag.edges}
+
+    # -- cross-tier pricing/pacing helpers (all zero when node_zones is
+    # None, so the flat cluster's floats and rng stream are untouched) ----
+    def _tier_seconds(level: int, nbytes: int) -> float:
+        if level <= 1:
+            return 0.0
+        return net.tier_rtt(level) + nbytes / net.tier_bw(level)
+
+    def _node_level(a: Optional[int], b: Optional[int]) -> int:
+        """Crossing level between two nodes; service-homed side when None."""
+        svc = cluster._svc_zone
+        za = svc if a is None else node_zones[a]
+        zb = svc if b is None else node_zones[b]
+        if za == zb:
+            return 1
+        return topology.crossing(za, zb)
+
+    def _pull_extras(
+        m: str, nbytes: int, retrievals: int,
+        src_node: Optional[int], dst_node: Optional[int],
+    ) -> Tuple[float, float]:
+        """(extra fee USD, extra seconds) one pull pays for tier crossings:
+        service media cross producer->service-home on the put (amortized
+        over the object's retrievals) and service-home->consumer on the
+        get; instance-resident media cross producer->consumer directly."""
+        if node_zones is None:
+            return 0.0, 0.0
+        if m in _STORAGE_MEDIA:
+            lp = _node_level(src_node, None)
+            lg = _node_level(None, dst_node)
+            fee = egress_fee_usd(lg, nbytes) + (
+                egress_fee_usd(lp, nbytes) / max(1, retrievals)
+            )
+            return fee, _tier_seconds(lg, nbytes)
+        level = _node_level(src_node, dst_node)
+        return egress_fee_usd(level, nbytes), _tier_seconds(level, nbytes)
+
+    def _stage_zone(name: Optional[str]) -> Optional[int]:
+        """Representative zone of a stage (its first instance's)."""
+        if name is None or stage_zones is None:
+            return None
+        return stage_zones[name][0]
+
+    def _edge_tier_extras(
+        edge: Edge, m: str, nbytes: int, retrievals: int = 1
+    ) -> Tuple[float, float]:
+        """Stage-level (fee, seconds) tier extras of one pull on ``edge`` —
+        the representative-zone form used where per-node identity is not in
+        scope (adaptive priors, streamed batches)."""
+        if node_zones is None:
+            return 0.0, 0.0
+        src = nodes[edge.src][0] if edge.src is not None else None
+        dst = nodes[edge.dst][0]
+        return _pull_extras(m, nbytes, retrievals, src, dst)
+
     # adaptive routes: ensure every AdaptiveRoute has a hub and feed each
     # distinct hub with this run's observations (modeled seconds + fee)
     hubs: List[TelemetryHub] = []
@@ -1357,10 +1655,17 @@ def execute_on_cluster(
     ]
     if adaptive:
         # fresh run-local hub (auto_bind replaces a previous run's feed, so
-        # reused route instances start clean; user-pinned hubs are kept)
-        shared_hub = TelemetryHub(VirtualClock(sim))
+        # reused route instances start clean; user-pinned hubs are kept);
+        # under a topology the routes also score unobserved media with
+        # tier-aware priors (egress + tier seconds of this edge's zones)
+        shared_hub = telemetry if telemetry is not None else TelemetryHub(
+            VirtualClock(sim)
+        )
+        prior_extra = (
+            _edge_tier_extras if node_zones is not None else None
+        )
         for r in adaptive:
-            hub = r.auto_bind(shared_hub)
+            hub = r.auto_bind(shared_hub, prior_extra)
             if hub is not None and hub not in hubs:
                 hubs.append(hub)
     resolve = dag.route_resolver(backend)
@@ -1373,12 +1678,6 @@ def execute_on_cluster(
         ))
         for s in dag.stages:
             control.register(s.name, make_policy(s))
-
-    nodes: Dict[str, List[int]] = {}
-    base = 0
-    for s in dag.stages:
-        nodes[s.name] = list(range(base, base + s.fan))
-        base += s.fan
 
     # co-placement: consumer node -> producer node it shares (the optimizer
     # bounded the packing, so every affined consumer instance maps onto its
@@ -1396,6 +1695,17 @@ def execute_on_cluster(
             pn = nodes[pname]
             for j, dn in enumerate(nodes[cname]):
                 colocal[dn] = pn[j % len(pn)]
+    if node_zones is not None and colocal:
+        # a hand-written plan may affine stages the topology separated;
+        # cross-zone pairs cannot share a node, so the hint is dropped
+        colocal = {
+            d: s for d, s in colocal.items()
+            if node_zones[d] == node_zones[s]
+        }
+    # contention-aware co-placement: at pull time, compare the shared-memory
+    # FIFO backlog against the producer-NIC alternative and route around a
+    # saturated memory channel (splitting a hot broadcast across paths)
+    contention_aware = bool(plan is not None and getattr(plan, "contention_aware", False))
 
     def _mark_max(key: str) -> None:
         t = sim.now
@@ -1403,16 +1713,25 @@ def execute_on_cluster(
             marks[key] = t
 
     def _observe(
-        m: str, nbytes: int, retrievals: int = 1, external: bool = False
+        m: str, nbytes: int, retrievals: int = 1, external: bool = False,
+        src_node: Optional[int] = None, dst_node: Optional[int] = None,
     ) -> None:
         """Feed the adaptive hubs once per PULL with that pull's marginal
         fee (:func:`repro.core.cost.marginal_pull_fee_usd`), so the
         router's observed $/object matches what routed_workflow_cost will
-        bill."""
+        bill.  Under a topology the fee and seconds include the pull's
+        tier-crossing extras, so the router's observations are
+        topology-aware too."""
         if not hubs:
             return
         fee = marginal_pull_fee_usd(m, nbytes, retrievals, external)
         secs = modeled_transfer_seconds(m, nbytes, net)
+        if node_zones is not None:
+            extra_fee, extra_s = _pull_extras(
+                m, nbytes, retrievals, src_node, dst_node
+            )
+            fee += extra_fee
+            secs += extra_s
         if faults is not None:
             # degraded media are observed degraded, so AdaptiveRoute's
             # window sees the throttle and can route around it
@@ -1423,11 +1742,12 @@ def execute_on_cluster(
     def _medium(
         edge: Edge, nbytes: int,
         retrievals: int = 1, record: bool = True, external: bool = False,
+        src_node: Optional[int] = None, dst_node: Optional[int] = None,
     ) -> str:
         m = resolve(edge, nbytes)       # validates against _CLUSTER_MEDIA
         media_seen[edge.label].add(m)
         if record:
-            _observe(m, nbytes, retrievals, external)
+            _observe(m, nbytes, retrievals, external, src_node, dst_node)
         return m
 
     # staged edges: the medium is decided ONCE per object, at stage (put)
@@ -1536,25 +1856,47 @@ def execute_on_cluster(
 
         return cb
 
-    def streamed_spans(m: str, b: int, staged: bool) -> float:
+    def streamed_spans(m: str, b: int, staged: bool, edge: Optional[Edge] = None) -> float:
         """One batch-request's modeled seconds on ``m`` (get side only for
         staged chunks — the producer's push overlapped its compute),
-        stretched by any active degradation window."""
+        stretched by any active degradation window.  Under a topology the
+        batch additionally pays the edge's tier-crossing seconds."""
         dt = (
             _staged_get_seconds(m, b, net) if staged
             else modeled_transfer_seconds(m, b, net)
         )
+        if edge is not None and node_zones is not None:
+            dt += _edge_tier_extras(edge, m, b)[1]
         if faults is not None:
             dt *= faults.slowdown_at(m)
         return dt
 
     def xdt_pull_ev(u: EdgeUsage, src_node: int, dst_node: int, nbytes: int):
         """One xdt pull's data-plane event, honoring co-placement: the
-        shared-memory path when consumer and producer share a node."""
+        shared-memory path when consumer and producer share a node.  The
+        contention-aware plan variant reads the shared-memory FIFO's
+        occupancy first and falls back to the producer NIC when the memory
+        channel's backlog would make it the slower path — a hot broadcast
+        splits across both instead of serializing behind one channel."""
         if colocal.get(dst_node) == src_node:
+            if contention_aware:
+                mem_eta = (
+                    cluster.mem_backlog_s(src_node)
+                    + nbytes / net.local_bw + net.local_rtt
+                )
+                nic_eta = (
+                    cluster.nic_backlog_s(src_node)
+                    + max(
+                        nbytes / (net.nic_bw * net.xdt_stream_eff),
+                        nbytes / net.xdt_stream_bw,
+                    )
+                    + net.xdt_pull_rtt
+                )
+                if mem_eta > nic_eta:
+                    return cluster.xdt_pull(src_node, nbytes, consumer=dst_node)
             u.n_local += 1
             return cluster.local_pull(src_node, nbytes)
-        return cluster.xdt_pull(src_node, nbytes)
+        return cluster.xdt_pull(src_node, nbytes, consumer=dst_node)
 
     def faulted_staged_fetch(
         edge: Edge, u: EdgeUsage, m: str, src_node: int, dst_node: int,
@@ -1596,7 +1938,8 @@ def execute_on_cluster(
             media_seen[edge.label].add(m)
             u.n_puts += 1
             yield cluster.storage_put(m, src_node, nbytes)
-        _observe(m, nbytes, retrievals=n_pulls)
+        _observe(m, nbytes, retrievals=n_pulls,
+                 src_node=src_node, dst_node=dst_node)
         u.count(m, nbytes)
         if m in _STORAGE_MEDIA:
             u.n_gets += 1
@@ -1604,7 +1947,7 @@ def execute_on_cluster(
         elif m == "xdt":
             yield xdt_pull_ev(u, src_node, dst_node, nbytes)
         else:
-            yield cluster.inline_send(src_node, nbytes)
+            yield cluster.inline_send(src_node, nbytes, dst=dst_node)
         extra = faults.extra_seconds(
             m, modeled_transfer_seconds(m, nbytes, net)
         )
@@ -1649,7 +1992,7 @@ def execute_on_cluster(
         window = edge.max_inflight_chunks
         finish, batch_ends, media, peak, _ = _chunk_event_timeline(
             start, ready, sizes, media,
-            lambda m, b: streamed_spans(m, b, False),
+            lambda m, b: streamed_spans(m, b, False, edge),
             max_inflight=window,
             on_pressure=pressure_for(edge) if window else None,
         )
@@ -1664,13 +2007,19 @@ def execute_on_cluster(
             # help.  A credit window is exempt: bounded sender memory may
             # legitimately cost latency, that is the trade it buys.
             un = t_end + sum(
-                streamed_spans(m, b, False) for m, b in per_m.items()
+                streamed_spans(m, b, False, edge) for m, b in per_m.items()
             )
             if un < finish:
                 finish = un
         for m, b in per_m.items():
             u.count(m, b)
-            _observe(m, b)
+            _observe(m, b, src_node=nodes[edge.src][0],
+                     dst_node=nodes[edge.dst][0])
+            if node_zones is not None:
+                # streamed batches never touch the cluster's transfer
+                # primitives (pure modeled timers), so their cross-tier
+                # egress is accrued here instead
+                cluster.egress_usd += _edge_tier_extras(edge, m, b)[0]
             if m in _STORAGE_MEDIA:
                 acct = cluster.accounting(m)
                 acct.n_storage_puts += 1
@@ -1730,7 +2079,7 @@ def execute_on_cluster(
         # producer's publications (no consumer-side pressure spill)
         finish, batch_ends, _, peak, _ = _chunk_event_timeline(
             start, ready, sizes, media,
-            lambda m, b: streamed_spans(m, b, True),
+            lambda m, b: streamed_spans(m, b, True, edge),
             max_inflight=window,
         )
         if peak > u.peak_inflight_chunk_bytes:
@@ -1740,7 +2089,7 @@ def execute_on_cluster(
             # once everything was staged (the sequential sync-SDK loop);
             # credit windows are exempt — bounded memory may cost latency
             un = max(ready) + sum(
-                streamed_spans(m, b, True)
+                streamed_spans(m, b, True, edge)
                 for om in per_obj for m, b in om.items()
             )
             if un < finish:
@@ -1748,7 +2097,12 @@ def execute_on_cluster(
         for om in per_obj:
             for m, b in om.items():
                 u.count(m, b)
-                _observe(m, b, retrievals=n_pulls)
+                _observe(m, b, retrievals=n_pulls,
+                         src_node=nodes[edge.src][0], dst_node=dst_node)
+                if node_zones is not None:
+                    cluster.egress_usd += _pull_extras(
+                        m, b, n_pulls, nodes[edge.src][0], dst_node
+                    )[0]
         # simulated chunk events: one timer per coalesced pull batch
         for end in batch_ends:
             tgt = end if end < finish else finish
@@ -1776,7 +2130,8 @@ def execute_on_cluster(
             if edge.streaming:
                 yield from streamed_sync_fetch(edge, u)
             else:
-                m = _medium(edge, nbytes)
+                m = _medium(edge, nbytes,
+                            src_node=src_node, dst_node=dst_node)
                 u.count(m, nbytes)
                 if m in _STORAGE_MEDIA:
                     u.n_puts += 1
@@ -1788,7 +2143,7 @@ def execute_on_cluster(
                     yield cluster.invoke_ctrl()
                     yield xdt_pull_ev(u, src_node, dst_node, nbytes)
                 else:                   # inline: payload rides the response
-                    yield cluster.inline_send(src_node, nbytes)
+                    yield cluster.inline_send(src_node, nbytes, dst=dst_node)
         elif edge.streaming:
             yield from streamed_staged_fetch(edge, u, dst_node)
         else:
@@ -1806,7 +2161,8 @@ def execute_on_cluster(
                 evs = []
                 for src_node in srcs[k:k + per_wave]:
                     if src_node is None:             # external original input
-                        m = _medium(edge, nbytes, external=True)
+                        m = _medium(edge, nbytes, external=True,
+                                    dst_node=dst_node)
                         u.count(m, nbytes)
                         u.n_gets += 1
                         evs.append(cluster.storage_get(m, dst_node, nbytes))
@@ -1821,7 +2177,8 @@ def execute_on_cluster(
                             edge, u, m, src_node, dst_node, n_pulls
                         )).done)
                         continue
-                    _observe(m, nbytes, retrievals=n_pulls)
+                    _observe(m, nbytes, retrievals=n_pulls,
+                             src_node=src_node, dst_node=dst_node)
                     u.count(m, nbytes)
                     if m in _STORAGE_MEDIA:
                         u.n_gets += 1
@@ -1829,7 +2186,9 @@ def execute_on_cluster(
                     elif m == "xdt":
                         evs.append(xdt_pull_ev(u, src_node, dst_node, nbytes))
                     else:
-                        evs.append(cluster.inline_send(src_node, nbytes))
+                        evs.append(cluster.inline_send(
+                            src_node, nbytes, dst=dst_node
+                        ))
                 if evs:
                     yield sim.all_of(evs)
         _mark_max(f"edge:{edge.label}")
@@ -1992,12 +2351,43 @@ def execute_on_cluster(
     )
 
 
+def execute_on_cluster(
+    dag: WorkflowDAG,
+    backend: Route,
+    net: NetConstants = DEFAULT_NET,
+    seed: int = 0,
+    deterministic: bool = False,
+    autoscaler: Any = None,
+    scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
+    plan: Any = None,
+    fault_plan: Any = None,
+    online_spill: Any = None,
+    topology: Optional[Topology] = None,
+    telemetry: Optional[TelemetryHub] = None,
+) -> ClusterDagRun:
+    """Deprecated: use ``dag.compile(target="cluster", backend=...,
+    ...).run(seed=..., deterministic=...)``.  Kept as a thin shim — same
+    parameters, same bits."""
+    warnings.warn(
+        "execute_on_cluster() is deprecated; use "
+        "dag.compile(target='cluster', backend=...).run(seed=...).",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _execute_on_cluster(
+        dag, backend, net=net, seed=seed, deterministic=deterministic,
+        autoscaler=autoscaler, scaling=scaling, plan=plan,
+        fault_plan=fault_plan, online_spill=online_spill,
+        topology=topology, telemetry=telemetry,
+    )
+
+
 # ---------------------------------------------------------------------------
 # Lowering 2: the event-driven WorkflowEngine (sweep / loadgen path)
 # ---------------------------------------------------------------------------
 
 
-class DagBinding:
+class DagBinding(Runnable):
     """A DAG compiled onto a :class:`~repro.core.workflow.WorkflowEngine`.
 
     Registers one generator handler per stage (named ``<dag>.<stage>``) that
@@ -2033,6 +2423,7 @@ class DagBinding:
         autoscaler: Any = None,
         plan: Any = None,
         online_spill: Any = None,
+        topology: Optional[Topology] = None,
     ):
         self.dag = dag
         self.engine = engine
@@ -2041,6 +2432,26 @@ class DagBinding:
         #: chunk so remaining chunks of a streamed edge divert to durable
         #: media when the producer's live reap window closes in
         self.online_spill = online_spill
+        #: :class:`~repro.core.faults.FaultInjector` armed by
+        #: ``compile(target="engine", faults=...)``; None otherwise
+        self.fault_injector: Any = None
+        # edge-cloud continuum: each stage's instances are placed by a
+        # zone-carrying placer (coords embed the zone index, so cross-zone
+        # instances never compare coords-equal), and every cross-tier
+        # transfer pays tier RTT + bandwidth as ctx.sleep debt plus egress
+        # fees into ``egress_usd``.  Flat/absent topologies skip it all —
+        # placers, debt, and fees — keeping the engine bit-identical.
+        self.topology: Optional[Topology] = (
+            topology if topology is not None and not topology.is_flat
+            else None
+        )
+        self.egress_usd = 0.0
+        self._stage_zones: Dict[str, Tuple[int, ...]] = {}
+        if self.topology is not None:
+            self._stage_zones = self.topology.assign_stage_zones(
+                [s.name for s in dag.stages],
+                plan_zones=getattr(plan, "zones", None),
+            )
         # co-placement hints: the spawner forwards the affinity producer's
         # instance coords to the callee's steer (blocking children are
         # spawned by their producer; wave stages by the entry, which learns
@@ -2063,6 +2474,13 @@ class DagBinding:
                     f"edge label {self._SRC_KEY!r} collides with the "
                     "binding's reserved co-placement key"
                 )
+            if self.topology is not None:
+                # a hand-written plan may affine stages the topology
+                # separated; cross-zone pairs cannot share a node
+                self._affinity = {
+                    c: p for c, p in self._affinity.items()
+                    if self._stage_zones[c][0] == self._stage_zones[p][0]
+                }
         self.default_route: Route = (
             engine.transfer.backend if default_route is None else default_route
         )
@@ -2143,15 +2561,65 @@ class DagBinding:
                 # interleaved with chunk publication; registering the compute
                 # as service_time on top would double-charge it
                 svc = 0.0
+            placer = None
+            if self.topology is not None:
+                # coords embed (zone index, instance id): same-zone stages
+                # with matching ids still model co-residency (as the flat
+                # placer's (i,) did), cross-zone stages never do, and the
+                # Coord's tier path drives the zone-affine steer fallback
+                zs = self._stage_zones[stage.name]
+                placer = (
+                    lambda i, zs=zs: self.topology.coord(
+                        (zs[i % len(zs)], i), zs[i % len(zs)]
+                    )
+                )
             engine.register(
                 self._fn(stage.name),
                 handlers.get(stage.name) or self._make_handler(stage),
                 policy=default_policy(stage),
                 service_time=svc,
+                placer=placer,
             )
 
     def _fn(self, stage_name: str) -> str:
         return f"{self.dag.name}.{stage_name}"
+
+    # -- cross-tier debt (topology runs only) ------------------------------
+    def _ctx_zone(self, ctx) -> Optional[int]:
+        """Zone index of the acting instance (its Coord's tier path)."""
+        zone = getattr(ctx.instance.coords, "zone", None)
+        if zone is None:
+            return None
+        return self.topology.zone_index.get(zone)
+
+    def _tier_level(self, za: Optional[int], zb: Optional[int]) -> int:
+        """Crossing level between two zones; ``None`` means the topology's
+        service zone (where S3/ElastiCache front-ends are homed)."""
+        svc = self.topology.service_zone
+        za = svc if za is None else za
+        zb = svc if zb is None else zb
+        if za == zb:
+            return 1
+        return self.topology.crossing(za, zb)
+
+    def _pay_tier(self, ctx, level: int, nbytes: int) -> None:
+        """One transfer's tier-crossing debt: tier RTT + tier-bandwidth
+        seconds as ctx.sleep (virtual time, billed like any handler wait)
+        and cross-tier egress fees into :attr:`egress_usd`."""
+        if level <= 1:
+            return
+        net = self.engine.transfer.net
+        ctx.sleep(net.tier_rtt(level) + nbytes / net.tier_bw(level))
+        self.egress_usd += egress_fee_usd(level, nbytes)
+
+    def _ref_medium(self, ref) -> str:
+        """The medium a staged object actually landed on (the put-time
+        routing decision rides inside the ref's envelope)."""
+        tr = self.engine.transfer
+        payload = getattr(ref, "_payload", None)
+        if payload is None:
+            payload = tr.minter.open(ref)
+        return payload.medium or tr.backend
 
     # -- data movement (tracked) ------------------------------------------
     def _elems(self, edge: Edge) -> int:
@@ -2166,6 +2634,12 @@ class DagBinding:
         u = self.edge_usage[edge.label]
         u.count(medium, arr.nbytes)
         u.n_puts += 1
+        if self.topology is not None and medium in _STORAGE_MEDIA:
+            # service put: producer zone -> service home (resident media
+            # stage in place; their crossing is paid by the consumer's get)
+            self._pay_tier(
+                ctx, self._tier_level(self._ctx_zone(ctx), None), arr.nbytes
+            )
         return ref
 
     def _get(self, ctx, edge: Edge, ref, local: bool = False):
@@ -2177,6 +2651,20 @@ class DagBinding:
         u.n_gets += 1
         u.n_local += stats.local_pulls - before_local
         u.modeled_s += stats.modeled_seconds - before
+        if self.topology is not None and not local:
+            medium = self._ref_medium(ref)
+            nbytes = getattr(val, "nbytes", edge.nbytes)
+            if medium in _STORAGE_MEDIA:
+                # service get: service home -> consumer zone
+                level = self._tier_level(None, self._ctx_zone(ctx))
+            else:
+                # resident pull: producer stage zone -> consumer zone
+                src = (
+                    self._stage_zones[edge.src][0]
+                    if edge.src is not None else None
+                )
+                level = self._tier_level(src, self._ctx_zone(ctx))
+            self._pay_tier(ctx, level, nbytes)
         return val
 
     def _put_for_consumers(self, ctx, edge: Edge, fill: float) -> List[List[Any]]:
@@ -2210,6 +2698,13 @@ class DagBinding:
             u.count(medium, arr.nbytes)
             u.n_gets += 1
             u.modeled_s += modeled
+            if self.topology is not None:
+                # original inputs live with the storage service: every read
+                # crosses service home -> consumer zone
+                self._pay_tier(
+                    ctx, self._tier_level(None, self._ctx_zone(ctx)),
+                    arr.nbytes,
+                )
             self._external_gets[medium] = self._external_gets.get(medium, 0) + 1
             if hub is not None:
                 # reads bypass the transfer engine, so feed the observe side
@@ -2502,6 +2997,7 @@ class DagBinding:
                 seen.add(key)
                 before = stats.modeled_seconds
                 before_local = stats.local_pulls
+                before_n = len(vals)
                 if j - i > 1:
                     vals.extend(ctx.get_chunk_span(
                         stream.refs[i:j], local=local, bill_first=bill
@@ -2514,6 +3010,19 @@ class DagBinding:
                     u.n_gets += 1
                 u.n_local += stats.local_pulls - before_local
                 u.modeled_s += stats.modeled_seconds - before
+                if self.topology is not None and not local:
+                    span_bytes = sum(
+                        getattr(v, "nbytes", 0) for v in vals[before_n:]
+                    )
+                    if medium in _STORAGE_MEDIA:
+                        level = self._tier_level(None, self._ctx_zone(ctx))
+                    else:
+                        src = (
+                            self._stage_zones[edge.src][0]
+                            if edge.src is not None else None
+                        )
+                        level = self._tier_level(src, self._ctx_zone(ctx))
+                    self._pay_tier(ctx, level, span_bytes)
                 gates = stream.gate
                 if gates is not None:
                     for k in range(i, j):
@@ -3027,7 +3536,9 @@ class DagBinding:
             n_function_invocations=len(eng.records),
             billed_duration_s=eng.billed_virtual_seconds(),
         )
-        return routed_workflow_cost(inputs, self.media_storage_ops())
+        return routed_workflow_cost(
+            inputs, self.media_storage_ops(), egress_usd=self.egress_usd
+        )
 
     def edge_report(self) -> Dict[str, Dict[str, Any]]:
         return _edge_fee_rows(
@@ -3040,12 +3551,14 @@ __all__ = [
     "AdaptiveRoute",
     "Billing",
     "ClusterDagRun",
+    "ClusterRunnable",
     "DagBinding",
     "Edge",
     "EdgeUsage",
     "FixedRoute",
     "Route",
     "RoutePolicy",
+    "Runnable",
     "SizeRoute",
     "Stage",
     "WorkflowDAG",

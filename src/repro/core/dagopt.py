@@ -44,8 +44,8 @@ still hold.
 Usage::
 
     opt_dag, plan = dag.optimize()                 # fuse + coplace (+ spill)
-    run = execute_on_cluster(opt_dag, "xdt", plan=plan)
-    binding = opt_dag.bind(engine, plan=plan)
+    run = opt_dag.compile(target="cluster", backend="xdt", plan=plan).run()
+    binding = opt_dag.compile(target="engine", engine=engine, plan=plan)
 
 Custom passes subclass :class:`GraphPass` and register with
 :func:`register_pass`; ``optimize(passes=("fuse", "mypass"))`` then selects
@@ -57,9 +57,13 @@ import dataclasses
 import math
 from typing import Any, Callable, ClassVar, Dict, List, Optional, Sequence, Tuple, Type, Union
 
+from .cluster import DEFAULT_NET, NetConstants
+from .cost import egress_fee_usd
 from .dag import Edge, Stage, WorkflowDAG
+from .registry import Registry
 from .scheduler import ScalingPolicy
 from .telemetry import TelemetryHub
+from .topology import Topology
 
 #: media a spilled edge may be pinned to (survive producer instance death)
 DURABLE_MEDIA = ("s3", "elasticache")
@@ -73,17 +77,23 @@ class PlacementPlan:
     ``fused`` maps each fused stage to the original chain it replaced;
     ``eliminated`` maps each removed edge label to the fused stage that
     absorbed it; ``spilled`` maps rewritten edge labels to the durable
-    medium they were pinned to.  ``notes`` is the per-pass provenance —
-    including every *refused* rewrite and why."""
+    medium they were pinned to.  ``zones`` maps stages to the zone a
+    tier-aware :class:`CoPlacement` chose for them (workload pins always
+    win — see :meth:`~repro.core.topology.Topology.assign_stage_zones`);
+    ``contention_aware`` asks the lowerings to route pulls around a
+    saturated shared-memory channel at pull time.  ``notes`` is the
+    per-pass provenance — including every *refused* rewrite and why."""
 
     affinity: Dict[str, str] = dataclasses.field(default_factory=dict)
     fused: Dict[str, Tuple[str, ...]] = dataclasses.field(default_factory=dict)
     eliminated: Dict[str, str] = dataclasses.field(default_factory=dict)
     spilled: Dict[str, str] = dataclasses.field(default_factory=dict)
+    zones: Dict[str, str] = dataclasses.field(default_factory=dict)
+    contention_aware: bool = False
     notes: List[str] = dataclasses.field(default_factory=list)
 
     def is_noop(self) -> bool:
-        return not (self.affinity or self.fused or self.spilled)
+        return not (self.affinity or self.fused or self.spilled or self.zones)
 
     def rename_stage(self, old: str, new: str) -> None:
         """Keep plan entries coherent when a pass renames/merges stages."""
@@ -101,6 +111,8 @@ class PlacementPlan:
         for k, v in self.eliminated.items():
             if v == old:
                 self.eliminated[k] = new
+        if old in self.zones:
+            self.zones.setdefault(new, self.zones.pop(old))
 
     def describe(self) -> str:
         parts = []
@@ -116,6 +128,12 @@ class PlacementPlan:
             parts.append("spill " + ", ".join(
                 f"{e}->{m}" for e, m in sorted(self.spilled.items())
             ))
+        if self.zones:
+            parts.append("zone " + ", ".join(
+                f"{s}:{z}" for s, z in sorted(self.zones.items())
+            ))
+        if self.contention_aware:
+            parts.append("contention-aware pulls")
         return "; ".join(parts) if parts else "no-op"
 
 
@@ -274,15 +292,153 @@ class CoPlacement(GraphPass):
     consumer instances one producer node is asked to host — beyond it, the
     hint is withheld ("prefer when slots allow" starts at the plan).
 
-    The DAG itself is unchanged; the decision lands in ``plan.affinity``.
+    **Tier-aware placement** (``topology=``): before emitting affinity
+    hints, every unpinned stage is greedily assigned the zone minimizing
+    its tier-crossing bill against already-placed neighbors — cost is
+    lexicographic ``(egress USD, tier seconds)``, so the optimizer never
+    trades fees for speed, and ties break on the lowest zone index (fully
+    deterministic).  Workload pins are hard constraints and consume no
+    decision; the chosen zones land in ``plan.zones`` for
+    ``Topology.assign_stage_zones`` to honor.  ``backend`` is the run's
+    intended default route — a string medium makes ``route="default"``
+    edges price as service-homed (S3/ElastiCache: producer->service +
+    service->consumer legs) vs instance-resident (direct
+    producer->consumer leg); policies and ``None`` price the direct leg,
+    which keeps producers and consumers together — the safe default.
+    Affinity hints are additionally gated to same-zone pairs: a consumer
+    cannot sit on a node in another zone.
+
+    ``contention_aware=True`` sets ``plan.contention_aware``: at pull
+    time the cluster lowering compares the shared-memory FIFO backlog
+    against the producer-NIC path and routes around a saturated memory
+    channel, splitting hot broadcasts across the two same-zone paths.
+
+    The DAG itself is unchanged; decisions land in ``plan.affinity`` /
+    ``plan.zones`` / ``plan.contention_aware``.
     """
 
     name = "coplace"
 
-    def __init__(self, slots_per_node: int = 8):
+    def __init__(
+        self,
+        slots_per_node: int = 8,
+        topology: Optional[Topology] = None,
+        backend: Any = None,
+        contention_aware: bool = False,
+        net: NetConstants = DEFAULT_NET,
+    ):
         self.slots_per_node = slots_per_node
+        self.topology = (
+            topology if topology is not None and not topology.is_flat
+            else None
+        )
+        self.backend = backend
+        self.contention_aware = contention_aware
+        self.net = net
+
+    # -- tier-aware zone assignment ---------------------------------------
+    def _edge_medium(self, e: Edge) -> Optional[str]:
+        """The medium this edge will (likely) ride, or None when unknowable
+        at plan time (policies resolve per object at run time)."""
+        route = e.route
+        if route == "default":
+            route = self.backend
+        return route if isinstance(route, str) else None
+
+    def _edge_bytes(self, dag: WorkflowDAG, e: Edge) -> int:
+        """Total bytes consumers pull over this edge (the egress exposure)."""
+        if e.fanout == "broadcast":
+            pulls = 1 if e.dst == dag.entry.name else dag.by_name[e.dst].fan
+            return pulls * e.n_objects * e.nbytes
+        producers = 1 if e.src is None else dag.by_name[e.src].fan
+        return producers * e.n_objects * e.nbytes
+
+    def _tier_cost(self, level: int, nbytes: int) -> Tuple[float, float]:
+        """(egress USD, tier seconds) of moving ``nbytes`` at ``level``."""
+        if level <= 1:
+            return 0.0, 0.0
+        net = self.net
+        return (
+            egress_fee_usd(level, nbytes),
+            net.tier_rtt(level) + nbytes / net.tier_bw(level),
+        )
+
+    def _zone_cost(
+        self,
+        dag: WorkflowDAG,
+        stage: str,
+        zi: int,
+        placed: Dict[str, int],
+    ) -> Tuple[float, float]:
+        """Tier bill of putting ``stage`` in zone ``zi``, summed over edges
+        whose other endpoint is already placed (or is the storage service)."""
+        t = self.topology
+        svc = t.service_zone
+        fee = 0.0
+        secs = 0.0
+
+        def leg(za: int, zb: int, nbytes: int) -> None:
+            nonlocal fee, secs
+            level = 1 if za == zb else t.crossing(za, zb)
+            f, s = self._tier_cost(level, nbytes)
+            fee += f
+            secs += s
+
+        for e in dag.edges:
+            if stage not in (e.src, e.dst):
+                continue
+            nbytes = self._edge_bytes(dag, e)
+            medium = self._edge_medium(e)
+            service = medium in DURABLE_MEDIA or e.src is None
+            other = e.dst if e.src == stage else e.src
+            if service:
+                # service-homed: each endpoint pays its own leg to/from the
+                # service zone, so this stage's leg is decidable alone
+                leg(zi, svc, nbytes)
+            elif other is not None and other in placed:
+                leg(zi, placed[other], nbytes)
+        return fee, secs
+
+    def _assign_zones(self, dag: WorkflowDAG, plan: PlacementPlan) -> Dict[str, int]:
+        """Greedy zone fill: pins first (hard constraints), then unpinned
+        stages in declaration order, each taking the cheapest zone against
+        the partial placement.  Deterministic: lexicographic (fee, seconds)
+        with ties to the lowest zone index."""
+        t = self.topology
+        placed: Dict[str, int] = {}
+        for s in dag.stages:
+            if s.name in t.pin:
+                # representative zone (spread pins keep their whole list at
+                # assign_stage_zones time; cost uses the first)
+                placed[s.name] = t.zone_index[t.pin[s.name][0]]
+        for s in dag.stages:
+            if s.name in placed:
+                continue
+            best: Optional[Tuple[float, float, int]] = None
+            for zi in range(len(t.zones)):
+                fee, secs = self._zone_cost(dag, s.name, zi, placed)
+                key = (fee, secs, zi)
+                if best is None or key < best:
+                    best = key
+            placed[s.name] = best[2]
+            plan.zones[s.name] = t.zones[best[2]].name
+            plan.notes.append(
+                f"coplace: {s.name} -> zone {t.zones[best[2]].name!r} "
+                f"(egress ${best[0]:.4f}, tier {best[1]:.4f}s against "
+                "placed neighbors)"
+            )
+        return placed
 
     def apply(self, dag, plan):
+        zone_of: Optional[Dict[str, int]] = None
+        if self.topology is not None:
+            zone_of = self._assign_zones(dag, plan)
+        if self.contention_aware:
+            plan.contention_aware = True
+            plan.notes.append(
+                "coplace: contention-aware pulls enabled (shared-memory "
+                "FIFO backlog vs producer-NIC compared at pull time)"
+            )
         # consumer instances already packed onto each producer's node: the
         # slots bound is per NODE, so every affined consumer stage counts
         # against its producer's budget, not just the largest one
@@ -306,6 +462,15 @@ class CoPlacement(GraphPass):
             if p.evictable:
                 plan.notes.append(
                     f"coplace: {e.label!r} skipped (evictable producer)"
+                )
+                continue
+            if zone_of is not None and zone_of[p.name] != zone_of[c.name]:
+                tz = self.topology.zones
+                plan.notes.append(
+                    f"coplace: {e.label!r} refused (cross-zone: {p.name} in "
+                    f"{tz[zone_of[p.name]].name!r}, {c.name} in "
+                    f"{tz[zone_of[c.name]].name!r} — a consumer cannot sit "
+                    "on a node in another zone)"
                 )
                 continue
             prev = plan.affinity.get(c.name)
@@ -580,15 +745,12 @@ class OnlineSpill:
 # ---------------------------------------------------------------------------
 
 
-_PASS_REGISTRY: Dict[str, Type[GraphPass]] = {}
+_PASS_REGISTRY = Registry("graph pass")
 
 
 def register_pass(cls: Type[GraphPass]) -> Type[GraphPass]:
     """Register a pass class under ``cls.name`` (idempotent overwrite)."""
-    if not cls.name:
-        raise ValueError("graph pass class needs a non-empty `name`")
-    _PASS_REGISTRY[cls.name] = cls
-    return cls
+    return _PASS_REGISTRY.register(cls)
 
 
 for _cls in (SyncChainFusion, CoPlacement, PredictiveSpill):
@@ -610,13 +772,18 @@ def optimize(
     telemetry: Optional[TelemetryHub] = None,
     scaling: Optional[Callable[[Stage], ScalingPolicy]] = None,
     fault_plan: Any = None,
+    topology: Optional[Topology] = None,
+    backend: Any = None,
 ) -> Tuple[WorkflowDAG, PlacementPlan]:
     """Run ``passes`` in order; returns (optimized DAG, placement plan).
 
     Pass specs are registered names or :class:`GraphPass` instances;
-    ``telemetry`` is handed to a by-name ``"spill"`` pass and ``scaling``
+    ``telemetry`` is handed to a by-name ``"spill"`` pass, ``scaling``
     (the per-stage policy factory you would bind with) to a by-name
-    ``"fuse"`` pass.  The input DAG is never mutated.
+    ``"fuse"`` pass, and ``topology`` / ``backend`` (the edge-cloud
+    continuum and the run's intended default route) to a by-name
+    ``"coplace"`` pass, which then emits tier-aware ``plan.zones``.  The
+    input DAG is never mutated.
     """
     plan = PlacementPlan()
     for spec in passes:
@@ -635,6 +802,8 @@ def optimize(
                 p = SyncChainFusion(scaling=scaling)
             elif cls is PredictiveSpill:
                 p = PredictiveSpill(telemetry=telemetry, fault_plan=fault_plan)
+            elif cls is CoPlacement:
+                p = CoPlacement(topology=topology, backend=backend)
             else:
                 p = cls()
         dag, plan = p.apply(dag, plan)

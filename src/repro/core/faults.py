@@ -24,9 +24,8 @@ fallbacks).  This module makes adversity a first-class scenario axis:
   loadgen lowering).  An **empty plan installs nothing**: the engine's fused
   fast paths and bit-identical results are untouched (the fig12 golden gate).
 
-* :class:`_ClusterFaults` — the same plan interpreted by
-  :func:`~repro.core.dag.execute_on_cluster` (the discrete-event lowering),
-  via ``execute_on_cluster(..., fault_plan=plan)``.
+* :class:`_ClusterFaults` — the same plan interpreted by the discrete-event
+  cluster lowering, via ``dag.compile(target="cluster", faults=plan)``.
 
 * :class:`SLOGuard` — per-run guardrails: bounded-retry completion (failures
   surface as recorded terminal statuses, never crashes), an availability /
@@ -473,13 +472,13 @@ class FaultInjector:
 
 
 # ---------------------------------------------------------------------------
-# Cluster-lowering adapter (execute_on_cluster)
+# Cluster-lowering adapter (compile target="cluster")
 # ---------------------------------------------------------------------------
 
 
 class _ClusterFaults:
     """The same :class:`FaultPlan` interpreted by the discrete-event cluster
-    lowering (:func:`~repro.core.dag.execute_on_cluster`).
+    lowering (``dag.compile(target="cluster")``).
 
     There is no live scheduler there — stages run on pre-assigned node
     indices — so the adapter models the *consequences* directly on staged

@@ -1,0 +1,87 @@
+"""Shared plugin registry for the three extension surfaces.
+
+``register_backend`` (transfer media), ``register_pass`` (graph-optimizer
+passes), and ``register_autoscaler`` (scale-up policies) grew up separately
+and each hand-rolled the same dict-plus-validation shape.  They now share
+one :class:`Registry` with a single duplicate-name policy and an
+introspectable listing — **without changing any public call site**: the
+``register_*`` functions keep their modules, names, and signatures, and the
+``available_*`` helpers keep returning plain name tuples.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional, Tuple
+
+__all__ = ["Registry"]
+
+
+class Registry:
+    """Name -> class registry with an explicit duplicate policy.
+
+    * ``on_duplicate="replace"`` (default) — re-registering a name
+      overwrites, so module reloads and idempotent plugin imports stay
+      cheap.  This is the historical behavior of all three surfaces.
+    * ``on_duplicate="error"`` — re-registering a *different* class under a
+      taken name raises; re-registering the same class is a no-op.
+
+    The mapping protocol mirrors the plain dicts this replaces: ``in``,
+    ``[]``, ``.get``, iteration (insertion order), ``len``.
+    """
+
+    def __init__(self, kind: str, on_duplicate: str = "replace") -> None:
+        if on_duplicate not in ("replace", "error"):
+            raise ValueError(f"unknown duplicate policy {on_duplicate!r}")
+        self.kind = kind
+        self.on_duplicate = on_duplicate
+        self._entries: Dict[str, type] = {}
+
+    def register(self, cls: type, name: Optional[str] = None) -> type:
+        """Register ``cls`` under ``name`` (default: ``cls.name``).
+
+        Returns ``cls`` so it can be used as a decorator.
+        """
+        key = name if name is not None else getattr(cls, "name", "")
+        if not key or not isinstance(key, str):
+            raise ValueError(
+                f"{self.kind} class {cls!r} needs a non-empty string `name`"
+            )
+        prev = self._entries.get(key)
+        if prev is not None and prev is not cls and self.on_duplicate == "error":
+            raise ValueError(
+                f"{self.kind} name {key!r} already registered to {prev!r}"
+            )
+        self._entries[key] = cls
+        return cls
+
+    # -- mapping protocol (drop-in for the former module-level dicts) -----
+    def __contains__(self, name: object) -> bool:
+        return name in self._entries
+
+    def __getitem__(self, name: str) -> type:
+        return self._entries[name]
+
+    def get(self, name: str, default=None):
+        return self._entries.get(name, default)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._entries)
+
+    def entries(self) -> Dict[str, type]:
+        """A snapshot copy — mutating it does not touch the registry."""
+        return dict(self._entries)
+
+    def describe(self) -> Dict[str, str]:
+        """Introspectable listing: name -> implementing class."""
+        return {
+            n: f"{c.__module__}.{c.__qualname__}"
+            for n, c in self._entries.items()
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Registry({self.kind!r}, {list(self._entries)!r})"

@@ -46,7 +46,9 @@ from heapq import heapify, heappop, heappush
 from typing import Callable, ClassVar, Dict, List, Optional, Tuple, Type, Union
 
 from .clock import VirtualClock, ensure_clock
+from .registry import Registry
 from .telemetry import DeploymentTelemetry
+from .topology import as_coord
 
 
 # ---------------------------------------------------------------------------
@@ -73,7 +75,7 @@ class AutoscalerPolicy:
     in-flight totals) — so one policy instance can serve many deployments.
     Register new policies with :func:`register_autoscaler`; every
     ``ScalingPolicy(autoscaler=...)`` site (``WorkflowEngine.register``,
-    ``dag.bind``, ``execute_on_cluster``, the loadgen-driven benchmarks)
+    ``dag.compile`` on either lowering, the loadgen-driven benchmarks)
     then selects them by name.
     """
 
@@ -222,15 +224,12 @@ class PredictivePolicy(RpsPolicy):
         return max(1, math.ceil(forecast / per))
 
 
-_AUTOSCALER_REGISTRY: Dict[str, Type[AutoscalerPolicy]] = {}
+_AUTOSCALER_REGISTRY = Registry("autoscaler")
 
 
 def register_autoscaler(cls: Type[AutoscalerPolicy]) -> Type[AutoscalerPolicy]:
     """Register a policy class under ``cls.name`` (idempotent overwrite)."""
-    if not cls.name:
-        raise ValueError("autoscaler class needs a non-empty `name`")
-    _AUTOSCALER_REGISTRY[cls.name] = cls
-    return cls
+    return _AUTOSCALER_REGISTRY.register(cls)
 
 
 for _cls in (ConcurrencyPolicy, RpsPolicy, PredictivePolicy):
@@ -361,6 +360,10 @@ class Deployment:
         # behind steer(prefer=...).  Maintained on spawn/reap/kill only, so
         # the hint-free steer path pays nothing for it.
         self._coords_index: Dict[Tuple[int, ...], List[int]] = {}
+        # zone name -> live instance ids: the same-zone fallback of
+        # steer(prefer=<Coord with a zone>).  Only zone-carrying placers
+        # (topology runs) ever populate it.
+        self._zone_index: Dict[str, List[int]] = {}
         # scale-down hysteresis: virtual time the fleet first exceeded the
         # autoscaler's keep threshold (None while not in surplus)
         self._surplus_since: Optional[float] = None
@@ -387,6 +390,9 @@ class Deployment:
                 self.telemetry.record_cold_start(now)
         self.instances[iid] = inst
         self._coords_index.setdefault(inst.coords, []).append(iid)
+        zone = getattr(inst.coords, "zone", None)
+        if zone is not None:
+            self._zone_index.setdefault(zone, []).append(iid)
         if inst.ready_at <= now:
             heappush(self._ready_heap, (0, iid, 0))
         else:
@@ -544,6 +550,16 @@ class Deployment:
                 pass
             if not ids:
                 del self._coords_index[inst.coords]
+        zone = getattr(inst.coords, "zone", None)
+        if zone is not None:
+            zids = self._zone_index.get(zone)
+            if zids is not None:
+                try:
+                    zids.remove(inst.instance_id)
+                except ValueError:
+                    pass
+                if not zids:
+                    del self._zone_index[zone]
 
     # -- activator -----------------------------------------------------------
     def _pop_affine(
@@ -559,7 +575,16 @@ class Deployment:
         queueing behind the co-located node."""
         ids = self._coords_index.get(prefer)
         if not ids:
-            return None
+            # zone-affine fallback: a Coord hint carrying a zone settles for
+            # any ready instance in the producer's zone when the exact node
+            # has none — same-zone pulls skip every tier crossing even when
+            # they miss shared memory
+            zone = getattr(prefer, "zone", None)
+            if zone is None:
+                return None
+            ids = self._zone_index.get(zone)
+            if not ids:
+                return None
         target = self.policy.target_concurrency
         best: Optional[Instance] = None
         for iid in ids:
@@ -625,8 +650,12 @@ class Deployment:
         co-placement pass emits the producer's coords): a ready instance at
         those coords with a spare slot wins over the least-loaded pick, so
         the consumer lands next to its data when slots allow.  Without the
-        hint the legacy steering is bit-for-bit unchanged.
+        hint the legacy steering is bit-for-bit unchanged.  ``prefer``
+        accepts a plain tuple or a typed
+        :class:`~repro.core.topology.Coord`; a Coord carrying a zone adds
+        the same-zone fallback of :meth:`_pop_affine`.
         """
+        prefer = as_coord(prefer)
         vs = self._vsim
         now = self.clock() if vs is None else vs.now
         # guard the reap/mature calls with the heaps' own due checks: both
@@ -652,6 +681,7 @@ class Deployment:
         bit-identical to ``n`` sequential :meth:`steer` calls at one virtual
         instant — the repeated no-op reap/mature/clock work is what's saved.
         """
+        prefer = as_coord(prefer)
         vs = self._vsim
         now = self.clock() if vs is None else vs.now
         exp = self._expiry
@@ -790,8 +820,9 @@ class Deployment:
 
     def instances_at(self, coords: Tuple[int, ...]) -> List[int]:
         """Live instance ids placed at ``coords`` (a node, in the default
-        placement model)."""
-        return list(self._coords_index.get(coords, ()))
+        placement model).  Accepts tuples, lists, or typed
+        :class:`~repro.core.topology.Coord` values."""
+        return list(self._coords_index.get(as_coord(coords), ()))
 
     def kill_node(self, coords: Tuple[int, ...]) -> int:
         """Correlated eviction: every instance at ``coords`` dies at once.
@@ -868,6 +899,7 @@ class ControlPlane:
         the node die together regardless of which deployment owns them.
         Returns the total number of instances killed.
         """
+        coords = as_coord(coords)
         killed = 0
         for dep in self.deployments.values():
             killed += dep.kill_node(coords)

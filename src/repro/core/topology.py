@@ -1,0 +1,246 @@
+"""Edge-cloud continuum topology: node -> zone -> region (-> edge-site).
+
+The paper's cluster is flat — every node sees the same NIC, RTT, and price
+sheet.  Truffle (arxiv 2411.16451) extends the same data-movement problem
+across an edge->cloud hierarchy where *crossing a tier boundary* changes both
+latency and the bill.  This module is the dependency-light model layer:
+
+* :class:`Zone` — a named zone inside a region, on a site (``"cloud"`` or
+  ``"edge"``).  Every simulated node lives in exactly one zone.
+* :class:`Topology` — an ordered set of zones plus per-stage pins.  It
+  precomputes the *crossing level* between any two zones: the lowest common
+  tier of producer and consumer, which prices and paces every pull.
+* :class:`Coord` — a typed placement coordinate.  It subclasses ``tuple`` so
+  it hashes/compares exactly like the ad-hoc tuples the scheduler has always
+  used (``_coords_index`` keys, ``ctx.instance.coords`` equality, plan
+  ``colocal`` maps all keep working bit-for-bit), while *also* carrying the
+  tier path (zone / region / site) for zone-affine steering.
+
+Crossing levels (monotone: each step is slower and pricier than the last)::
+
+    0  SAME_NODE     shared-memory pull, never leaves the host
+    1  SAME_ZONE     datacenter NIC fabric (today's flat cluster)
+    2  CROSS_ZONE    inter-AZ link inside one region
+    3  CROSS_REGION  WAN between regions (or between two edge sites)
+    4  CROSS_SITE    edge <-> cloud uplink
+
+The degenerate single-zone :class:`Topology` maps every node to the same
+zone, so every crossing collapses to level <= 1 and both lowerings take
+exactly the flat-cluster code path — sha goldens and BENCH_engine checksums
+are bit-identical by construction (pinned by ``tests/test_topology.py``).
+
+This module must stay import-light (no cluster/scheduler/dag imports): both
+lowerings and the optimizer import *it*.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple, Union
+
+__all__ = [
+    "SAME_NODE",
+    "SAME_ZONE",
+    "CROSS_ZONE",
+    "CROSS_REGION",
+    "CROSS_SITE",
+    "TIER_NAMES",
+    "Coord",
+    "as_coord",
+    "Zone",
+    "Topology",
+    "FLAT_TOPOLOGY",
+]
+
+SAME_NODE = 0
+SAME_ZONE = 1
+CROSS_ZONE = 2
+CROSS_REGION = 3
+CROSS_SITE = 4
+
+TIER_NAMES = ("same-node", "same-zone", "cross-zone", "cross-region", "cross-site")
+
+
+class Coord(tuple):
+    """Typed placement coordinate: the scheduler's opaque coords tuple plus
+    an optional tier path.
+
+    ``Coord((3,))`` equals and hashes like the plain ``(3,)`` the default
+    placer produces, so it can be handed to every surface that accepts
+    coords today — ``Deployment.steer(prefer=)``, ``ctx.call(affinity=)``,
+    ``ControlPlane.kill_node`` — and old tuple inputs keep working (they are
+    coerced through :func:`as_coord` at the public surfaces).
+    """
+
+    # tuple subclasses cannot carry non-empty __slots__; zone/region/site
+    # live in the instance dict and default to None for path-less coords.
+
+    def __new__(
+        cls,
+        body: Iterable = (),
+        zone: Optional[str] = None,
+        region: Optional[str] = None,
+        site: Optional[str] = None,
+    ) -> "Coord":
+        self = super().__new__(cls, tuple(body))
+        self.zone = zone
+        self.region = region
+        self.site = site
+        return self
+
+    @property
+    def path(self) -> Tuple[Optional[str], Optional[str], Optional[str]]:
+        """(site, region, zone) — coarse to fine."""
+        return (self.site, self.region, self.zone)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        base = tuple.__repr__(self)
+        if self.zone is None and self.region is None and self.site is None:
+            return f"Coord{base}"
+        return f"Coord{base}@{self.site}/{self.region}/{self.zone}"
+
+    # Equality/hash are inherited from tuple ON PURPOSE: a Coord and a plain
+    # tuple with the same body are the same key everywhere coords are used.
+
+
+def as_coord(value) -> Optional[Coord]:
+    """Coercion shim: accept legacy tuples (and lists) wherever a
+    :class:`Coord` flows today.  ``None`` passes through; an existing
+    :class:`Coord` is returned unchanged (tier path preserved)."""
+    if value is None or isinstance(value, Coord):
+        return value
+    if isinstance(value, (tuple, list)):
+        return Coord(value)
+    raise TypeError(f"cannot interpret {value!r} as placement coords")
+
+
+@dataclasses.dataclass(frozen=True)
+class Zone:
+    """One zone of the continuum: ``name`` within ``region`` on ``site``."""
+
+    name: str
+    region: str = "local"
+    site: str = "cloud"
+
+
+PinSpec = Union[str, Sequence[str]]
+
+
+class Topology:
+    """Ordered zones + per-stage pins, with precomputed crossing levels.
+
+    Parameters
+    ----------
+    zones:
+        The zones, in order.  Zone order matters twice: node -> zone
+        assignment is deterministic in it, and the *naive* (topology-
+        oblivious) stage spread round-robins over it.
+    pin:
+        Hard placement constraints: stage name -> zone name, or a sequence
+        of zone names to spread that stage's instances across (instance
+        ``i`` lands in ``pins[i % len(pins)]``).  Pins model workload
+        semantics (sensors live at the edge, trainers need cloud
+        accelerators) and are honored by naive and optimized placement
+        alike.
+    """
+
+    def __init__(
+        self,
+        zones: Sequence[Zone] = (Zone("z0"),),
+        pin: Optional[Mapping[str, PinSpec]] = None,
+    ) -> None:
+        if not zones:
+            raise ValueError("Topology needs at least one zone")
+        self.zones: Tuple[Zone, ...] = tuple(zones)
+        names = [z.name for z in self.zones]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate zone names: {names}")
+        self.zone_index: Dict[str, int] = {n: i for i, n in enumerate(names)}
+        self.pin: Dict[str, Tuple[str, ...]] = {}
+        for stage, spec in dict(pin or {}).items():
+            zs = (spec,) if isinstance(spec, str) else tuple(spec)
+            for z in zs:
+                if z not in self.zone_index:
+                    raise ValueError(f"pin for {stage!r} names unknown zone {z!r}")
+            self.pin[stage] = zs
+        n = len(self.zones)
+        self._crossing = [[self._level(i, j) for j in range(n)] for i in range(n)]
+
+    def _level(self, i: int, j: int) -> int:
+        if i == j:
+            return SAME_ZONE
+        a, b = self.zones[i], self.zones[j]
+        if a.site != b.site:
+            return CROSS_SITE
+        if a.region != b.region:
+            return CROSS_REGION
+        return CROSS_ZONE
+
+    # -- queries ----------------------------------------------------------
+    @property
+    def is_flat(self) -> bool:
+        """Single zone: indistinguishable from today's flat cluster."""
+        return len(self.zones) == 1
+
+    def crossing(self, zi: int, zj: int) -> int:
+        """Crossing level between two zones (>= SAME_ZONE; the same-node
+        level is the caller's to detect — zones cannot see node identity)."""
+        return self._crossing[zi][zj]
+
+    @property
+    def service_zone(self) -> int:
+        """Where storage services (S3 / ElastiCache front-ends) are homed:
+        the first cloud-site zone, or zone 0 if the topology is edge-only."""
+        for i, z in enumerate(self.zones):
+            if z.site == "cloud":
+                return i
+        return 0
+
+    def coord(self, body: Iterable, zi: int) -> Coord:
+        """A :class:`Coord` carrying zone ``zi``'s full tier path."""
+        z = self.zones[zi]
+        return Coord(body, zone=z.name, region=z.region, site=z.site)
+
+    # -- stage -> zone assignment ----------------------------------------
+    def assign_stage_zones(
+        self,
+        stage_names: Sequence[str],
+        plan_zones: Optional[Mapping[str, PinSpec]] = None,
+    ) -> Dict[str, Tuple[int, ...]]:
+        """Per-stage zone assignment (instance ``i`` of a stage lands in
+        ``zs[i % len(zs)]``).
+
+        Precedence: workload pins (hard constraints) > optimizer plan zones
+        > the *naive spread* — a topology-oblivious scheduler that round-
+        robins unpinned stages across all zones in declaration order.  The
+        naive spread is the fig14 "flat placement" baseline; with a single
+        zone it degenerates to "everything in zone 0", i.e. today's
+        cluster.
+        """
+        plan_zones = dict(plan_zones or {})
+        out: Dict[str, Tuple[int, ...]] = {}
+        k = 0
+        for name in stage_names:
+            if name in self.pin:
+                out[name] = tuple(self.zone_index[z] for z in self.pin[name])
+            elif name in plan_zones:
+                spec = plan_zones[name]
+                zs = (spec,) if isinstance(spec, str) else tuple(spec)
+                out[name] = tuple(self.zone_index[z] for z in zs)
+            else:
+                out[name] = (k % len(self.zones),)
+                k += 1
+        return out
+
+    def describe(self) -> Dict[str, object]:
+        return {
+            "zones": [dataclasses.asdict(z) for z in self.zones],
+            "pin": {s: list(zs) for s, zs in self.pin.items()},
+            "service_zone": self.zones[self.service_zone].name,
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Topology({[z.name for z in self.zones]!r}, pin={self.pin!r})"
+
+
+#: The degenerate topology: one cloud zone, no pins — today's flat cluster.
+FLAT_TOPOLOGY = Topology()

@@ -70,6 +70,7 @@ from .errors import (
     XDTObjectExhausted,
     XDTProducerGone,
 )
+from .registry import Registry
 from .refs import (
     _NONCE_LEN,
     ObjectDescriptor,
@@ -424,15 +425,12 @@ class HybridBackend(_ServiceBackend):
         return S3Backend.modeled_seconds(nbytes, net)
 
 
-_BACKEND_REGISTRY: Dict[str, Type[TransferBackend]] = {}
+_BACKEND_REGISTRY = Registry("backend")
 
 
 def register_backend(cls: Type[TransferBackend]) -> Type[TransferBackend]:
     """Register a strategy class under ``cls.name`` (idempotent overwrite)."""
-    if not cls.name:
-        raise ValueError("backend class needs a non-empty `name`")
-    _BACKEND_REGISTRY[cls.name] = cls
-    return cls
+    return _BACKEND_REGISTRY.register(cls)
 
 
 for _cls in (XDTBackend, InlineBackend, S3Backend, ElastiCacheBackend, HybridBackend):

@@ -74,6 +74,7 @@ from .errors import (
 )
 from .refs import XDTRef
 from .scheduler import ControlPlane, Deployment, ScalingPolicy
+from .topology import as_coord
 from .transfer import TransferEngine
 
 _obj_new = object.__new__
@@ -555,8 +556,11 @@ class Context:
         ``Deployment.steer``: pass this invocation's own coords
         (``ctx.instance.coords``) to ask the activator to land the callee on
         the caller's node when slots allow — the graph optimizer's
-        co-placement pass rides this to make XDT pulls instance-local."""
-        return _InvocationTask(self._engine, fn_name, obj, affinity)
+        co-placement pass rides this to make XDT pulls instance-local.
+        Accepts a plain tuple or a typed
+        :class:`~repro.core.topology.Coord` (whose zone the steer can fall
+        back to when the exact instance is busy)."""
+        return _InvocationTask(self._engine, fn_name, obj, as_coord(affinity))
 
     def put(
         self, obj: Any, n_retrievals: int = 1, backend: Optional[str] = None
@@ -1053,14 +1057,18 @@ class WorkflowEngine:
         handler: Callable[[Context, Any], Any],
         policy: Optional[ScalingPolicy] = None,
         service_time: float = 0.0,
+        placer: Optional[Callable[[int], Tuple[int, ...]]] = None,
     ) -> None:
         """Register ``handler`` under ``name``.  ``service_time`` is the
         function's intrinsic compute duration in virtual seconds (on top of
-        any ``ctx.sleep``/transfer debt it accrues)."""
+        any ``ctx.sleep``/transfer debt it accrues).  ``placer`` maps
+        instance ids to placement coords (e.g. zone-carrying
+        :class:`~repro.core.topology.Coord` under a topology); default is
+        the scheduler's ``(i,)``."""
         self.functions[name] = handler
         self.service_times[name] = service_time
         dep = self.control.register(
-            name, policy or ScalingPolicy(max_instances=16)
+            name, policy or ScalingPolicy(max_instances=16), placer
         )
         # rate-driven autoscalers need requests-per-instance capacity before
         # the first completions exist; the registered service time is the

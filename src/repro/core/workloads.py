@@ -2,7 +2,7 @@
 
 Each workload is a :class:`~repro.core.dag.WorkflowDAG` — stages with
 compute times, edges with per-object sizes and transfer policies — executed
-on the calibrated simulator by :func:`repro.core.dag.execute_on_cluster`.
+on the calibrated simulator via ``dag.compile(target="cluster")``.
 For a fixed single backend the DAG interpreter reproduces the legacy
 hand-rolled generators bit-for-bit (guarded differentially in
 ``tests/test_dag.py``); the ``"hybrid"`` backend routes every ``"default"``
@@ -45,8 +45,8 @@ from .dag import (
     SizeRoute,
     Stage,
     WorkflowDAG,
-    execute_on_cluster,
 )
+from .topology import Topology, Zone
 
 #: the paper's single-backend configurations
 BACKENDS = ("s3", "elasticache", "xdt")
@@ -192,6 +192,124 @@ def _mr_breakdown(marks: Dict[str, float], total: float) -> Dict[str, float]:
 
 
 # ---------------------------------------------------------------------------
+# Topology workloads (Fig 14): placement across the edge-cloud continuum.
+# These live in their own registries (TOPO_WORKLOADS / TOPO_DAGS /
+# TOPOLOGIES) so the flat-cluster figure sweeps (Fig 7 / Table 2 goldens
+# iterate WORKLOADS / DAGS) are untouched.
+# ---------------------------------------------------------------------------
+
+# EDGE — edge-ingest -> cloud-train fan-in.  Four ingest instances are
+# pinned one-per-edge-site, the trainer is pinned to the cloud zone; the
+# interesting decision is the unpinned driver (collector).  Naive
+# round-robin drops it on edge-0 (zone 0), so the model gather and every
+# service-homed leg cross the edge uplink; tier-aware placement homes it
+# in the cloud zone next to the trainer and the storage service.
+
+EDGE_FAN = 4                      # ingest sites
+EDGE_SENSOR_BYTES = 2 << 20       # raw sensor batch, read from storage
+EDGE_SAMPLE_BYTES = 6 << 20       # featurized samples, ingest -> train
+EDGE_MODEL_BYTES = 8 << 20        # model checkpoint, train -> driver
+EDGE_COMPUTE = {"driver": 0.02, "ingest": 0.08, "train": 0.45,
+                "publish": 0.05}
+
+EDGE_DAG = WorkflowDAG(
+    "edge",
+    stages=[
+        Stage("driver", compute_s=EDGE_COMPUTE["driver"],
+              gather_compute_s=EDGE_COMPUTE["publish"]),
+        Stage("ingest", fan=EDGE_FAN, compute_s=EDGE_COMPUTE["ingest"],
+              blocking=False),
+        Stage("train", compute_s=EDGE_COMPUTE["train"], blocking=False),
+    ],
+    edges=[
+        # raw sensor data is original input: always via durable storage
+        Edge(None, "ingest", EDGE_SENSOR_BYTES, label="sensor", route="s3",
+             handoff="external"),
+        Edge("ingest", "train", EDGE_SAMPLE_BYTES, label="samples",
+             handoff="staged", fanout="partition", concurrency=1),
+        Edge("train", "driver", EDGE_MODEL_BYTES, label="model",
+             handoff="staged", fanout="partition", concurrency=0),
+    ],
+)
+
+EDGE_CLOUD_TOPOLOGY = Topology(
+    zones=(
+        Zone("edge-0", region="site-0", site="edge"),
+        Zone("edge-1", region="site-1", site="edge"),
+        Zone("edge-2", region="site-2", site="edge"),
+        Zone("edge-3", region="site-3", site="edge"),
+        Zone("cloud", region="us-east", site="cloud"),
+    ),
+    pin={
+        "ingest": ("edge-0", "edge-1", "edge-2", "edge-3"),
+        "train": "cloud",
+    },
+)
+
+
+def _edge_breakdown(marks: Dict[str, float], total: float) -> Dict[str, float]:
+    ingest_done = marks.get("edge:samples", 0.0)
+    gather_start = marks.get("gather_start", total)
+    return {
+        "ingest_and_upload": ingest_done,
+        "train_compute": gather_start - ingest_done,
+        "gather_model": total - gather_start,
+    }
+
+
+# GEO — geo-sharded fan-in.  Six shard instances are pinned round-robin
+# across one same-region zone and two remote regions; the unpinned driver
+# broadcasts the query and gathers partials.  Naive round-robin puts the
+# driver in the hub zone, which is right for service-homed backends (the
+# storage service lives there) but wrong for direct media: tier-aware
+# placement with backend="xdt" co-locates the driver with the us-shard
+# replicas and saves two cross-zone legs per round.
+
+GEO_SHARDS = 6
+GEO_QUERY_BYTES = 3 << 20         # broadcast query/plan, driver -> shards
+GEO_PARTIAL_BYTES = 10 << 20      # partial aggregates, shard -> driver
+GEO_N_QUERY_OBJECTS = 2           # chunked plan (two objects per shard)
+GEO_COMPUTE = {"driver": 0.03, "shard": 0.25, "merge": 0.08}
+
+GEO_DAG = WorkflowDAG(
+    "geo",
+    stages=[
+        Stage("driver", compute_s=GEO_COMPUTE["driver"],
+              gather_compute_s=GEO_COMPUTE["merge"]),
+        Stage("shard", fan=GEO_SHARDS, compute_s=GEO_COMPUTE["shard"],
+              blocking=False),
+    ],
+    edges=[
+        Edge("driver", "shard", GEO_QUERY_BYTES, label="query",
+             handoff="staged", fanout="broadcast",
+             n_objects=GEO_N_QUERY_OBJECTS, concurrency=1),
+        Edge("shard", "driver", GEO_PARTIAL_BYTES, label="partials",
+             handoff="staged", fanout="partition", concurrency=0),
+    ],
+)
+
+GEO_TOPOLOGY = Topology(
+    zones=(
+        Zone("us-hub", region="us"),
+        Zone("us-shard", region="us"),
+        Zone("eu-shard", region="eu"),
+        Zone("ap-shard", region="ap"),
+    ),
+    pin={"shard": ("us-shard", "eu-shard", "ap-shard")},
+)
+
+
+def _geo_breakdown(marks: Dict[str, float], total: float) -> Dict[str, float]:
+    query_done = marks.get("edge:query", 0.0)
+    gather_start = marks.get("gather_start", total)
+    return {
+        "broadcast_query": query_done,
+        "shard_compute": gather_start - query_done,
+        "gather_partials": total - gather_start,
+    }
+
+
+# ---------------------------------------------------------------------------
 # shared tail: DAG execution + result assembly
 # ---------------------------------------------------------------------------
 
@@ -203,6 +321,8 @@ def _run_workload(
     net: NetConstants,
     seed: int,
     deterministic: bool,
+    topology: Optional[Topology] = None,
+    plan: Any = None,
 ) -> WorkloadResult:
     if backend == "hybrid":
         route: Union[str, RoutePolicy] = HYBRID_ROUTE
@@ -215,9 +335,9 @@ def _run_workload(
         route, label = backend, backend.describe()
     else:
         route = label = backend
-    run = execute_on_cluster(
-        dag, route, net=net, seed=seed, deterministic=deterministic
-    )
+    run = dag.compile(
+        target="cluster", backend=route, net=net, topology=topology, plan=plan
+    ).run(seed=seed, deterministic=deterministic)
     return WorkloadResult(
         backend=label,
         latency_s=run.latency_s,
@@ -247,8 +367,30 @@ def run_mr(backend: Union[str, RoutePolicy], net: NetConstants = DEFAULT_NET,
                          deterministic)
 
 
+def run_edge(backend: Union[str, RoutePolicy], net: NetConstants = DEFAULT_NET,
+             seed: int = 0, deterministic: bool = False,
+             topology: Optional[Topology] = EDGE_CLOUD_TOPOLOGY,
+             plan: Any = None) -> WorkloadResult:
+    return _run_workload(EDGE_DAG, _edge_breakdown, backend, net, seed,
+                         deterministic, topology=topology, plan=plan)
+
+
+def run_geo(backend: Union[str, RoutePolicy], net: NetConstants = DEFAULT_NET,
+            seed: int = 0, deterministic: bool = False,
+            topology: Optional[Topology] = GEO_TOPOLOGY,
+            plan: Any = None) -> WorkloadResult:
+    return _run_workload(GEO_DAG, _geo_breakdown, backend, net, seed,
+                         deterministic, topology=topology, plan=plan)
+
+
 WORKLOADS = {"vid": run_vid, "set": run_set, "mr": run_mr}
 DAGS = {"vid": VID_DAG, "set": SET_DAG, "mr": MR_DAG}
+
+#: Fig 14 registries — separate from WORKLOADS/DAGS on purpose: the flat
+#: figure sweeps and sha goldens iterate those and must not grow cells.
+TOPO_WORKLOADS = {"edge": run_edge, "geo": run_geo}
+TOPO_DAGS = {"edge": EDGE_DAG, "geo": GEO_DAG}
+TOPOLOGIES = {"edge": EDGE_CLOUD_TOPOLOGY, "geo": GEO_TOPOLOGY}
 
 
 def run_all(deterministic: bool = True, seed: int = 0, backends=BACKENDS):

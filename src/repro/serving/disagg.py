@@ -14,7 +14,8 @@ This is the paper's architecture transplanted to LLM serving:
 
 The handoff is expressed as a two-stage :class:`~repro.core.dag.WorkflowDAG`
 (``prefill --cache--> decode``) compiled onto the event-driven
-:class:`~repro.core.workflow.WorkflowEngine` via ``dag.bind(handlers=...)``:
+:class:`~repro.core.workflow.WorkflowEngine` via
+``dag.compile(target="engine", handlers=...)``:
 each handoff is a workflow invocation, so it *queues and autoscales* exactly
 like any workflow function — the decode deployment's concurrency slots are
 the engine's in-flight accounting, a handoff that finds every batch slot
@@ -131,8 +132,9 @@ class DisaggregatedServer:
                 target_concurrency=n_decode_pods * max_batch + 1,
             )
 
-        self.binding = self.dag.bind(
-            self.engine,
+        self.binding = self.dag.compile(
+            target="engine",
+            engine=self.engine,
             policy=policy,
             handlers={"prefill": self._prefill_handler,
                       "decode": self._decode_handler},

@@ -1,0 +1,97 @@
+"""``dag.compile()`` vs the deprecated spellings: same bits, loud warnings.
+
+``execute_on_cluster`` and ``WorkflowDAG.bind`` are kept as thin
+DeprecationWarning shims over the one compile surface.  These tests pin
+both halves of that contract: each shim warns exactly once per call, and
+on fixed seeds the shim and ``compile(...)`` produce bit-identical runs
+(latency, cost, per-edge media) — a shim that drifts from the real path
+is worse than no shim.
+
+This file (and the goldens in ``tests/test_dag.py``) intentionally calls
+the deprecated entry points; ``tests/test_api_surface.py`` keeps new
+call sites from appearing anywhere else in the repo.
+"""
+import warnings
+
+import pytest
+
+from repro.core.dag import SizeRoute, execute_on_cluster
+from repro.core.workflow import WorkflowEngine
+from repro.core.workloads import DAGS
+
+
+def test_execute_on_cluster_warns():
+    with pytest.warns(DeprecationWarning, match="compile"):
+        execute_on_cluster(DAGS["vid"], "s3", seed=0, deterministic=True)
+
+
+def test_bind_warns():
+    eng = WorkflowEngine(backend="xdt")
+    with pytest.warns(DeprecationWarning, match="compile"):
+        DAGS["vid"].bind(eng, default_route=SizeRoute(), bytes_scale=1e-4)
+
+
+def test_compile_does_not_warn():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        DAGS["vid"].compile(target="cluster", backend="s3").run(
+            seed=0, deterministic=True)
+        eng = WorkflowEngine(backend="xdt")
+        DAGS["vid"].compile(target="engine", engine=eng,
+                            backend=SizeRoute(), bytes_scale=1e-4)
+
+
+@pytest.mark.parametrize("name", sorted(DAGS))
+@pytest.mark.parametrize("backend", ["s3", "elasticache", "xdt"])
+def test_cluster_parity_bit_identical(name, backend):
+    dag = DAGS[name]
+    for seed, deterministic in ((0, True), (0, False), (3, False)):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            old = execute_on_cluster(
+                dag, backend, seed=seed, deterministic=deterministic)
+        new = dag.compile(target="cluster", backend=backend).run(
+            seed=seed, deterministic=deterministic)
+        assert new.latency_s == old.latency_s
+        assert new.cost().total == old.cost().total
+        assert new.edge_media == old.edge_media
+        assert new.marks == old.marks
+
+
+@pytest.mark.parametrize("name", sorted(DAGS))
+def test_engine_parity_bit_identical(name):
+    def drive(make_binding):
+        eng = WorkflowEngine(backend="xdt")
+        binding = make_binding(eng)
+        for i in range(3):
+            eng.sim.schedule_abs(i * 0.5,
+                                 lambda: eng.submit(binding.entry, 1.0))
+        eng.drain()
+        return (
+            [(r.status, r.latency_s) for r in eng.requests],
+            binding.cost().total,
+            {label: dict(u.media) for label, u in binding.edge_usage.items()},
+        )
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old = drive(lambda eng: DAGS[name].bind(
+            eng, default_route=SizeRoute(), bytes_scale=1e-4))
+    new = drive(lambda eng: DAGS[name].compile(
+        target="engine", engine=eng, backend=SizeRoute(), bytes_scale=1e-4))
+    assert new == old
+
+
+def test_compile_rejects_cross_target_options():
+    dag = DAGS["vid"]
+    with pytest.raises(ValueError, match="backend"):
+        dag.compile(target="cluster")
+    with pytest.raises(ValueError, match="engine"):
+        dag.compile(target="engine")
+    with pytest.raises(ValueError, match="engine-only"):
+        dag.compile(target="cluster", backend="s3", handlers={})
+    eng = WorkflowEngine(backend="xdt")
+    with pytest.raises(ValueError, match="no engine"):
+        dag.compile(target="cluster", backend="s3", engine=eng)
+    with pytest.raises(ValueError, match="unknown compile target"):
+        dag.compile(target="gpu")

@@ -1,0 +1,84 @@
+"""Lint gate: no NEW call sites of the deprecated run entry points.
+
+``execute_on_cluster(...)`` and ``dag.bind(...)`` survive only as
+DeprecationWarning shims over ``dag.compile()``; the migration left call
+sites in exactly two places — the shims themselves (``core/dag.py``) and
+the test files that pin shim behavior and pre-migration goldens.  This
+grep-based check walks every tracked ``.py`` file and fails if a file
+grows MORE call sites than its frozen baseline (or a new file introduces
+any), pointing the author at ``dag.compile()``.
+
+Shrinking a count is always legal: tighten the baseline when you migrate
+a file.  The patterns are word-bounded, so the private
+``_execute_on_cluster`` implementation does not count.
+"""
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+
+EXECUTE = re.compile(r"\bexecute_on_cluster\(")
+BIND = re.compile(r"\.bind\(")
+
+#: file -> (max execute_on_cluster(...) sites, max .bind(...) sites).
+#: The shims live in core/dag.py; every other entry is a test file that
+#: deliberately exercises the deprecated spelling (parity + goldens).
+BASELINE = {
+    "src/repro/core/dag.py": (2, 2),
+    "tests/test_api_parity.py": (2, 2),
+    "tests/test_autoscaler_policies.py": (2, 1),
+    "tests/test_chunk_billing_hypothesis.py": (2, 1),
+    "tests/test_dag.py": (3, 2),
+    "tests/test_dagopt.py": (13, 4),
+    "tests/test_faults.py": (6, 6),
+    "tests/test_route_policies.py": (6, 1),
+    "tests/test_streaming.py": (6, 3),
+    "tests/test_streaming_fastpath.py": (5, 3),
+    "tests/test_streaming_optimizer.py": (3, 1),
+}
+
+
+def _census():
+    rows = {}
+    for d in SCAN_DIRS:
+        root = REPO / d
+        if not root.exists():
+            continue
+        for f in sorted(root.rglob("*.py")):
+            if "__pycache__" in f.parts or f == Path(__file__).resolve():
+                continue   # this file names the patterns in its own docstring
+            text = f.read_text()
+            n_exec = len(EXECUTE.findall(text))
+            n_bind = len(BIND.findall(text))
+            if n_exec or n_bind:
+                rows[str(f.relative_to(REPO))] = (n_exec, n_bind)
+    return rows
+
+def test_no_new_deprecated_call_sites():
+    offenders = []
+    for path, (n_exec, n_bind) in _census().items():
+        max_exec, max_bind = BASELINE.get(path, (0, 0))
+        if n_exec > max_exec or n_bind > max_bind:
+            offenders.append(
+                f"  {path}: execute_on_cluster x{n_exec} (allowed "
+                f"{max_exec}), .bind x{n_bind} (allowed {max_bind})"
+            )
+    assert not offenders, (
+        "new call sites of deprecated run entry points:\n"
+        + "\n".join(offenders)
+        + "\nuse dag.compile(target='cluster'|'engine', ...).run(...) / "
+        "the returned DagBinding instead; the deprecated spellings are "
+        "shims kept only for their pinned tests"
+    )
+
+
+def test_baseline_is_not_stale():
+    # entries for files that no longer contain any call site rot silently;
+    # force the allowlist to track reality in both directions
+    census = _census()
+    stale = [p for p in BASELINE if p not in census]
+    assert not stale, (
+        f"baseline entries with zero remaining call sites: {stale} — "
+        "delete them from BASELINE"
+    )

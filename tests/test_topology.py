@@ -1,0 +1,273 @@
+"""Edge-cloud continuum (core/topology.py) + the shared Registry.
+
+Four families of guarantees:
+
+* **Coord is a tuple** — equality, hashing, and indexing are inherited from
+  the plain coords tuples both lowerings already use, so a typed Coord and
+  the tuple it wraps are interchangeable everywhere (``as_coord`` coerces).
+* **Crossings are ordered** — deeper tier crossings never get cheaper,
+  faster, or lower-latency; level <= SAME_ZONE is always free.
+* **Flat is bit-identical** — no topology, a single-zone topology, and the
+  pre-topology goldens all agree exactly (latency hex anchor included), on
+  both lowerings.
+* **Tier-aware placement dominates** — on the topology workloads the
+  optimizer's zone assignment is never costlier/slower than naive
+  round-robin spread, and strictly cheaper where a wrong zone crosses the
+  edge uplink.
+"""
+import pytest
+
+from repro.core.cluster import DEFAULT_NET
+from repro.core.cost import TIER_EGRESS_USD_PER_GB, egress_fee_usd
+from repro.core.registry import Registry
+from repro.core.scheduler import ControlPlane, Deployment, ScalingPolicy
+from repro.core.topology import FLAT_TOPOLOGY, Coord, Topology, Zone, as_coord
+from repro.core.workloads import (
+    DAGS,
+    TOPO_DAGS,
+    TOPO_WORKLOADS,
+    TOPOLOGIES,
+    run_vid,
+)
+
+
+# ---------------------------------------------------------------------------
+# Coord: typed coordinates that stay plain tuples
+# ---------------------------------------------------------------------------
+
+
+def test_coord_is_its_tuple():
+    c = Coord((2, 5), zone="z1", region="us", site="cloud")
+    assert c == (2, 5)
+    assert hash(c) == hash((2, 5))
+    assert c[1] == 5
+    assert {c: "x"}[(2, 5)] == "x"          # dict interop both directions
+    assert c.zone == "z1" and c.region == "us" and c.site == "cloud"
+    assert c.path == ("cloud", "us", "z1")
+
+
+def test_as_coord_coercion():
+    assert as_coord(None) is None
+    c = Coord((1,), zone="z0")
+    assert as_coord(c) is c                  # pass-through, metadata kept
+    t = as_coord((3, 4))
+    assert isinstance(t, Coord) and t == (3, 4) and t.zone is None
+    assert as_coord([7]) == (7,)
+    with pytest.raises(TypeError):
+        as_coord("node-3")
+
+
+# ---------------------------------------------------------------------------
+# Topology: hierarchy, crossings, zone assignment
+# ---------------------------------------------------------------------------
+
+
+def test_flat_topology_is_flat():
+    assert FLAT_TOPOLOGY.is_flat
+    assert Topology().is_flat
+    assert not Topology(zones=(Zone("a"), Zone("b"))).is_flat
+
+
+def test_crossing_levels():
+    t = Topology(zones=(
+        Zone("z0", region="us"), Zone("z1", region="us"),
+        Zone("eu", region="eu"),
+        Zone("edge", region="site-0", site="edge"),
+    ))
+    assert t.crossing(0, 0) == 1             # same zone
+    assert t.crossing(0, 1) == 2             # cross zone, same region
+    assert t.crossing(0, 2) == 3             # cross region
+    assert t.crossing(0, 3) == 4             # cloud <-> edge site
+    assert t.crossing(3, 0) == t.crossing(0, 3)
+
+
+def test_service_zone_prefers_cloud():
+    t = Topology(zones=(
+        Zone("edge", region="s", site="edge"), Zone("cloud", region="us"),
+    ))
+    assert t.zones[t.service_zone].name == "cloud"
+
+
+def test_zone_assignment_precedence():
+    t = Topology(
+        zones=(Zone("a"), Zone("b"), Zone("c")),
+        pin={"pinned": ("c",)},
+    )
+    # pins > plan > round-robin (k-th unpinned stage -> zone k % n)
+    zones = t.assign_stage_zones(
+        ["pinned", "s0", "s1"], plan_zones={"s1": "c"}
+    )
+    assert [t.zones[zones["pinned"][0]].name] == ["c"]
+    assert t.zones[zones["s0"][0]].name == "a"    # first unpinned: k=0
+    assert t.zones[zones["s1"][0]].name == "c"    # plan wins over k=1 -> "b"
+
+
+def test_tier_rates_are_monotone():
+    fees = [egress_fee_usd(lv, 1 << 30) for lv in range(5)]
+    assert fees[0] == fees[1] == 0.0         # intra-zone is never billed
+    assert fees[1] <= fees[2] <= fees[3] <= fees[4]
+    assert fees[4] > fees[2] > 0.0
+    assert len(TIER_EGRESS_USD_PER_GB) == 5
+    net = DEFAULT_NET
+    assert net.tier_bw(2) >= net.tier_bw(3) >= net.tier_bw(4)
+    assert net.tier_rtt(2) <= net.tier_rtt(3) <= net.tier_rtt(4)
+
+
+# ---------------------------------------------------------------------------
+# Flat identity: the continuum machinery must be invisible when unused
+# ---------------------------------------------------------------------------
+
+
+def test_pre_topology_golden_latency_anchor():
+    # pinned from before topology landed: any drift here means the flat
+    # path is performing different float ops than the seed did
+    r = run_vid("s3", seed=0, deterministic=True)
+    assert r.latency_s.hex() == "0x1.32709035eda2ap+0"
+
+
+@pytest.mark.parametrize("backend", ["s3", "elasticache", "xdt"])
+def test_single_zone_topology_bit_identical_cluster(backend):
+    single = Topology()
+    for dag in DAGS.values():
+        base = dag.compile(target="cluster", backend=backend).run(
+            seed=0, deterministic=True)
+        topo = dag.compile(target="cluster", backend=backend,
+                           topology=single).run(seed=0, deterministic=True)
+        assert topo.latency_s == base.latency_s
+        assert topo.cost().total == base.cost().total
+        assert topo.cost().egress == 0.0
+
+
+def test_single_zone_topology_bit_identical_engine():
+    from repro.core.workflow import WorkflowEngine
+
+    def one(topology):
+        eng = WorkflowEngine(backend="xdt")
+        binding = DAGS["vid"].compile(
+            target="engine", engine=eng, topology=topology, bytes_scale=1e-4,
+        )
+        eng.run(binding.entry, 1.0)
+        return eng.requests[0].latency_s, binding.cost().total
+
+    assert one(None) == one(Topology())
+
+
+# ---------------------------------------------------------------------------
+# Tier-aware placement: never worse, strictly better when naive crosses
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(TOPO_WORKLOADS))
+@pytest.mark.parametrize("backend", ["s3", "xdt"])
+def test_tier_aware_never_worse(name, backend):
+    dag, topo = TOPO_DAGS[name], TOPOLOGIES[name]
+    _, plan = dag.optimize(topology=topo, backend=backend)
+    flat = TOPO_WORKLOADS[name](backend, seed=0, deterministic=True)
+    aware = TOPO_WORKLOADS[name](backend, seed=0, deterministic=True,
+                                 plan=plan)
+    assert aware.cost.total <= flat.cost.total * (1 + 1e-9)
+    assert aware.latency_s <= flat.latency_s * (1 + 1e-9)
+
+
+def test_edge_collector_moves_to_cloud():
+    dag, topo = TOPO_DAGS["edge"], TOPOLOGIES["edge"]
+    _, plan = dag.optimize(topology=topo, backend="s3")
+    assert plan.zones["driver"] == "cloud"
+    flat = TOPO_WORKLOADS["edge"]("s3", seed=0, deterministic=True)
+    aware = TOPO_WORKLOADS["edge"]("s3", seed=0, deterministic=True,
+                                   plan=plan)
+    # naive drops the collector on edge-0: every model gather and service
+    # leg crosses the edge uplink, which bills egress and costs latency
+    assert aware.cost.total < flat.cost.total
+    assert aware.latency_s < flat.latency_s
+    assert aware.cost.egress < flat.cost.egress
+
+
+def test_geo_driver_zone_depends_on_backend():
+    dag, topo = TOPO_DAGS["geo"], TOPOLOGIES["geo"]
+    _, s3_plan = dag.optimize(topology=topo, backend="s3")
+    _, xdt_plan = dag.optimize(topology=topo, backend="xdt")
+    assert s3_plan.zones["driver"] == "us-hub"     # storage home zone
+    assert xdt_plan.zones["driver"] == "us-shard"  # next to resident peers
+
+
+# ---------------------------------------------------------------------------
+# Zone-affine steering + Coord at the control-plane surfaces
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_steer_zone_fallback():
+    t = Topology(zones=(Zone("a"), Zone("b")))
+    # two prewarmed instances, one per zone, via a topology-aware placer
+    d = Deployment(
+        "f", ScalingPolicy(min_instances=2),
+        placer=lambda i: t.coord((i % 2, i), i % 2), clock=_FakeClock(),
+    )
+    want = Coord((1, 99), zone="b")          # no instance at these coords
+    inst, _ = d.steer(prefer=want)
+    assert inst.coords.zone == "b"           # same-zone fallback, not luck
+    inst2, _ = d.steer(prefer=(1, 99))       # plain tuple: no zone, no hint
+    assert inst2 is not inst or inst.in_flight == 2
+
+
+def test_kill_node_accepts_tuple_and_coord():
+    cp = ControlPlane(clock=_FakeClock())
+    cp.register("f", ScalingPolicy(min_instances=2))
+    (iid,) = cp.deployments["f"].instances_at((0,))
+    assert cp.kill_node(Coord((0,))) == 1    # typed spelling, same node
+    assert iid not in cp.deployments["f"].instances
+    assert cp.kill_node((0,)) == 0           # already dead; tuple accepted
+
+
+# ---------------------------------------------------------------------------
+# Registry: the shared name->class mapping behind register_*
+# ---------------------------------------------------------------------------
+
+
+def test_registry_mapping_protocol():
+    reg = Registry("widget")
+
+    @reg.register
+    class Sprocket:
+        name = "sprocket"
+
+    assert reg["sprocket"] is Sprocket
+    assert "sprocket" in reg and len(reg) == 1
+    assert sorted(reg) == ["sprocket"]
+    with pytest.raises(KeyError):
+        reg["missing"]
+
+
+def test_registry_duplicate_policies():
+    class A:
+        name = "x"
+
+    class B:
+        name = "x"
+
+    replace = Registry("widget")
+    replace.register(A)
+    replace.register(B)
+    assert replace["x"] is B
+    strict = Registry("widget", on_duplicate="error")
+    strict.register(A)
+    with pytest.raises(ValueError):
+        strict.register(B)
+
+
+def test_public_registries_still_serve_call_sites():
+    from repro.core.dagopt import available_passes
+    from repro.core.scheduler import available_autoscalers
+    from repro.core.transfer import available_backends
+
+    assert {"s3", "elasticache", "xdt"} <= set(available_backends())
+    assert {"fuse", "coplace", "spill"} <= set(available_passes())
+    assert "concurrency" in available_autoscalers()
